@@ -1,0 +1,45 @@
+//! Ranking ablation (paper §II-A's critique, measured): how far can each
+//! saliency metric prune under the same Δ_max before Algorithm 1 stops?
+//!
+//! Fisher (HQP) vs L1/L2 magnitude vs BN-γ vs random — the maximal
+//! compliant sparsity is the figure of merit (higher = better ranking).
+//!
+//! ```bash
+//! cargo run --release --example ablation_rankings    # ~5-10 min
+//! ```
+
+use hqp::hqp::{prune, sensitivity, HqpConfig, RankingMethod};
+use hqp::runtime::{Session, Workspace};
+
+fn main() -> hqp::Result<()> {
+    let ws = Workspace::open("artifacts")?;
+    for model in ["resnet18", "mobilenetv3"] {
+        let mut sess = Session::new(&ws, model)?;
+        let baseline = sess.baseline.clone();
+        let base_acc = sess.accuracy(&baseline, "val")?;
+        let cfg = HqpConfig { delta_step_frac: 0.05, ..Default::default() };
+        println!("\n=== {model} (baseline {base_acc:.4}, Δ_max {:.1}%) ===", cfg.delta_max * 100.0);
+        println!(
+            "{:<10} {:>14} {:>12} {:>10}",
+            "ranking", "max θ compliant", "final acc", "steps"
+        );
+        for method in [
+            RankingMethod::Fisher,
+            RankingMethod::MagnitudeL1,
+            RankingMethod::MagnitudeL2,
+            RankingMethod::BnGamma,
+            RankingMethod::Random(42),
+        ] {
+            let sal = sensitivity::compute(&mut sess, &baseline, method, cfg.calib_samples)?;
+            let res = prune::conditional_prune(&mut sess, &baseline, base_acc, &sal, &cfg)?;
+            println!(
+                "{:<10} {:>13.1}% {:>12.4} {:>10}",
+                method.name(),
+                res.sparsity * 100.0,
+                res.accuracy,
+                res.trace.steps.len()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Device heterogeneity sweep (paper §IV-A): the same compressed engines
+//! priced across Jetson Nano (no INT8 units), Xavier NX (48 tensor cores)
+//! and an idealized flat-rate accelerator — plus an ablation of the
+//! TensorRT-substitute optimizations (fusion / dead-channel elim /
+//! autotune) that shows where each millisecond goes.
+//!
+//! Pure deployment-model sweep: no PJRT execution, runs in milliseconds.
+//!
+//! ```bash
+//! cargo run --release --example device_sweep
+//! ```
+
+use hqp::gopt::{optimize, OptimizeOptions};
+use hqp::graph::{full_masks, Graph};
+use hqp::hwsim::{simulate, Device};
+use hqp::runtime::Workspace;
+
+fn main() -> hqp::Result<()> {
+    let ws = Workspace::open("artifacts")?;
+    for model in ["mobilenetv3", "resnet18"] {
+        let g = Graph::from_manifest(ws.manifest.model(model)?)?;
+        let masks = full_masks(&g);
+        // a representative HQP mask: drop 40 % of every group's filters
+        let mut hqp_masks = masks.clone();
+        for m in hqp_masks.iter_mut() {
+            let kill = (m.len() as f64 * 0.4) as usize;
+            for j in 0..kill {
+                m[j] = false;
+            }
+        }
+
+        println!("\n=== {model} ({:.1} MFLOPs dense) ===", g.dense_flops() as f64 / 1e6);
+        println!(
+            "{:<12} {:>11} {:>11} {:>11} {:>9}",
+            "device", "fp32 ms", "int8 ms", "hqp ms", "hqp x"
+        );
+        for dev in Device::all() {
+            let fp32 = simulate(&optimize(&g, &masks, &OptimizeOptions::fp32())?, &dev);
+            let int8 = simulate(&optimize(&g, &masks, &OptimizeOptions::int8())?, &dev);
+            let hqp = simulate(&optimize(&g, &hqp_masks, &OptimizeOptions::int8())?, &dev);
+            println!(
+                "{:<12} {:>11.4} {:>11.4} {:>11.4} {:>8.2}x   ({}% ops memory-bound fp32)",
+                dev.name,
+                fp32.latency_ms,
+                int8.latency_ms,
+                hqp.latency_ms,
+                fp32.latency_ms / hqp.latency_ms,
+                (fp32.memory_bound_frac * 100.0) as u32
+            );
+        }
+
+        // optimizer ablation on Xavier NX
+        let dev = Device::xavier_nx();
+        let mut o_all = OptimizeOptions::int8();
+        let mut o_nofuse = OptimizeOptions::int8();
+        o_nofuse.fusion = false;
+        let mut o_notune = OptimizeOptions::int8();
+        o_notune.autotune = false;
+        let all = simulate(&optimize(&g, &hqp_masks, &o_all)?, &dev);
+        let nofuse = simulate(&optimize(&g, &hqp_masks, &o_nofuse)?, &dev);
+        let notune = simulate(&optimize(&g, &hqp_masks, &o_notune)?, &dev);
+        o_all.fusion = false;
+        o_all.autotune = false;
+        let none = simulate(&optimize(&g, &hqp_masks, &o_all)?, &dev);
+        println!("optimizer ablation on xavier-nx (hqp engine):");
+        println!("  all passes        {:>9.4} ms", all.latency_ms);
+        println!("  - fusion          {:>9.4} ms ({:+.1}%)", nofuse.latency_ms,
+                 (nofuse.latency_ms / all.latency_ms - 1.0) * 100.0);
+        println!("  - autotune        {:>9.4} ms ({:+.1}%)", notune.latency_ms,
+                 (notune.latency_ms / all.latency_ms - 1.0) * 100.0);
+        println!("  - both            {:>9.4} ms ({:+.1}%)", none.latency_ms,
+                 (none.latency_ms / all.latency_ms - 1.0) * 100.0);
+    }
+    Ok(())
+}

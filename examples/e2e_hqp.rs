@@ -1,0 +1,110 @@
+//! END-TO-END DRIVER (the repro harness's mandated full-system workload):
+//! runs the complete HQP evaluation — both models, all four methods at
+//! paper parameters, both Jetson devices — through every layer of the
+//! stack (PJRT-executed L2 graphs with L1 Pallas kernels, coordinated by
+//! the L3 pipeline, deployed through gopt onto hwsim), and prints the
+//! paper-vs-measured comparison recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example e2e_hqp            # ~10-20 min single-core
+//! cargo run --release --example e2e_hqp -- --fast  # coarse δ, ~3 min
+//! ```
+
+use hqp::coordinator::{run_method, MethodSpec};
+use hqp::hqp::HqpConfig;
+use hqp::hwsim::Device;
+use hqp::report;
+use hqp::runtime::Workspace;
+
+/// Paper numbers (Tables I & II, Xavier NX) for the shape comparison.
+/// (method, speedup, acc_drop_pct, sparsity_pct)
+const PAPER_T1: &[(&str, f64, f64, f64)] = &[
+    ("baseline", 1.00, 0.0, 0.0),
+    ("q8-only", 1.58, 1.2, 0.0),
+    ("p50-only", 1.35, 1.8, 50.0),
+    ("hqp", 3.12, 1.4, 45.0),
+];
+const PAPER_T2: &[(&str, f64, f64, f64)] = &[
+    ("baseline", 1.00, 0.0, 0.0),
+    ("q8-only", 1.55, 1.9, 0.0),
+    ("hqp", 2.51, 1.3, 35.0),
+];
+
+fn main() -> hqp::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let ws = Workspace::open("artifacts")?;
+    let cfg = HqpConfig {
+        delta_step_frac: if fast { 0.05 } else { 0.01 },
+        ..Default::default()
+    };
+    let devices = Device::all();
+    let force = std::env::args().any(|a| a == "--force");
+
+    for (model, paper) in [("mobilenetv3", PAPER_T1), ("resnet18", PAPER_T2)] {
+        println!("\n################ {model} ################");
+        let mut rows = Vec::new();
+        for spec in [
+            MethodSpec::Baseline,
+            MethodSpec::Q8Only,
+            MethodSpec::PruneOnly(50),
+            MethodSpec::Hqp,
+        ] {
+            let t0 = std::time::Instant::now();
+            let r = run_method(&ws, model, spec, &cfg, &devices, force)?;
+            println!(
+                "  ran {:?} in {:.1}s ({} device rows)",
+                spec,
+                t0.elapsed().as_secs_f64(),
+                r.len()
+            );
+            rows.extend(r);
+        }
+
+        for dev in [Device::xavier_nx(), Device::jetson_nano()] {
+            let reports = hqp::coordinator::experiments::reports_for_device(&rows, &dev.name);
+            println!(
+                "\n{}",
+                report::method_table(&format!("{model} on {}", dev.name), &reports)
+            );
+        }
+
+        // paper-vs-measured shape comparison (Xavier NX)
+        println!("paper-vs-measured (Xavier NX):");
+        println!(
+            "  {:<10} {:>14} {:>14} {:>16} {:>14}",
+            "method", "speedup(paper)", "speedup(ours)", "drop%(paper/ours)", "θ%(paper/ours)"
+        );
+        let nx = hqp::coordinator::experiments::reports_for_device(&rows, "xavier-nx");
+        for (name, p_speed, p_drop, p_theta) in paper {
+            if let Some(r) = nx.iter().find(|r| r.method == *name) {
+                println!(
+                    "  {:<10} {:>14.2} {:>14.2} {:>8.1}/{:<7.2} {:>7.0}/{:<6.0}",
+                    name,
+                    p_speed,
+                    r.speedup,
+                    p_drop,
+                    r.acc_drop * 100.0,
+                    p_theta,
+                    r.sparsity * 100.0
+                );
+            }
+        }
+
+        // conditional-loop trajectory for HQP (the quality-guarantee story)
+        if let Some(hqp_row) = rows.iter().find(|r| {
+            r.report.method == "hqp" && r.report.device == "xavier-nx" && !r.trace.is_empty()
+        }) {
+            println!("\nAlgorithm 1 trajectory ({model}):");
+            for (s, a, ok) in &hqp_row.trace {
+                println!(
+                    "  θ={:>5.1}%  val acc {:.4}  {}",
+                    s * 100.0,
+                    a,
+                    if *ok { "accepted" } else { "REJECTED -> stop" }
+                );
+            }
+        }
+    }
+    println!("\nE2E complete. Results cached under artifacts/results/.");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: open the workspace, run one HQP pipeline, print the table
+//! row — the 20-line tour of the public API.
+//!
+//! ```bash
+//! make artifacts            # once: trains models + AOT-lowers the HLO
+//! cargo run --release --example quickstart
+//! ```
+
+use hqp::graph::Graph;
+use hqp::hqp::{deploy, run_hqp, HqpConfig};
+use hqp::hwsim::Device;
+use hqp::runtime::{Session, Workspace};
+
+fn main() -> hqp::Result<()> {
+    // 1. open the AOT artifacts (HLO text + weights + datasets + manifest)
+    let ws = Workspace::open("artifacts")?;
+    println!("PJRT platform: {}", ws.platform());
+
+    // 2. bind a model and run the paper's pipeline:
+    //    Fisher sensitivity -> Algorithm-1 conditional pruning (Δ_max=1.5%)
+    //    -> KL-calibrated INT8 PTQ. A coarser δ keeps the demo fast.
+    let mut sess = Session::new(&ws, "mobilenetv3")?;
+    let cfg = HqpConfig { delta_step_frac: 0.05, ..Default::default() };
+    let outcome = run_hqp(&mut sess, &cfg)?;
+    println!(
+        "HQP: sparsity θ={:.0}%, accuracy {:.4} (baseline {:.4}, drop {:.2}%)",
+        outcome.sparsity * 100.0,
+        outcome.accuracy,
+        outcome.baseline_acc,
+        outcome.acc_drop() * 100.0
+    );
+
+    // 3. deploy onto the simulated Jetson Xavier NX and print the row
+    let graph = Graph::from_manifest(&sess.mm)?;
+    let row = deploy::report(&graph, &outcome, &Device::xavier_nx(), cfg.delta_max)?;
+    println!(
+        "deployed on {}: {:.3} ms ({:.2}x speedup), size -{:.0}%, {} Δ-compliant",
+        row.device,
+        row.latency_ms,
+        row.speedup,
+        row.size_reduction * 100.0,
+        if row.compliant { "is" } else { "is NOT" }
+    );
+    Ok(())
+}

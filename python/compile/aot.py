@@ -1,0 +1,229 @@
+"""AOT driver: python runs ONCE, here — never on the request path.
+
+`python -m compile.aot --out ../artifacts` (via `make artifacts`):
+  1. generates + saves the synthetic data splits (.npy),
+  2. trains both benchmark models (skipped if weights already saved),
+  3. lowers the five exported functions per model to HLO *text*,
+  4. writes artifacts/manifest.json — the complete L2->L3 contract
+     (param layout, prune groups, taps, op graph, artifact arg specs).
+
+HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published `xla`
+0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+`--report` prints the L1 kernel VMEM-footprint / MXU-utilization table used
+for the §Perf TPU-efficiency estimate (interpret=True wall-clock is NOT a
+TPU proxy — we optimize kernel structure, not CPU timings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen
+from . import model as M
+from . import models as model_zoo
+from . import train as T
+from .layers import HIST_BINS
+
+MODELS = ["mobilenetv3", "resnet18"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), {"f32": jnp.float32, "i32": jnp.int32}[dtype])
+
+
+def save_npy(path: str, arr: np.ndarray):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.save(path, arr)
+
+
+# ---------------------------------------------------------------------------
+
+
+def export_data(out: str, manifest: dict):
+    manifest["data"] = {}
+    for split in ["calib", "val", "test"]:
+        xs, ys = datagen.generate_split(split)
+        save_npy(f"{out}/data/{split}_x.npy", xs)
+        save_npy(f"{out}/data/{split}_y.npy", ys.astype(np.int32))
+        manifest["data"][split] = dict(
+            x=f"data/{split}_x.npy", y=f"data/{split}_y.npy", n=int(xs.shape[0])
+        )
+
+
+def export_model(name: str, out: str, manifest: dict, fast: bool, log=print):
+    mod = model_zoo.get(name)
+    net = M.trace(name)
+    order = net.param_order
+
+    # -- weights (train once, reuse thereafter) -----------------------------
+    wdir = f"{out}/weights/{name}"
+    if os.path.isdir(wdir) and len(os.listdir(wdir)) == len(order):
+        log(f"[{name}] weights already trained, reusing {wdir}")
+        params = {
+            n: jnp.asarray(np.load(f"{wdir}/p{i:04d}.npy"))
+            for i, n in enumerate(order)
+        }
+        baseline = T.evaluate(name, order, params, split="val")
+    else:
+        epochs = 1 if fast else (9 if name == "resnet18" else 8)
+        # MobileNetV3's tiny depthwise/SE blocks train best at a gentler LR.
+        lr = 0.05 if name == "mobilenetv3" else 0.08
+        params, order2, _hist = T.train_model(name, epochs=epochs, lr=lr, log=log)
+        assert order2 == order
+        for i, n in enumerate(order):
+            save_npy(f"{wdir}/p{i:04d}.npy", np.asarray(params[n]))
+        baseline = T.evaluate(name, order, params, split="val")
+        log(f"[{name}] baseline val accuracy: {baseline:.4f}")
+
+    plist = M.params_to_list(params, order)
+    n_taps = len(net.taps)
+
+    # -- lower the exported function set ------------------------------------
+    pspecs = [_spec(p.shape) for p in plist]
+    hw = mod.INPUT_HW
+    arts = {}
+
+    def lower(fn_name, fn, extra_specs, extra_args, outputs):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(pspecs, *extra_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{fn_name}.hlo.txt"
+        with open(f"{out}/{fname}", "w") as f:
+            f.write(text)
+        arts[fn_name] = dict(file=fname, extra_args=extra_args, outputs=outputs)
+        log(f"[{name}] lowered {fn_name}: {len(text)} chars ({time.time()-t0:.1f}s)")
+
+    eb, fb, hb = M.EVAL_BATCH, M.FISHER_BATCH, M.HIST_BATCH
+    lower(
+        "eval", M.make_eval_logits(name, order),
+        [_spec((eb, hw, hw, 3))],
+        [["x", [eb, hw, hw, 3], "f32"]],
+        [["logits", [eb, mod.NUM_CLASSES], "f32"]],
+    )
+    lower(
+        "fisher", M.make_fisher_gradsq(name, order, net.groups),
+        [_spec((fb, hw, hw, 3)), _spec((fb,), "i32")],
+        [["x", [fb, hw, hw, 3], "f32"], ["y", [fb], "i32"]],
+        [["s", [sum(g.size for g in net.groups)], "f32"]],
+    )
+    lower(
+        "absmax", M.make_act_absmax(name, order),
+        [_spec((hb, hw, hw, 3))],
+        [["x", [hb, hw, hw, 3], "f32"]],
+        [["absmax", [n_taps], "f32"], ["logits", [hb, mod.NUM_CLASSES], "f32"]],
+    )
+    lower(
+        "hist", M.make_act_hist(name, order),
+        [_spec((hb, hw, hw, 3)), _spec((n_taps,))],
+        [["x", [hb, hw, hw, 3], "f32"], ["ranges", [n_taps], "f32"]],
+        [["hist", [n_taps, HIST_BINS], "f32"], ["logits", [hb, mod.NUM_CLASSES], "f32"]],
+    )
+    lower(
+        "quant_eval", M.make_quant_eval(name, order),
+        [_spec((n_taps,)), _spec((eb, hw, hw, 3))],
+        [["scales", [n_taps], "f32"], ["x", [eb, hw, hw, 3], "f32"]],
+        [["logits", [eb, mod.NUM_CLASSES], "f32"]],
+    )
+
+    # -- manifest entry ------------------------------------------------------
+    manifest["models"][name] = dict(
+        input_hw=hw,
+        num_classes=mod.NUM_CLASSES,
+        baseline_val_acc=float(baseline),
+        eval_batch=eb,
+        fisher_batch=fb,
+        hist_batch=hb,
+        weights_dir=f"weights/{name}",
+        param_order=[
+            dict(name=n, shape=list(np.asarray(params[n]).shape)) for n in order
+        ],
+        groups=[
+            dict(
+                id=g.id, name=g.name, size=g.size, offset=g.offset,
+                members=[[p, a] for (p, a) in g.members],
+                producer=g.producer_param, producer_axis=g.producer_axis,
+            )
+            for g in net.groups
+        ],
+        taps=[dict(id=t.id, op=t.op_name, shape=list(t.shape)) for t in net.taps],
+        ops=[
+            dict(
+                id=o.id, kind=o.kind, name=o.name, inputs=o.inputs,
+                output=o.output, attrs=o.attrs, params=o.params,
+                group=o.group, tap=o.tap,
+            )
+            for o in net.ops
+        ],
+        tensor_shapes={str(k): list(v) for k, v in net._tensor_shape.items()},
+        artifacts=arts,
+    )
+
+
+def kernel_report():
+    """§Perf L1: VMEM footprint + MXU utilization across block-shape
+    candidates for the qmatmul kernel at the deployed GEMM shapes."""
+    from .kernels.qmatmul import mxu_utilization, vmem_footprint_bytes
+
+    shapes = []
+    for name in MODELS:
+        net = M.trace(name)
+        for op in net.ops:
+            if op.kind == "conv" and op.attrs.get("k") == 1 and op.attrs.get("groups", 1) == 1:
+                a = op.attrs
+                shapes.append((name, op.name, M.EVAL_BATCH * a["h"] * a["w"], a["cin"], a["cout"]))
+            elif op.kind == "fc" and "cin" in op.attrs:
+                shapes.append((name, op.name, M.EVAL_BATCH, op.attrs["cin"], op.attrs["cout"]))
+
+    print(f"{'gemm':44s} {'M':>8s} {'K':>5s} {'N':>5s} | block   VMEM(KiB,x2buf)  MXU-util")
+    for bm, bn, bk in [(128, 128, 128), (256, 128, 128), (128, 128, 256), (512, 256, 128)]:
+        print(f"--- block ({bm},{bn},{bk}) ---")
+        for (mname, oname, m, k, n) in shapes:
+            vm = 2 * vmem_footprint_bytes(min(bm, m), min(bn, n), min(bk, k)) / 1024
+            ut = mxu_utilization(m, n, k, min(bm, m), min(bn, n), min(bk, k))
+            print(f"{mname+'/'+oname:44s} {m:8d} {k:5d} {n:5d} |        {vm:10.0f}      {ut:8.2%}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--fast", action="store_true", help="1-epoch smoke training")
+    ap.add_argument("--report", action="store_true", help="print L1 kernel roofline report")
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+
+    if args.report:
+        kernel_report()
+        return
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    manifest = dict(version=1, hist_bins=HIST_BINS, models={})
+    export_data(out, manifest)
+    for name in args.models.split(","):
+        export_model(name, out, manifest, fast=args.fast)
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Synthetic procedural image dataset ("SynthEdge-10").
+
+Substitute for ImageNet-1000 (unavailable in this environment — see
+DESIGN.md §Substitutions). 10 classes of 32x32 RGB images. The class signal
+is deliberately *fine-grained* so that a small CNN reaches high-but-NOT-
+saturated accuracy and — critically for reproducing HQP's evaluation —
+compression perturbations (filter masking, INT8 rounding) produce graded,
+measurable accuracy drops rather than no-ops:
+
+  * class = (shape kind in {disc, square, triangle, ring, cross}) x
+            (stripe texture frequency in {low, high})
+  * the 5 shape families also carry a (jittered) palette, so the coarse
+    5-way split is learned quickly; the paired classes (k vs k+5) differ
+    ONLY in stripe frequency — a fine-grained, perturbation-sensitive
+    signal that INT8 rounding and filter masking measurably erode,
+  * scale / rotation / position jitter, a random occluding rectangle,
+  * additive Gaussian noise and photometric gain/bias jitter.
+
+Everything derives from a counter-based deterministic PRNG (numpy Philox),
+so the train/calib/val/test splits are bit-reproducible across runs and
+across the python/rust boundary.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 32
+NUM_CLASSES = 10
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.Generator(np.random.Philox(key=seed))
+
+
+# Per-shape-family palettes (fg, bg) — jittered per sample in make_image.
+_FG = [
+    (0.85, 0.30, 0.30),
+    (0.30, 0.80, 0.35),
+    (0.30, 0.40, 0.85),
+    (0.85, 0.80, 0.30),
+    (0.75, 0.35, 0.80),
+]
+_BG = [
+    (0.15, 0.15, 0.30),
+    (0.30, 0.15, 0.15),
+    (0.15, 0.28, 0.15),
+    (0.28, 0.15, 0.28),
+    (0.15, 0.28, 0.28),
+]
+
+
+def _shape_mask(kind: int, cx: float, cy: float, r: float, ang: float) -> np.ndarray:
+    """Shape-family mask on the 32x32 grid (5 families)."""
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    x = (xx - cx) / r
+    y = (yy - cy) / r
+    ca, sa = np.cos(ang), np.sin(ang)
+    xr = ca * x - sa * y
+    yr = sa * x + ca * y
+    if kind == 0:  # disc
+        return (xr * xr + yr * yr) < 1.0
+    if kind == 1:  # square
+        return (np.abs(xr) < 0.85) & (np.abs(yr) < 0.85)
+    if kind == 2:  # triangle
+        return (yr > -0.75) & (yr < 1.6 * xr + 0.8) & (yr < -1.6 * xr + 0.8)
+    if kind == 3:  # ring
+        rr = xr * xr + yr * yr
+        return (rr < 1.0) & (rr > 0.45)
+    # cross
+    return (np.abs(xr) < 0.32) | (np.abs(yr) < 0.32)
+
+
+def make_image(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One 32x32x3 float32 image of class `cls` (see module docstring)."""
+    shape_kind = cls % 5
+    fine_texture = cls >= 5
+
+    # Palette keyed to the shape family (coarse signal), heavily jittered.
+    base_fg = np.array(_FG[shape_kind], np.float32)
+    base_bg = np.array(_BG[shape_kind], np.float32)
+    fg = np.clip(base_fg + rng.uniform(-0.18, 0.18, size=3).astype(np.float32), 0.05, 1.0)
+    bg = np.clip(base_bg + rng.uniform(-0.18, 0.18, size=3).astype(np.float32), 0.0, 0.9)
+
+    cx = 16.0 + rng.uniform(-4, 4)
+    cy = 16.0 + rng.uniform(-4, 4)
+    r = rng.uniform(6.0, 10.5)
+    ang = rng.uniform(0, 2 * np.pi)
+    mask = _shape_mask(shape_kind, cx, cy, r, ang).astype(np.float32)
+
+    # Texture: stripe frequency is the second half of the class signal.
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    freq = 1.3 if fine_texture else 0.5
+    phase = rng.uniform(0, 2 * np.pi)
+    orient = rng.uniform(0, np.pi)
+    axis = np.cos(orient) * xx + np.sin(orient) * yy
+    stripes = 0.5 + 0.5 * np.sin(freq * axis + phase)
+
+    img = np.empty((IMG, IMG, 3), dtype=np.float32)
+    for c in range(3):
+        base = bg[c] * (0.75 + 0.25 * stripes)
+        img[..., c] = base * (1.0 - mask) + fg[c] * mask * (0.55 + 0.45 * stripes)
+
+    # Random occluding rectangle (drops part of the evidence).
+    if rng.uniform() < 0.35:
+        ow = int(rng.integers(3, 8))
+        oh = int(rng.integers(3, 8))
+        ox = int(rng.integers(0, IMG - ow))
+        oy = int(rng.integers(0, IMG - oh))
+        img[oy : oy + oh, ox : ox + ow, :] = rng.uniform(0.0, 1.0, size=3).astype(
+            np.float32
+        )
+
+    # Photometric jitter + noise.
+    gain = rng.uniform(0.75, 1.25)
+    bias = rng.uniform(-0.08, 0.08)
+    noise = rng.normal(0.0, 0.10, size=img.shape).astype(np.float32)
+    img = np.clip(img * gain + bias + noise, 0.0, 1.0)
+    return img
+
+
+def make_split(n: int, seed: int, label_noise: float = 0.0):
+    """Generate `n` (image, label) pairs."""
+    rng = _rng(seed)
+    xs = np.empty((n, IMG, IMG, 3), dtype=np.float32)
+    ys = np.empty((n,), dtype=np.int32)
+    for i in range(n):
+        cls = int(rng.integers(0, NUM_CLASSES))
+        xs[i] = make_image(cls, rng)
+        if label_noise > 0 and rng.uniform() < label_noise:
+            ys[i] = int(rng.integers(0, NUM_CLASSES))
+        else:
+            ys[i] = cls
+    return xs, ys
+
+
+# Canonical split seeds/sizes used by train.py and aot.py — the rust side
+# loads the .npy files these produce and must agree on the protocol.
+SPLITS = {
+    "train": dict(n=8192, seed=0xA11CE, label_noise=0.02),
+    "calib": dict(n=1024, seed=0xB0B, label_noise=0.0),
+    "val": dict(n=1024, seed=0xC0FFEE, label_noise=0.0),
+    "test": dict(n=1024, seed=0xD00D, label_noise=0.0),
+}
+
+
+def generate_split(name: str):
+    cfg = SPLITS[name]
+    return make_split(cfg["n"], cfg["seed"], cfg["label_noise"])

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: per-filter Fisher (diagonal FIM) accumulation.
+
+The HQP sensitivity metric (paper §II-B) is
+
+    S_f = (1/|Dcalib|) * sum_i || dL(W, x_i, y_i)/dW_f ||^2
+
+i.e. for every prunable filter f, the sum over calibration samples of the
+squared L2 norm of that sample's gradient w.r.t. the filter's weights. L2
+(model.py) produces per-sample gradients g of shape (B, F, E) — B samples,
+F filters, E = kernel elements per filter; this kernel reduces them to the
+(F,) per-filter scores. It is the hot reduction of HQP Phase 1-A: for a
+model with P parameters and a B-sample microbatch the input is B*P floats.
+
+TPU mapping: each grid step loads a (B, bf, E) slab into VMEM, squares on
+the VPU, and accumulates an (bf,) partial in the output tile. Grid sweeps
+the filter axis so arbitrarily many filters stream through a fixed VMEM
+budget. interpret=True for CPU-PJRT execution (see qmatmul.py docstring).
+
+Correctness oracle: ref.fisher_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BF = 128  # filters per grid step
+
+
+def _fisher_kernel(g_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(g * g, axis=(0, 2))
+
+
+def fisher_accumulate(g: jnp.ndarray, *, bf: int = DEFAULT_BF) -> jnp.ndarray:
+    """Reduce per-sample gradients (B, F, E) -> per-filter scores (F,):
+    S_f = sum_{b,e} g[b,f,e]^2. Edge blocks are zero-padded, which is exact
+    for a sum of squares."""
+    b, f, e = g.shape
+    bf = min(bf, f)
+    grid = (pl.cdiv(f, bf),)
+    return pl.pallas_call(
+        _fisher_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, bf, e), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((bf,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), jnp.float32),
+        interpret=True,
+    )(g)

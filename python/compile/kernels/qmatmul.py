@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: fake-quant INT8 tiled GEMM (the paper's compute hot-spot).
+
+HQP's deployed model executes INT8 GEMMs (pointwise 1x1 convolutions are
+reshaped to GEMMs; the classifier head is a GEMM). The paper runs these on
+Jetson Tensor Cores via TensorRT; the TPU-style rethink (DESIGN.md
+§Hardware-Adaptation) is:
+
+  * BlockSpec tiles sized for VMEM (the TPU scratchpad), not CUDA shared
+    memory: an (bm x bk) activation tile, a (bk x bn) weight tile and an
+    (bm x bn) f32 accumulator live in VMEM across the K-sweep.
+  * The inner product targets the MXU systolic array via a dense
+    `jnp.dot(..., preferred_element_type=f32)` on the tile; the
+    quantize/clip/round element-wise ops vectorize on the VPU.
+  * The HBM<->VMEM schedule the paper expresses with threadblocks is the
+    BlockSpec grid: (M/bm, N/bn, K/bk), with K innermost so the accumulator
+    tile stays resident (double-buffered tile streaming is the Mosaic
+    default on real hardware).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO ops so the same
+artifact runs under the rust runtime. Real-TPU efficiency is estimated from
+the VMEM footprint / MXU-utilization report in aot.py --report.
+
+Correctness oracle: ref.qmatmul_ref (pytest + hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QMAX, QMIN
+
+# Default block shapes: MXU-shaped (128x128) output tiles with a 128-deep
+# K-slab. f32 VMEM footprint = (bm*bk + bk*bn + bm*bn) * 4B = 192 KiB —
+# comfortably inside a ~16 MiB VMEM budget, leaving room for double
+# buffering. See aot.py --report for the footprint/utilization table.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _qmatmul_kernel(x_ref, w_ref, sx_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] += quant(x[i,k]) @ w[k,j].
+
+    The K grid axis is innermost, so o_ref (the VMEM accumulator tile) is
+    revisited nk times; we zero it on the first visit.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sx = sx_ref[0]
+    # VPU: fake-quantize the activation tile onto the symmetric INT8 grid.
+    xq = jnp.clip(jnp.round(x_ref[...] / sx), QMIN, QMAX) * sx
+    # MXU: dense f32 tile product (bit-identical to int8*int8->int32 deq,
+    # since both operands are exact small-integer multiples of scales).
+    o_ref[...] += jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    sx: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """Fake-quant INT8 GEMM: quantize `x` per-tensor with scale `sx`, then
+    (M,K) @ (K,N) with f32 accumulation. `wq` must already lie on its int8
+    grid (offline per-channel quantization, scales folded in).
+
+    Shapes need not be multiples of the block sizes: inputs are explicitly
+    zero-padded up to block multiples here (interpret-mode Pallas fills
+    out-of-bounds block reads with NaN, so relying on implicit padding would
+    poison the accumulation; zero padding is exact for GEMM+sum), and the
+    output is sliced back. `sx` is a shape-(1,) f32 array.
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {wq.shape}"
+    assert sx.shape == (1,), f"sx must be shape (1,), got {sx.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, wq, sx)
+    return out[:m, :n] if (mp, np_) != (m, n) else out
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid step (x-tile + w-tile + acc-tile).
+    Used by the aot.py --report roofline estimator; doubled there for the
+    double-buffered streaming the Mosaic pipeline applies on real TPUs."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (not edge padding)."""
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
+    issued = gm * bm * gn * bn * gk * bk
+    return (m * n * k) / issued

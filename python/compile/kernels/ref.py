@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference semantics the kernels in qmatmul.py / fisher.py must
+match bit-for-bit (same rounding mode, same accumulation dtype). pytest +
+hypothesis sweep shapes/dtypes against these (python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# INT8 symmetric grid bounds (TensorRT-style symmetric signed quantization
+# uses [-127, 127] so the grid is symmetric around zero; -128 is unused).
+QMIN = -127.0
+QMAX = 127.0
+
+
+def quantize_sym(x: jnp.ndarray, scale) -> jnp.ndarray:
+    """Fake-quantize to the symmetric INT8 grid: round-to-nearest-even,
+    clip to [-127,127], values returned on the dequantized (f32) grid."""
+    q = jnp.clip(jnp.round(x / scale), QMIN, QMAX)
+    return q * scale
+
+
+def qmatmul_ref(x: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray) -> jnp.ndarray:
+    """Reference fake-quant INT8 GEMM.
+
+    x  : (M, K) f32 activations (unquantized).
+    wq : (K, N) f32 weights ALREADY on the int8 grid (pre-quantized offline,
+         per-output-channel scales folded in — i.e. wq = round(w/sw)*sw).
+    sx : scalar f32 activation scale (per-tensor, from KL calibration).
+
+    Semantics: quantize activations to the int8 grid, then dense GEMM with
+    f32 accumulation. Because both operands hold exact small-integer
+    multiples of their scales, the f32 GEMM is bit-identical to an int8
+    GEMM with int32 accumulation followed by dequantization.
+    """
+    xq = quantize_sym(x, sx)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def fisher_ref(g: jnp.ndarray) -> jnp.ndarray:
+    """Reference per-filter Fisher accumulation.
+
+    g : (B, F, E) f32 — per-sample gradients, reshaped so axis 0 is the
+        sample axis, axis 1 the filter axis, axis 2 everything else
+        (kernel spatial x input-channel elements).
+
+    Returns (F,) f32: S_f = sum_b ||g[b, f, :]||^2  — the diagonal-FIM
+    per-filter sensitivity contribution of this batch (paper §II-B).
+    """
+    return jnp.sum(g.astype(jnp.float32) ** 2, axis=(0, 2))

@@ -1,0 +1,433 @@
+"""L2 building blocks + the single-pass recorder.
+
+A model here is a pure function over an ordered, flat list of named f32
+arrays ("params-as-arguments"): the AOT-lowered HLO takes every parameter as
+a runtime input, which is what lets the Rust coordinator mask filters
+(structural pruning) and substitute INT8-grid weights (PTQ) without ever
+re-lowering — the paper's entire Algorithm-1 loop runs in Rust against one
+fixed artifact per model.
+
+The `Net` object below is the recorder: the SAME model code path serves
+  * init    — creates parameters (He init, deterministic PRNG),
+  * apply   — plain forward (training with batch-norm batch stats, or eval
+              with folded running stats),
+  * trace   — records the op graph, prune groups, tap list and param layout
+              that aot.py serializes into artifacts/manifest.json for the
+              Rust graph IR (rust/src/graph),
+  * quant   — fake-quant forward: each quantizable op consumes the next
+              per-tensor activation scale (KL-calibrated in Rust) and the
+              pointwise-conv / FC hot spots run through the L1 Pallas
+              qmatmul kernel.
+Because all four modes execute the same traversal, the tap order, scale
+order, prune-group order and param order are consistent by construction.
+
+Prune-group semantics (paper §III): a group is one conv's (or FC's) output
+channel set — the unit Algorithm 1 removes. Masking a channel j of group g
+zeroes, for every member (param, axis) of g, the j-th slice along axis.
+Members include the producing weight tensor AND every per-channel parameter
+downstream that could re-introduce a nonzero value into a zeroed channel
+(BN gamma/beta, depthwise filters) up to the next channel-mixing op, so that
+masked evaluation is numerically identical to true structural removal.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.qmatmul import qmatmul
+from .kernels.ref import quantize_sym
+
+BN_EPS = 1e-3
+HIST_BINS = 2048  # TensorRT KL-calibration histogram resolution
+
+
+# ---------------------------------------------------------------------------
+# metadata records (serialized into manifest.json by aot.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OpRec:
+    """One node of the inference graph, mirrored by rust/src/graph."""
+
+    id: int
+    kind: str  # conv|dwconv|bn|act|add|gap|fc|se_mul|flatten
+    name: str
+    inputs: list  # tensor ids
+    output: int  # tensor id
+    attrs: dict = field(default_factory=dict)
+    params: list = field(default_factory=list)  # param names used
+    group: Optional[int] = None  # prune group that produces this op's output
+    tap: Optional[int] = None  # index into the quantization tap list
+
+
+@dataclass
+class GroupRec:
+    """One prune group = one ranked unit of Algorithm 1."""
+
+    id: int
+    name: str
+    size: int  # number of filters/channels
+    offset: int = 0  # filled by finalize(): index of filter 0 in the global S vector
+    members: list = field(default_factory=list)  # [(param_name, axis), ...]
+    producer_param: str = ""  # the conv/fc weight whose grads define S
+    producer_axis: int = 0
+
+
+@dataclass
+class TapRec:
+    """One quantizable activation (input of a conv/fc)."""
+
+    id: int
+    op_name: str
+    shape: tuple
+
+
+class Net:
+    """Recorder + parameter store; see module docstring."""
+
+    MODES = ("init", "apply", "trace", "quant")
+
+    def __init__(
+        self,
+        mode: str,
+        params: Optional[dict] = None,
+        rng: Optional[np.random.Generator] = None,
+        scales: Optional[jnp.ndarray] = None,
+        train: bool = False,
+        collect_taps: bool = False,
+    ):
+        assert mode in self.MODES, mode
+        self.mode = mode
+        self.params = params if params is not None else {}
+        self.rng = rng
+        self.scales = scales  # (n_taps,) f32, quant mode only
+        self.train = train
+        self.collect_taps = collect_taps
+
+        self.param_order: list = []  # ordered names (layout contract with rust)
+        self.ops: list = []
+        self.groups: list = []
+        self.taps: list = []
+        self.tap_values: list = []  # activations captured when collect_taps
+        self.bn_stats: dict = {}  # name -> (batch_mean, batch_var) in train mode
+        self._tid = 0
+        self._tensor_group: dict = {}  # tensor id -> group id
+        self._tensor_shape: dict = {}
+
+    # -- tensors ------------------------------------------------------------
+
+    def input(self, x: jnp.ndarray) -> tuple:
+        tid = self._new_tid(x.shape)
+        return x, tid
+
+    def _new_tid(self, shape) -> int:
+        tid = self._tid
+        self._tid += 1
+        self._tensor_shape[tid] = tuple(int(d) for d in shape)
+        return tid
+
+    # -- params -------------------------------------------------------------
+
+    def param(self, name: str, shape: tuple, init: str = "he", fan_in: int = 0):
+        if name in self.param_order:
+            raise ValueError(f"duplicate param {name}")
+        self.param_order.append(name)
+        if self.mode == "init":
+            if init == "he":
+                std = math.sqrt(2.0 / max(fan_in, 1))
+                v = self.rng.normal(0.0, std, size=shape).astype(np.float32)
+            elif init == "zeros":
+                v = np.zeros(shape, np.float32)
+            elif init == "ones":
+                v = np.ones(shape, np.float32)
+            else:
+                raise ValueError(init)
+            self.params[name] = jnp.asarray(v)
+        elif self.mode == "trace":
+            self.params.setdefault(name, jnp.zeros(shape, jnp.float32))
+        arr = self.params[name]
+        assert tuple(arr.shape) == tuple(shape), f"{name}: {arr.shape} != {shape}"
+        return arr
+
+    # -- op recording ---------------------------------------------------------
+
+    def _record(self, kind, name, in_tids, out_shape, attrs=None, params=None,
+                group=None, tap=None) -> int:
+        out_tid = self._new_tid(out_shape)
+        self.ops.append(
+            OpRec(
+                id=len(self.ops),
+                kind=kind,
+                name=name,
+                inputs=list(in_tids),
+                output=out_tid,
+                attrs=attrs or {},
+                params=params or [],
+                group=group,
+                tap=tap,
+            )
+        )
+        return out_tid
+
+    def _new_group(self, name: str, size: int, producer: str, axis: int) -> int:
+        gid = len(self.groups)
+        self.groups.append(
+            GroupRec(
+                id=gid,
+                name=name,
+                size=size,
+                members=[(producer, axis)],
+                producer_param=producer,
+                producer_axis=axis,
+            )
+        )
+        return gid
+
+    def _tap(self, op_name: str, x: jnp.ndarray):
+        """Register a quantizable activation; in quant mode consume the next
+        scale and fake-quantize; in tap-collect mode stash the tensor."""
+        tap_id = len(self.taps)
+        self.taps.append(TapRec(id=tap_id, op_name=op_name, shape=tuple(x.shape)))
+        if self.collect_taps:
+            self.tap_values.append(x)
+        if self.mode == "quant":
+            s = self.scales[tap_id]
+            x = quantize_sym(x, s)
+        return x, tap_id
+
+    # -- layers ---------------------------------------------------------------
+
+    def conv(self, name, xt, cout, k, stride=1, groups=1, quantizable=True):
+        """Conv2D, NHWC/HWIO, SAME padding, no bias (BN follows).
+
+        groups == cin means depthwise: the output channels belong to the
+        *input's* prune group (per-channel op); otherwise a fresh prune
+        group is created for the cout output channels.
+        """
+        x, tid = xt
+        cin = int(x.shape[-1])
+        depthwise = groups == cin and groups > 1
+        w = self.param(name + ".w", (k, k, cin // groups, cout), fan_in=k * k * cin // groups)
+        pointwise = k == 1 and groups == 1 and stride == 1
+
+        tap = None
+        pallas_path = False
+        if quantizable:
+            if self.mode == "quant" and pointwise:
+                # INT8 path for pointwise convs: a GEMM over the pixel axis —
+                # the L1 Pallas kernel territory (the MobileNetV3 hot spot).
+                # The kernel performs the activation quantization itself, so
+                # register the tap without pre-quantizing.
+                tap = len(self.taps)
+                self.taps.append(TapRec(id=tap, op_name=name, shape=tuple(x.shape)))
+                pallas_path = True
+            else:
+                x, tap = self._tap(name, x)
+
+        if depthwise:
+            gid = self._tensor_group.get(tid)
+            if gid is not None:
+                self.groups[gid].members.append((name + ".w", 3))
+        else:
+            gid = self._new_group(name, cout, name + ".w", 3)
+
+        if self.mode == "trace":
+            h, wd = int(x.shape[1]), int(x.shape[2])
+            ho, wo = -(-h // stride), -(-wd // stride)
+            y = jnp.zeros((x.shape[0], ho, wo, cout), jnp.float32)
+        elif pallas_path:
+            n, h, wd, _ = x.shape
+            sx = self.scales[tap]
+            ym = qmatmul(x.reshape(n * h * wd, cin), w.reshape(cin, cout), sx.reshape(1))
+            y = ym.reshape(n, h, wd, cout)
+        else:
+            y = jax.lax.conv_general_dilated(
+                x,
+                w,
+                window_strides=(stride, stride),
+                padding="SAME",
+                feature_group_count=groups,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        out_tid = self._record(
+            "dwconv" if depthwise else "conv",
+            name,
+            [tid],
+            y.shape,
+            attrs=dict(cin=cin, cout=cout, k=k, stride=stride, groups=groups,
+                       h=int(y.shape[1]), w=int(y.shape[2])),
+            params=[name + ".w"],
+            group=gid,
+            tap=tap,
+        )
+        if gid is not None:
+            self._tensor_group[out_tid] = gid
+        return y, out_tid
+
+    def bn(self, name, xt):
+        """BatchNorm. Params: gamma/beta (trainable) + mean/var (running,
+        updated by train.py via EMA, folded as plain arguments at export).
+        gamma/beta join the input tensor's prune group (zeroing them is what
+        makes channel masking exact — see module docstring)."""
+        x, tid = xt
+        c = int(x.shape[-1])
+        g = self.param(name + ".gamma", (c,), init="ones")
+        b = self.param(name + ".beta", (c,), init="zeros")
+        mu = self.param(name + ".mean", (c,), init="zeros")
+        var = self.param(name + ".var", (c,), init="ones")
+
+        gid = self._tensor_group.get(tid)
+        if gid is not None:
+            self.groups[gid].members.append((name + ".gamma", 0))
+            self.groups[gid].members.append((name + ".beta", 0))
+
+        if self.mode == "trace":
+            y = x
+        elif self.train:
+            bm = jnp.mean(x, axis=(0, 1, 2))
+            bv = jnp.var(x, axis=(0, 1, 2))
+            self.bn_stats[name] = (bm, bv)
+            y = g * (x - bm) / jnp.sqrt(bv + BN_EPS) + b
+        else:
+            y = g * (x - mu) / jnp.sqrt(var + BN_EPS) + b
+        out_tid = self._record(
+            "bn", name, [tid], y.shape, attrs=dict(c=c),
+            params=[name + ".gamma", name + ".beta", name + ".mean", name + ".var"],
+            group=gid,
+        )
+        if gid is not None:
+            self._tensor_group[out_tid] = gid
+        return y, out_tid
+
+    def act(self, name, xt, kind):
+        x, tid = xt
+        if self.mode == "trace":
+            y = x
+        elif kind == "relu":
+            y = jax.nn.relu(x)
+        elif kind == "hswish":
+            y = x * jax.nn.relu6(x + 3.0) / 6.0
+        elif kind == "hsigmoid":
+            y = jax.nn.relu6(x + 3.0) / 6.0
+        else:
+            raise ValueError(kind)
+        gid = self._tensor_group.get(tid)
+        out_tid = self._record("act", name, [tid], y.shape, attrs=dict(kind=kind), group=gid)
+        if gid is not None:
+            self._tensor_group[out_tid] = gid
+        return y, out_tid
+
+    def add(self, name, at, bt):
+        a, ta = at
+        b, tb = bt
+        y = a if self.mode == "trace" else a + b
+        out_tid = self._record("add", name, [ta, tb], a.shape)
+        return y, out_tid
+
+    def se(self, name, xt, reduce_ratio=4):
+        """Squeeze-and-Excitation. The reduce FC creates its own prune group;
+        the expand FC writes into the trunk group's channels (zero input ->
+        sigmoid(bias) gate, but the gated tensor is already zero there, so
+        no extra members needed for masking exactness)."""
+        x, tid = xt
+        c = int(x.shape[-1])
+        cr = max(c // reduce_ratio, 4)
+        if self.mode == "trace":
+            pooled = jnp.zeros((x.shape[0], c), jnp.float32)
+        else:
+            pooled = jnp.mean(x, axis=(1, 2))
+        p_tid = self._record("gap", name + ".squeeze", [tid], pooled.shape)
+
+        w1 = self.param(name + ".fc1.w", (c, cr), fan_in=c)
+        b1 = self.param(name + ".fc1.b", (cr,), init="zeros")
+        gid1 = self._new_group(name + ".fc1", cr, name + ".fc1.w", 1)
+        self.groups[gid1].members.append((name + ".fc1.b", 0))
+        if self.mode == "trace":
+            h1 = jnp.zeros((x.shape[0], cr), jnp.float32)
+        else:
+            h1 = jax.nn.relu(pooled @ w1 + b1)
+        h1_tid = self._record(
+            "fc", name + ".fc1", [p_tid], h1.shape,
+            attrs=dict(cin=c, cout=cr), params=[name + ".fc1.w", name + ".fc1.b"],
+            group=gid1,
+        )
+        self._tensor_group[h1_tid] = gid1
+
+        w2 = self.param(name + ".fc2.w", (cr, c), fan_in=cr)
+        b2 = self.param(name + ".fc2.b", (c,), init="zeros")
+        if self.mode == "trace":
+            gate = jnp.zeros((x.shape[0], c), jnp.float32)
+        else:
+            gate = jax.nn.relu6(h1 @ w2 + b2 + 3.0) / 6.0
+        g_tid = self._record(
+            "fc", name + ".fc2", [h1_tid], gate.shape,
+            attrs=dict(cin=cr, cout=c), params=[name + ".fc2.w", name + ".fc2.b"],
+        )
+        y = x if self.mode == "trace" else x * gate[:, None, None, :]
+        out_tid = self._record("se_mul", name + ".mul", [tid, g_tid], x.shape)
+        trunk_gid = self._tensor_group.get(tid)
+        if trunk_gid is not None:
+            self._tensor_group[out_tid] = trunk_gid
+        return y, out_tid
+
+    def gap(self, name, xt):
+        x, tid = xt
+        if self.mode == "trace":
+            y = jnp.zeros((x.shape[0], x.shape[-1]), jnp.float32)
+        else:
+            y = jnp.mean(x, axis=(1, 2))
+        out_tid = self._record("gap", name, [tid], y.shape)
+        gid = self._tensor_group.get(tid)
+        if gid is not None:
+            self._tensor_group[out_tid] = gid
+        return y, out_tid
+
+    def fc(self, name, xt, cout, prunable=True, quantizable=True):
+        """Dense layer (with bias). In quant mode the GEMM runs through the
+        Pallas qmatmul kernel."""
+        x, tid = xt
+        cin = int(x.shape[-1])
+        w = self.param(name + ".w", (cin, cout), fan_in=cin)
+        b = self.param(name + ".b", (cout,), init="zeros")
+        tap = None
+        if quantizable:
+            if self.mode == "quant":
+                tap = len(self.taps)
+                self.taps.append(TapRec(id=tap, op_name=name, shape=tuple(x.shape)))
+                sx = self.scales[tap]
+                y = qmatmul(x, w, sx.reshape(1)) + b
+            else:
+                x, tap = self._tap(name, x)
+                y = x @ w + b if self.mode != "trace" else jnp.zeros((x.shape[0], cout), jnp.float32)
+        else:
+            y = x @ w + b if self.mode != "trace" else jnp.zeros((x.shape[0], cout), jnp.float32)
+
+        gid = None
+        if prunable:
+            gid = self._new_group(name, cout, name + ".w", 1)
+            self.groups[gid].members.append((name + ".b", 0))
+        out_tid = self._record(
+            "fc", name, [tid], y.shape, attrs=dict(cin=cin, cout=cout),
+            params=[name + ".w", name + ".b"], group=gid, tap=tap,
+        )
+        if gid is not None:
+            self._tensor_group[out_tid] = gid
+        return y, out_tid
+
+    # -- finalize -------------------------------------------------------------
+
+    def finalize(self):
+        """Assign global filter offsets (the index space of the S vector and
+        of Algorithm 1's ranked list R)."""
+        off = 0
+        for g in self.groups:
+            g.offset = off
+            off += g.size
+        return off

@@ -1,0 +1,186 @@
+"""L2 exported function set — the contract between JAX (build time) and the
+Rust coordinator (run time).
+
+Every function takes the model parameters as a flat ORDERED list of arrays
+(order = manifest `param_order`), so the lowered HLO exposes each parameter
+as a runtime argument. That is the mechanism that lets the Rust side run the
+whole HQP loop — filter masking (structural pruning), INT8-grid weight
+substitution (PTQ) and per-tensor activation scales — against a handful of
+fixed artifacts, with Python never on the request path.
+
+Exported per model (aot.py lowers each to artifacts/<model>_<fn>.hlo.txt):
+
+  eval_logits(params, x)            -> (B, C) logits           [HQP val loop]
+  fisher_gradsq(params, x, y)       -> (F,) S-vector contribution of a
+                                       microbatch: per-sample grads via
+                                       vmap(grad), reduced per filter by the
+                                       L1 Pallas fisher kernel [HQP Phase 1-A]
+  act_absmax(params, x)             -> (T,) per-tap max|activation|
+  act_hist(params, x, ranges)       -> (T, 2048) |activation| histograms
+                                       (TensorRT KL-calibration recipe)
+  quant_eval(params_q, scales, x)   -> (B, C) logits through the fake-quant
+                                       INT8 graph (Pallas qmatmul hot spots)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import models as model_zoo
+from .kernels.fisher import fisher_accumulate
+from .layers import HIST_BINS, Net
+
+EVAL_BATCH = 256
+FISHER_BATCH = 16
+HIST_BATCH = 256
+
+
+# ---------------------------------------------------------------------------
+# trace: one dry traversal -> metadata (groups, taps, ops, param layout)
+# ---------------------------------------------------------------------------
+
+
+def trace(model_name: str):
+    mod = model_zoo.get(model_name)
+    net = Net("trace")
+    x = jnp.zeros((1, mod.INPUT_HW, mod.INPUT_HW, 3), jnp.float32)
+    mod.forward(net, x)
+    return net
+
+
+def params_to_list(params: dict, order: list) -> list:
+    return [params[n] for n in order]
+
+
+def list_to_params(plist: list, order: list) -> dict:
+    return dict(zip(order, plist))
+
+
+# ---------------------------------------------------------------------------
+# exported functions
+# ---------------------------------------------------------------------------
+
+
+def make_eval_logits(model_name: str, order: list):
+    mod = model_zoo.get(model_name)
+
+    def eval_logits(plist, x):
+        net = Net("apply", params=list_to_params(plist, order))
+        return (mod.forward(net, x),)
+
+    return eval_logits
+
+
+def make_quant_eval(model_name: str, order: list):
+    mod = model_zoo.get(model_name)
+
+    def quant_eval(plist, scales, x):
+        net = Net("quant", params=list_to_params(plist, order), scales=scales)
+        return (mod.forward(net, x),)
+
+    return quant_eval
+
+
+def make_act_absmax(model_name: str, order: list):
+    mod = model_zoo.get(model_name)
+
+    def act_absmax(plist, x):
+        net = Net("apply", params=list_to_params(plist, order), collect_taps=True)
+        logits = mod.forward(net, x)
+        # logits are returned too so every parameter is a live input of the
+        # lowered module — XLA DCE would otherwise prune the classifier
+        # weights (taps don't depend on them) and shift the HLO arg count.
+        return (jnp.stack([jnp.max(jnp.abs(t)) for t in net.tap_values]), logits)
+
+    return act_absmax
+
+
+def make_act_hist(model_name: str, order: list):
+    mod = model_zoo.get(model_name)
+
+    def act_hist(plist, x, ranges):
+        """Per-tap histogram of |activation| over [0, ranges[i]], 2048 bins.
+        Values above the range clamp into the top bin (the calibration pass
+        uses the global absmax as the range, so clamping only guards
+        numerics)."""
+        net = Net("apply", params=list_to_params(plist, order), collect_taps=True)
+        logits = mod.forward(net, x)
+        outs = []
+        for i, t in enumerate(net.tap_values):
+            a = jnp.abs(t).reshape(-1)
+            r = jnp.maximum(ranges[i], 1e-12)
+            idx = jnp.clip((a / r * HIST_BINS).astype(jnp.int32), 0, HIST_BINS - 1)
+            outs.append(jnp.bincount(idx, length=HIST_BINS).astype(jnp.float32))
+        # logits keep all params live in the lowered HLO (see act_absmax).
+        return (jnp.stack(outs), logits)
+
+    return act_hist
+
+
+def make_fisher_gradsq(model_name: str, order: list, groups):
+    """S-vector contribution of one microbatch (paper §II-B):
+
+        S_f += sum_i || dL(W, x_i, y_i) / dW_f ||^2
+
+    Per-SAMPLE gradients (the FIM definition — not the squared batch
+    gradient) via vmap(grad(per_sample_loss)) w.r.t. only the producer
+    weight tensors, then the Pallas fisher kernel reduces each producer's
+    (B, F, E) grad slab to per-filter scores, concatenated in group order
+    (offsets = manifest `groups[i].offset`).
+    """
+    mod = model_zoo.get(model_name)
+    producer_set = {g.producer_param for g in groups}
+
+    def per_sample_loss(prod_params: dict, rest_params: dict, x, y):
+        params = dict(rest_params)
+        params.update(prod_params)
+        net = Net("apply", params=params)
+        logits = mod.forward(net, x[None])[0]
+        logp = jax.nn.log_softmax(logits)
+        return -logp[y]
+
+    grad_fn = jax.grad(per_sample_loss, argnums=0)
+
+    def fisher_gradsq(plist, x, y):
+        params = list_to_params(plist, order)
+        prod = {n: params[n] for n in producer_set}
+        rest = {n: v for n, v in params.items() if n not in producer_set}
+        g = jax.vmap(grad_fn, in_axes=(None, None, 0, 0))(prod, rest, x, y)
+        pieces = []
+        for grp in groups:
+            gw = g[grp.producer_param]  # (B, *w.shape)
+            ax = grp.producer_axis + 1  # account for batch axis
+            gw = jnp.moveaxis(gw, ax, 1)  # (B, F, ...)
+            b, f = gw.shape[0], gw.shape[1]
+            gw = gw.reshape(b, f, -1)
+            pieces.append(fisher_accumulate(gw))  # L1 Pallas kernel
+        return (jnp.concatenate(pieces),)
+
+    return fisher_gradsq
+
+
+# ---------------------------------------------------------------------------
+# training-side helpers (used by train.py, not exported)
+# ---------------------------------------------------------------------------
+
+
+def make_train_loss(model_name: str, order: list):
+    mod = model_zoo.get(model_name)
+
+    def loss_fn(trainable: dict, stats: dict, x, y):
+        params = dict(stats)
+        params.update(trainable)
+        net = Net("apply", params=params, train=True)
+        logits = mod.forward(net, x)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        # L2 regularization on conv/fc weights only
+        wd = sum(jnp.sum(v * v) for n, v in trainable.items() if n.endswith(".w"))
+        return loss + 1e-4 * wd, net.bn_stats
+
+    return loss_fn
+
+
+def accuracy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

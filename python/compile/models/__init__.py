@@ -1,0 +1,14 @@
+"""L2 model zoo: scaled MobileNetV3-Small and ResNet-18 (see DESIGN.md
+§Substitutions — faithful topologies, widths reduced for the 32x32
+synthetic workload and the single-core CPU-PJRT execution environment)."""
+
+from . import mobilenetv3, resnet18
+
+REGISTRY = {
+    "mobilenetv3": mobilenetv3,
+    "resnet18": resnet18,
+}
+
+
+def get(name: str):
+    return REGISTRY[name]

@@ -1,0 +1,84 @@
+"""MobileNetV3-Small (scaled for 32x32) — the paper's primary benchmark.
+
+Faithful to Howard et al. (ICCV'19) §5 table 2 in structure: inverted
+residual bottlenecks with depthwise convs, squeeze-excitation on selected
+blocks, hard-swish in the deeper half, relu in the shallow half; widths and
+block count reduced (~0.5x) and strides adapted from 224x224 to 32x32 so a
+single CPU core can train and sweep it. The structures the paper's §V-C
+analysis depends on — low-dimensional projection layers inside the
+bottlenecks (predicted to prune the most), a shallow stem and a deep head
+(predicted to prune the least) — are all present.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..layers import Net
+
+NAME = "mobilenetv3"
+NUM_CLASSES = 10
+INPUT_HW = 32
+
+# (kernel, expansion_ch, out_ch, use_se, activation, stride)
+BLOCKS = [
+    (3, 24, 16, True, "relu", 2),     # 32 -> 16
+    (3, 56, 24, False, "relu", 2),    # 16 -> 8
+    (3, 64, 24, False, "relu", 1),
+    (5, 72, 32, True, "hswish", 2),   # 8 -> 4
+    (5, 128, 32, True, "hswish", 1),
+    (5, 96, 48, True, "hswish", 1),
+]
+STEM_CH = 16
+HEAD_CH = 128
+HIDDEN_CH = 160
+
+
+def forward(net: Net, x):
+    """Single traversal used by every mode (init/apply/trace/quant)."""
+    t = net.input(x)
+
+    t = net.conv("stem.conv", t, STEM_CH, 3, stride=1)
+    t = net.bn("stem.bn", t)
+    t = net.act("stem.act", t, "hswish")
+
+    for i, (k, exp, out, use_se, act, stride) in enumerate(BLOCKS):
+        p = f"block{i}"
+        cin = int(t[0].shape[-1])
+        residual = stride == 1 and cin == out
+        t_in = t
+
+        # expansion pointwise (GEMM hot spot on the INT8 path)
+        t = net.conv(f"{p}.expand", t, exp, 1)
+        t = net.bn(f"{p}.expand_bn", t)
+        t = net.act(f"{p}.expand_act", t, act)
+        # depthwise
+        t = net.conv(f"{p}.dw", t, exp, k, stride=stride, groups=exp)
+        t = net.bn(f"{p}.dw_bn", t)
+        t = net.act(f"{p}.dw_act", t, act)
+        if use_se:
+            t = net.se(f"{p}.se", t)
+        # linear low-dimensional projection (paper: prunes the most)
+        t = net.conv(f"{p}.project", t, out, 1)
+        t = net.bn(f"{p}.project_bn", t)
+        if residual:
+            t = net.add(f"{p}.add", t, t_in)
+
+    t = net.conv("head.conv", t, HEAD_CH, 1)
+    t = net.bn("head.bn", t)
+    t = net.act("head.act", t, "hswish")
+    t = net.gap("head.pool", t)
+    t = net.fc("head.hidden", t, HIDDEN_CH)
+    t = net.act("head.hidden_act", t, "hswish")
+    t = net.fc("head.classifier", t, NUM_CLASSES, prunable=False)
+    net.finalize()
+    return t[0]
+
+
+def init_params(seed: int = 0):
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    net = Net("init", rng=rng)
+    import jax.numpy as jnp
+
+    forward(net, jnp.zeros((1, INPUT_HW, INPUT_HW, 3), jnp.float32))
+    return net.params, net.param_order

@@ -1,0 +1,71 @@
+"""ResNet-18 (scaled for 32x32) — the paper's PTQ stress test (§V-D).
+
+Faithful to He et al. (CVPR'16): 4 stages x 2 basic blocks, each block
+conv3x3-bn-relu-conv3x3-bn + identity (or 1x1-projection when the shape
+changes) and a final relu after the add. CIFAR-style stem (3x3/s1, no
+maxpool) for 32x32 inputs; widths 0.25x ([8,16,32,64] vs [64,...,512]) so
+the conditional-pruning loop's validation sweeps run in seconds on one CPU
+core. The residual adds — the mechanism the paper blames for Q8-only's
+constraint violation — are fully present, and the prune-group structure
+reflects their coupling: each block's first conv (the "mid" channels) is
+freely prunable, while trunk-channel producers are coupled through the adds
+(rust/src/gopt liveness analysis handles removability).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..layers import Net
+
+NAME = "resnet18"
+NUM_CLASSES = 10
+INPUT_HW = 32
+
+STAGES = [8, 16, 32, 64]  # out channels per stage
+BLOCKS_PER_STAGE = 2
+STEM_CH = 8
+
+
+def _basic_block(net: Net, t, p: str, cout: int, stride: int):
+    cin = int(t[0].shape[-1])
+    t_in = t
+    t = net.conv(f"{p}.conv1", t, cout, 3, stride=stride)
+    t = net.bn(f"{p}.bn1", t)
+    t = net.act(f"{p}.act1", t, "relu")
+    t = net.conv(f"{p}.conv2", t, cout, 3)
+    t = net.bn(f"{p}.bn2", t)
+    if stride != 1 or cin != cout:
+        s = net.conv(f"{p}.down", t_in, cout, 1, stride=stride)
+        s = net.bn(f"{p}.down_bn", s)
+    else:
+        s = t_in
+    t = net.add(f"{p}.add", t, s)
+    t = net.act(f"{p}.act2", t, "relu")
+    return t
+
+
+def forward(net: Net, x):
+    t = net.input(x)
+    t = net.conv("stem.conv", t, STEM_CH, 3)
+    t = net.bn("stem.bn", t)
+    t = net.act("stem.act", t, "relu")
+
+    for s, cout in enumerate(STAGES):
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            t = _basic_block(net, t, f"stage{s}.block{b}", cout, stride)
+
+    t = net.gap("head.pool", t)
+    t = net.fc("head.classifier", t, NUM_CLASSES, prunable=False)
+    net.finalize()
+    return t[0]
+
+
+def init_params(seed: int = 1):
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    net = Net("init", rng=rng)
+    import jax.numpy as jnp
+
+    forward(net, jnp.zeros((1, INPUT_HW, INPUT_HW, 3), jnp.float32))
+    return net.params, net.param_order

@@ -1,0 +1,115 @@
+"""Build-time training of the two benchmark models on the synthetic dataset.
+
+This replaces the paper's "pre-trained on ImageNet" starting point (see
+DESIGN.md §Substitutions): HQP itself never trains — it only needs a trained
+M_train with a measurable baseline accuracy. SGD + Nesterov momentum, cosine
+LR, BatchNorm batch statistics during training with EMA running stats folded
+into the exported parameter list.
+
+Run once by `make artifacts` (aot.py calls train_model); ~5-10 min total on
+the single CPU core of this environment. `--fast` trains a throwaway model
+in ~30 s for CI smoke tests.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from . import model as M
+from . import models as model_zoo
+
+EMA = 0.9  # BN running-stat decay per step
+
+
+def _split_params(params: dict):
+    stats = {n: v for n, v in params.items() if n.endswith(".mean") or n.endswith(".var")}
+    trainable = {n: v for n, v in params.items() if n not in stats}
+    return trainable, stats
+
+
+def train_model(
+    name: str,
+    epochs: int = 5,
+    batch: int = 128,
+    lr: float = 0.08,
+    momentum: float = 0.9,
+    seed: int = 0,
+    log=print,
+):
+    """Train `name` on the synthetic train split; returns (params, history).
+
+    The returned params dict contains the EMA-folded BN running stats, i.e.
+    it is exactly the flat parameter set the AOT artifacts expect.
+    """
+    mod = model_zoo.get(name)
+    params, order = mod.init_params(seed=seed)
+    trainable, stats = _split_params(params)
+
+    xs, ys = datagen.generate_split("train")
+    n = xs.shape[0]
+    steps_per_epoch = n // batch
+    total_steps = epochs * steps_per_epoch
+
+    loss_fn = M.make_train_loss(name, order)
+
+    def step_fn(trainable, stats, velocity, x, y, lr_t):
+        (loss, bn_stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainable, stats, x, y
+        )
+        new_vel = jax.tree_util.tree_map(
+            lambda v, g: momentum * v + g, velocity, grads
+        )
+        new_tr = jax.tree_util.tree_map(
+            lambda p, v, g: p - lr_t * (momentum * v + g), trainable, new_vel, grads
+        )  # Nesterov
+        new_stats = dict(stats)
+        for bn_name, (bm, bv) in bn_stats.items():
+            new_stats[bn_name + ".mean"] = EMA * stats[bn_name + ".mean"] + (1 - EMA) * bm
+            new_stats[bn_name + ".var"] = EMA * stats[bn_name + ".var"] + (1 - EMA) * bv
+        return new_tr, new_stats, new_vel, loss
+
+    step_jit = jax.jit(step_fn)
+    velocity = jax.tree_util.tree_map(jnp.zeros_like, trainable)
+
+    rng = np.random.Generator(np.random.Philox(key=seed + 77))
+    history = []
+    t0 = time.time()
+    step = 0
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        ep_loss = 0.0
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch : (i + 1) * batch]
+            lr_t = 0.5 * lr * (1 + np.cos(np.pi * step / total_steps))
+            trainable, stats, velocity, loss = step_jit(
+                trainable, stats, velocity,
+                jnp.asarray(xs[idx]), jnp.asarray(ys[idx]), jnp.float32(lr_t),
+            )
+            ep_loss += float(loss)
+            step += 1
+        acc = evaluate(name, order, {**trainable, **stats}, split="val")
+        history.append(dict(epoch=ep, loss=ep_loss / steps_per_epoch, val_acc=acc))
+        log(f"[{name}] epoch {ep}: loss={ep_loss/steps_per_epoch:.4f} "
+            f"val_acc={acc:.4f} ({time.time()-t0:.0f}s)")
+
+    params = {**trainable, **stats}
+    return params, order, history
+
+
+def evaluate(name: str, order: list, params: dict, split: str = "val",
+             batch: int = 256) -> float:
+    """Top-1 accuracy on a datagen split, eval-mode BN."""
+    xs, ys = datagen.generate_split(split)
+    ev = jax.jit(M.make_eval_logits(name, order))
+    plist = M.params_to_list(params, order)
+    correct = 0
+    for i in range(0, xs.shape[0] - batch + 1, batch):
+        logits, = ev(plist, jnp.asarray(xs[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(ys[i : i + batch])))
+    n = (xs.shape[0] // batch) * batch
+    return correct / n

@@ -1,0 +1,85 @@
+"""AOT pipeline: HLO-text lowering invariants + manifest coherence.
+
+These tests lower small functions in-process (cheap) and, when
+artifacts/ already exists (post `make artifacts`), validate the shipped
+manifest against a fresh trace."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrippable_header():
+    lowered = jax.jit(lambda x: (x * 2.0 + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    # HLO text module header + an entry computation — the two things
+    # HloModuleProto::from_text_file needs
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: root is a tuple
+    assert "tuple(" in text.replace(" ", "")[:20000] or "(f32[4]" in text
+
+
+def test_spec_helper():
+    s = aot._spec([2, 3], "f32")
+    assert s.shape == (2, 3) and s.dtype == jnp.float32
+    s = aot._spec([7], "i32")
+    assert s.dtype == jnp.int32
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+class TestShippedManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_models_present_with_artifacts(self, manifest):
+        for name in ["mobilenetv3", "resnet18"]:
+            m = manifest["models"][name]
+            for fn in ["eval", "fisher", "absmax", "hist", "quant_eval"]:
+                path = os.path.join(ART, m["artifacts"][fn]["file"])
+                assert os.path.exists(path), path
+                assert os.path.getsize(path) > 1000
+
+    def test_manifest_matches_fresh_trace(self, manifest):
+        for name in ["mobilenetv3", "resnet18"]:
+            m = manifest["models"][name]
+            net = M.trace(name)
+            assert [p["name"] for p in m["param_order"]] == net.param_order
+            assert len(m["groups"]) == len(net.groups)
+            for gm, gt in zip(m["groups"], net.groups):
+                assert gm["size"] == gt.size
+                assert gm["offset"] == gt.offset
+                assert gm["producer"] == gt.producer_param
+            assert len(m["taps"]) == len(net.taps)
+            assert len(m["ops"]) == len(net.ops)
+
+    def test_weights_complete(self, manifest):
+        for name in ["mobilenetv3", "resnet18"]:
+            m = manifest["models"][name]
+            wdir = os.path.join(ART, m["weights_dir"])
+            assert len(os.listdir(wdir)) == len(m["param_order"])
+
+    def test_data_splits_exist(self, manifest):
+        for split, d in manifest["data"].items():
+            assert os.path.exists(os.path.join(ART, d["x"])), split
+            assert os.path.exists(os.path.join(ART, d["y"])), split
+
+    def test_baseline_accuracy_recorded_sane(self, manifest):
+        for name in ["mobilenetv3", "resnet18"]:
+            acc = manifest["models"][name]["baseline_val_acc"]
+            assert 0.85 < acc <= 1.0, f"{name}: {acc}"

@@ -1,0 +1,76 @@
+"""Synthetic dataset: determinism, class balance, value ranges and the
+fine-grained class structure the HQP evaluation depends on."""
+
+import numpy as np
+
+from compile import datagen
+
+
+def test_split_reproducible_bit_for_bit():
+    x1, y1 = datagen.make_split(64, seed=123)
+    x2, y2 = datagen.make_split(64, seed=123)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_different_seeds_differ():
+    x1, _ = datagen.make_split(16, seed=1)
+    x2, _ = datagen.make_split(16, seed=2)
+    assert not np.allclose(x1, x2)
+
+
+def test_value_range_and_dtype():
+    x, y = datagen.make_split(128, seed=9)
+    assert x.dtype == np.float32
+    assert y.dtype == np.int32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert x.shape == (128, 32, 32, 3)
+
+
+def test_labels_cover_all_classes():
+    _, y = datagen.make_split(1000, seed=5)
+    assert set(np.unique(y)) == set(range(10))
+    # roughly balanced (uniform sampling): no class under 5%
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() > 50
+
+
+def test_label_noise_reproducible_and_configured():
+    # NOTE: the generator draws the noise uniform lazily (only when
+    # label_noise > 0), so streams with different noise settings are not
+    # comparable sample-by-sample; we pin reproducibility at fixed settings
+    # and the canonical split configuration instead.
+    _, y1 = datagen.make_split(500, seed=7, label_noise=0.5)
+    _, y2 = datagen.make_split(500, seed=7, label_noise=0.5)
+    np.testing.assert_array_equal(y1, y2)
+    assert datagen.SPLITS["train"]["label_noise"] > 0.0
+    for split in ["calib", "val", "test"]:
+        assert datagen.SPLITS[split]["label_noise"] == 0.0
+
+
+def test_paired_classes_differ_only_in_texture_statistics():
+    """Classes k and k+5 share shape+palette; their pixel-level stats
+    should be close while the stripe frequency separates them — verify the
+    dataset actually encodes the fine-grained signal."""
+    rng = np.random.Generator(np.random.Philox(key=11))
+    a = np.stack([datagen.make_image(1, rng) for _ in range(32)])
+    rng = np.random.Generator(np.random.Philox(key=11))
+    b = np.stack([datagen.make_image(6, rng) for _ in range(32)])
+    # same palette family -> similar global means
+    assert abs(a.mean() - b.mean()) < 0.1
+    # different stripe frequency -> different high-frequency energy
+    def hf_energy(imgs):
+        dx = np.diff(imgs, axis=2)
+        return float(np.mean(dx * dx))
+    assert abs(hf_energy(a) - hf_energy(b)) > 1e-4
+
+
+def test_canonical_splits_configured():
+    for name in ["train", "calib", "val", "test"]:
+        cfg = datagen.SPLITS[name]
+        assert cfg["n"] >= 1024
+    assert datagen.SPLITS["calib"]["label_noise"] == 0.0
+    assert datagen.SPLITS["val"]["label_noise"] == 0.0
+    # distinct seeds -> disjoint-ish splits
+    seeds = [datagen.SPLITS[n]["seed"] for n in datagen.SPLITS]
+    assert len(set(seeds)) == len(seeds)

@@ -1,0 +1,121 @@
+"""Exported function set: the (params..., extras) -> outputs contracts that
+the Rust runtime executes blind. Fisher/absmax/hist semantics are verified
+against independent jnp recomputations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import models as zoo
+from compile.layers import HIST_BINS
+
+NAME = "resnet18"  # cheaper of the two; mobilenetv3 covered in test_models
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    net = M.trace(NAME)
+    params, order = zoo.get(NAME).init_params(seed=3)
+    plist = M.params_to_list(params, order)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0.4, 0.25, (8, 32, 32, 3)).clip(0, 1), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, (8,)), jnp.int32)
+    return net, params, order, plist, x, y
+
+
+def test_absmax_matches_direct_recomputation(bundle):
+    net, params, order, plist, x, _ = bundle
+    mx, logits = jax.jit(M.make_act_absmax(NAME, order))(plist, x)
+    assert mx.shape == (len(net.taps),)
+    assert logits.shape == (8, 10)
+    # recompute tap 0 (= stem conv input = x itself)
+    np.testing.assert_allclose(float(mx[0]), float(jnp.max(jnp.abs(x))), rtol=1e-6)
+    assert bool(jnp.all(mx > 0))
+
+
+def test_hist_mass_equals_element_counts(bundle):
+    net, params, order, plist, x, _ = bundle
+    mx, _ = jax.jit(M.make_act_absmax(NAME, order))(plist, x)
+    hist, _ = jax.jit(M.make_act_hist(NAME, order))(plist, x, mx)
+    assert hist.shape == (len(net.taps), HIST_BINS)
+    # the mass of each tap's histogram equals the number of activations
+    for i, tap in enumerate(net.taps):
+        expect = x.shape[0] * int(np.prod(tap.shape[1:]))
+        assert int(hist[i].sum()) == expect, tap.op_name
+
+
+def test_hist_respects_ranges(bundle):
+    net, params, order, plist, x, _ = bundle
+    mx, _ = jax.jit(M.make_act_absmax(NAME, order))(plist, x)
+    # halve the ranges: mass must pile into the top bin (clamped), total
+    # mass must be conserved
+    hist_full, _ = jax.jit(M.make_act_hist(NAME, order))(plist, x, mx)
+    hist_half, _ = jax.jit(M.make_act_hist(NAME, order))(plist, x, mx / 2)
+    np.testing.assert_allclose(hist_full.sum(axis=1), hist_half.sum(axis=1))
+    assert float(hist_half[:, -1].sum()) >= float(hist_full[:, -1].sum())
+
+
+def test_fisher_matches_manual_per_sample_grads(bundle):
+    net, params, order, plist, x, y = bundle
+    s, = jax.jit(M.make_fisher_gradsq(NAME, order, net.groups))(plist, x, y)
+    assert s.shape == (sum(g.size for g in net.groups),)
+    assert bool(jnp.all(s >= 0))
+
+    # manual recomputation for ONE group on a 2-sample microbatch
+    g0 = net.groups[0]
+
+    def loss_i(params_dict, xi, yi):
+        from compile.layers import Net
+        net2 = Net("apply", params=params_dict)
+        logits = zoo.get(NAME).forward(net2, xi[None])[0]
+        return -jax.nn.log_softmax(logits)[yi]
+
+    total = np.zeros(g0.size, np.float32)
+    for i in range(2):
+        g = jax.grad(lambda p: loss_i(p, x[i], y[i]))(params)[g0.producer_param]
+        gw = np.moveaxis(np.asarray(g), g0.producer_axis, 0).reshape(g0.size, -1)
+        total += (gw * gw).sum(axis=1)
+
+    s2, = jax.jit(M.make_fisher_gradsq(NAME, order, net.groups))(plist, x[:2], y[:2])
+    np.testing.assert_allclose(s2[: g0.size], total, rtol=2e-3, atol=1e-7)
+
+
+def test_fisher_zero_for_dead_filter(bundle):
+    net, params, order, plist, x, y = bundle
+    # zero out filter 0 of group 1 completely (producer + bn) -> its
+    # gradient-square wrt the producer slice need not be zero in general,
+    # BUT a filter whose downstream bn gamma/beta are zero receives no
+    # gradient through the bn, so S should collapse to ~0 for conv groups.
+    g = net.groups[1]
+    masked = dict(params)
+    for pname, axis in g.members:
+        arr = np.asarray(masked[pname]).copy()
+        sl = [slice(None)] * arr.ndim
+        sl[axis] = 0
+        arr[tuple(sl)] = 0.0
+        masked[pname] = jnp.asarray(arr)
+    s, = jax.jit(M.make_fisher_gradsq(NAME, order, net.groups))(
+        M.params_to_list(masked, order), x, y
+    )
+    val = float(s[g.offset])
+    others = float(jnp.sum(s[g.offset : g.offset + g.size]))
+    assert val < 1e-10 * max(others, 1e-3) + 1e-8, f"masked filter S={val}"
+
+
+def test_train_loss_decreases_one_step(bundle):
+    net, params, order, plist, x, y = bundle
+    loss_fn = M.make_train_loss(NAME, order)
+    trainable = {n: v for n, v in params.items() if not n.endswith((".mean", ".var"))}
+    stats = {n: v for n, v in params.items() if n.endswith((".mean", ".var"))}
+    (l0, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable, stats, x, y)
+    stepped = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, trainable, grads)
+    l1, _ = loss_fn(stepped, stats, x, y)
+    assert float(l1) < float(l0)
+
+
+def test_accuracy_helper():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    y = jnp.asarray([0, 1, 1])
+    assert float(M.accuracy(logits, y)) == pytest.approx(2 / 3)

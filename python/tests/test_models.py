@@ -1,0 +1,138 @@
+"""L2 model definitions: shapes, determinism, recorder-metadata coherence
+and masking semantics (the contract the Rust coordinator builds on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import models as zoo
+
+MODELS = ["mobilenetv3", "resnet18"]
+
+
+@pytest.fixture(scope="module", params=MODELS)
+def bundle(request):
+    name = request.param
+    net = M.trace(name)
+    params, order = zoo.get(name).init_params(seed=7)
+    return name, net, params, order
+
+
+class TestTraceMetadata:
+    def test_param_order_matches_init(self, bundle):
+        name, net, params, order = bundle
+        assert order == net.param_order
+        assert set(params.keys()) == set(order)
+
+    def test_group_offsets_tile_filter_space(self, bundle):
+        _, net, _, _ = bundle
+        off = 0
+        for g in net.groups:
+            assert g.offset == off
+            off += g.size
+
+    def test_group_members_have_valid_axes(self, bundle):
+        _, net, params, _ = bundle
+        for g in net.groups:
+            for pname, axis in g.members:
+                assert params[pname].shape[axis] == g.size, (g.name, pname)
+
+    def test_every_conv_has_a_tap(self, bundle):
+        _, net, _, _ = bundle
+        conv_like = [o for o in net.ops if o.kind in ("conv", "dwconv")]
+        tapped = [o for o in conv_like if o.tap is not None]
+        assert len(tapped) == len(conv_like)
+
+    def test_ops_topologically_ordered(self, bundle):
+        _, net, _, _ = bundle
+        produced = {0}  # input tensor
+        for o in net.ops:
+            for t in o.inputs:
+                assert t in produced, f"{o.name} uses unproduced tensor {t}"
+            produced.add(o.output)
+
+
+class TestForward:
+    def test_output_shape_and_determinism(self, bundle):
+        name, net, params, order = bundle
+        ev = jax.jit(M.make_eval_logits(name, order))
+        x = jnp.asarray(np.random.default_rng(0).normal(0.4, 0.2, (4, 32, 32, 3)), jnp.float32)
+        a, = ev(M.params_to_list(params, order), x)
+        b, = ev(M.params_to_list(params, order), x)
+        assert a.shape == (4, 10)
+        np.testing.assert_array_equal(a, b)
+
+    def test_quant_mode_consumes_every_tap(self, bundle):
+        name, net, params, order = bundle
+        qe = jax.jit(M.make_quant_eval(name, order))
+        x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+        scales = jnp.full((len(net.taps),), 0.05, jnp.float32)
+        ql, = qe(M.params_to_list(params, order), scales, x)
+        assert ql.shape == (2, 10)
+        # (jnp clamps out-of-range indices, so a short scale vector cannot
+        # be detected here; the Rust Session validates the length before
+        # execution — see Session::quant_accuracy.)
+        assert len(net.taps) > 0
+
+    def test_absmax_scales_converge_to_fp32(self, bundle):
+        name, net, params, order = bundle
+        plist = M.params_to_list(params, order)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(0.4, 0.2, (4, 32, 32, 3)), jnp.float32)
+        fl, = jax.jit(M.make_eval_logits(name, order))(plist, x)
+        # full-range scales (absmax/127): fine grid, no saturation
+        mx, _ = jax.jit(M.make_act_absmax(name, order))(plist, x)
+        ql, = jax.jit(M.make_quant_eval(name, order))(plist, mx / 127.0, x)
+        np.testing.assert_allclose(fl, ql, rtol=0.2, atol=0.15)
+
+
+class TestMaskingSemantics:
+    """Zeroing a group's members must be numerically identical to removing
+    the filter — the keystone of the fixed-shape pruning design."""
+
+    def test_masked_channel_contributes_nothing(self, bundle):
+        name, net, params, order = bundle
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(0.4, 0.2, (2, 32, 32, 3)), jnp.float32)
+        ev = jax.jit(M.make_eval_logits(name, order))
+
+        # mask channel 0 of an early group via the member list
+        masked = dict(params)
+        g = net.groups[1]
+        for pname, axis in g.members:
+            arr = np.asarray(masked[pname]).copy()
+            sl = [slice(None)] * arr.ndim
+            sl[axis] = 0
+            arr[tuple(sl)] = 0.0
+            masked[pname] = jnp.asarray(arr)
+
+        l_masked, = ev(M.params_to_list(masked, order), x)
+
+        # masking again (idempotence) and scaling the masked slice by any
+        # factor of zero must not change anything
+        l_again, = ev(M.params_to_list(masked, order), x)
+        np.testing.assert_array_equal(l_masked, l_again)
+
+        # masked logits differ from baseline (the channel DID matter)...
+        l_base, = ev(M.params_to_list(params, order), x)
+        assert not np.allclose(l_base, l_masked), "channel 0 was already dead?"
+
+    def test_bn_gamma_beta_must_be_in_members(self, bundle):
+        # the masking-exactness argument requires every group that passes
+        # through a BN to zero that BN's gamma AND beta
+        _, net, _, _ = bundle
+        for g in net.groups:
+            names = [p for p, _ in g.members]
+            gammas = [n for n in names if n.endswith(".gamma")]
+            betas = [n for n in names if n.endswith(".beta")]
+            assert len(gammas) == len(betas), g.name
+
+
+def test_models_differ():
+    a = M.trace("mobilenetv3")
+    b = M.trace("resnet18")
+    assert a.param_order != b.param_order
+    assert any("dw" in o.name for o in a.ops)
+    assert any(o.kind == "add" for o in b.ops)

@@ -1,0 +1,177 @@
+//! `cargo bench --bench bench_figures` — regenerates the paper's FIGURES
+//! and section analyses:
+//!
+//!   * Fig. 2 — latency + accuracy bars (MobileNetV3, Xavier NX)
+//!   * Fig. 3 — size reduction vs accuracy drop scatter (all methods)
+//!   * §V-C  — layer-wise sparsity profile (non-uniform sparsity claim)
+//!   * §V-E  — energy analysis (E = P·L identity, both devices)
+//!   * §III-C/§V-F — C_HQP vs C_QAT overhead
+//!   * sparsity–accuracy trajectory of Algorithm 1 (the Pareto story)
+//!
+//! Reads the cached method results (bench_tables populates them; anything
+//! missing is computed here at paper parameters).
+
+use hqp::benchkit::section;
+use hqp::coordinator::{experiments, run_method, MethodSpec, ResultRow};
+use hqp::hqp::{cost, pipeline, HqpConfig};
+use hqp::hwsim::Device;
+use hqp::report::{bar_chart, scatter, BarRow};
+use hqp::runtime::{Session, Workspace};
+
+fn suite(ws: &Workspace, model: &str, cfg: &HqpConfig) -> Vec<ResultRow> {
+    let devices = Device::all();
+    let force = std::env::var("HQP_FORCE").is_ok();
+    let mut rows = Vec::new();
+    for spec in [
+        MethodSpec::Baseline,
+        MethodSpec::Q8Only,
+        MethodSpec::PruneOnly(50),
+        MethodSpec::Hqp,
+    ] {
+        rows.extend(run_method(ws, model, spec, cfg, &devices, force).expect("method"));
+    }
+    rows
+}
+
+fn main() {
+    let ws = Workspace::open("artifacts").expect("run `make artifacts` first");
+    let cfg = HqpConfig::default();
+
+    // ---------------- Fig. 2 ------------------------------------------------
+    section("Fig. 2 — MobileNetV3 on Xavier NX");
+    let rows = suite(&ws, "mobilenetv3", &cfg);
+    let nx = experiments::reports_for_device(&rows, "xavier-nx");
+    let lat: Vec<BarRow> = nx
+        .iter()
+        .map(|r| {
+            BarRow::new(
+                r.method.clone(),
+                r.latency_ms,
+                format!("{:.3} ms ({:.2}x)", r.latency_ms, r.speedup),
+            )
+        })
+        .collect();
+    println!("{}", bar_chart("Fig. 2a — Latency by method", &lat, 48));
+    let acc: Vec<BarRow> = nx
+        .iter()
+        .map(|r| {
+            BarRow::new(
+                r.method.clone(),
+                (r.acc_drop * 100.0).max(0.0),
+                format!(
+                    "{:.2}% drop{}",
+                    r.acc_drop * 100.0,
+                    if r.compliant { "" } else { "   << VIOLATES Δmax=1.5%" }
+                ),
+            )
+        })
+        .collect();
+    println!("{}", bar_chart("Fig. 2b — Accuracy drop by method", &acc, 48));
+
+    // ---------------- Fig. 3 ------------------------------------------------
+    section("Fig. 3 — size reduction vs accuracy drop");
+    let mut pts = Vec::new();
+    for model in ["mobilenetv3", "resnet18"] {
+        let rows = suite(&ws, model, &cfg);
+        for r in experiments::reports_for_device(&rows, "xavier-nx") {
+            pts.push((
+                r.size_reduction * 100.0,
+                r.acc_drop * 100.0,
+                format!("{model}/{}", r.method),
+            ));
+        }
+    }
+    println!(
+        "{}",
+        scatter(
+            "Fig. 3 — Model size reduction vs accuracy drop (Xavier NX)",
+            &pts,
+            "size reduction %",
+            "accuracy drop %",
+            60,
+            14
+        )
+    );
+
+    // ---------------- §V-C layer-wise profile -------------------------------
+    section("§V-C — layer-wise sparsity (MobileNetV3, HQP)");
+    let rows = suite(&ws, "mobilenetv3", &cfg);
+    let hqp_row = rows
+        .iter()
+        .find(|r| r.report.method == "hqp" && r.report.device == "xavier-nx")
+        .expect("hqp row");
+    let mm = ws.manifest.model("mobilenetv3").unwrap();
+    let bars: Vec<BarRow> = mm
+        .groups
+        .iter()
+        .zip(&hqp_row.group_sparsity)
+        .map(|(g, &s)| {
+            BarRow::new(
+                g.name.clone(),
+                s * 100.0,
+                format!("θ={:>3.0}%  S̄={:.2e}", s * 100.0,
+                        hqp_row.group_saliency.get(g.id).copied().unwrap_or(0.0)),
+            )
+        })
+        .collect();
+    println!("{}", bar_chart("per-group sparsity (paper: shallow/deep low, mid high)", &bars, 40));
+
+    // ---------------- Algorithm 1 trajectory --------------------------------
+    section("Algorithm 1 — sparsity-accuracy trajectory");
+    for model in ["mobilenetv3", "resnet18"] {
+        let rows = suite(&ws, model, &cfg);
+        if let Some(r) = rows.iter().find(|r| r.report.method == "hqp" && !r.trace.is_empty()) {
+            println!("{model}:");
+            for (s, a, ok) in &r.trace {
+                println!(
+                    "  θ={:>5.1}%  acc {:.4}  {}",
+                    s * 100.0,
+                    a,
+                    if *ok { "accept" } else { "REJECT -> terminate" }
+                );
+            }
+        }
+    }
+
+    // ---------------- §V-E energy -------------------------------------------
+    section("§V-E — energy per inference (E = P·L)");
+    for model in ["mobilenetv3", "resnet18"] {
+        let rows = suite(&ws, model, &cfg);
+        for dev in [Device::jetson_nano(), Device::xavier_nx()] {
+            println!("{model} on {}:", dev.name);
+            for r in experiments::reports_for_device(&rows, &dev.name) {
+                println!(
+                    "  {:<10} {:>9.3} mJ   energy-ratio {:>5.2}x  == speedup {:>5.2}x : {}",
+                    r.method,
+                    r.energy_mj,
+                    r.energy_ratio,
+                    r.speedup,
+                    (r.energy_ratio - r.speedup).abs() < 1e-9
+                );
+            }
+        }
+    }
+
+    // ---------------- §III-C / §V-F overhead --------------------------------
+    section("§III-C / §V-F — C_HQP vs C_QAT");
+    for model in ["mobilenetv3", "resnet18"] {
+        let mut sess = Session::new(&ws, model).expect("session");
+        let (o, ms) = hqp::benchkit::time_once(|| pipeline::run_hqp(&mut sess, &cfg));
+        o.expect("hqp");
+        let h = cost::HqpCost::from_counters(&sess.counters);
+        let qat = cost::QatCost::paper_default(8192);
+        let qat_in = cost::QatCost::paper_default(1_281_167);
+        println!(
+            "{model}: C_HQP = {} grad + {} inf samples = {:.0} fwd-equiv ({:.1}s wall)",
+            h.grad_samples,
+            h.inference_samples,
+            h.total_inf_equiv(),
+            ms / 1e3
+        );
+        println!(
+            "   C_QAT/C_HQP = {:.1}x (matched trainset)  |  {:.0}x (ImageNet-scale)",
+            cost::overhead_ratio(&h, &qat),
+            cost::overhead_ratio(&h, &qat_in)
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! `cargo bench --bench bench_micro` — L3 hot-path micro benchmarks
+//! (the §Perf profiling substrate; before/after numbers recorded in
+//! EXPERIMENTS.md §Perf).
+//!
+//! Covers every stage the coordinator touches per Algorithm-1 iteration:
+//! parameter cloning + masking, parameter upload, PJRT execution of each
+//! artifact, the accuracy reduction, KL calibration, weight quantization,
+//! liveness + graph optimization + roofline pricing, and the serialization
+//! substrates (npy/JSON).
+
+use hqp::benchkit::{bench, section};
+use hqp::gopt::{optimize, OptimizeOptions};
+use hqp::graph::{full_masks, Graph, Liveness};
+use hqp::hwsim::{simulate, Device};
+use hqp::quant::{quantize_per_channel, Calibrator, CalibMethod};
+use hqp::runtime::{Session, Workspace};
+use hqp::tensor::{argmax_rows, Tensor};
+use hqp::testkit::prng::Prng;
+
+fn main() {
+    let ws = Workspace::open("artifacts").expect("run `make artifacts` first");
+    let model = "resnet18";
+    let mut sess = Session::new(&ws, model).expect("session");
+    let params = sess.baseline.clone();
+    let mm = sess.mm.clone();
+
+    // ---------------- runtime layer ----------------------------------------
+    section("runtime (PJRT) — per-call costs");
+    println!(
+        "{}",
+        bench("params.clone (177k f32)", 3, 50, || params.clone()).line()
+    );
+    let g0 = mm.groups[2].clone();
+    println!(
+        "{}",
+        bench("mask_filter (1 filter, all members)", 3, 200, || {
+            let mut p = params.clone();
+            p.mask_filter(&g0, 0).unwrap()
+        })
+        .line()
+    );
+    println!(
+        "{}",
+        bench("accuracy val-sweep (4x b256 exec)", 1, 5, || {
+            sess.accuracy(&params, "val").unwrap()
+        })
+        .line()
+    );
+    println!(
+        "{}",
+        bench("quant_accuracy val-sweep", 1, 3, || {
+            let scales = vec![0.05f32; mm.taps.len()];
+            sess.quant_accuracy(&params, &scales, "val").unwrap()
+        })
+        .line()
+    );
+    println!(
+        "{}",
+        bench("act_absmax calib-sweep", 1, 3, || sess.act_absmax(&params).unwrap()).line()
+    );
+    let ranges = sess.act_absmax(&params).unwrap();
+    println!(
+        "{}",
+        bench("act_hist calib-sweep", 1, 3, || sess.act_hist(&params, &ranges).unwrap()).line()
+    );
+    println!(
+        "{}",
+        bench("fisher 128-sample pass", 1, 3, || {
+            sess.fisher_scores(&params, 128).unwrap()
+        })
+        .line()
+    );
+
+    // ---------------- quant layer -------------------------------------------
+    section("quant — calibration & projection");
+    let hist = sess.act_hist(&params, &ranges).unwrap();
+    let bins = hist.shape()[1];
+    let kl = Calibrator::new(CalibMethod::Kl);
+    println!(
+        "{}",
+        bench("KL sweep (1 tap, 2048 bins)", 3, 100, || {
+            kl.threshold(&hist.data()[..bins], ranges[0])
+        })
+        .line()
+    );
+    println!(
+        "{}",
+        bench("KL calibration (all taps)", 2, 20, || {
+            (0..mm.taps.len())
+                .map(|i| kl.threshold(&hist.data()[i * bins..(i + 1) * bins], ranges[i]))
+                .collect::<Vec<_>>()
+        })
+        .line()
+    );
+    let big_w = params.get("stage3.block0.conv1.w").unwrap().clone();
+    println!(
+        "{}",
+        bench("per-channel int8 projection (36k w)", 3, 100, || {
+            quantize_per_channel(&big_w, 3, 8).unwrap()
+        })
+        .line()
+    );
+
+    // ---------------- graph/deploy layer ------------------------------------
+    section("gopt + hwsim — deployment pipeline");
+    let graph = Graph::from_manifest(&mm).unwrap();
+    let masks = full_masks(&graph);
+    println!(
+        "{}",
+        bench("liveness analysis", 3, 500, || {
+            Liveness::analyze(&graph, &masks).unwrap()
+        })
+        .line()
+    );
+    println!(
+        "{}",
+        bench("optimize (fuse+dce+autotune)", 3, 200, || {
+            optimize(&graph, &masks, &OptimizeOptions::int8()).unwrap()
+        })
+        .line()
+    );
+    let eng = optimize(&graph, &masks, &OptimizeOptions::int8()).unwrap();
+    let dev = Device::xavier_nx();
+    println!(
+        "{}",
+        bench("roofline simulate", 3, 2000, || simulate(&eng, &dev)).line()
+    );
+
+    // ---------------- substrates --------------------------------------------
+    section("substrates — reductions & serialization");
+    let mut rng = Prng::new(1);
+    let logits = Tensor::new(
+        vec![256, 10],
+        (0..2560).map(|_| rng.next_f32()).collect(),
+    )
+    .unwrap();
+    println!(
+        "{}",
+        bench("argmax_rows (256x10)", 3, 2000, || argmax_rows(&logits)).line()
+    );
+    let t = Tensor::new(vec![64, 64], (0..4096).map(|i| i as f32).collect()).unwrap();
+    let dir = std::env::temp_dir().join("hqp_bench_npy");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("b.npy");
+    println!(
+        "{}",
+        bench("npy write+read (16 KB)", 3, 200, || {
+            hqp::formats::npy::write_npy_f32(&p, &t).unwrap();
+            hqp::formats::npy::read_npy_f32(&p).unwrap()
+        })
+        .line()
+    );
+    let manifest_text =
+        std::fs::read_to_string(ws.root.join("manifest.json")).unwrap();
+    println!(
+        "{}",
+        bench(
+            &format!("json parse manifest ({} KB)", manifest_text.len() / 1024),
+            2,
+            20,
+            || hqp::formats::json::Json::parse(&manifest_text).unwrap()
+        )
+        .line()
+    );
+}

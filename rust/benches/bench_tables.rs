@@ -1,0 +1,85 @@
+//! `cargo bench --bench bench_tables` — regenerates the paper's TABLES:
+//!
+//!   * Table I  — MobileNetV3 on Jetson Xavier NX (Baseline/Q8/P50/HQP)
+//!   * Table II — ResNet-18  on Jetson Xavier NX (Baseline/Q8/HQP; P50
+//!                included for completeness)
+//!   * §IV-A heterogeneity — the same suites on Jetson Nano
+//!
+//! Methods run at paper parameters (Δ_max = 1.5 %, δ = 1 %, KL INT8) and
+//! are cached under artifacts/results/ — use HQP_FORCE=1 to re-run the
+//! pipelines instead of re-rendering. Timing of each pipeline stage is
+//! printed alongside (this doubles as the coordinator-level macro bench).
+
+use hqp::benchkit::{section, time_once};
+use hqp::coordinator::{experiments, run_method, MethodSpec};
+use hqp::hqp::HqpConfig;
+use hqp::hwsim::Device;
+use hqp::report;
+use hqp::runtime::Workspace;
+
+/// Paper rows for the side-by-side (speedup, drop %, θ %).
+const PAPER_T1: &[(&str, f64, f64, f64)] = &[
+    ("baseline", 1.00, 0.0, 0.0),
+    ("q8-only", 1.58, 1.2, 0.0),
+    ("p50-only", 1.35, 1.8, 50.0),
+    ("hqp", 3.12, 1.4, 45.0),
+];
+const PAPER_T2: &[(&str, f64, f64, f64)] = &[
+    ("baseline", 1.00, 0.0, 0.0),
+    ("q8-only", 1.55, 1.9, 0.0),
+    ("hqp", 2.51, 1.3, 35.0),
+];
+
+fn main() {
+    let ws = Workspace::open("artifacts").expect("run `make artifacts` first");
+    let force = std::env::var("HQP_FORCE").is_ok();
+    let cfg = HqpConfig::default(); // paper parameters
+    let devices = Device::all();
+
+    for (table, model, paper) in [
+        ("Table I", "mobilenetv3", PAPER_T1),
+        ("Table II", "resnet18", PAPER_T2),
+    ] {
+        section(&format!("{table} — {model}"));
+        let mut rows = Vec::new();
+        for spec in [
+            MethodSpec::Baseline,
+            MethodSpec::Q8Only,
+            MethodSpec::PruneOnly(50),
+            MethodSpec::Hqp,
+        ] {
+            let (r, ms) = time_once(|| run_method(&ws, model, spec, &cfg, &devices, force));
+            let r = r.expect("method run");
+            println!("[{:>9.1} ms] {:?}", ms, spec);
+            rows.extend(r);
+        }
+        let nx = experiments::reports_for_device(&rows, "xavier-nx");
+        println!(
+            "\n{}",
+            report::method_table(
+                &format!("{table} — {model}, edge-side inference on Jetson Xavier NX"),
+                &nx
+            )
+        );
+        println!("paper-vs-measured (speedup | drop% | θ%):");
+        for (name, ps, pd, pt) in paper {
+            if let Some(r) = nx.iter().find(|r| &r.method == name) {
+                println!(
+                    "  {:<10} paper {:>5.2}x / {:>4.1}% / {:>3.0}%   ours {:>5.2}x / {:>5.2}% / {:>3.0}%",
+                    name, ps, pd, pt,
+                    r.speedup, r.acc_drop * 100.0, r.sparsity * 100.0
+                );
+            }
+        }
+
+        // §IV-A heterogeneity: same engines on the Nano.
+        let nano = experiments::reports_for_device(&rows, "jetson-nano");
+        println!(
+            "\n{}",
+            report::method_table(
+                &format!("§IV-A — {model} on Jetson Nano (no INT8 tensor cores)"),
+                &nano
+            )
+        );
+    }
+}

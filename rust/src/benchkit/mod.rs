@@ -1,0 +1,114 @@
+//! Benchmark harness (criterion substitute — unavailable offline).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) built on
+//! this module: warmup + timed iterations, robust stats, aligned text
+//! output. Used both by the micro benches (§Perf L3) and as the driver for
+//! the table/figure regeneration benches.
+
+use std::time::Instant;
+
+/// Timing statistics over a batch of iterations.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub std_ms: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, mut ms: Vec<f64>) -> Stats {
+        assert!(!ms.is_empty());
+        ms.sort_by(f64::total_cmp);
+        let n = ms.len();
+        let mean = ms.iter().sum::<f64>() / n as f64;
+        let var = ms.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| ms[((n - 1) as f64 * p).round() as usize];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ms: mean,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            min_ms: ms[0],
+            max_ms: ms[n - 1],
+            std_ms: var.sqrt(),
+        }
+    }
+
+    /// One aligned report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>6} it  mean {:>9.3} ms  p50 {:>9.3}  p95 {:>9.3}  min {:>9.3}  sd {:>8.3}",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms, self.std_ms
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Stats::from_samples(name, samples)
+}
+
+/// Time one invocation (long-running pipeline stages).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} {}", "=".repeat(68usize.saturating_sub(title.len())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_order() {
+        let s = Stats::from_samples("t", vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 10.0);
+        // nearest-rank percentile on even counts takes the upper median
+        assert_eq!(s.p50_ms, 3.0);
+        assert!((s.mean_ms - 4.0).abs() < 1e-12);
+        assert_eq!(s.iters, 4);
+
+        let odd = Stats::from_samples("t", vec![3.0, 1.0, 2.0]);
+        assert_eq!(odd.p50_ms, 2.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0;
+        let s = bench("inc", 2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ms >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, ms) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Command-line parsing (clap substitute — unavailable offline).
+//!
+//! Grammar: `hqp <command> [--flag value]... [--switch]...`
+//! Flags are declared per command in main.rs; unknown flags error.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                return Err(Error::Cli(format!("expected command, got flag {cmd}")));
+            }
+            a.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Cli("bare --".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.switches.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Cli(format!("--{name} wants an integer: {e}"))),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Cli(format!("--{name} wants a number: {e}"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on flags/switches not in the allowed set (catches typos).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(Error::Cli(format!("unknown flag --{k}")));
+            }
+        }
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                return Err(Error::Cli(format!("unknown switch --{s}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn commands_flags_switches() {
+        let a = parse("table --id 1 --device nx --force");
+        assert_eq!(a.command, "table");
+        assert_eq!(a.flag("id"), Some("1"));
+        assert_eq!(a.flag("device"), Some("nx"));
+        assert!(a.switch("force"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --model=resnet18");
+        assert_eq!(a.flag("model"), Some("resnet18"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 5 --f 1.5");
+        assert_eq!(a.flag_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.flag_f64("f", 0.0).unwrap(), 1.5);
+        assert_eq!(a.flag_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --n five").flag_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_caught() {
+        let a = parse("t --good 1 --bad 2");
+        assert!(a.expect_known(&["good"]).is_err());
+        assert!(a.expect_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn flag_before_command_rejected() {
+        let v: Vec<String> = vec!["--x".into()];
+        assert!(Args::parse(&v).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! The experiment runner: method suite × devices, with on-disk caching.
+//!
+//! Running one method on one model costs seconds (Q8) to minutes (HQP's
+//! conditional loop), so results are cached under `artifacts/results/` and
+//! keyed by `(model, method, config-signature)`; the table/figure benches
+//! re-render from cache unless `force` is set.
+
+use crate::error::Result;
+use crate::gopt::{optimize, OptimizeOptions};
+use crate::graph::Graph;
+use crate::hqp::sensitivity::per_group_mean;
+use crate::hqp::{
+    deploy, pipeline, prune::per_group_sparsity, HqpConfig, MethodReport, RankingMethod,
+};
+use crate::hwsim::{simulate, Device};
+use crate::runtime::{Session, Workspace};
+
+use super::results::{load_results, save_results, ResultRow};
+
+/// A method to run (the rows of Tables I/II + ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodSpec {
+    Baseline,
+    Q8Only,
+    /// Magnitude pruning to a fixed θ (percent), FP32.
+    PruneOnly(u32),
+    Hqp,
+    /// HQP with a non-default ranking (ablations).
+    HqpWithRanking(RankingMethod),
+    /// HQP Phase 1 only (no PTQ).
+    HqpPruneOnly,
+}
+
+impl MethodSpec {
+    pub fn cache_key(&self, model: &str) -> String {
+        match self {
+            MethodSpec::Baseline => format!("{model}_baseline"),
+            MethodSpec::Q8Only => format!("{model}_q8"),
+            MethodSpec::PruneOnly(p) => format!("{model}_p{p}"),
+            MethodSpec::Hqp => format!("{model}_hqp"),
+            MethodSpec::HqpWithRanking(r) => format!("{model}_hqp_{}", r.name()),
+            MethodSpec::HqpPruneOnly => format!("{model}_hqp_prune"),
+        }
+    }
+}
+
+/// Everything one suite run produces for one model.
+pub struct SuiteResult {
+    pub model: String,
+    pub rows: Vec<ResultRow>,
+}
+
+/// Run one method on one model; produce per-device rows + analyses.
+pub fn run_method(
+    ws: &Workspace,
+    model: &str,
+    spec: MethodSpec,
+    cfg: &HqpConfig,
+    devices: &[Device],
+    force: bool,
+) -> Result<Vec<ResultRow>> {
+    let results_dir = ws.root.join("results");
+    let key = spec.cache_key(model);
+    if !force {
+        if let Some(rows) = load_results(&results_dir, &key)? {
+            return Ok(rows);
+        }
+    }
+
+    let mut sess = Session::new(ws, model)?;
+    let outcome = match spec {
+        MethodSpec::Baseline => pipeline::run_baseline(&mut sess)?,
+        MethodSpec::Q8Only => pipeline::run_q8(&mut sess, cfg)?,
+        MethodSpec::PruneOnly(pct) => pipeline::run_p50(&mut sess, pct as f64 / 100.0)?,
+        MethodSpec::Hqp => pipeline::run_hqp(&mut sess, cfg)?,
+        MethodSpec::HqpWithRanking(r) => {
+            let mut c = cfg.clone();
+            c.ranking = r;
+            let mut o = pipeline::run_hqp(&mut sess, &c)?;
+            o.method = format!("hqp[{}]", r.name());
+            o
+        }
+        MethodSpec::HqpPruneOnly => pipeline::run_hqp_prune_only(&mut sess, cfg)?,
+    };
+
+    let graph = Graph::from_manifest(&sess.mm)?;
+    let group_sparsity = per_group_sparsity(&outcome.masks);
+    let group_saliency: Vec<f64> = outcome
+        .saliency_scores
+        .as_ref()
+        .map(|s| per_group_mean(s, &sess.mm.groups).iter().map(|&x| x as f64).collect())
+        .unwrap_or_default();
+    let trace: Vec<(f64, f64, bool)> = outcome
+        .trace
+        .steps
+        .iter()
+        .map(|s| (s.sparsity, s.accuracy, s.accepted))
+        .collect();
+
+    let rows: Vec<ResultRow> = devices
+        .iter()
+        .map(|dev| {
+            Ok(ResultRow {
+                report: deploy::report(&graph, &outcome, dev, cfg.delta_max)?,
+                trace: trace.clone(),
+                group_sparsity: group_sparsity.clone(),
+                group_saliency: group_saliency.clone(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    save_results(&results_dir, &key, &rows)?;
+    Ok(rows)
+}
+
+/// The paper's full method suite for one model.
+pub fn run_suite(
+    ws: &Workspace,
+    model: &str,
+    cfg: &HqpConfig,
+    devices: &[Device],
+    force: bool,
+) -> Result<SuiteResult> {
+    let mut rows = Vec::new();
+    for spec in [
+        MethodSpec::Baseline,
+        MethodSpec::Q8Only,
+        MethodSpec::PruneOnly(50),
+        MethodSpec::Hqp,
+    ] {
+        rows.extend(run_method(ws, model, spec, cfg, devices, force)?);
+    }
+    Ok(SuiteResult { model: model.to_string(), rows })
+}
+
+/// Filter suite rows by device (table rendering helper).
+pub fn rows_for_device<'a>(rows: &'a [ResultRow], device: &str) -> Vec<&'a ResultRow> {
+    rows.iter().filter(|r| r.report.device == device).collect()
+}
+
+/// Convenience: reports only.
+pub fn reports_for_device(rows: &[ResultRow], device: &str) -> Vec<MethodReport> {
+    rows_for_device(rows, device)
+        .into_iter()
+        .map(|r| r.report.clone())
+        .collect()
+}
+
+/// Latency of the dense FP32 engine on a device (speedup denominators in
+/// cross-checks and the energy analysis).
+pub fn baseline_latency(ws: &Workspace, model: &str, dev: &Device) -> Result<f64> {
+    let mm = ws.manifest.model(model)?;
+    let graph = Graph::from_manifest(mm)?;
+    let masks: Vec<Vec<bool>> = graph.groups.iter().map(|g| vec![true; g.size]).collect();
+    let eng = optimize(&graph, &masks, &OptimizeOptions::fp32())?;
+    Ok(simulate(&eng, dev).latency_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_keys_distinct() {
+        let keys: Vec<String> = [
+            MethodSpec::Baseline,
+            MethodSpec::Q8Only,
+            MethodSpec::PruneOnly(50),
+            MethodSpec::PruneOnly(30),
+            MethodSpec::Hqp,
+            MethodSpec::HqpWithRanking(RankingMethod::MagnitudeL2),
+            MethodSpec::HqpPruneOnly,
+        ]
+        .iter()
+        .map(|s| s.cache_key("m"))
+        .collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment coordinator: orchestrates the method suite across models and
+//! devices, caches outcomes (the pruning loop is minutes of PJRT work — the
+//! table/figure benches must not re-run it per rendering), and serializes
+//! results for EXPERIMENTS.md.
+//!
+//! The coordinator is deliberately synchronous: the execution budget of
+//! this environment is one CPU core and PJRT executions fully occupy it, so
+//! a thread pool would only add scheduling noise (tokio is additionally
+//! unavailable offline — see Cargo.toml). The design keeps the runner
+//! single-threaded with explicit result caching instead.
+
+pub mod experiments;
+pub mod results;
+
+pub use experiments::{run_method, run_suite, MethodSpec, SuiteResult};
+pub use results::{load_results, save_results, ResultRow};

@@ -1,0 +1,176 @@
+//! Result persistence: method reports + prune traces as JSON under
+//! `artifacts/results/`, so figures re-render without re-running pipelines
+//! and EXPERIMENTS.md can be regenerated deterministically.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::formats::json::Json;
+use crate::hqp::MethodReport;
+
+/// One persisted row = [`MethodReport`] + optional prune trace.
+#[derive(Clone, Debug)]
+pub struct ResultRow {
+    pub report: MethodReport,
+    /// (sparsity, accuracy, accepted) triples of the conditional loop.
+    pub trace: Vec<(f64, f64, bool)>,
+    /// Per-group sparsity (layer-wise analysis).
+    pub group_sparsity: Vec<f64>,
+    /// Per-group mean Fisher S (layer-wise analysis).
+    pub group_saliency: Vec<f64>,
+}
+
+fn report_to_json(r: &MethodReport) -> Json {
+    Json::obj()
+        .set("method", r.method.clone())
+        .set("model", r.model.clone())
+        .set("device", r.device.clone())
+        .set("latency_ms", r.latency_ms)
+        .set("speedup", r.speedup)
+        .set("size_reduction", r.size_reduction)
+        .set("acc_drop", r.acc_drop)
+        .set("sparsity", r.sparsity)
+        .set("compliant", r.compliant)
+        .set("energy_mj", r.energy_mj)
+        .set("energy_ratio", r.energy_ratio)
+        .set("flops", r.flops as f64)
+}
+
+fn report_from_json(v: &Json) -> Result<MethodReport> {
+    Ok(MethodReport {
+        method: v.req("method")?.as_str()?.to_string(),
+        model: v.req("model")?.as_str()?.to_string(),
+        device: v.req("device")?.as_str()?.to_string(),
+        latency_ms: v.req("latency_ms")?.as_f64()?,
+        speedup: v.req("speedup")?.as_f64()?,
+        size_reduction: v.req("size_reduction")?.as_f64()?,
+        acc_drop: v.req("acc_drop")?.as_f64()?,
+        sparsity: v.req("sparsity")?.as_f64()?,
+        compliant: v.req("compliant")?.as_bool()?,
+        energy_mj: v.req("energy_mj")?.as_f64()?,
+        energy_ratio: v.req("energy_ratio")?.as_f64()?,
+        flops: v.req("flops")?.as_f64()? as u64,
+    })
+}
+
+/// Serialize rows to `<dir>/<name>.json`.
+pub fn save_results(dir: impl AsRef<Path>, name: &str, rows: &[ResultRow]) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let arr = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                report_to_json(&r.report)
+                    .set(
+                        "trace",
+                        Json::Arr(
+                            r.trace
+                                .iter()
+                                .map(|(s, a, ok)| {
+                                    Json::Arr(vec![Json::Num(*s), Json::Num(*a), Json::Bool(*ok)])
+                                })
+                                .collect(),
+                        ),
+                    )
+                    .set("group_sparsity", r.group_sparsity.clone())
+                    .set("group_saliency", r.group_saliency.clone())
+            })
+            .collect(),
+    );
+    std::fs::write(dir.join(format!("{name}.json")), arr.to_string_pretty())?;
+    Ok(())
+}
+
+/// Load rows back (None if the file doesn't exist).
+pub fn load_results(dir: impl AsRef<Path>, name: &str) -> Result<Option<Vec<ResultRow>>> {
+    let path = dir.as_ref().join(format!("{name}.json"));
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)?;
+    let v = Json::parse(&text)?;
+    let rows = v
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            let trace = r
+                .req("trace")?
+                .as_arr()?
+                .iter()
+                .map(|t| {
+                    let p = t.as_arr()?;
+                    if p.len() != 3 {
+                        return Err(Error::Json("trace triple".into()));
+                    }
+                    Ok((p[0].as_f64()?, p[1].as_f64()?, p[2].as_bool()?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let group_sparsity = r
+                .req("group_sparsity")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<_>>>()?;
+            let group_saliency = r
+                .req("group_saliency")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ResultRow {
+                report: report_from_json(r)?,
+                trace,
+                group_sparsity,
+                group_saliency,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Some(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> ResultRow {
+        ResultRow {
+            report: MethodReport {
+                method: "hqp".into(),
+                model: "m".into(),
+                device: "nx".into(),
+                latency_ms: 0.5,
+                speedup: 2.5,
+                size_reduction: 0.8,
+                acc_drop: 0.013,
+                sparsity: 0.45,
+                compliant: true,
+                energy_mj: 7.5,
+                energy_ratio: 2.5,
+                flops: 123456,
+            },
+            trace: vec![(0.01, 0.93, true), (0.02, 0.92, false)],
+            group_sparsity: vec![0.0, 0.5],
+            group_saliency: vec![1.5, 0.1],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("hqp_results_test");
+        save_results(&dir, "t1", &[row()]).unwrap();
+        let back = load_results(&dir, "t1").unwrap().unwrap();
+        assert_eq!(back.len(), 1);
+        let r = &back[0].report;
+        assert_eq!(r.method, "hqp");
+        assert_eq!(r.flops, 123456);
+        assert_eq!(back[0].trace.len(), 2);
+        assert_eq!(back[0].trace[1].2, false);
+        assert_eq!(back[0].group_sparsity, vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        let dir = std::env::temp_dir().join("hqp_results_test");
+        assert!(load_results(&dir, "nope").unwrap().is_none());
+    }
+}

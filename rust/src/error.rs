@@ -1,0 +1,68 @@
+//! Unified error type for the HQP crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes across the stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Underlying XLA / PJRT failure (compile, execute, literal transfer).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// I/O failure (artifacts, weights, datasets).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed `.npy` file.
+    #[error("npy: {0}")]
+    Npy(String),
+
+    /// Malformed JSON (manifest, configs, result files).
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Manifest/artifact contract violation (missing keys, shape mismatch).
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Tensor shape/dtype misuse.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Graph IR inconsistency (dangling tensor ids, bad channel counts).
+    #[error("graph: {0}")]
+    Graph(String),
+
+    /// HQP pipeline misconfiguration or invariant violation.
+    #[error("hqp: {0}")]
+    Hqp(String),
+
+    /// CLI usage error.
+    #[error("cli: {0}")]
+    Cli(String),
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Xla(format!("{e:#}"))
+    }
+}
+
+impl Error {
+    /// Shorthand constructors used across the crate.
+    pub fn manifest(msg: impl Into<String>) -> Self {
+        Error::Manifest(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn graph(msg: impl Into<String>) -> Self {
+        Error::Graph(msg.into())
+    }
+    pub fn hqp(msg: impl Into<String>) -> Self {
+        Error::Hqp(msg.into())
+    }
+}

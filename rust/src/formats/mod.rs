@@ -1,0 +1,8 @@
+//! Serialization substrates built from scratch (no serde available in this
+//! offline environment — see Cargo.toml note): NumPy `.npy` and JSON.
+
+pub mod json;
+pub mod npy;
+
+pub use json::Json;
+pub use npy::{read_npy_f32, read_npy_i32, write_npy_f32};

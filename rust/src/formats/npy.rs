@@ -1,0 +1,263 @@
+//! NumPy `.npy` reader/writer (format spec v1.0/v2.0, C-order only).
+//!
+//! The L2 build step saves model weights and datasets with `np.save`; this
+//! module is the Rust side of that contract. Supports `<f4`, `<f8`, `<i4`,
+//! `<i8`, `|i1`, `|u1` payloads (f8/i8 down-converted on read — the
+//! artifacts are all f4/i4, wider types appear only in hand-written tests).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::{Tensor, TensorI32};
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+struct Header {
+    descr: String,
+    fortran: bool,
+    shape: Vec<usize>,
+}
+
+fn parse_header(text: &str) -> Result<Header> {
+    // Header is a python dict literal, e.g.
+    // {'descr': '<f4', 'fortran_order': False, 'shape': (2, 3), }
+    let get = |key: &str| -> Result<&str> {
+        let pat = format!("'{key}':");
+        let at = text
+            .find(&pat)
+            .ok_or_else(|| Error::Npy(format!("missing key {key}")))?;
+        Ok(text[at + pat.len()..].trim_start())
+    };
+
+    let descr_rest = get("descr")?;
+    let descr = descr_rest
+        .strip_prefix('\'')
+        .and_then(|r| r.split('\'').next())
+        .ok_or_else(|| Error::Npy("bad descr".into()))?
+        .to_string();
+
+    let fortran = get("fortran_order")?.starts_with("True");
+
+    let shape_rest = get("shape")?;
+    let open = shape_rest
+        .strip_prefix('(')
+        .ok_or_else(|| Error::Npy("bad shape".into()))?;
+    let close = open
+        .find(')')
+        .ok_or_else(|| Error::Npy("unterminated shape".into()))?;
+    let mut shape = Vec::new();
+    for part in open[..close].split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(
+            part.parse::<usize>()
+                .map_err(|e| Error::Npy(format!("bad dim {part}: {e}")))?,
+        );
+    }
+    Ok(Header { descr, fortran, shape })
+}
+
+fn read_raw(path: &Path) -> Result<(Header, Vec<u8>)> {
+    let mut f = fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != MAGIC {
+        return Err(Error::Npy(format!("{}: bad magic", path.display())));
+    }
+    let major = magic[6];
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => return Err(Error::Npy(format!("unsupported npy version {v}"))),
+    };
+    let mut htext = vec![0u8; header_len];
+    f.read_exact(&mut htext)?;
+    let header = parse_header(
+        std::str::from_utf8(&htext).map_err(|e| Error::Npy(format!("header utf8: {e}")))?,
+    )?;
+    if header.fortran {
+        return Err(Error::Npy("fortran_order not supported".into()));
+    }
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    Ok((header, payload))
+}
+
+fn expect_len(header: &Header, payload: &[u8], itemsize: usize, path: &Path) -> Result<usize> {
+    let n: usize = header.shape.iter().product();
+    if payload.len() < n * itemsize {
+        return Err(Error::Npy(format!(
+            "{}: payload {} bytes < {} wanted",
+            path.display(),
+            payload.len(),
+            n * itemsize
+        )));
+    }
+    Ok(n)
+}
+
+/// Read an `.npy` file as an f32 [`Tensor`] (accepts `<f4` and `<f8`).
+pub fn read_npy_f32(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let (header, payload) = read_raw(path)?;
+    let data: Vec<f32> = match header.descr.as_str() {
+        "<f4" => {
+            let n = expect_len(&header, &payload, 4, path)?;
+            (0..n)
+                .map(|i| f32::from_le_bytes(payload[i * 4..i * 4 + 4].try_into().unwrap()))
+                .collect()
+        }
+        "<f8" => {
+            let n = expect_len(&header, &payload, 8, path)?;
+            (0..n)
+                .map(|i| f64::from_le_bytes(payload[i * 8..i * 8 + 8].try_into().unwrap()) as f32)
+                .collect()
+        }
+        d => return Err(Error::Npy(format!("{}: dtype {d} not f32-compatible", path.display()))),
+    };
+    Tensor::new(header.shape, data)
+}
+
+/// Read an `.npy` file as an i32 [`TensorI32`] (accepts `<i4`, `<i8`, `|i1`, `|u1`).
+pub fn read_npy_i32(path: impl AsRef<Path>) -> Result<TensorI32> {
+    let path = path.as_ref();
+    let (header, payload) = read_raw(path)?;
+    let data: Vec<i32> = match header.descr.as_str() {
+        "<i4" => {
+            let n = expect_len(&header, &payload, 4, path)?;
+            (0..n)
+                .map(|i| i32::from_le_bytes(payload[i * 4..i * 4 + 4].try_into().unwrap()))
+                .collect()
+        }
+        "<i8" => {
+            let n = expect_len(&header, &payload, 8, path)?;
+            (0..n)
+                .map(|i| i64::from_le_bytes(payload[i * 8..i * 8 + 8].try_into().unwrap()) as i32)
+                .collect()
+        }
+        "|i1" => {
+            let n = expect_len(&header, &payload, 1, path)?;
+            payload[..n].iter().map(|&b| b as i8 as i32).collect()
+        }
+        "|u1" => {
+            let n = expect_len(&header, &payload, 1, path)?;
+            payload[..n].iter().map(|&b| b as i32).collect()
+        }
+        d => return Err(Error::Npy(format!("{}: dtype {d} not i32-compatible", path.display()))),
+    };
+    TensorI32::new(header.shape, data)
+}
+
+/// Write an f32 tensor as `.npy` v1.0 (`<f4`, C-order).
+pub fn write_npy_f32(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let shape_str = match t.shape().len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", t.shape()[0]),
+        _ => format!(
+            "({})",
+            t.shape().iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // Pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64, ending in \n.
+    let base = 10 + header.len() + 1;
+    let pad = (64 - base % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(t.len() * 4);
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hqp_npy_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25]).unwrap();
+        let p = tmp("rt.npy");
+        write_npy_f32(&p, &t).unwrap();
+        let back = read_npy_f32(&p).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_1d_and_scalar_shapes() {
+        let t = Tensor::from_slice(&[9.0, 8.0, 7.0]);
+        let p = tmp("rt1d.npy");
+        write_npy_f32(&p, &t).unwrap();
+        assert_eq!(read_npy_f32(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.npy");
+        fs::write(&p, b"NOTNUMPYDATA").unwrap();
+        assert!(read_npy_f32(&p).is_err());
+    }
+
+    #[test]
+    fn header_parser_variants() {
+        let h = parse_header(
+            "{'descr': '<f4', 'fortran_order': False, 'shape': (128, 3, 3, 16), }",
+        )
+        .unwrap();
+        assert_eq!(h.descr, "<f4");
+        assert!(!h.fortran);
+        assert_eq!(h.shape, vec![128, 3, 3, 16]);
+
+        let h1 = parse_header("{'descr': '<i4', 'fortran_order': False, 'shape': (7,), }").unwrap();
+        assert_eq!(h1.shape, vec![7]);
+
+        let h0 = parse_header("{'descr': '<f4', 'fortran_order': False, 'shape': (), }").unwrap();
+        assert!(h0.shape.is_empty());
+    }
+
+    #[test]
+    fn fortran_rejected() {
+        let p = tmp("fortran.npy");
+        let header = "{'descr': '<f4', 'fortran_order': True, 'shape': (1,), }          \n";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        fs::write(&p, bytes).unwrap();
+        assert!(read_npy_f32(&p).is_err());
+    }
+}

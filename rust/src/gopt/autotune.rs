@@ -1,0 +1,99 @@
+//! Kernel auto-tuning model: per-op tile-shape selection.
+//!
+//! TensorRT picks, for every layer shape, the fastest kernel tactic from a
+//! library of tiled implementations. The analytical analogue: each
+//! candidate tile (TM, TN, TK) issues `ceil(M/TM)·TM · ceil(N/TN)·TN ·
+//! ceil(K/TK)·TK` MACs for `M·N·K` useful ones; the tuner picks the tile
+//! with the highest useful fraction, and that fraction derates the op's
+//! effective FLOP rate in the roofline (edge-padding waste — the same
+//! quantity the L1 Pallas kernel's `mxu_utilization` reports on the TPU
+//! side).
+
+/// One candidate tile shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileCandidate {
+    pub tm: usize,
+    pub tn: usize,
+    pub tk: usize,
+}
+
+/// The tactic library: tile shapes spanning skinny and square GEMMs
+/// (modeled after typical tensor-core tactic sets).
+pub const DEFAULT_TILES: &[TileCandidate] = &[
+    TileCandidate { tm: 128, tn: 128, tk: 32 },
+    TileCandidate { tm: 256, tn: 64, tk: 32 },
+    TileCandidate { tm: 64, tn: 256, tk: 32 },
+    TileCandidate { tm: 64, tn: 64, tk: 64 },
+    TileCandidate { tm: 32, tn: 32, tk: 32 },
+    TileCandidate { tm: 16, tn: 16, tk: 16 },
+    TileCandidate { tm: 8, tn: 8, tk: 8 },
+];
+
+fn ceil_to(x: usize, t: usize) -> usize {
+    x.div_ceil(t) * t
+}
+
+/// Efficiency of one tile on an (M, N, K) GEMM.
+pub fn tile_efficiency(m: usize, n: usize, k: usize, t: TileCandidate) -> f64 {
+    if m == 0 || n == 0 || k == 0 {
+        return 1.0;
+    }
+    let issued = ceil_to(m, t.tm) as f64 * ceil_to(n, t.tn) as f64 * ceil_to(k, t.tk) as f64;
+    (m as f64 * n as f64 * k as f64) / issued
+}
+
+/// Pick the best tile for an (M, N, K) GEMM; returns (tile, efficiency).
+pub fn autotune(m: usize, n: usize, k: usize, tiles: &[TileCandidate]) -> (TileCandidate, f64) {
+    let mut best = (tiles[0], 0.0f64);
+    for &t in tiles {
+        let e = tile_efficiency(m, n, k, t);
+        if e > best.1 {
+            best = (t, e);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit_is_perfect() {
+        let t = TileCandidate { tm: 128, tn: 128, tk: 32 };
+        assert_eq!(tile_efficiency(256, 128, 64, t), 1.0);
+    }
+
+    #[test]
+    fn small_gemm_prefers_small_tile() {
+        // A 10x12x9 GEMM wastes most of a 128-wide tile; the tuner must
+        // pick one of the small tiles (16- and 8-wide tie at these dims).
+        let (t, e) = autotune(10, 12, 9, DEFAULT_TILES);
+        assert!(t.tm <= 16 && t.tn <= 16 && t.tk <= 16, "picked {t:?}");
+        assert!(e > 0.2 && e <= 1.0);
+        // strictly smaller dims break the tie toward the 8-tile
+        let (t8, _) = autotune(7, 7, 7, DEFAULT_TILES);
+        assert_eq!(t8, TileCandidate { tm: 8, tn: 8, tk: 8 });
+    }
+
+    #[test]
+    fn big_gemm_prefers_big_tile_or_equal() {
+        let (_, e_big) = autotune(1024, 1024, 512, DEFAULT_TILES);
+        assert!(e_big >= 0.99);
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        for &t in DEFAULT_TILES {
+            for (m, n, k) in [(1, 1, 1), (17, 33, 65), (1000, 3, 7)] {
+                let e = tile_efficiency(m, n, k, t);
+                assert!(e > 0.0 && e <= 1.0, "eff {e} for {m}x{n}x{k} on {t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        assert_eq!(tile_efficiency(0, 5, 5, DEFAULT_TILES[0]), 1.0);
+    }
+}

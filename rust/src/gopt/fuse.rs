@@ -1,0 +1,344 @@
+//! Fusion + dead-channel elimination + cost assembly.
+//!
+//! Walks the IR in topological order, greedily absorbing BN/activation
+//! nodes into their producing conv/fc (legal because the tracer guarantees
+//! single-consumer chains for those patterns), collapsing SE regions, and
+//! pricing every surviving op at its live channel counts.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::error::{Error, Result};
+use crate::graph::{Graph, Liveness, Node, OpKind};
+use crate::hwsim::Precision;
+
+use super::{autotune, FusedKind, FusedOp, OptimizeOptions, OptimizedGraph};
+// (FusedKind is used in match arms and the Costing helpers below.)
+
+/// Count consumers of every tensor (fusion legality).
+fn consumer_counts(graph: &Graph) -> BTreeMap<usize, usize> {
+    let mut c = BTreeMap::new();
+    for n in &graph.nodes {
+        for i in &n.inputs {
+            *c.entry(*i).or_insert(0) += 1;
+        }
+    }
+    c
+}
+
+/// Public fusion entry (kept separate for unit tests / ablations).
+pub fn fuse(graph: &Graph, live: &Liveness, opts: &OptimizeOptions) -> Result<OptimizedGraph> {
+    build(graph, live, opts)
+}
+
+struct Costing<'a> {
+    graph: &'a Graph,
+    live: &'a Liveness,
+    opts: &'a OptimizeOptions,
+}
+
+impl<'a> Costing<'a> {
+    fn live_in(&self, n: &Node) -> usize {
+        self.live.count(n.inputs[0])
+    }
+    fn live_out(&self, n: &Node) -> usize {
+        self.live.count(n.output)
+    }
+
+    /// Tile efficiency from the auto-tuner (1.0 when disabled).
+    fn tile_eff(&self, kind: FusedKind, m: usize, n: usize, k: usize) -> f64 {
+        if !self.opts.autotune {
+            return 1.0;
+        }
+        match kind {
+            FusedKind::ConvBnAct | FusedKind::DwConvBnAct | FusedKind::Gemm => {
+                autotune::autotune(m, n, k, autotune::DEFAULT_TILES).1
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Build the FusedOp for a conv/dwconv/fc `n`, charging `extra_elt`
+    /// fused element-wise ops (bn/act) and optional `extra` traffic.
+    fn compute_op(&self, n: &Node, kind: FusedKind, fused_elt_ops: u64) -> FusedOp {
+        let precision = self.opts.precision.for_group(n.group);
+        let (cin_l, cout_l) = (self.live_in(n), self.live_out(n));
+        // Spatial ops are priced at the deployment resolution (see
+        // OptimizeOptions::spatial_scale); FC layers act on pooled vectors
+        // and don't scale.
+        let sscale = match n.kind {
+            OpKind::Conv | OpKind::DwConv => self.opts.spatial_scale,
+            _ => 1.0,
+        };
+        let hw = ((n.h * n.w) as f64 * sscale) as u64;
+        let (flops, welems, m, nn, kk) = match n.kind {
+            OpKind::Conv => {
+                let f = 2 * (n.k * n.k) as u64 * cin_l as u64 * cout_l as u64 * hw;
+                let w = (n.k * n.k) as u64 * cin_l as u64 * cout_l as u64;
+                (f, w, hw as usize, cout_l, n.k * n.k * cin_l)
+            }
+            OpKind::DwConv => {
+                let f = 2 * (n.k * n.k) as u64 * cout_l as u64 * hw;
+                let w = (n.k * n.k) as u64 * cout_l as u64;
+                (f, w, hw as usize, cout_l, n.k * n.k)
+            }
+            OpKind::Fc => {
+                let f = 2 * cin_l as u64 * cout_l as u64;
+                let w = cin_l as u64 * cout_l as u64 + cout_l as u64;
+                (f, w, 1usize, cout_l, cin_l)
+            }
+            _ => unreachable!("compute_op on non-compute node"),
+        };
+        // Tile efficiency derates FLOP throughput: model as extra issued ops.
+        let eff = self.tile_eff(kind, m, nn, kk);
+        let flops = (flops as f64 / eff).round() as u64 + fused_elt_ops;
+
+        let act_bytes = |c: usize, spatial: u64| -> u64 {
+            // activations move at the compute precision (int8 engines carry
+            // int8 activations; fp32 engines carry f32)
+            (c as u64 * spatial) as u64 * precision.bytes().max(1.0) as u64
+        };
+        let in_spatial =
+            (*self.graph.tensor_spatial.get(&n.inputs[0]).unwrap_or(&1) as f64 * sscale) as u64;
+        let weight_bytes = (welems as f64 * precision.bytes()) as u64
+            + if precision == Precision::Int8 || precision == Precision::Int4 {
+                4 * cout_l as u64 // per-channel scale metadata
+            } else {
+                0
+            };
+        let bytes = act_bytes(cin_l, in_spatial) + weight_bytes + act_bytes(cout_l, hw);
+
+        FusedOp {
+            name: n.name.clone(),
+            kind,
+            flops,
+            bytes,
+            precision,
+            h: n.h,
+            w: n.w,
+            cin: cin_l,
+            cout: cout_l,
+            k: n.k,
+        }
+    }
+
+    /// Element-wise op (add / lone act / se_mul).
+    fn elt_op(&self, n: &Node) -> FusedOp {
+        let c = self.live_out(n);
+        // spatial tensors scale to deployment resolution; vectors don't
+        let sscale = if n.h * n.w > 1 { self.opts.spatial_scale } else { 1.0 };
+        let hw = ((n.h * n.w) as f64 * sscale) as u64;
+        let b = self.opts.precision.compute.bytes().max(1.0) as u64;
+        FusedOp {
+            name: n.name.clone(),
+            kind: FusedKind::Elementwise,
+            flops: c as u64 * hw,
+            bytes: (n.inputs.len() as u64 + 1) * c as u64 * hw * b,
+            precision: self.opts.precision.compute,
+            h: n.h,
+            w: n.w,
+            cin: c,
+            cout: c,
+            k: 1,
+        }
+    }
+
+    fn pool_op(&self, n: &Node) -> FusedOp {
+        let c = self.live_in(n);
+        let in_spatial = (*self.graph.tensor_spatial.get(&n.inputs[0]).unwrap_or(&1) as f64
+            * self.opts.spatial_scale) as u64;
+        let b = self.opts.precision.compute.bytes().max(1.0) as u64;
+        FusedOp {
+            name: n.name.clone(),
+            kind: FusedKind::Pool,
+            flops: c as u64 * in_spatial,
+            bytes: c as u64 * in_spatial * b + c as u64 * b,
+            precision: self.opts.precision.compute,
+            h: 1,
+            w: 1,
+            cin: c,
+            cout: c,
+            k: 1,
+        }
+    }
+}
+
+/// Weight storage of the deployed engine + the FP32 dense baseline.
+fn storage(graph: &Graph, live: &Liveness, opts: &OptimizeOptions) -> (u64, u64) {
+    let mut deployed = 0u64;
+    let mut dense = 0u64;
+    for n in &graph.nodes {
+        let (welems_dense, welems_live, cout_l) = match n.kind {
+            OpKind::Conv => {
+                let cin_l = live.count(n.inputs[0]);
+                let cout_l = live.count(n.output);
+                (
+                    (n.k * n.k * n.cin * n.cout) as u64,
+                    (n.k * n.k * cin_l * cout_l) as u64,
+                    cout_l as u64,
+                )
+            }
+            OpKind::DwConv => {
+                let cout_l = live.count(n.output);
+                ((n.k * n.k * n.cout) as u64, (n.k * n.k * cout_l) as u64, cout_l as u64)
+            }
+            OpKind::Fc => {
+                let cin_l = live.count(n.inputs[0]);
+                let cout_l = live.count(n.output);
+                (
+                    (n.cin * n.cout + n.cout) as u64,
+                    (cin_l * cout_l + cout_l) as u64,
+                    cout_l as u64,
+                )
+            }
+            // BN folds into the conv at deploy; count it only in the dense
+            // baseline (the FP32 reference engine also folds, so skip both
+            // for a like-for-like comparison).
+            _ => (0, 0, 0),
+        };
+        let p = opts.precision.for_group(n.group);
+        dense += welems_dense * 4;
+        deployed += (welems_live as f64 * p.bytes()) as u64
+            + if matches!(p, Precision::Int8 | Precision::Int4) {
+                4 * cout_l
+            } else {
+                0
+            };
+    }
+    (deployed, dense)
+}
+
+pub(super) fn build(
+    graph: &Graph,
+    live: &Liveness,
+    opts: &OptimizeOptions,
+) -> Result<OptimizedGraph> {
+    let consumers = consumer_counts(graph);
+    let costing = Costing { graph, live, opts };
+
+    // Node lookup by id and by output tensor.
+    let by_output: HashMap<usize, usize> =
+        graph.nodes.iter().enumerate().map(|(i, n)| (n.output, i)).collect();
+
+    let mut absorbed = vec![false; graph.nodes.len()];
+    let mut ops = Vec::new();
+
+    // Pre-pass: mark SE regions (squeeze-gap, fc1, fc2, mul share a ".se"
+    // name prefix from the tracer).
+    let mut se_mul_members: HashMap<usize, Vec<usize>> = HashMap::new();
+    if opts.fusion {
+        for (i, n) in graph.nodes.iter().enumerate() {
+            if n.kind == OpKind::SeMul {
+                let prefix = n.name.trim_end_matches(".mul");
+                let members: Vec<usize> = graph
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, m)| m.name.starts_with(prefix) && m.id != n.id)
+                    .map(|(j, _)| j)
+                    .collect();
+                se_mul_members.insert(i, members);
+            }
+        }
+    }
+
+    for (i, n) in graph.nodes.iter().enumerate() {
+        if absorbed[i] {
+            continue;
+        }
+        match n.kind {
+            OpKind::Conv | OpKind::DwConv | OpKind::Fc => {
+                let kind = match n.kind {
+                    OpKind::Conv => {
+                        // pointwise convs deploy as GEMMs (the L1 kernel path)
+                        if n.k == 1 && n.groups == 1 {
+                            FusedKind::Gemm
+                        } else {
+                            FusedKind::ConvBnAct
+                        }
+                    }
+                    OpKind::DwConv => FusedKind::DwConvBnAct,
+                    _ => FusedKind::Gemm,
+                };
+                let mut fused_elt = 0u64;
+                if opts.fusion {
+                    // Absorb a single-consumer bn -> act chain.
+                    let mut tail = n.output;
+                    loop {
+                        let next = by_output
+                            .values()
+                            .copied()
+                            .find(|&j| !absorbed[j] && graph.nodes[j].inputs.first() == Some(&tail)
+                                  && matches!(graph.nodes[j].kind, OpKind::Bn | OpKind::Act)
+                                  && graph.nodes[j].inputs.len() == 1);
+                        match next {
+                            Some(j) if consumers.get(&tail).copied().unwrap_or(0) == 1 => {
+                                absorbed[j] = true;
+                                let m = &graph.nodes[j];
+                                let ssc = if m.h * m.w > 1 { opts.spatial_scale } else { 1.0 };
+                                fused_elt +=
+                                    ((live.count(m.output) * m.h * m.w) as f64 * ssc) as u64;
+                                tail = m.output;
+                            }
+                            _ => break,
+                        }
+                    }
+                }
+                let op = costing.compute_op(n, kind, fused_elt);
+                if op.cout > 0 && op.cin > 0 {
+                    ops.push(op);
+                }
+            }
+            OpKind::SeMul => {
+                if let Some(members) = se_mul_members.get(&i) {
+                    // One fused SE region: cost = 2 small GEMMs + scale.
+                    let mut flops = 0u64;
+                    let mut bytes = 0u64;
+                    for &j in members {
+                        absorbed[j] = true;
+                        let m = &graph.nodes[j];
+                        match m.kind {
+                            OpKind::Fc => {
+                                let f = costing.compute_op(m, FusedKind::Gemm, 0);
+                                flops += f.flops;
+                                bytes += f.bytes;
+                            }
+                            OpKind::Gap => {
+                                let p = costing.pool_op(m);
+                                flops += p.flops;
+                                bytes += p.bytes;
+                            }
+                            _ => {}
+                        }
+                    }
+                    let mul = costing.elt_op(n);
+                    ops.push(FusedOp {
+                        name: n.name.trim_end_matches(".mul").to_string(),
+                        kind: FusedKind::Se,
+                        flops: flops + mul.flops,
+                        bytes: bytes + mul.bytes,
+                        precision: opts.precision.compute,
+                        h: n.h,
+                        w: n.w,
+                        cin: mul.cin,
+                        cout: mul.cout,
+                        k: 1,
+                    });
+                } else {
+                    ops.push(costing.elt_op(n));
+                }
+            }
+            OpKind::Add | OpKind::Act => ops.push(costing.elt_op(n)),
+            OpKind::Bn => {
+                // Unfused BN deploys as an elementwise scale-shift.
+                ops.push(costing.elt_op(n));
+            }
+            OpKind::Gap => ops.push(costing.pool_op(n)),
+        }
+    }
+
+    let (weight_bytes, dense_weight_bytes) = storage(graph, live, opts);
+    if ops.is_empty() {
+        return Err(Error::graph("optimized graph has no ops"));
+    }
+    Ok(OptimizedGraph { model: graph.model.clone(), ops, weight_bytes, dense_weight_bytes })
+}

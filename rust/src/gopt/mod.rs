@@ -1,0 +1,266 @@
+//! Deployment graph optimizer — the from-scratch substitute for TensorRT
+//! (DESIGN.md §Substitutions), implementing the three optimizations the
+//! paper's §IV-A credits for translating compression into latency:
+//!
+//! 1. **Layer fusion** ([`fuse`]): conv+BN+activation collapse into single
+//!    kernels (BN folds into the conv weights at deploy time), FC+act into
+//!    GEMM kernels, the SE block into one fused region, residual adds into
+//!    elementwise kernels — eliminating per-op launch overhead and
+//!    intermediate tensor traffic.
+//! 2. **Dead layer elimination** ([`crate::graph::Liveness`]): channels
+//!    masked by HQP pruning are physically removed — effective channel
+//!    counts shrink every consumer; a channel survives only if some
+//!    producer on a residual path keeps it alive.
+//! 3. **Kernel auto-tuning** ([`autotune`]): per-op tile-shape selection
+//!    maximizing useful-MAC efficiency, modeling TensorRT's tactic search.
+//!
+//! Output: an [`OptimizedGraph`] of fused ops with FLOPs/bytes/precision,
+//! priced by [`crate::hwsim`].
+
+pub mod autotune;
+pub mod fuse;
+
+pub use autotune::{autotune, TileCandidate, DEFAULT_TILES};
+pub use fuse::fuse;
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::graph::{Graph, Liveness};
+use crate::hwsim::Precision;
+
+/// Kind of a fused deployment op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FusedKind {
+    /// Dense conv (+BN+act folded).
+    ConvBnAct,
+    /// Depthwise conv (+BN+act folded).
+    DwConvBnAct,
+    /// FC / pointwise GEMM (+act folded).
+    Gemm,
+    /// Squeeze-excitation region (pool + 2 FCs + scale).
+    Se,
+    /// Residual add / standalone activation.
+    Elementwise,
+    /// Global average pool.
+    Pool,
+}
+
+/// One fused op with its deployment cost.
+#[derive(Clone, Debug)]
+pub struct FusedOp {
+    pub name: String,
+    pub kind: FusedKind,
+    /// FLOPs at batch 1 with eliminated channels.
+    pub flops: u64,
+    /// DRAM traffic at batch 1: live input + weights + live output bytes.
+    pub bytes: u64,
+    pub precision: Precision,
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+}
+
+/// The deployable engine: fused ops + storage accounting.
+#[derive(Clone, Debug)]
+pub struct OptimizedGraph {
+    pub model: String,
+    pub ops: Vec<FusedOp>,
+    /// Deployed weight storage (live channels only, at per-op precision,
+    /// including per-channel scale metadata for int8 ops).
+    pub weight_bytes: u64,
+    /// FP32 dense baseline storage (the denominator of "size reduction").
+    pub dense_weight_bytes: u64,
+}
+
+impl OptimizedGraph {
+    /// Total FLOPs of the deployed engine (batch 1).
+    pub fn flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    /// Model-size reduction vs the FP32 dense baseline, in [0, 1].
+    pub fn size_reduction(&self) -> f64 {
+        if self.dense_weight_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.weight_bytes as f64 / self.dense_weight_bytes as f64
+        }
+    }
+}
+
+/// Precision plan for the deployed engine.
+#[derive(Clone, Debug)]
+pub struct PrecisionPlan {
+    /// Precision of compute ops (conv/dwconv/gemm/se).
+    pub compute: Precision,
+    /// Optional per-prune-group override (mixed-precision extension,
+    /// paper §VI-A: low-S groups can drop to INT4, high-S stay FP16).
+    pub per_group: HashMap<usize, Precision>,
+}
+
+impl PrecisionPlan {
+    pub fn fp32() -> Self {
+        PrecisionPlan { compute: Precision::Fp32, per_group: HashMap::new() }
+    }
+    pub fn int8() -> Self {
+        PrecisionPlan { compute: Precision::Int8, per_group: HashMap::new() }
+    }
+
+    /// Precision for an op produced by prune group `g`.
+    pub fn for_group(&self, g: Option<usize>) -> Precision {
+        match g {
+            Some(gid) => *self.per_group.get(&gid).unwrap_or(&self.compute),
+            None => self.compute,
+        }
+    }
+}
+
+/// Deployment input resolution of the paper's testbed (224×224) relative
+/// to the 32×32 resolution the substituted models train at. Engines are
+/// priced at the paper's resolution so the compute/memory/launch-overhead
+/// mix matches the regime the tables were measured in (DESIGN.md
+/// §Substitutions); the channel architecture — the thing HQP transforms —
+/// is shared between both resolutions.
+pub const PAPER_SPATIAL_SCALE: f64 = 49.0; // (224/32)^2
+
+/// Options for [`optimize`].
+#[derive(Clone, Debug)]
+pub struct OptimizeOptions {
+    pub precision: PrecisionPlan,
+    /// Enable layer fusion (ablation switch).
+    pub fusion: bool,
+    /// Enable kernel auto-tuning (ablation switch).
+    pub autotune: bool,
+    /// Spatial multiplier applied to activation-sized work when pricing
+    /// the deployed engine (1.0 = native 32×32; default = paper's 224×224).
+    pub spatial_scale: f64,
+}
+
+impl OptimizeOptions {
+    pub fn fp32() -> Self {
+        OptimizeOptions {
+            precision: PrecisionPlan::fp32(),
+            fusion: true,
+            autotune: true,
+            spatial_scale: PAPER_SPATIAL_SCALE,
+        }
+    }
+    pub fn int8() -> Self {
+        OptimizeOptions {
+            precision: PrecisionPlan::int8(),
+            fusion: true,
+            autotune: true,
+            spatial_scale: PAPER_SPATIAL_SCALE,
+        }
+    }
+}
+
+/// Build the deployable engine from the IR + the HQP filter masks.
+///
+/// `masks[g][j] == true` keeps filter `j` of group `g` (see
+/// [`crate::graph::Liveness`]); pass `graph::liveness::full_masks` for the
+/// unpruned engine.
+pub fn optimize(graph: &Graph, masks: &[Vec<bool>], opts: &OptimizeOptions) -> Result<OptimizedGraph> {
+    let live = Liveness::analyze(graph, masks)?;
+    fuse::build(graph, &live, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::liveness::full_masks;
+    use crate::runtime::manifest::Manifest;
+
+    fn chain_graph() -> Graph {
+        // conv -> bn -> act -> gap -> fc
+        let text = r#"{
+          "version": 1, "hist_bins": 16,
+          "models": {"m": {
+            "input_hw": 8, "num_classes": 2, "baseline_val_acc": 1.0,
+            "eval_batch": 1, "fisher_batch": 1, "hist_batch": 1,
+            "weights_dir": "w", "param_order": [],
+            "groups": [{"id": 0, "name": "c", "size": 8, "offset": 0,
+                        "members": [["c.w", 3]], "producer": "c.w", "producer_axis": 3}],
+            "taps": [],
+            "ops": [
+              {"id": 0, "kind": "conv", "name": "c", "inputs": [0], "output": 1,
+               "attrs": {"cin": 3, "cout": 8, "k": 3, "stride": 1, "groups": 1, "h": 8, "w": 8},
+               "params": ["c.w"], "group": 0, "tap": null},
+              {"id": 1, "kind": "bn", "name": "cb", "inputs": [1], "output": 2,
+               "attrs": {"c": 8}, "params": [], "group": 0, "tap": null},
+              {"id": 2, "kind": "act", "name": "ca", "inputs": [2], "output": 3,
+               "attrs": {"kind": "relu"}, "params": [], "group": 0, "tap": null},
+              {"id": 3, "kind": "gap", "name": "p", "inputs": [3], "output": 4,
+               "attrs": {}, "params": [], "group": null, "tap": null},
+              {"id": 4, "kind": "fc", "name": "f", "inputs": [4], "output": 5,
+               "attrs": {"cin": 8, "cout": 2}, "params": ["f.w", "f.b"], "group": null, "tap": null}
+            ],
+            "tensor_shapes": {"0": [1, 8, 8, 3], "1": [1, 8, 8, 8], "2": [1, 8, 8, 8],
+                              "3": [1, 8, 8, 8], "4": [1, 8], "5": [1, 2]},
+            "artifacts": {}
+          }},
+          "data": {}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        Graph::from_manifest(m.model("m").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn fusion_collapses_conv_bn_act() {
+        let g = chain_graph();
+        let opt = optimize(&g, &full_masks(&g), &OptimizeOptions::fp32()).unwrap();
+        // conv+bn+act fuse; gap; fc => 3 deployed ops
+        assert_eq!(opt.ops.len(), 3);
+        assert_eq!(opt.ops[0].kind, FusedKind::ConvBnAct);
+        assert_eq!(opt.ops[1].kind, FusedKind::Pool);
+        assert_eq!(opt.ops[2].kind, FusedKind::Gemm);
+    }
+
+    #[test]
+    fn no_fusion_keeps_ops_separate() {
+        let g = chain_graph();
+        let mut o = OptimizeOptions::fp32();
+        o.fusion = false;
+        let opt = optimize(&g, &full_masks(&g), &o).unwrap();
+        assert_eq!(opt.ops.len(), 5);
+    }
+
+    #[test]
+    fn dead_channels_shrink_flops_and_bytes() {
+        let g = chain_graph();
+        let full = optimize(&g, &full_masks(&g), &OptimizeOptions::fp32()).unwrap();
+        let mut masks = full_masks(&g);
+        for j in 0..4 {
+            masks[0][j] = false; // kill half of the conv's 8 filters
+        }
+        let half = optimize(&g, &masks, &OptimizeOptions::fp32()).unwrap();
+        assert!(half.flops() < full.flops());
+        assert!(half.weight_bytes < full.weight_bytes);
+        assert_eq!(half.ops[0].cout, 4);
+        assert_eq!(half.ops[2].cin, 4, "fc consumes only live channels");
+        assert_eq!(half.dense_weight_bytes, full.dense_weight_bytes);
+    }
+
+    #[test]
+    fn int8_quarters_weight_storage() {
+        let g = chain_graph();
+        let f32 = optimize(&g, &full_masks(&g), &OptimizeOptions::fp32()).unwrap();
+        let i8 = optimize(&g, &full_masks(&g), &OptimizeOptions::int8()).unwrap();
+        let ratio = i8.weight_bytes as f64 / f32.weight_bytes as f64;
+        assert!(ratio > 0.24 && ratio < 0.35, "int8 ~ 1/4 + scale overhead, got {ratio}");
+        assert!(i8.size_reduction() > 0.6);
+    }
+
+    #[test]
+    fn mixed_precision_overrides_group() {
+        let g = chain_graph();
+        let mut opts = OptimizeOptions::int8();
+        opts.precision.per_group.insert(0, Precision::Fp16);
+        let opt = optimize(&g, &full_masks(&g), &opts).unwrap();
+        assert_eq!(opt.ops[0].precision, Precision::Fp16);
+        assert_eq!(opt.ops[2].precision, Precision::Int8);
+    }
+}

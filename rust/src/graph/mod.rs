@@ -1,0 +1,318 @@
+//! Inference-graph IR mirroring the L2 models.
+//!
+//! Built from the manifest's op list (recorded by the python tracer — the
+//! same traversal that produced the HLO, so graph and artifact can't
+//! diverge). This IR is what the TensorRT-substitute ([`crate::gopt`])
+//! optimizes and what the Jetson hardware model ([`crate::hwsim`]) prices:
+//! the *numerics* of a pruned/quantized model run through PJRT, while its
+//! *deployed latency* is derived here, exactly as the paper derives device
+//! latency from the TensorRT-compiled engine rather than from the python
+//! process that produced the ONNX.
+
+pub mod liveness;
+
+pub use liveness::{full_masks, Liveness};
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{GroupSpec, ModelManifest, OpSpec};
+
+/// Node kind (subset of ops the tracer records).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Conv,
+    DwConv,
+    Bn,
+    Act,
+    Add,
+    Gap,
+    Fc,
+    SeMul,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> Result<OpKind> {
+        Ok(match s {
+            "conv" => OpKind::Conv,
+            "dwconv" => OpKind::DwConv,
+            "bn" => OpKind::Bn,
+            "act" => OpKind::Act,
+            "add" => OpKind::Add,
+            "gap" => OpKind::Gap,
+            "fc" => OpKind::Fc,
+            "se_mul" => OpKind::SeMul,
+            other => return Err(Error::graph(format!("unknown op kind {other}"))),
+        })
+    }
+}
+
+/// One node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub kind: OpKind,
+    pub name: String,
+    pub inputs: Vec<usize>,
+    pub output: usize,
+    /// Conv/fc geometry (defaults 0/1 for non-conv ops).
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+    /// Output spatial size (1×1 for vector tensors).
+    pub h: usize,
+    pub w: usize,
+    /// Activation kind for Act nodes.
+    pub act_kind: Option<String>,
+    pub params: Vec<String>,
+    pub group: Option<usize>,
+    pub tap: Option<usize>,
+}
+
+/// The model graph: topologically ordered nodes + tensor channel counts.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub model: String,
+    pub nodes: Vec<Node>,
+    /// tensor id -> channel count (last dim of the traced shape).
+    pub tensor_channels: BTreeMap<usize, usize>,
+    /// tensor id -> spatial element count (H*W, 1 for vectors).
+    pub tensor_spatial: BTreeMap<usize, usize>,
+    pub groups: Vec<GroupSpec>,
+    /// Number of graph input tensors (tensor ids below this are inputs).
+    pub num_inputs: usize,
+}
+
+fn node_from_spec(op: &OpSpec, shapes: &BTreeMap<usize, Vec<usize>>) -> Result<Node> {
+    let kind = OpKind::parse(&op.kind)?;
+    let out_shape = shapes
+        .get(&op.output)
+        .ok_or_else(|| Error::graph(format!("op {}: no shape for tensor {}", op.name, op.output)))?;
+    let (h, w, cout_from_shape) = match out_shape.len() {
+        4 => (out_shape[1], out_shape[2], out_shape[3]),
+        2 => (1, 1, out_shape[1]),
+        _ => (1, 1, *out_shape.last().unwrap_or(&1)),
+    };
+    let (cin, cout, k, stride, groups) = match kind {
+        OpKind::Conv | OpKind::DwConv => (
+            op.attr("cin")?,
+            op.attr("cout")?,
+            op.attr("k")?,
+            op.attr("stride")?,
+            op.attr("groups")?,
+        ),
+        OpKind::Fc => (op.attr("cin")?, op.attr("cout")?, 1, 1, 1),
+        _ => (cout_from_shape, cout_from_shape, 1, 1, 1),
+    };
+    Ok(Node {
+        id: op.id,
+        kind,
+        name: op.name.clone(),
+        inputs: op.inputs.clone(),
+        output: op.output,
+        cin,
+        cout,
+        k,
+        stride,
+        groups,
+        h,
+        w,
+        act_kind: if kind == OpKind::Act {
+            Some(op.attr_str("kind")?.to_string())
+        } else {
+            None
+        },
+        params: op.params.clone(),
+        group: op.group,
+        tap: op.tap,
+    })
+}
+
+impl Graph {
+    /// Build the IR from a model manifest.
+    pub fn from_manifest(mm: &ModelManifest) -> Result<Graph> {
+        let nodes = mm
+            .ops
+            .iter()
+            .map(|op| node_from_spec(op, &mm.tensor_shapes))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut tensor_channels = BTreeMap::new();
+        let mut tensor_spatial = BTreeMap::new();
+        for (tid, shape) in &mm.tensor_shapes {
+            let (c, sp) = match shape.len() {
+                4 => (shape[3], shape[1] * shape[2]),
+                2 => (shape[1], 1),
+                _ => (*shape.last().unwrap_or(&1), 1),
+            };
+            tensor_channels.insert(*tid, c);
+            tensor_spatial.insert(*tid, sp);
+        }
+
+        // Graph inputs = tensor ids that are no node's output.
+        let produced: std::collections::BTreeSet<usize> =
+            nodes.iter().map(|n| n.output).collect();
+        let num_inputs = mm
+            .tensor_shapes
+            .keys()
+            .filter(|t| !produced.contains(t))
+            .count();
+
+        let g = Graph {
+            model: mm.name.clone(),
+            nodes,
+            tensor_channels,
+            tensor_spatial,
+            groups: mm.groups.clone(),
+            num_inputs,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Structural sanity: inputs precede use, shapes known, groups in range.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen: std::collections::BTreeSet<usize> = self
+            .tensor_channels
+            .keys()
+            .copied()
+            .filter(|t| !self.nodes.iter().any(|n| n.output == *t))
+            .collect();
+        for n in &self.nodes {
+            for i in &n.inputs {
+                if !seen.contains(i) {
+                    return Err(Error::graph(format!(
+                        "op {}: input tensor {i} not yet produced",
+                        n.name
+                    )));
+                }
+            }
+            if !self.tensor_channels.contains_key(&n.output) {
+                return Err(Error::graph(format!("op {}: unknown output shape", n.name)));
+            }
+            if let Some(g) = n.group {
+                if g >= self.groups.len() {
+                    return Err(Error::graph(format!("op {}: group {g} out of range", n.name)));
+                }
+            }
+            seen.insert(n.output);
+        }
+        Ok(())
+    }
+
+    /// Channel count of a tensor.
+    pub fn channels(&self, tid: usize) -> usize {
+        self.tensor_channels.get(&tid).copied().unwrap_or(0)
+    }
+
+    /// Dense (unpruned) parameter count of the compute ops.
+    pub fn dense_params(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match n.kind {
+                OpKind::Conv | OpKind::DwConv => n.k * n.k * (n.cin / n.groups) * n.cout,
+                OpKind::Fc => n.cin * n.cout + n.cout,
+                OpKind::Bn => 4 * n.cout,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Dense FLOPs for one sample (multiply-accumulate = 2 FLOPs).
+    pub fn dense_flops(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match n.kind {
+                // Pool reduces over its INPUT spatial extent.
+                OpKind::Gap => {
+                    let in_sp = *self.tensor_spatial.get(&n.inputs[0]).unwrap_or(&1) as u64;
+                    n.cout as u64 * in_sp
+                }
+                _ => n.dense_flops(),
+            })
+            .sum()
+    }
+}
+
+impl Node {
+    /// FLOPs of this node at dense channel counts, one sample.
+    pub fn dense_flops(&self) -> u64 {
+        let hw = (self.h * self.w) as u64;
+        match self.kind {
+            OpKind::Conv | OpKind::DwConv => {
+                2 * (self.k * self.k) as u64 * (self.cin / self.groups) as u64
+                    * self.cout as u64
+                    * hw
+            }
+            OpKind::Fc => 2 * self.cin as u64 * self.cout as u64,
+            OpKind::Bn => 2 * self.cout as u64 * hw,
+            OpKind::Act | OpKind::Add | OpKind::SeMul => self.cout as u64 * hw,
+            // NOTE: Gap's own h/w are the OUTPUT (1x1); Graph::dense_flops
+            // overrides with the input spatial extent.
+            OpKind::Gap => self.cout as u64 * hw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn mini() -> Graph {
+        let text = r#"{
+          "version": 1, "hist_bins": 16,
+          "models": {"m": {
+            "input_hw": 8, "num_classes": 2, "baseline_val_acc": 1.0,
+            "eval_batch": 4, "fisher_batch": 2, "hist_batch": 4,
+            "weights_dir": "w",
+            "param_order": [{"name": "c.w", "shape": [3, 3, 3, 4]}],
+            "groups": [{"id": 0, "name": "c", "size": 4, "offset": 0,
+                        "members": [["c.w", 3]], "producer": "c.w", "producer_axis": 3}],
+            "taps": [],
+            "ops": [
+              {"id": 0, "kind": "conv", "name": "c", "inputs": [0], "output": 1,
+               "attrs": {"cin": 3, "cout": 4, "k": 3, "stride": 1, "groups": 1, "h": 8, "w": 8},
+               "params": ["c.w"], "group": 0, "tap": null},
+              {"id": 1, "kind": "act", "name": "a", "inputs": [1], "output": 2,
+               "attrs": {"kind": "relu"}, "params": [], "group": 0, "tap": null},
+              {"id": 2, "kind": "gap", "name": "p", "inputs": [2], "output": 3,
+               "attrs": {}, "params": [], "group": null, "tap": null},
+              {"id": 3, "kind": "fc", "name": "f", "inputs": [3], "output": 4,
+               "attrs": {"cin": 4, "cout": 2}, "params": ["f.w", "f.b"], "group": null, "tap": null}
+            ],
+            "tensor_shapes": {"0": [1, 8, 8, 3], "1": [1, 8, 8, 4], "2": [1, 8, 8, 4],
+                              "3": [1, 4], "4": [1, 2]},
+            "artifacts": {}
+          }},
+          "data": {}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        Graph::from_manifest(m.model("m").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = mini();
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.num_inputs, 1);
+        assert_eq!(g.channels(1), 4);
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let g = mini();
+        // conv: 2*9*3*4*64 = 13824; act: 4*64; gap: 4*64; fc: 2*4*2 = 16
+        assert_eq!(g.nodes[0].dense_flops(), 13824);
+        assert_eq!(g.dense_flops(), 13824 + 256 + 256 + 16);
+    }
+
+    #[test]
+    fn dense_params() {
+        let g = mini();
+        // conv 3*3*3*4 = 108, fc 4*2+2 = 10
+        assert_eq!(g.dense_params(), 118);
+    }
+}

@@ -1,0 +1,80 @@
+//! The §III-C computational-cost model: C_HQP vs C_QAT.
+//!
+//! ```text
+//! C_HQP = N_calib·C_grad + T_prune·(N_val·C_inf)
+//! C_QAT ≈ N_epochs·N_train·C_grad
+//! ```
+//!
+//! C_HQP's terms are *measured* (the session counts grad/inference samples
+//! as the pipeline runs); C_QAT is modeled from the training-set size and
+//! epoch count the paper assumes. The bench prints both and the ratio,
+//! reproducing the paper's "orders of magnitude" claim (§V-F).
+
+use crate::runtime::Counters;
+
+/// Cost in "forward-pass equivalents": one grad sample ≈ 3 forward passes
+/// (fwd + bwd ≈ 2×fwd), the standard accounting.
+pub const GRAD_TO_INF: f64 = 3.0;
+
+/// Measured HQP optimization cost, in forward-pass equivalents.
+#[derive(Clone, Copy, Debug)]
+pub struct HqpCost {
+    pub grad_samples: u64,
+    pub inference_samples: u64,
+}
+
+impl HqpCost {
+    pub fn from_counters(c: &Counters) -> HqpCost {
+        HqpCost { grad_samples: c.grad_samples, inference_samples: c.inference_samples }
+    }
+
+    /// Total in forward-pass equivalents.
+    pub fn total_inf_equiv(&self) -> f64 {
+        self.grad_samples as f64 * GRAD_TO_INF + self.inference_samples as f64
+    }
+}
+
+/// Modeled QAT cost for the same model.
+#[derive(Clone, Copy, Debug)]
+pub struct QatCost {
+    pub epochs: u64,
+    pub train_samples: u64,
+}
+
+impl QatCost {
+    /// Paper's assumption: N_epochs ≥ 5 full fine-tuning epochs.
+    pub fn paper_default(train_samples: u64) -> QatCost {
+        QatCost { epochs: 5, train_samples }
+    }
+
+    pub fn total_inf_equiv(&self) -> f64 {
+        self.epochs as f64 * self.train_samples as f64 * GRAD_TO_INF
+    }
+}
+
+/// C_QAT / C_HQP.
+pub fn overhead_ratio(hqp: &HqpCost, qat: &QatCost) -> f64 {
+    qat.total_inf_equiv() / hqp.total_inf_equiv().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_accounting() {
+        let h = HqpCost { grad_samples: 1024, inference_samples: 50_000 };
+        assert_eq!(h.total_inf_equiv(), 1024.0 * 3.0 + 50_000.0);
+        let q = QatCost::paper_default(1_281_167); // ImageNet-sized N_train
+        assert_eq!(q.epochs, 5);
+        let r = overhead_ratio(&h, &q);
+        assert!(r > 100.0, "QAT should dominate by orders of magnitude: {r}");
+    }
+
+    #[test]
+    fn ratio_guards_zero() {
+        let h = HqpCost { grad_samples: 0, inference_samples: 0 };
+        let q = QatCost { epochs: 1, train_samples: 10 };
+        assert!(overhead_ratio(&h, &q).is_finite());
+    }
+}

@@ -1,0 +1,81 @@
+//! Deployment reporting: lower an [`Outcome`] through the graph optimizer
+//! onto a device model, producing the rows of the paper's Tables I/II.
+
+use crate::error::Result;
+use crate::gopt::{optimize, OptimizeOptions, OptimizedGraph, PrecisionPlan};
+use crate::graph::Graph;
+use crate::hwsim::{simulate, Device};
+
+use super::pipeline::{Outcome, Regime};
+
+/// One table row: method × device.
+#[derive(Clone, Debug)]
+pub struct MethodReport {
+    pub method: String,
+    pub model: String,
+    pub device: String,
+    pub latency_ms: f64,
+    /// vs the FP32 baseline engine on the same device.
+    pub speedup: f64,
+    /// 1 − deployed_bytes / dense_fp32_bytes.
+    pub size_reduction: f64,
+    /// Absolute Top-1 drop (measured through PJRT).
+    pub acc_drop: f64,
+    /// Filter sparsity θ.
+    pub sparsity: f64,
+    /// Compliance with Δ_max.
+    pub compliant: bool,
+    /// Energy per inference (mJ) and its ratio vs baseline (≡ speedup).
+    pub energy_mj: f64,
+    pub energy_ratio: f64,
+    /// Deployed engine FLOPs (diagnostics).
+    pub flops: u64,
+}
+
+/// Build the deployed engine for an outcome.
+pub fn engine(graph: &Graph, outcome: &Outcome, mixed: Option<PrecisionPlan>) -> Result<OptimizedGraph> {
+    let mut opts = match outcome.regime {
+        Regime::Fp32 => OptimizeOptions::fp32(),
+        Regime::Int8 => OptimizeOptions::int8(),
+    };
+    if let Some(plan) = mixed {
+        opts.precision = plan;
+    }
+    optimize(graph, &outcome.masks, &opts)
+}
+
+/// Produce the table row for `outcome` on `dev`, normalizing against the
+/// FP32 dense baseline engine on the same device.
+pub fn report(
+    graph: &Graph,
+    outcome: &Outcome,
+    dev: &Device,
+    delta_max: f64,
+) -> Result<MethodReport> {
+    let base_engine = optimize(graph, &crate::graph::full_masks(graph), &OptimizeOptions::fp32())?;
+    let base_sim = simulate(&base_engine, dev);
+
+    let eng = engine(graph, outcome, None)?;
+    let sim = simulate(&eng, dev);
+
+    Ok(MethodReport {
+        method: outcome.method.clone(),
+        model: outcome.model.clone(),
+        device: dev.name.clone(),
+        latency_ms: sim.latency_ms,
+        speedup: base_sim.latency_ms / sim.latency_ms,
+        size_reduction: eng.size_reduction(),
+        acc_drop: outcome.acc_drop(),
+        sparsity: outcome.sparsity,
+        compliant: outcome.compliant(delta_max),
+        energy_mj: sim.energy_mj,
+        energy_ratio: base_sim.energy_mj / sim.energy_mj,
+        flops: eng.flops(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/integration_pipeline.rs and the
+    // table benches; the pieces (optimize, simulate) carry their own units.
+}

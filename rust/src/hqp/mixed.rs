@@ -1,0 +1,98 @@
+//! Mixed-precision extension (paper §VI-A, "Future Work" — implemented
+//! here): drive per-group precision from the Fisher sensitivity S.
+//!
+//! Groups in the lowest-S quantile drop to INT4, the highest-S quantile is
+//! preserved at FP16, everything else deploys INT8 — "maximizing speedup
+//! while preserving fidelity at the most critical points in the network".
+
+use std::collections::HashMap;
+
+use crate::gopt::PrecisionPlan;
+use crate::hwsim::Precision;
+use crate::runtime::GroupSpec;
+
+use super::sensitivity::per_group_mean;
+
+/// Quantile thresholds for the 3-tier assignment.
+#[derive(Clone, Copy, Debug)]
+pub struct MixedPolicy {
+    /// Groups below this S-quantile go INT4.
+    pub int4_quantile: f64,
+    /// Groups above this S-quantile stay FP16.
+    pub fp16_quantile: f64,
+}
+
+impl Default for MixedPolicy {
+    fn default() -> Self {
+        MixedPolicy { int4_quantile: 0.25, fp16_quantile: 0.90 }
+    }
+}
+
+/// Build the per-group precision plan from Fisher scores.
+pub fn plan(scores: &[f32], groups: &[GroupSpec], policy: MixedPolicy) -> PrecisionPlan {
+    let means = per_group_mean(scores, groups);
+    let mut sorted = means.clone();
+    sorted.sort_by(f32::total_cmp);
+    let q = |frac: f64| -> f32 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() - 1) as f64 * frac).round() as usize;
+        sorted[idx]
+    };
+    let lo = q(policy.int4_quantile);
+    let hi = q(policy.fp16_quantile);
+
+    let mut per_group = HashMap::new();
+    for (g, &m) in groups.iter().zip(&means) {
+        let p = if m <= lo {
+            Precision::Int4
+        } else if m >= hi {
+            Precision::Fp16
+        } else {
+            Precision::Int8
+        };
+        per_group.insert(g.id, p);
+    }
+    PrecisionPlan { compute: Precision::Int8, per_group }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups(n: usize) -> Vec<GroupSpec> {
+        (0..n)
+            .map(|i| GroupSpec {
+                id: i,
+                name: format!("g{i}"),
+                size: 2,
+                offset: i * 2,
+                members: vec![],
+                producer: format!("g{i}.w"),
+                producer_axis: 3,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tiers_assigned_by_quantile() {
+        let g = groups(10);
+        // group i has score i (each filter = i)
+        let scores: Vec<f32> = (0..10).flat_map(|i| [i as f32, i as f32]).collect();
+        let p = plan(&scores, &g, MixedPolicy::default());
+        assert_eq!(p.per_group[&0], Precision::Int4, "lowest-S -> int4");
+        assert_eq!(p.per_group[&9], Precision::Fp16, "highest-S -> fp16");
+        assert_eq!(p.per_group[&5], Precision::Int8);
+    }
+
+    #[test]
+    fn degenerate_uniform_scores() {
+        let g = groups(4);
+        let scores = vec![1.0f32; 8];
+        let p = plan(&scores, &g, MixedPolicy::default());
+        // all equal: every group matches both thresholds -> int4 wins the
+        // <= check; the point is it must not panic and must cover all groups
+        assert_eq!(p.per_group.len(), 4);
+    }
+}

@@ -1,0 +1,93 @@
+//! The HQP framework (paper §III): sensitivity-aware conditional structural
+//! pruning + robust INT8 PTQ, coordinated so that
+//!
+//! ```text
+//! M_o = Q( P(M_train, τ, Δ_max), b )
+//! ```
+//!
+//! This module is the paper's contribution, running entirely in Rust (L3)
+//! against the AOT artifacts:
+//!
+//! * [`sensitivity`] — the diagonal-FIM saliency S and the ranked list ℛ
+//!   (Algorithm 1 lines 6–8), plus the magnitude/BN-γ/random baselines.
+//! * [`prune`] — the conditional iterative loop (Algorithm 1 lines 9–25):
+//!   mask δ filters, validate on D_val, accept while
+//!   `A_baseline − A_candidate ≤ Δ_max`, stop on first violation.
+//! * [`ptq`] — Phase 2: KL-divergence activation calibration + symmetric
+//!   INT8 weight projection, numerically verified through the
+//!   `quant_eval` artifact (Pallas qmatmul hot spots).
+//! * [`pipeline`] — the method suite the paper's tables compare: Baseline,
+//!   Q8-only, P50-only, HQP (+ ablations), each returning an [`Outcome`].
+//! * [`deploy`] — lowers an outcome through [`crate::gopt`] (fusion, dead
+//!   channel elimination, autotune) onto a [`crate::hwsim`] device,
+//!   producing the paper's table rows ([`MethodReport`]).
+//! * [`mixed`] — the §VI-A mixed-precision extension (S-guided INT4/8/16).
+//! * [`cost`] — the §III-C C_HQP vs C_QAT cost model, fed by measured
+//!   execution counters.
+
+pub mod cost;
+pub mod deploy;
+pub mod mixed;
+pub mod pipeline;
+pub mod prune;
+pub mod ptq;
+pub mod sensitivity;
+
+pub use deploy::MethodReport;
+pub use pipeline::{run_baseline, run_hqp, run_p50, run_q8, Outcome};
+pub use prune::{PruneStep, PruneTrace};
+pub use sensitivity::RankingMethod;
+
+use crate::quant::CalibMethod;
+
+/// Configuration of the HQP pipeline (paper defaults).
+#[derive(Clone, Debug)]
+pub struct HqpConfig {
+    /// Δ_max: maximum permissible absolute Top-1 accuracy drop (§IV-C:
+    /// 1.5 % — "the industrial standard for acceptable model degradation").
+    pub delta_max: f64,
+    /// δ: pruning step as a fraction of total filters (§IV-B: 1 %).
+    pub delta_step_frac: f64,
+    /// Calibration samples for the sensitivity pass and PTQ histograms.
+    pub calib_samples: usize,
+    /// Validation split for the conditional loop.
+    pub val_split: String,
+    /// Filter ranking (HQP: Fisher; baselines: magnitude/BN-γ/random).
+    pub ranking: RankingMethod,
+    /// Activation-scale calibration for PTQ.
+    pub calib_method: CalibMethod,
+    /// Per-channel weight scales (ablation; paper §II-C formulates the
+    /// single global scaling factor, i.e. per-tensor — the default here).
+    pub per_channel_weights: bool,
+    /// Safety stop: never mask beyond this filter fraction.
+    pub max_sparsity: f64,
+}
+
+impl Default for HqpConfig {
+    fn default() -> Self {
+        HqpConfig {
+            delta_max: 0.015,
+            delta_step_frac: 0.01,
+            calib_samples: 1024,
+            val_split: "val".into(),
+            ranking: RankingMethod::Fisher,
+            calib_method: CalibMethod::Kl,
+            per_channel_weights: false,
+            max_sparsity: 0.95,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = HqpConfig::default();
+        assert_eq!(c.delta_max, 0.015);
+        assert_eq!(c.delta_step_frac, 0.01);
+        assert_eq!(c.ranking, RankingMethod::Fisher);
+        assert_eq!(c.calib_method, CalibMethod::Kl);
+    }
+}

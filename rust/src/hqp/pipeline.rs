@@ -1,0 +1,196 @@
+//! The method suite of the paper's evaluation: Baseline (FP32), Q8-only,
+//! P50-only, and HQP — each producing an [`Outcome`] with *measured*
+//! accuracy (through the PJRT artifacts) and the filter masks + scales
+//! that define the deployable engine.
+
+use crate::error::Result;
+use crate::runtime::{ParamStore, Session};
+
+use super::prune::{conditional_prune, prune_to_sparsity, PruneTrace};
+use super::ptq::quantize;
+use super::sensitivity::{self, RankingMethod};
+use super::HqpConfig;
+
+/// Numeric regime of the deployed engine an outcome describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    Fp32,
+    Int8,
+}
+
+/// The outcome of one compression method on one model.
+pub struct Outcome {
+    pub method: String,
+    pub model: String,
+    /// Baseline FP32 validation accuracy (A_baseline).
+    pub baseline_acc: f64,
+    /// Final measured validation accuracy of the produced model.
+    pub accuracy: f64,
+    /// Per-group keep-masks (all-true when unpruned).
+    pub masks: Vec<Vec<bool>>,
+    /// Sparsity θ over filters.
+    pub sparsity: f64,
+    /// Activation scales when the engine is INT8.
+    pub scales: Option<Vec<f32>>,
+    /// Final parameters (masked and/or on the INT8 grid).
+    pub params: ParamStore,
+    pub regime: Regime,
+    /// Pruning trajectory (empty for quantize-only methods).
+    pub trace: PruneTrace,
+    /// Fisher scores (kept for the layer-wise analysis / mixed precision).
+    pub saliency_scores: Option<Vec<f32>>,
+}
+
+impl Outcome {
+    /// Absolute Top-1 drop vs baseline.
+    pub fn acc_drop(&self) -> f64 {
+        self.baseline_acc - self.accuracy
+    }
+
+    /// Compliance with the Δ_max constraint.
+    pub fn compliant(&self, delta_max: f64) -> bool {
+        self.acc_drop() <= delta_max + 1e-9
+    }
+
+    fn full_masks(sess: &Session) -> Vec<Vec<bool>> {
+        sess.mm.groups.iter().map(|g| vec![true; g.size]).collect()
+    }
+}
+
+/// Baseline (FP32): measure A_baseline, no compression.
+pub fn run_baseline(sess: &mut Session) -> Result<Outcome> {
+    let params = sess.baseline.clone();
+    let acc = sess.accuracy(&params, "val")?;
+    Ok(Outcome {
+        method: "baseline".into(),
+        model: sess.mm.name.clone(),
+        baseline_acc: acc,
+        accuracy: acc,
+        masks: Outcome::full_masks(sess),
+        sparsity: 0.0,
+        scales: None,
+        params,
+        regime: Regime::Fp32,
+        trace: PruneTrace::default(),
+        saliency_scores: None,
+    })
+}
+
+/// Q8-only: direct PTQ of M_train — the paper's quantization baseline
+/// (the one that fails on ResNet-18 without pruning pre-conditioning).
+pub fn run_q8(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
+    let baseline_acc = sess.accuracy(&sess.baseline.clone(), "val")?;
+    let ptq = quantize(sess, &sess.baseline.clone(), cfg)?;
+    Ok(Outcome {
+        method: "q8-only".into(),
+        model: sess.mm.name.clone(),
+        baseline_acc,
+        accuracy: ptq.accuracy,
+        masks: Outcome::full_masks(sess),
+        sparsity: 0.0,
+        scales: Some(ptq.scales),
+        params: ptq.params,
+        regime: Regime::Int8,
+        trace: PruneTrace::default(),
+        saliency_scores: None,
+    })
+}
+
+/// P50-only: magnitude (L1) pruning straight to 50 % sparsity, FP32, no
+/// quality guarantee — the paper's pruning baseline (violates Δ_max).
+pub fn run_p50(sess: &mut Session, theta: f64) -> Result<Outcome> {
+    let baseline = sess.baseline.clone();
+    let baseline_acc = sess.accuracy(&baseline, "val")?;
+    let sal = sensitivity::compute(sess, &baseline, RankingMethod::MagnitudeL1, 0)?;
+    let res = prune_to_sparsity(sess, &baseline, &sal, theta)?;
+    Ok(Outcome {
+        method: format!("p{:02.0}-only", theta * 100.0),
+        model: sess.mm.name.clone(),
+        baseline_acc,
+        accuracy: res.accuracy,
+        masks: res.masks,
+        sparsity: res.sparsity,
+        scales: None,
+        params: res.params,
+        regime: Regime::Fp32,
+        trace: res.trace,
+        saliency_scores: Some(sal.scores),
+    })
+}
+
+/// HQP: M_o = Q(P(M_train, τ, Δ_max), b) — the paper's framework.
+///
+/// Phase 1-A: Fisher saliency (one backward pass over D_calib).
+/// Phase 1-B: Algorithm 1 conditional loop under Δ_max.
+/// Phase 2:   robust PTQ (KL calibration) of M_sparse.
+pub fn run_hqp(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
+    let baseline = sess.baseline.clone();
+    let baseline_acc = sess.accuracy(&baseline, "val")?;
+
+    let sal = sensitivity::compute(sess, &baseline, cfg.ranking, cfg.calib_samples)?;
+    let pruned = conditional_prune(sess, &baseline, baseline_acc, &sal, cfg)?;
+    let ptq = quantize(sess, &pruned.params, cfg)?;
+
+    Ok(Outcome {
+        method: "hqp".into(),
+        model: sess.mm.name.clone(),
+        baseline_acc,
+        accuracy: ptq.accuracy,
+        masks: pruned.masks,
+        sparsity: pruned.sparsity,
+        scales: Some(ptq.scales),
+        params: ptq.params,
+        regime: Regime::Int8,
+        trace: pruned.trace,
+        saliency_scores: Some(sal.scores),
+    })
+}
+
+/// Pruning-only variant of HQP (ablation: isolates Phase 1 from Phase 2;
+/// also the "M_sparse" row of the sparsity–accuracy analysis).
+pub fn run_hqp_prune_only(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
+    let baseline = sess.baseline.clone();
+    let baseline_acc = sess.accuracy(&baseline, "val")?;
+    let sal = sensitivity::compute(sess, &baseline, cfg.ranking, cfg.calib_samples)?;
+    let pruned = conditional_prune(sess, &baseline, baseline_acc, &sal, cfg)?;
+    Ok(Outcome {
+        method: format!("prune-only[{}]", cfg.ranking.name()),
+        model: sess.mm.name.clone(),
+        baseline_acc,
+        accuracy: pruned.accuracy,
+        masks: pruned.masks,
+        sparsity: pruned.sparsity,
+        scales: None,
+        params: pruned.params,
+        regime: Regime::Fp32,
+        trace: pruned.trace,
+        saliency_scores: Some(sal.scores),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_and_compliance_logic() {
+        // Outcome invariants that don't need artifacts.
+        assert_eq!(Regime::Fp32, Regime::Fp32);
+        let o = Outcome {
+            method: "x".into(),
+            model: "m".into(),
+            baseline_acc: 0.9,
+            accuracy: 0.889,
+            masks: vec![],
+            sparsity: 0.3,
+            scales: None,
+            params: ParamStore::from_tensors(vec![]),
+            regime: Regime::Fp32,
+            trace: PruneTrace::default(),
+            saliency_scores: None,
+        };
+        assert!((o.acc_drop() - 0.011).abs() < 1e-12);
+        assert!(o.compliant(0.015));
+        assert!(!o.compliant(0.010));
+    }
+}

@@ -1,0 +1,94 @@
+//! HQP Phase 2 — robust post-training quantization (paper §IV-B).
+//!
+//! Two calibration passes over D_calib through the AOT artifacts:
+//!   1. `absmax`  → per-tap dynamic ranges,
+//!   2. `hist`    → per-tap 2048-bin |activation| histograms,
+//! then the Rust-side [`crate::quant::Calibrator`] picks each tap's
+//! saturation threshold (KL-divergence by default — the TensorRT recipe),
+//! and every conv/FC weight tensor is projected onto its symmetric INT8
+//! grid (per-tensor scales by default, matching the paper's §II-C "global
+//! scaling factor" formulation; per-channel available as an ablation).
+//!
+//! The quantized model's accuracy is then *measured* through the
+//! `quant_eval` artifact — the INT8 numerics run for real (Pallas qmatmul),
+//! only the INT8 *speed* comes from [`crate::hwsim`].
+
+use crate::error::Result;
+use crate::quant::{quantize_per_channel, quantize_per_tensor, Calibrator, dequantize};
+use crate::runtime::{ParamStore, Session};
+
+use super::HqpConfig;
+
+/// Result of the PTQ phase.
+pub struct PtqResult {
+    /// Weights projected onto the INT8 grid (values = code × scale).
+    pub params: ParamStore,
+    /// Per-tap activation scales (feeds the quant_eval artifact / engine).
+    pub scales: Vec<f32>,
+    /// Per-tap saturation thresholds chosen by calibration (diagnostics:
+    /// the "dynamic range R" the paper's conflict story is about).
+    pub thresholds: Vec<f32>,
+    /// Accuracy of the quantized model on the validation split.
+    pub accuracy: f64,
+}
+
+/// Which parameters get quantized: conv/fc weights (".w"). BN parameters
+/// and biases stay FP32/FP16 in deployed engines (folded or negligible),
+/// exactly as TensorRT does.
+fn quantizable(name: &str) -> bool {
+    name.ends_with(".w")
+}
+
+/// Run PTQ on `params` (pristine or pruned — HQP runs it on M_sparse).
+pub fn quantize(sess: &mut Session, params: &ParamStore, cfg: &HqpConfig) -> Result<PtqResult> {
+    // ---- activation calibration (two artifact passes + KL sweep) --------
+    let ranges = sess.act_absmax(params)?;
+    let hist = sess.act_hist(params, &ranges)?;
+    let bins = hist.shape()[1];
+    let cal = Calibrator::new(cfg.calib_method);
+    let mut scales = Vec::with_capacity(ranges.len());
+    let mut thresholds = Vec::with_capacity(ranges.len());
+    for (i, &r) in ranges.iter().enumerate() {
+        let row = &hist.data()[i * bins..(i + 1) * bins];
+        let t = cal.threshold(row, r);
+        thresholds.push(t);
+        scales.push(crate::quant::scale_for(t, 8));
+    }
+
+    // ---- weight projection ----------------------------------------------
+    let mm = sess.mm.clone();
+    let mut q = params.clone();
+    for spec in &mm.param_order {
+        if !quantizable(&spec.name) {
+            continue;
+        }
+        let w = params.get(&spec.name)?;
+        let qt = if cfg.per_channel_weights {
+            // out-channel axis: last axis for conv HWIO, axis 1 for FC.
+            let axis = w.shape().len() - 1;
+            quantize_per_channel(w, axis, 8)?
+        } else {
+            quantize_per_tensor(w, 8)
+        };
+        q.set(&spec.name, dequantize(&qt)?)?;
+    }
+
+    // ---- measured INT8 accuracy ------------------------------------------
+    let accuracy = sess.quant_accuracy(&q, &scales, &cfg.val_split)?;
+    Ok(PtqResult { params: q, scales, thresholds, accuracy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizable_filter() {
+        assert!(quantizable("block0.expand.w"));
+        assert!(quantizable("head.classifier.w"));
+        assert!(!quantizable("stem.bn.gamma"));
+        assert!(!quantizable("head.classifier.b"));
+        assert!(!quantizable("stem.bn.mean"));
+    }
+    // Full PTQ round-trips run in rust/tests/integration_pipeline.rs.
+}

@@ -1,0 +1,183 @@
+//! Filter saliency and the ranked list ℛ (Algorithm 1, lines 6–8).
+//!
+//! HQP ranks by the diagonal-FIM sensitivity
+//! `S_f = (1/|D|) Σ_i ||∂L_i/∂W_f||²` computed by the `fisher` artifact
+//! (per-sample grads → Pallas reduction). The second-generation baselines
+//! the paper critiques (§II-A) are implemented alongside: L1/L2 filter
+//! magnitude and BN-γ scaling, plus a seeded random ranking as the
+//! control.
+
+use crate::error::Result;
+use crate::runtime::{ParamStore, Session};
+use crate::testkit::prng::Prng;
+
+/// Filter-ranking strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankingMethod {
+    /// HQP: diagonal Fisher Information (second-order, globally aware).
+    Fisher,
+    /// Smallest L1 filter norm first (Li & Sifre, ICLR'17).
+    MagnitudeL1,
+    /// Smallest L2 filter norm first.
+    MagnitudeL2,
+    /// Smallest |BN γ| first (Network-Slimming-style).
+    BnGamma,
+    /// Seeded random order (control).
+    Random(u64),
+}
+
+impl RankingMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankingMethod::Fisher => "fisher",
+            RankingMethod::MagnitudeL1 => "mag-l1",
+            RankingMethod::MagnitudeL2 => "mag-l2",
+            RankingMethod::BnGamma => "bn-gamma",
+            RankingMethod::Random(_) => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RankingMethod> {
+        match s {
+            "fisher" => Some(RankingMethod::Fisher),
+            "mag-l1" | "l1" => Some(RankingMethod::MagnitudeL1),
+            "mag-l2" | "l2" => Some(RankingMethod::MagnitudeL2),
+            "bn-gamma" | "bn" => Some(RankingMethod::BnGamma),
+            "random" => Some(RankingMethod::Random(0)),
+            _ => None,
+        }
+    }
+}
+
+/// Per-filter scores in global filter-index space (group offsets from the
+/// manifest), plus the ascending ranking ℛ.
+#[derive(Clone, Debug)]
+pub struct Saliency {
+    pub method: &'static str,
+    /// score[global_filter_index]
+    pub scores: Vec<f32>,
+    /// Global filter indices, ascending score — Algorithm 1's ℛ.
+    pub ranking: Vec<usize>,
+}
+
+/// Compute scores for every filter under `method`.
+///
+/// Fisher runs the backward-pass artifact over the calibration split (the
+/// paper's "single backward pass over D_calib"); the magnitude/BN-γ
+/// heuristics read the parameter store directly (no data needed — exactly
+/// why the paper calls them cheap but myopic).
+pub fn compute(
+    sess: &mut Session,
+    params: &ParamStore,
+    method: RankingMethod,
+    calib_samples: usize,
+) -> Result<Saliency> {
+    let mm = sess.mm.clone();
+    let scores: Vec<f32> = match method {
+        RankingMethod::Fisher => sess.fisher_scores(params, calib_samples)?,
+        RankingMethod::MagnitudeL1 | RankingMethod::MagnitudeL2 => {
+            let l1 = method == RankingMethod::MagnitudeL1;
+            let mut v = vec![0f32; mm.total_filters()];
+            for g in &mm.groups {
+                let w = params.get(&g.producer)?;
+                for j in 0..g.size {
+                    v[g.offset + j] = w.slice_norm(g.producer_axis, j, l1)?;
+                }
+            }
+            v
+        }
+        RankingMethod::BnGamma => {
+            let mut v = vec![0f32; mm.total_filters()];
+            for g in &mm.groups {
+                // find this group's BN gamma among members; groups without
+                // a BN (SE fc1) fall back to producer L1 norm.
+                let gamma = g
+                    .members
+                    .iter()
+                    .find(|(name, _)| name.ends_with(".gamma"))
+                    .map(|(name, _)| name.clone());
+                match gamma {
+                    Some(name) => {
+                        let t = params.get(&name)?;
+                        for j in 0..g.size {
+                            v[g.offset + j] = t.data()[j].abs();
+                        }
+                    }
+                    None => {
+                        let w = params.get(&g.producer)?;
+                        for j in 0..g.size {
+                            v[g.offset + j] = w.slice_norm(g.producer_axis, j, true)?;
+                        }
+                    }
+                }
+            }
+            v
+        }
+        RankingMethod::Random(seed) => {
+            let mut rng = Prng::new(seed ^ 0x5EED);
+            (0..mm.total_filters()).map(|_| rng.next_f32()).collect()
+        }
+    };
+
+    let mut ranking: Vec<usize> = (0..scores.len()).collect();
+    ranking.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    Ok(Saliency { method: method.name(), scores, ranking })
+}
+
+/// Mean score per group (the §V-C layer-wise analysis input).
+pub fn per_group_mean(scores: &[f32], groups: &[crate::runtime::GroupSpec]) -> Vec<f32> {
+    groups
+        .iter()
+        .map(|g| {
+            let s: f32 = scores[g.offset..g.offset + g.size].iter().sum();
+            s / g.size.max(1) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranking_is_ascending() {
+        let scores = vec![3.0f32, 1.0, 2.0];
+        let mut ranking: Vec<usize> = (0..3).collect();
+        ranking.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+        assert_eq!(ranking, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            RankingMethod::Fisher,
+            RankingMethod::MagnitudeL1,
+            RankingMethod::MagnitudeL2,
+            RankingMethod::BnGamma,
+        ] {
+            assert_eq!(RankingMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(matches!(
+            RankingMethod::parse("random"),
+            Some(RankingMethod::Random(_))
+        ));
+        assert!(RankingMethod::parse("nope").is_none());
+    }
+
+    #[test]
+    fn per_group_mean_respects_offsets() {
+        use crate::runtime::GroupSpec;
+        let groups = vec![
+            GroupSpec {
+                id: 0, name: "a".into(), size: 2, offset: 0,
+                members: vec![], producer: "a.w".into(), producer_axis: 3,
+            },
+            GroupSpec {
+                id: 1, name: "b".into(), size: 3, offset: 2,
+                members: vec![], producer: "b.w".into(), producer_axis: 3,
+            },
+        ];
+        let scores = vec![1.0, 3.0, 6.0, 6.0, 6.0];
+        assert_eq!(per_group_mean(&scores, &groups), vec![2.0, 6.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Device descriptors for the Jetson-class roofline model.
+//!
+//! Constants from NVIDIA's public module datasheets (peak rates) with
+//! per-op-type utilization factors representing what a tuned TensorRT
+//! engine typically sustains. Absolute milliseconds are a model, not a
+//! measurement — the reproduction targets the *ratios* (speedups,
+//! crossovers), as DESIGN.md §7 spells out.
+
+use crate::gopt::FusedKind;
+
+/// Numeric precision of a deployed op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+    /// Mixed-precision extension (paper §VI-A): INT4 on ultra-low-S filters.
+    Int4,
+}
+
+impl Precision {
+    /// Storage bytes per weight element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Fp16 => 2.0,
+            Precision::Int8 => 1.0,
+            Precision::Int4 => 0.5,
+        }
+    }
+}
+
+/// Supported device models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// 128-core Maxwell, no tensor cores, 10 W envelope.
+    JetsonNano,
+    /// 384-core Volta + 48 tensor cores (INT8), 15 W envelope.
+    XavierNx,
+    /// Idealized device with flat rates (ablations: isolates graph effects
+    /// from device effects).
+    Ideal,
+}
+
+/// An edge device for the roofline simulator.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Peak dense-compute rates in GFLOP/s (GOP/s for int paths).
+    pub fp32_gflops: f64,
+    pub fp16_gflops: f64,
+    pub int8_gops: f64,
+    pub int4_gops: f64,
+    /// DRAM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Sustained board power, watts.
+    pub power_w: f64,
+    /// Per-kernel launch + scheduling overhead, ms (what layer fusion
+    /// eliminates).
+    pub launch_overhead_ms: f64,
+}
+
+impl Device {
+    /// NVIDIA Jetson Nano (datasheet: 472 GFLOPS fp16, 25.6 GB/s, 10 W).
+    /// No INT8 tensor cores: int8 executes via the fp16 ALU path (dp4a on
+    /// Maxwell is marginal; TensorRT falls back) — the paper's low-power
+    /// baseline without dedicated INT8 acceleration (§IV-A).
+    pub fn jetson_nano() -> Device {
+        Device {
+            name: "jetson-nano".into(),
+            kind: DeviceKind::JetsonNano,
+            fp32_gflops: 236.0,
+            fp16_gflops: 472.0,
+            int8_gops: 472.0, // = fp16: no dedicated units
+            int4_gops: 472.0,
+            mem_bw_gbps: 25.6,
+            power_w: 10.0,
+            launch_overhead_ms: 0.010,
+        }
+    }
+
+    /// NVIDIA Jetson Xavier NX (datasheet: 21 TOPS INT8 via 48 tensor
+    /// cores + DLA; ~6 TFLOPS fp16, 59.7 GB/s, 15 W). Peak rates derated
+    /// to GPU-only sustained figures.
+    pub fn xavier_nx() -> Device {
+        Device {
+            name: "xavier-nx".into(),
+            kind: DeviceKind::XavierNx,
+            fp32_gflops: 885.0,
+            fp16_gflops: 3540.0,
+            int8_gops: 10000.0,
+            int4_gops: 10000.0, // tensor cores: int4 ~ int8 rate (storage halves)
+            mem_bw_gbps: 59.7,
+            power_w: 15.0,
+            launch_overhead_ms: 0.008,
+        }
+    }
+
+    /// Flat-rate idealized accelerator (ablation device).
+    pub fn ideal() -> Device {
+        Device {
+            name: "ideal".into(),
+            kind: DeviceKind::Ideal,
+            fp32_gflops: 1000.0,
+            fp16_gflops: 2000.0,
+            int8_gops: 4000.0,
+            int4_gops: 8000.0,
+            mem_bw_gbps: 100.0,
+            power_w: 10.0,
+            launch_overhead_ms: 0.0,
+        }
+    }
+
+    /// Look up by CLI name.
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name {
+            "jetson-nano" | "nano" => Some(Device::jetson_nano()),
+            "xavier-nx" | "nx" => Some(Device::xavier_nx()),
+            "ideal" => Some(Device::ideal()),
+            _ => None,
+        }
+    }
+
+    /// All devices (sweeps).
+    pub fn all() -> Vec<Device> {
+        vec![Device::jetson_nano(), Device::xavier_nx(), Device::ideal()]
+    }
+
+    /// Peak rate for a precision, GFLOP/s.
+    pub fn rate_gflops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Fp32 => self.fp32_gflops,
+            Precision::Fp16 => self.fp16_gflops,
+            Precision::Int8 => self.int8_gops,
+            Precision::Int4 => self.int4_gops,
+        }
+    }
+
+    /// Sustained-utilization factor by op type: what a tuned engine
+    /// achieves relative to peak. Depthwise convolutions are notoriously
+    /// bandwidth/occupancy limited on these GPUs; dense GEMM-shaped work is
+    /// the best case.
+    pub fn utilization(&self, kind: FusedKind) -> f64 {
+        match kind {
+            FusedKind::ConvBnAct => 0.55,
+            FusedKind::DwConvBnAct => 0.18,
+            FusedKind::Gemm => 0.65,
+            FusedKind::Se => 0.25,
+            FusedKind::Elementwise => 0.30,
+            FusedKind::Pool => 0.30,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(Device::by_name("nano").unwrap().kind, DeviceKind::JetsonNano);
+        assert_eq!(Device::by_name("xavier-nx").unwrap().kind, DeviceKind::XavierNx);
+        assert!(Device::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp32.bytes(), 4.0);
+        assert_eq!(Precision::Int4.bytes(), 0.5);
+    }
+
+    #[test]
+    fn nx_int8_is_fastest_path() {
+        let d = Device::xavier_nx();
+        assert!(d.rate_gflops(Precision::Int8) > d.rate_gflops(Precision::Fp16));
+        assert!(d.rate_gflops(Precision::Fp16) > d.rate_gflops(Precision::Fp32));
+    }
+
+    #[test]
+    fn utilization_orders_dw_below_dense() {
+        let d = Device::jetson_nano();
+        assert!(d.utilization(FusedKind::DwConvBnAct) < d.utilization(FusedKind::ConvBnAct));
+    }
+}

@@ -1,0 +1,158 @@
+//! Edge-device latency/energy model — the substitute for the paper's
+//! physical Jetson Nano / Xavier NX testbed (DESIGN.md §Substitutions).
+//!
+//! An analytical roofline: every deployed (fused) op costs
+//!
+//! ```text
+//! t(op) = max( flops / (peak_rate(precision) · util(op)),
+//!              bytes / mem_bw )            + launch_overhead
+//! ```
+//!
+//! summed over the optimized graph ([`crate::gopt::OptimizedGraph`]).
+//! Device constants come from the public Jetson specifications; per-op-type
+//! utilization factors model what the paper's TensorRT auto-tuner achieves
+//! (dense conv ≫ depthwise conv on these GPUs). The INT8 path only exists
+//! on Xavier NX (48 Volta Tensor Cores); on Nano INT8 falls back to the
+//! FP16 rate — exactly the heterogeneity argument of the paper's §IV-A.
+//!
+//! Energy: `E = P · L` (paper §V-E), with the device's sustained power.
+
+mod device;
+
+pub use device::{Device, DeviceKind, Precision};
+
+use crate::gopt::OptimizedGraph;
+
+/// Latency/energy breakdown for one deployed graph on one device.
+#[derive(Clone, Debug)]
+pub struct LatencyReport {
+    pub device: String,
+    /// Batch-1 end-to-end latency, milliseconds.
+    pub latency_ms: f64,
+    /// Per-fused-op latencies (same order as the optimized graph).
+    pub per_op_ms: Vec<f64>,
+    /// Fraction of ops that were memory-bound.
+    pub memory_bound_frac: f64,
+    /// Energy per inference, millijoules.
+    pub energy_mj: f64,
+}
+
+/// Price one optimized graph on one device.
+pub fn simulate(graph: &OptimizedGraph, dev: &Device) -> LatencyReport {
+    let mut per_op_ms = Vec::with_capacity(graph.ops.len());
+    let mut mem_bound = 0usize;
+    for op in &graph.ops {
+        let rate = dev.rate_gflops(op.precision) * dev.utilization(op.kind);
+        let t_comp_ms = if rate > 0.0 {
+            op.flops as f64 / (rate * 1e9) * 1e3
+        } else {
+            f64::INFINITY
+        };
+        let t_mem_ms = op.bytes as f64 / (dev.mem_bw_gbps * 1e9) * 1e3;
+        if t_mem_ms > t_comp_ms {
+            mem_bound += 1;
+        }
+        per_op_ms.push(t_comp_ms.max(t_mem_ms) + dev.launch_overhead_ms);
+    }
+    let latency_ms: f64 = per_op_ms.iter().sum();
+    LatencyReport {
+        device: dev.name.clone(),
+        latency_ms,
+        memory_bound_frac: if graph.ops.is_empty() {
+            0.0
+        } else {
+            mem_bound as f64 / graph.ops.len() as f64
+        },
+        energy_mj: dev.power_w * latency_ms, // mW·ms == µJ; see energy()
+        per_op_ms,
+    }
+}
+
+/// Energy per inference in millijoules: `E = P · L` (paper §V-E).
+pub fn energy_mj(power_w: f64, latency_ms: f64) -> f64 {
+    power_w * latency_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gopt::{FusedKind, FusedOp, OptimizedGraph};
+
+    fn op(flops: u64, bytes: u64, precision: Precision) -> FusedOp {
+        FusedOp {
+            name: "t".into(),
+            kind: FusedKind::ConvBnAct,
+            flops,
+            bytes,
+            precision,
+            h: 1,
+            w: 1,
+            cin: 1,
+            cout: 1,
+            k: 1,
+        }
+    }
+
+    fn graph(ops: Vec<FusedOp>) -> OptimizedGraph {
+        OptimizedGraph { model: "t".into(), ops, weight_bytes: 0, dense_weight_bytes: 0 }
+    }
+
+    #[test]
+    fn compute_bound_scales_with_rate() {
+        let dev = Device::xavier_nx();
+        let g = graph(vec![op(2_000_000_000, 1_000, Precision::Fp32)]);
+        let r32 = simulate(&g, &dev);
+        let g8 = graph(vec![op(2_000_000_000, 1_000, Precision::Int8)]);
+        let r8 = simulate(&g8, &dev);
+        assert!(
+            r32.latency_ms / r8.latency_ms > 3.0,
+            "tensor-core int8 should be much faster: {} vs {}",
+            r32.latency_ms,
+            r8.latency_ms
+        );
+    }
+
+    #[test]
+    fn memory_bound_insensitive_to_precision_rate() {
+        let dev = Device::jetson_nano();
+        // tiny flops, huge bytes -> memory bound at any precision
+        let a = simulate(&graph(vec![op(10, 500_000_000, Precision::Fp32)]), &dev);
+        let b = simulate(&graph(vec![op(10, 500_000_000, Precision::Int8)]), &dev);
+        assert!((a.latency_ms - b.latency_ms).abs() / a.latency_ms < 1e-6);
+        assert_eq!(a.memory_bound_frac, 1.0);
+    }
+
+    #[test]
+    fn nano_has_no_int8_advantage_over_fp16() {
+        let dev = Device::jetson_nano();
+        assert_eq!(
+            dev.rate_gflops(Precision::Int8),
+            dev.rate_gflops(Precision::Fp16),
+            "Nano has no INT8 tensor cores (paper §IV-A)"
+        );
+        let nx = Device::xavier_nx();
+        assert!(nx.rate_gflops(Precision::Int8) > nx.rate_gflops(Precision::Fp16));
+    }
+
+    #[test]
+    fn energy_is_power_times_latency() {
+        let dev = Device::xavier_nx();
+        let g = graph(vec![op(1_000_000, 1_000_000, Precision::Fp32)]);
+        let r = simulate(&g, &dev);
+        assert!((r.energy_mj - dev.power_w * r.latency_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn launch_overhead_rewards_fusion() {
+        let dev = Device::xavier_nx();
+        let one = graph(vec![op(1000, 1000, Precision::Fp32)]);
+        let three = graph(vec![
+            op(400, 400, Precision::Fp32),
+            op(300, 300, Precision::Fp32),
+            op(300, 300, Precision::Fp32),
+        ]);
+        let r1 = simulate(&one, &dev);
+        let r3 = simulate(&three, &dev);
+        assert!(r3.latency_ms > r1.latency_ms, "3 launches must beat 1 launch");
+    }
+}

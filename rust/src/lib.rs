@@ -1,0 +1,55 @@
+//! # HQP — Sensitivity-Aware Hybrid Quantization and Pruning
+//!
+//! Rust implementation of the HQP framework (Gopalan & Ali, CS.DC 2026):
+//! a coordinated model-compression pipeline that runs Fisher-information
+//! sensitivity ranking, the conditional iterative structural-pruning loop
+//! (Algorithm 1) and robust INT8 post-training quantization — entirely in
+//! Rust, against JAX/Pallas models AOT-compiled to XLA HLO and executed
+//! through the PJRT C API.
+//!
+//! ## Layering (see DESIGN.md)
+//!
+//! * **L3 (this crate)** — the paper's contribution: the HQP coordinator
+//!   ([`hqp`]), the INT8 calibration machinery ([`quant`]), the
+//!   TensorRT-like deployment optimizer ([`gopt`]), the Jetson-class
+//!   hardware model ([`hwsim`]) and the experiment coordinator
+//!   ([`coordinator`]).
+//! * **L2/L1 (build time)** — `python/compile/`: JAX models with Pallas
+//!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
+//!   Python is never on the request path.
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod formats;
+pub mod gopt;
+pub mod graph;
+pub mod hqp;
+pub mod hwsim;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+
+pub use error::{Error, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// One-stop imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::error::{Error, Result};
+    pub use crate::gopt::{optimize, OptimizedGraph};
+    pub use crate::graph::Graph;
+    pub use crate::hqp::{
+        run_baseline, run_hqp, run_p50, run_q8, HqpConfig, MethodReport, Outcome,
+    };
+    pub use crate::hwsim::{Device, DeviceKind};
+    pub use crate::quant::CalibMethod;
+    pub use crate::runtime::{Session, Workspace};
+    pub use crate::tensor::Tensor;
+}

@@ -1,0 +1,419 @@
+//! `hqp` — CLI for the HQP reproduction.
+//!
+//! Every table/figure of the paper regenerates from here (the `cargo
+//! bench` targets drive the same code paths):
+//!
+//! ```text
+//! hqp table --id 1            Table I  (MobileNetV3 on Xavier NX)
+//! hqp table --id 2            Table II (ResNet-18 on Xavier NX)
+//! hqp figure --id 2           Fig. 2   (latency + accuracy bars)
+//! hqp figure --id 3           Fig. 3   (size reduction vs accuracy drop)
+//! hqp layerwise               §V-C layer-wise sparsity profile
+//! hqp energy                  §V-E energy analysis
+//! hqp overhead                §III-C / §V-F C_HQP vs C_QAT
+//! hqp devices                 §IV-A heterogeneity sweep (Nano vs NX)
+//! hqp run --model M --method hqp|q8|p50|prune|baseline
+//! hqp mixed --model M         §VI-A mixed-precision extension
+//! hqp info                    workspace/platform diagnostics
+//! ```
+
+use hqp::cli::Args;
+use hqp::coordinator::{self, run_method, MethodSpec};
+use hqp::error::Result;
+use hqp::gopt::{optimize, OptimizeOptions};
+use hqp::graph::Graph;
+use hqp::hqp::{cost, mixed, pipeline, HqpConfig, RankingMethod};
+use hqp::hwsim::{simulate, Device, Precision};
+use hqp::quant::CalibMethod;
+use hqp::report::{self, bar_chart, scatter, BarRow};
+use hqp::runtime::{Session, Workspace};
+
+const COMMON_FLAGS: &[&str] = &[
+    "artifacts", "device", "model", "force", "delta-max", "delta-step", "ranking",
+    "calib", "per-channel", "id", "method", "theta",
+];
+
+const HELP: &str = "hqp — Sensitivity-Aware Hybrid Quantization and Pruning (paper reproduction)
+
+commands:
+  table --id 1|2        Table I (MobileNetV3) / Table II (ResNet-18) on Xavier NX
+  figure --id 2|3       Fig. 2 latency+accuracy bars / Fig. 3 size-vs-drop scatter
+  layerwise             \u{a7}V-C layer-wise sparsity profile
+  energy                \u{a7}V-E energy analysis (E = P\u{b7}L)
+  overhead              \u{a7}III-C / \u{a7}V-F C_HQP vs C_QAT
+  devices               \u{a7}IV-A heterogeneity sweep (Nano vs NX vs ideal)
+  run                   one method: --model M --method hqp|q8|p50|prune|baseline
+  mixed                 \u{a7}VI-A S-guided mixed precision
+  info                  workspace diagnostics
+options:
+  --artifacts DIR   artifacts root (default: artifacts)
+  --device NAME     jetson-nano | xavier-nx | ideal (default: xavier-nx)
+  --model NAME      mobilenetv3 | resnet18
+  --delta-max X     accuracy-drop budget (default 0.015)
+  --delta-step X    pruning step fraction (default 0.01)
+  --ranking R       fisher | mag-l1 | mag-l2 | bn-gamma | random
+  --calib C         kl | minmax | percentile
+  --per-channel     per-channel weight scales (ablation)
+  --force           ignore cached results";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{HELP}");
+        return;
+    }
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn config_from(args: &Args) -> Result<HqpConfig> {
+    let mut cfg = HqpConfig {
+        delta_max: args.flag_f64("delta-max", 0.015)?,
+        delta_step_frac: args.flag_f64("delta-step", 0.01)?,
+        ..Default::default()
+    };
+    if let Some(r) = args.flag("ranking") {
+        cfg.ranking = RankingMethod::parse(r)
+            .ok_or_else(|| hqp::Error::Cli(format!("unknown ranking {r}")))?;
+    }
+    if let Some(c) = args.flag("calib") {
+        cfg.calib_method = CalibMethod::parse(c)
+            .ok_or_else(|| hqp::Error::Cli(format!("unknown calib method {c}")))?;
+    }
+    if args.switch("per-channel") {
+        cfg.per_channel_weights = true;
+    }
+    Ok(cfg)
+}
+
+fn device_from(args: &Args) -> Result<Device> {
+    let name = args.flag_or("device", "xavier-nx");
+    Device::by_name(name).ok_or_else(|| hqp::Error::Cli(format!("unknown device {name}")))
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    args.expect_known(COMMON_FLAGS)?;
+    let artifacts = args.flag_or("artifacts", "artifacts").to_string();
+
+    match args.command.as_str() {
+        "version" => {
+            println!("hqp {}", hqp::version());
+            Ok(())
+        }
+        "info" => cmd_info(&artifacts),
+        "table" => cmd_table(&artifacts, &args),
+        "figure" => cmd_figure(&artifacts, &args),
+        "layerwise" => cmd_layerwise(&artifacts, &args),
+        "energy" => cmd_energy(&artifacts, &args),
+        "overhead" => cmd_overhead(&artifacts, &args),
+        "devices" => cmd_devices(&artifacts, &args),
+        "run" => cmd_run(&artifacts, &args),
+        "mixed" => cmd_mixed(&artifacts, &args),
+        "help" | "-h" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(hqp::Error::Cli(format!("unknown command {other} (try `hqp help`)"))),
+    }
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    let ws = Workspace::open(artifacts)?;
+    println!("platform: {}", ws.platform());
+    for (name, mm) in &ws.manifest.models {
+        let g = Graph::from_manifest(mm)?;
+        println!(
+            "model {name}: {} params, {} prune groups / {} filters, {} taps, {:.1} MFLOPs dense, baseline acc {:.4}",
+            mm.param_order.len(),
+            mm.groups.len(),
+            mm.total_filters(),
+            mm.taps.len(),
+            g.dense_flops() as f64 / 1e6,
+            mm.baseline_val_acc,
+        );
+    }
+    for (split, d) in &ws.manifest.data {
+        println!("split {split}: {} samples", d.n);
+    }
+    Ok(())
+}
+
+fn suite_rows(
+    artifacts: &str,
+    model: &str,
+    args: &Args,
+    specs: &[MethodSpec],
+) -> Result<Vec<coordinator::ResultRow>> {
+    let ws = Workspace::open(artifacts)?;
+    let cfg = config_from(args)?;
+    let devices = Device::all();
+    let mut rows = Vec::new();
+    for spec in specs {
+        rows.extend(run_method(&ws, model, *spec, &cfg, &devices, args.switch("force"))?);
+    }
+    Ok(rows)
+}
+
+const TABLE_SPECS: &[MethodSpec] = &[
+    MethodSpec::Baseline,
+    MethodSpec::Q8Only,
+    MethodSpec::PruneOnly(50),
+    MethodSpec::Hqp,
+];
+
+fn cmd_table(artifacts: &str, args: &Args) -> Result<()> {
+    let id = args.flag_usize("id", 1)?;
+    let (model, title) = match id {
+        1 => ("mobilenetv3", "Table I — MobileNetV3, edge-side inference on Jetson Xavier NX"),
+        2 => ("resnet18", "Table II — ResNet-18, edge-side inference on Jetson Xavier NX"),
+        _ => return Err(hqp::Error::Cli("table --id 1|2".into())),
+    };
+    let rows = suite_rows(artifacts, model, args, TABLE_SPECS)?;
+    let dev = device_from(args)?;
+    let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
+    println!("{}", report::method_table(title, &reports));
+    Ok(())
+}
+
+fn cmd_figure(artifacts: &str, args: &Args) -> Result<()> {
+    let id = args.flag_usize("id", 2)?;
+    let model = args.flag_or("model", "mobilenetv3");
+    let rows = suite_rows(artifacts, model, args, TABLE_SPECS)?;
+    let dev = device_from(args)?;
+    let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
+    match id {
+        2 => {
+            let lat: Vec<BarRow> = reports
+                .iter()
+                .map(|r| {
+                    BarRow::new(
+                        r.method.clone(),
+                        r.latency_ms,
+                        format!("{:.3} ms ({:.2}x)", r.latency_ms, r.speedup),
+                    )
+                })
+                .collect();
+            println!(
+                "{}",
+                bar_chart(
+                    &format!("Fig. 2a — Latency by method ({model} on {})", dev.name),
+                    &lat,
+                    48
+                )
+            );
+            let acc: Vec<BarRow> = reports
+                .iter()
+                .map(|r| {
+                    BarRow::new(
+                        r.method.clone(),
+                        r.acc_drop.max(0.0) * 100.0,
+                        format!(
+                            "{:.2}% drop{}",
+                            r.acc_drop * 100.0,
+                            if r.compliant { "" } else { "  << VIOLATES Δmax" }
+                        ),
+                    )
+                })
+                .collect();
+            println!("{}", bar_chart("Fig. 2b — Accuracy drop by method", &acc, 48));
+        }
+        3 => {
+            let pts: Vec<(f64, f64, String)> = reports
+                .iter()
+                .map(|r| (r.size_reduction * 100.0, r.acc_drop * 100.0, r.method.clone()))
+                .collect();
+            println!(
+                "{}",
+                scatter(
+                    &format!("Fig. 3 — Size reduction vs accuracy drop ({model})"),
+                    &pts,
+                    "size reduction %",
+                    "accuracy drop %",
+                    56,
+                    12
+                )
+            );
+        }
+        _ => return Err(hqp::Error::Cli("figure --id 2|3".into())),
+    }
+    Ok(())
+}
+
+fn cmd_layerwise(artifacts: &str, args: &Args) -> Result<()> {
+    let model = args.flag_or("model", "mobilenetv3");
+    let rows = suite_rows(artifacts, model, args, &[MethodSpec::Hqp])?;
+    let ws = Workspace::open(artifacts)?;
+    let mm = ws.manifest.model(model)?;
+    let row = &rows[0];
+    let bars: Vec<BarRow> = mm
+        .groups
+        .iter()
+        .zip(&row.group_sparsity)
+        .map(|(g, &s)| {
+            BarRow::new(
+                g.name.clone(),
+                s * 100.0,
+                format!("θ={:>4.0}%  ({} filters)", s * 100.0, g.size),
+            )
+        })
+        .collect();
+    println!(
+        "{}",
+        bar_chart(
+            &format!("§V-C — Layer-wise sparsity after HQP ({model})"),
+            &bars,
+            40
+        )
+    );
+    Ok(())
+}
+
+fn cmd_energy(artifacts: &str, args: &Args) -> Result<()> {
+    for model in ["mobilenetv3", "resnet18"] {
+        let rows = suite_rows(artifacts, model, args, TABLE_SPECS)?;
+        for dev in [Device::jetson_nano(), Device::xavier_nx()] {
+            let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
+            println!("§V-E — Energy per inference, {model} on {}", dev.name);
+            for r in &reports {
+                println!(
+                    "  {:<12} E = {:>8.3} mJ   ratio {:>5.2}x   (speedup {:>5.2}x — identity E=P·L holds: {})",
+                    r.method,
+                    r.energy_mj,
+                    r.energy_ratio,
+                    r.speedup,
+                    if (r.energy_ratio - r.speedup).abs() < 1e-9 { "yes" } else { "NO" }
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_overhead(artifacts: &str, args: &Args) -> Result<()> {
+    let ws = Workspace::open(artifacts)?;
+    let cfg = config_from(args)?;
+    let model = args.flag_or("model", "mobilenetv3");
+    let mut sess = Session::new(&ws, model)?;
+    let (out, ms) = hqp::benchkit::time_once(|| pipeline::run_hqp(&mut sess, &cfg));
+    out?;
+    let hcost = cost::HqpCost::from_counters(&sess.counters);
+    let qat_small = cost::QatCost::paper_default(8192);
+    let qat_imagenet = cost::QatCost::paper_default(1_281_167);
+    println!("§III-C / §V-F — optimization overhead ({model})");
+    println!(
+        "  measured C_HQP: {} grad samples + {} inference samples = {:.0} fwd-equiv  ({:.1} s wall)",
+        hcost.grad_samples,
+        hcost.inference_samples,
+        hcost.total_inf_equiv(),
+        ms / 1e3
+    );
+    println!(
+        "  modeled  C_QAT (this workload, 5 epochs): {:.0} fwd-equiv  -> C_QAT/C_HQP = {:.1}x",
+        qat_small.total_inf_equiv(),
+        cost::overhead_ratio(&hcost, &qat_small)
+    );
+    println!(
+        "  modeled  C_QAT (ImageNet-scale, 5 epochs): {:.2e} fwd-equiv -> C_QAT/C_HQP = {:.0}x",
+        qat_imagenet.total_inf_equiv(),
+        cost::overhead_ratio(&hcost, &qat_imagenet)
+    );
+    Ok(())
+}
+
+fn cmd_devices(artifacts: &str, args: &Args) -> Result<()> {
+    for model in ["mobilenetv3", "resnet18"] {
+        let rows = suite_rows(artifacts, model, args, TABLE_SPECS)?;
+        println!("§IV-A heterogeneity — {model}");
+        for dev in Device::all() {
+            let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
+            println!("{}", report::method_table(&format!("  device: {}", dev.name), &reports));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(artifacts: &str, args: &Args) -> Result<()> {
+    let model = args.flag_or("model", "mobilenetv3");
+    let spec = match args.flag_or("method", "hqp") {
+        "baseline" => MethodSpec::Baseline,
+        "q8" => MethodSpec::Q8Only,
+        "p50" => MethodSpec::PruneOnly(args.flag_usize("theta", 50)? as u32),
+        "prune" => MethodSpec::HqpPruneOnly,
+        "hqp" => MethodSpec::Hqp,
+        other => return Err(hqp::Error::Cli(format!("unknown method {other}"))),
+    };
+    let rows = suite_rows(artifacts, model, args, &[spec])?;
+    let dev = device_from(args)?;
+    let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
+    println!("{}", report::method_table(&format!("{model} / {}", dev.name), &reports));
+    if let Some(row) = rows.first() {
+        if !row.trace.is_empty() {
+            println!("conditional-pruning trajectory (sparsity -> val acc):");
+            for (s, a, ok) in &row.trace {
+                println!(
+                    "  θ={:>5.1}%  acc={:.4}  {}",
+                    s * 100.0,
+                    a,
+                    if *ok { "accept" } else { "REJECT (stop)" }
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_mixed(artifacts: &str, args: &Args) -> Result<()> {
+    let ws = Workspace::open(artifacts)?;
+    let cfg = config_from(args)?;
+    let model = args.flag_or("model", "mobilenetv3");
+    let mut sess = Session::new(&ws, model)?;
+    let outcome = pipeline::run_hqp(&mut sess, &cfg)?;
+    let scores = outcome
+        .saliency_scores
+        .clone()
+        .ok_or_else(|| hqp::Error::hqp("no saliency scores"))?;
+    let plan = mixed::plan(&scores, &sess.mm.groups, mixed::MixedPolicy::default());
+    let graph = Graph::from_manifest(&sess.mm)?;
+
+    let dev = device_from(args)?;
+    let full_masks: Vec<Vec<bool>> = graph.groups.iter().map(|g| vec![true; g.size]).collect();
+    let base = simulate(&optimize(&graph, &full_masks, &OptimizeOptions::fp32())?, &dev);
+    let mut opts = OptimizeOptions::int8();
+    let int8 = simulate(&optimize(&graph, &outcome.masks, &opts)?, &dev);
+    opts.precision = plan.clone();
+    let mix = simulate(&optimize(&graph, &outcome.masks, &opts)?, &dev);
+
+    println!("§VI-A — S-guided mixed precision ({model} on {})", dev.name);
+    let (mut n4, mut n16) = (0, 0);
+    for p in plan.per_group.values() {
+        match p {
+            Precision::Int4 => n4 += 1,
+            Precision::Fp16 => n16 += 1,
+            _ => {}
+        }
+    }
+    println!(
+        "  plan: {} groups int4, {} fp16, {} int8",
+        n4,
+        n16,
+        plan.per_group.len() - n4 - n16
+    );
+    println!("  fp32 baseline : {:.3} ms", base.latency_ms);
+    println!(
+        "  hqp int8      : {:.3} ms ({:.2}x)",
+        int8.latency_ms,
+        base.latency_ms / int8.latency_ms
+    );
+    println!(
+        "  hqp mixed     : {:.3} ms ({:.2}x)",
+        mix.latency_ms,
+        base.latency_ms / mix.latency_ms
+    );
+    Ok(())
+}

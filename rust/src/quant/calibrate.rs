@@ -1,0 +1,244 @@
+//! Activation-scale calibration: min-max, percentile and KL-divergence
+//! (the NVIDIA/TensorRT INT8 recipe the paper relies on in §IV-B).
+//!
+//! Input: a 2048-bin histogram of |activation| over the calibration set
+//! (produced on-device by the `hist` artifact — L2 computes the histograms,
+//! Rust only searches over thresholds). Output: the per-tensor scale
+//! `s = T / 127` for the chosen saturation threshold `T`.
+
+use super::scale_for;
+
+/// Calibration strategy for activation scales.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibMethod {
+    /// T = max|activation| (no saturation; hurt by outliers — this is the
+    /// failure mode the paper's pruning-quantization-conflict story is
+    /// about).
+    MinMax,
+    /// T = smallest threshold covering `percent/100` of the mass.
+    Percentile,
+    /// NVIDIA KL-divergence sweep: pick T minimizing
+    /// KL(P_clipped_ref || Q_quantized).
+    Kl,
+}
+
+impl CalibMethod {
+    pub fn parse(s: &str) -> Option<CalibMethod> {
+        match s {
+            "minmax" => Some(CalibMethod::MinMax),
+            "percentile" => Some(CalibMethod::Percentile),
+            "kl" => Some(CalibMethod::Kl),
+            _ => None,
+        }
+    }
+}
+
+/// Scale chooser over an |activation| histogram.
+///
+/// `hist[i]` counts activations in `[i·range/bins, (i+1)·range/bins)`;
+/// `range` is the global absmax observed in calibration pass 1.
+pub struct Calibrator {
+    pub method: CalibMethod,
+    /// For [`CalibMethod::Percentile`]: the covered mass (e.g. 99.9).
+    pub percentile: f64,
+    /// Quantization levels (128 for signed INT8 magnitudes).
+    pub levels: usize,
+}
+
+impl Default for Calibrator {
+    fn default() -> Self {
+        Calibrator { method: CalibMethod::Kl, percentile: 99.9, levels: 128 }
+    }
+}
+
+impl Calibrator {
+    pub fn new(method: CalibMethod) -> Self {
+        Calibrator { method, ..Default::default() }
+    }
+
+    /// Choose the activation scale for one tap.
+    pub fn scale(&self, hist: &[f32], range: f32) -> f32 {
+        let t = self.threshold(hist, range);
+        scale_for(t, 8)
+    }
+
+    /// Choose the saturation threshold T for one tap.
+    pub fn threshold(&self, hist: &[f32], range: f32) -> f32 {
+        if range <= 0.0 || hist.iter().all(|&h| h == 0.0) {
+            return 1.0;
+        }
+        let bins = hist.len();
+        let bin_width = range / bins as f32;
+        match self.method {
+            CalibMethod::MinMax => range,
+            CalibMethod::Percentile => {
+                let total: f64 = hist.iter().map(|&h| h as f64).sum();
+                let target = total * self.percentile / 100.0;
+                let mut acc = 0.0f64;
+                for (i, &h) in hist.iter().enumerate() {
+                    acc += h as f64;
+                    if acc >= target {
+                        return (i + 1) as f32 * bin_width;
+                    }
+                }
+                range
+            }
+            CalibMethod::Kl => {
+                let best = kl_sweep(hist, self.levels);
+                (best + 1) as f32 * bin_width
+            }
+        }
+    }
+}
+
+/// Convenience wrapper: one-shot scale choice.
+pub fn choose_scale(method: CalibMethod, hist: &[f32], range: f32) -> f32 {
+    Calibrator::new(method).scale(hist, range)
+}
+
+/// KL(P||Q) over two unnormalized distributions (normalized internally).
+/// Zero-probability Q bins where P is nonzero contribute a large penalty
+/// (smoothed, per the TensorRT reference implementation).
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    let ps: f64 = p.iter().sum();
+    let qs: f64 = q.iter().sum();
+    if ps <= 0.0 || qs <= 0.0 {
+        return f64::INFINITY;
+    }
+    let eps = 1e-12;
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let pn = pi / ps;
+        if pn > 0.0 {
+            let qn = (qi / qs).max(eps);
+            kl += pn * (pn / qn).ln();
+        }
+    }
+    kl
+}
+
+/// The NVIDIA calibration sweep: for every candidate threshold bin `t`
+/// (from `levels` upward), build the clipped reference P (mass above `t`
+/// folded into the last bin) and the quantized-then-expanded Q (the `t`
+/// bins re-binned into `levels` buckets and expanded back proportionally),
+/// and return the `t-1` (bin index) minimizing KL(P||Q).
+fn kl_sweep(hist: &[f32], levels: usize) -> usize {
+    let bins = hist.len();
+    if bins <= levels {
+        return bins - 1;
+    }
+    let mut h: Vec<f64> = hist.iter().map(|&x| x as f64).collect();
+    // Neutralize the zero bin: exact zeros (the post-ReLU spike) quantize
+    // losslessly at ANY scale, so they carry no information about the
+    // threshold — but left in, their spike dominates the normalized
+    // distributions and biases the sweep toward tiny thresholds (the
+    // TensorRT reference implementation equally suppresses bin 0).
+    h[0] = h[1];
+    let mut best_t = bins;
+    let mut best_kl = f64::INFINITY;
+
+    for t in (levels..=bins).step_by(8) {
+        // Reference P: first t bins with the outlier tail folded into bin
+        // t-1 (saturation puts those values at the clip point).
+        let mut p: Vec<f64> = h[..t].to_vec();
+        let tail: f64 = h[t..].iter().sum();
+        p[t - 1] += tail;
+
+        // Candidate Q: quantize the RAW first t bins (without the folded
+        // tail!) into `levels` buckets and expand back. Building Q from the
+        // folded P would make t == levels lossless (KL = 0) and the sweep
+        // would degenerate to always picking the smallest threshold — the
+        // saturation error IS the P-vs-Q difference being scored.
+        let mut q = vec![0.0f64; t];
+        let chunk = t as f64 / levels as f64;
+        for l in 0..levels {
+            let lo = (l as f64 * chunk).floor() as usize;
+            let hi = (((l + 1) as f64 * chunk).floor() as usize).min(t).max(lo + 1);
+            let mass: f64 = h[lo..hi].iter().map(|&x| x as f64).sum();
+            // Expand back uniformly over the *nonzero* source bins.
+            let nz = h[lo..hi].iter().filter(|&&v| v > 0.0).count();
+            if nz > 0 {
+                let share = mass / nz as f64;
+                for (j, src) in h[lo..hi].iter().enumerate() {
+                    if *src > 0.0 {
+                        q[lo + j] = share;
+                    }
+                }
+            }
+        }
+
+        let kl = kl_divergence(&p, &q);
+        if kl < best_kl {
+            best_kl = kl;
+            best_t = t;
+        }
+    }
+    best_t - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_hist(bins: usize, sigma_bins: f64) -> Vec<f32> {
+        (0..bins)
+            .map(|i| {
+                let x = i as f64 / sigma_bins;
+                ((-0.5 * x * x).exp() * 1000.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn minmax_returns_range() {
+        let h = gaussian_hist(2048, 100.0);
+        let c = Calibrator::new(CalibMethod::MinMax);
+        assert_eq!(c.threshold(&h, 4.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_clips_tail() {
+        let mut h = gaussian_hist(2048, 100.0);
+        h[2047] += 5.0; // tiny outlier mass at the top
+        let c = Calibrator { method: CalibMethod::Percentile, percentile: 99.9, levels: 128 };
+        let t = c.threshold(&h, 4.0);
+        assert!(t < 1.5, "99.9th percentile of a sigma=100bin gaussian ~ 0.65, got {t}");
+    }
+
+    #[test]
+    fn kl_ignores_outlier_spike() {
+        // Gaussian bulk in the first ~400 bins + isolated outlier at the top:
+        // the KL threshold should saturate well below the outlier.
+        let mut h = gaussian_hist(2048, 120.0);
+        h[2040] += 3.0;
+        let c = Calibrator::default();
+        let t = c.threshold(&h, 8.0);
+        assert!(t < 6.0, "KL threshold {t} should clip the outlier");
+        // and a minmax calibrator would NOT clip:
+        assert_eq!(Calibrator::new(CalibMethod::MinMax).threshold(&h, 8.0), 8.0);
+    }
+
+    #[test]
+    fn kl_divergence_basics() {
+        let p = vec![1.0, 2.0, 3.0];
+        assert!(kl_divergence(&p, &p) < 1e-12);
+        let q = vec![3.0, 2.0, 1.0];
+        assert!(kl_divergence(&p, &q) > 0.0);
+        assert_eq!(kl_divergence(&[0.0], &[0.0]), f64::INFINITY);
+    }
+
+    #[test]
+    fn degenerate_histograms() {
+        let c = Calibrator::default();
+        assert_eq!(c.threshold(&[0.0; 2048], 1.0), 1.0);
+        assert_eq!(c.threshold(&[1.0; 64], 1.0), 1.0); // bins <= levels
+    }
+
+    #[test]
+    fn scale_is_threshold_over_127() {
+        let h = gaussian_hist(2048, 100.0);
+        let c = Calibrator::new(CalibMethod::MinMax);
+        let s = c.scale(&h, 2.54);
+        assert!((s - 2.54 / 127.0).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,56 @@
+//! INT8 post-training quantization machinery (HQP Phase 2).
+//!
+//! From-scratch implementation of the calibration stack the paper delegates
+//! to TensorRT (§IV-B "Robust Post-Training Quantization"): symmetric
+//! signed INT8 with per-tensor activation scales chosen by minimizing the
+//! KL divergence between the FP32 activation histogram and its quantized
+//! re-binning (NVIDIA's 8-bit inference recipe), plus min-max and
+//! percentile calibrators as baselines, and per-output-channel symmetric
+//! weight quantization.
+//!
+//! The *numerics* of the quantized model are exercised for real: weights
+//! are projected onto their INT8 grid here, activation scales feed the
+//! `quant_eval` artifact whose Pallas qmatmul kernel quantizes activations
+//! on the fly — so the accuracy drops reported in the tables are measured,
+//! not modeled.
+
+mod calibrate;
+mod qtensor;
+
+pub use calibrate::{choose_scale, kl_divergence, CalibMethod, Calibrator};
+pub use qtensor::{dequantize, quantize_per_channel, quantize_per_tensor, QuantizedTensor};
+
+/// Symmetric signed INT8 grid: [-127, 127] (−128 unused, TensorRT-style).
+pub const QMAX: f32 = 127.0;
+
+/// Scale for a symmetric range `[-absmax, absmax]` at bit-width `b`.
+///
+/// The paper's §II-C step size: `s = R / (2^b − 1)` with `R = 2·absmax`
+/// for the symmetric signed case, which reduces to `absmax / (2^(b−1)−1)`.
+pub fn scale_for(absmax: f32, bits: u32) -> f32 {
+    let qmax = ((1u32 << (bits - 1)) - 1) as f32;
+    if absmax <= 0.0 {
+        1.0
+    } else {
+        absmax / qmax
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_for_int8() {
+        assert!((scale_for(127.0, 8) - 1.0).abs() < 1e-6);
+        assert!((scale_for(1.0, 8) - 1.0 / 127.0).abs() < 1e-9);
+        // degenerate all-zero tensor
+        assert_eq!(scale_for(0.0, 8), 1.0);
+    }
+
+    #[test]
+    fn scale_for_other_widths() {
+        assert!((scale_for(7.0, 4) - 1.0).abs() < 1e-6); // int4: qmax = 7
+        assert!((scale_for(32767.0, 16) - 1.0).abs() < 1e-3);
+    }
+}

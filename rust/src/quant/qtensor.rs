@@ -1,0 +1,169 @@
+//! Weight quantization: projection of FP32 tensors onto the symmetric INT8
+//! grid, per-tensor or per-output-channel (the TensorRT default for conv
+//! weights and what HQP deploys).
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+use super::{scale_for, QMAX};
+
+/// An INT8-quantized tensor: integer codes + scales.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub shape: Vec<usize>,
+    pub codes: Vec<i8>,
+    /// One scale (per-tensor) or `shape[axis]` scales (per-channel).
+    pub scales: Vec<f32>,
+    /// Channel axis for per-channel quantization (None = per-tensor).
+    pub axis: Option<usize>,
+}
+
+impl QuantizedTensor {
+    /// Storage bytes of the deployed quantized tensor (codes + f32 scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len()
+    }
+}
+
+fn quantize_value(v: f32, scale: f32) -> i8 {
+    // Round half to even, matching jnp.round in the L1 kernel / ref.py so
+    // rust-side weight projection and the pallas fake-quant agree exactly.
+    let q = v / scale;
+    let r = round_half_even(q).clamp(-QMAX, QMAX);
+    r as i8
+}
+
+fn round_half_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Per-tensor symmetric INT8 quantization.
+pub fn quantize_per_tensor(t: &Tensor, bits: u32) -> QuantizedTensor {
+    let s = scale_for(t.absmax(), bits);
+    QuantizedTensor {
+        shape: t.shape().to_vec(),
+        codes: t.data().iter().map(|&v| quantize_value(v, s)).collect(),
+        scales: vec![s],
+        axis: None,
+    }
+}
+
+/// Per-channel symmetric INT8 quantization along `axis` (conv out-channel
+/// axis 3 for HWIO weights, axis 1 for FC (in,out) weights).
+pub fn quantize_per_channel(t: &Tensor, axis: usize, bits: u32) -> Result<QuantizedTensor> {
+    let maxes = t.absmax_along(axis)?;
+    let scales: Vec<f32> = maxes.iter().map(|&m| scale_for(m, bits)).collect();
+    let strides = t.strides();
+    let axis_stride = strides[axis];
+    let axis_len = t.shape()[axis];
+    let mut codes = vec![0i8; t.len()];
+    for (i, &v) in t.data().iter().enumerate() {
+        let ch = (i / axis_stride) % axis_len;
+        codes[i] = quantize_value(v, scales[ch]);
+    }
+    Ok(QuantizedTensor {
+        shape: t.shape().to_vec(),
+        codes,
+        scales,
+        axis: Some(axis),
+    })
+}
+
+/// Dequantize back to an f32 tensor **on the INT8 grid** — this is the
+/// weight tensor handed to the `quant_eval` artifact (its values are exact
+/// integer multiples of the scales, so the artifact's f32 GEMM is
+/// bit-identical to an int8 GEMM with int32 accumulation — see
+/// python/compile/kernels/ref.py).
+pub fn dequantize(q: &QuantizedTensor) -> Result<Tensor> {
+    let mut data = vec![0f32; q.codes.len()];
+    match q.axis {
+        None => {
+            let s = q.scales[0];
+            for (d, &c) in data.iter_mut().zip(&q.codes) {
+                *d = c as f32 * s;
+            }
+        }
+        Some(axis) => {
+            let t = Tensor::zeros(q.shape.clone());
+            let strides = t.strides();
+            let axis_stride = strides[axis];
+            let axis_len = q.shape[axis];
+            for (i, &c) in q.codes.iter().enumerate() {
+                let ch = (i / axis_stride) % axis_len;
+                data[i] = c as f32 * q.scales[ch];
+            }
+        }
+    }
+    Tensor::new(q.shape.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_tensor_roundtrip_error_bounded() {
+        let t = Tensor::new(vec![4], vec![0.5, -1.0, 0.25, 0.99]).unwrap();
+        let q = quantize_per_tensor(&t, 8);
+        assert_eq!(q.scales.len(), 1);
+        let d = dequantize(&q).unwrap();
+        let s = q.scales[0];
+        for (a, b) in t.data().iter().zip(d.data()) {
+            assert!((a - b).abs() <= 0.5 * s + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn per_channel_scales_isolate_outliers() {
+        // Channel 1 has a 100x outlier; per-channel keeps channel 0 precise.
+        let t = Tensor::new(vec![2, 2], vec![0.5, 100.0, -0.25, 50.0]).unwrap();
+        let q = quantize_per_channel(&t, 1, 8).unwrap();
+        assert_eq!(q.scales.len(), 2);
+        let d = dequantize(&q).unwrap();
+        assert!((d.data()[0] - 0.5).abs() < 0.01);
+        assert!((d.data()[2] + 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn codes_clamped_to_pm127() {
+        let t = Tensor::new(vec![2], vec![1.0, -1.0]).unwrap();
+        let q = quantize_per_tensor(&t, 8);
+        assert_eq!(q.codes, vec![127, -127]);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4), 1.0);
+        assert_eq!(round_half_even(1.6), 2.0);
+    }
+
+    #[test]
+    fn all_zero_tensor_is_stable() {
+        let t = Tensor::zeros(vec![3, 3]);
+        let q = quantize_per_tensor(&t, 8);
+        let d = dequantize(&q).unwrap();
+        assert_eq!(d.data(), t.data());
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let t = Tensor::zeros(vec![3, 4]);
+        let q = quantize_per_channel(&t, 1, 8).unwrap();
+        assert_eq!(q.storage_bytes(), 12 + 4 * 4);
+    }
+}

@@ -1,0 +1,117 @@
+//! ASCII charts: horizontal bars (Fig. 2, layer-wise sparsity) and a
+//! labeled scatter (Fig. 3: size reduction vs accuracy drop).
+
+/// One bar: label + value (+ annotation).
+#[derive(Clone, Debug)]
+pub struct BarRow {
+    pub label: String,
+    pub value: f64,
+    pub annot: String,
+}
+
+impl BarRow {
+    pub fn new(label: impl Into<String>, value: f64, annot: impl Into<String>) -> BarRow {
+        BarRow { label: label.into(), value, annot: annot.into() }
+    }
+}
+
+/// Horizontal bar chart scaled to `width` characters.
+pub fn bar_chart(title: &str, rows: &[BarRow], width: usize) -> String {
+    let max = rows.iter().map(|r| r.value).fold(f64::MIN, f64::max).max(1e-12);
+    let lw = rows.iter().map(|r| r.label.chars().count()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for r in rows {
+        let n = ((r.value / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "  {:<lw$} |{:<width$}| {}\n",
+            r.label,
+            "█".repeat(n.min(width)),
+            r.annot,
+            lw = lw,
+            width = width
+        ));
+    }
+    out
+}
+
+/// Labeled scatter on an x/y grid (rows = points).
+pub fn scatter(
+    title: &str,
+    points: &[(f64, f64, String)],
+    xlabel: &str,
+    ylabel: &str,
+    w: usize,
+    h: usize,
+) -> String {
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for (x, y, _) in points {
+        xmin = xmin.min(*x);
+        xmax = xmax.max(*x);
+        ymin = ymin.min(*y);
+        ymax = ymax.max(*y);
+    }
+    if !xmin.is_finite() || points.is_empty() {
+        return format!("{title}\n  (no points)\n");
+    }
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![' '; w]; h];
+    let mut labels = Vec::new();
+    for (i, (x, y, name)) in points.iter().enumerate() {
+        let cx = (((x - xmin) / xspan) * (w - 1) as f64).round() as usize;
+        let cy = (h - 1) - (((y - ymin) / yspan) * (h - 1) as f64).round() as usize;
+        let marker = char::from_digit((i + 1) as u32 % 36, 36).unwrap_or('*');
+        grid[cy][cx] = marker;
+        labels.push(format!("  [{marker}] {name} ({x:.2}, {y:.3})"));
+    }
+    let mut out = format!("{title}   (y: {ylabel}, x: {xlabel})\n");
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("  +{}\n", "-".repeat(w)));
+    for l in labels {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = bar_chart(
+            "t",
+            &[BarRow::new("a", 10.0, "10"), BarRow::new("b", 5.0, "5")],
+            20,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        let count = |l: &str| l.matches('█').count();
+        assert_eq!(count(lines[1]), 20);
+        assert_eq!(count(lines[2]), 10);
+    }
+
+    #[test]
+    fn scatter_places_all_points() {
+        let s = scatter(
+            "fig",
+            &[(0.0, 0.0, "p0".into()), (1.0, 1.0, "p1".into())],
+            "x",
+            "y",
+            10,
+            5,
+        );
+        assert!(s.contains("[1] p0"));
+        assert!(s.contains("[2] p1"));
+    }
+
+    #[test]
+    fn empty_scatter_is_safe() {
+        assert!(scatter("t", &[], "x", "y", 10, 5).contains("no points"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Report rendering: fixed-width tables (the paper's Tables I/II), ASCII
+//! bar charts (Figures 2/3 and the layer-wise profile), and markdown
+//! export for EXPERIMENTS.md.
+
+mod chart;
+mod table;
+
+pub use chart::{bar_chart, scatter, BarRow};
+pub use table::Table;
+
+use crate::hqp::MethodReport;
+
+/// Render a list of method reports as the paper's table layout.
+pub fn method_table(title: &str, rows: &[MethodReport]) -> String {
+    let mut t = Table::new(vec![
+        "Method",
+        "Latency (ms)",
+        "Speedup (x)",
+        "Size Red.",
+        "Acc Drop",
+        "Sparsity θ",
+        "Δ≤1.5%",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            format!("{:.3}", r.latency_ms),
+            format!("{:.2}", r.speedup),
+            format!("{:.1}%", r.size_reduction * 100.0),
+            format!("{:.2}%", r.acc_drop * 100.0),
+            format!("{:.0}%", r.sparsity * 100.0),
+            if r.compliant { "yes".into() } else { "VIOLATED".into() },
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// Markdown variant of [`method_table`] (EXPERIMENTS.md).
+pub fn method_table_md(rows: &[MethodReport]) -> String {
+    let mut s = String::from(
+        "| Method | Latency (ms) | Speedup (×) | Size reduction | Acc drop | θ | compliant |\n|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {:.3} | {:.2} | {:.1}% | {:.2}% | {:.0}% | {} |\n",
+            r.method,
+            r.latency_ms,
+            r.speedup,
+            r.size_reduction * 100.0,
+            r.acc_drop * 100.0,
+            r.sparsity * 100.0,
+            if r.compliant { "yes" } else { "**no**" },
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(method: &str, lat: f64) -> MethodReport {
+        MethodReport {
+            method: method.into(),
+            model: "m".into(),
+            device: "nx".into(),
+            latency_ms: lat,
+            speedup: 1.0,
+            size_reduction: 0.5,
+            acc_drop: 0.012,
+            sparsity: 0.4,
+            compliant: true,
+            energy_mj: 1.0,
+            energy_ratio: 1.0,
+            flops: 100,
+        }
+    }
+
+    #[test]
+    fn table_contains_rows() {
+        let s = method_table("T1", &[rep("baseline", 1.0), rep("hqp", 0.4)]);
+        assert!(s.contains("baseline"));
+        assert!(s.contains("hqp"));
+        assert!(s.contains("T1"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let s = method_table_md(&[rep("hqp", 0.4)]);
+        assert!(s.starts_with("| Method"));
+        assert_eq!(s.lines().count(), 3);
+    }
+}

@@ -1,0 +1,433 @@
+//! `artifacts/manifest.json` — the L2→L3 contract emitted by
+//! `python/compile/aot.py`. Everything the coordinator knows about a model
+//! (parameter layout, prune groups, quantization taps, the op graph, the
+//! AOT artifact argument specs) comes from here; nothing is hard-coded.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::formats::json::Json;
+
+/// Datatype of an artifact argument/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::manifest(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+/// One named tensor argument or output of an artifact.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered function (HLO text file + signature).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// File name relative to the artifacts root.
+    pub file: String,
+    /// Arguments that follow the parameter list.
+    pub extra_args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// One model parameter (ordered — index is the artifact argument position).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One prune group: the unit ranked and removed by Algorithm 1.
+///
+/// `members` are `(param_name, axis)` pairs; masking filter `j` zeroes
+/// slice `j` along `axis` of every member (producer weights + downstream
+/// per-channel params — see DESIGN.md §2 for why that equals structural
+/// removal).
+#[derive(Clone, Debug)]
+pub struct GroupSpec {
+    pub id: usize,
+    pub name: String,
+    /// Number of filters in this group.
+    pub size: usize,
+    /// Index of this group's filter 0 in the global S vector.
+    pub offset: usize,
+    pub members: Vec<(String, usize)>,
+    /// Weight tensor whose per-sample gradients define S for this group.
+    pub producer: String,
+    pub producer_axis: usize,
+}
+
+/// One quantizable activation (conv/fc input) in traversal order.
+#[derive(Clone, Debug)]
+pub struct TapSpec {
+    pub id: usize,
+    pub op: String,
+    pub shape: Vec<usize>,
+}
+
+/// One node of the inference graph.
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub id: usize,
+    pub kind: String,
+    pub name: String,
+    pub inputs: Vec<usize>,
+    pub output: usize,
+    pub attrs: BTreeMap<String, Json>,
+    pub params: Vec<String>,
+    pub group: Option<usize>,
+    pub tap: Option<usize>,
+}
+
+impl OpSpec {
+    /// Numeric attribute accessor.
+    pub fn attr(&self, key: &str) -> Result<usize> {
+        self.attrs
+            .get(key)
+            .ok_or_else(|| Error::manifest(format!("op {}: missing attr {key}", self.name)))?
+            .as_usize()
+    }
+
+    /// String attribute accessor (activation kind).
+    pub fn attr_str(&self, key: &str) -> Result<&str> {
+        self.attrs
+            .get(key)
+            .ok_or_else(|| Error::manifest(format!("op {}: missing attr {key}", self.name)))?
+            .as_str()
+    }
+}
+
+/// Everything known about one model.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub baseline_val_acc: f64,
+    pub eval_batch: usize,
+    pub fisher_batch: usize,
+    pub hist_batch: usize,
+    pub weights_dir: String,
+    pub param_order: Vec<ParamSpec>,
+    pub groups: Vec<GroupSpec>,
+    pub taps: Vec<TapSpec>,
+    pub ops: Vec<OpSpec>,
+    /// tensor id -> shape (batch dim = 1 at trace time).
+    pub tensor_shapes: BTreeMap<usize, Vec<usize>>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelManifest {
+    /// Total filter count (the length of the S vector / ranked list R).
+    pub fn total_filters(&self) -> usize {
+        self.groups.iter().map(|g| g.size).sum()
+    }
+
+    /// Map a global filter index into (group, channel-within-group).
+    pub fn locate_filter(&self, global: usize) -> Result<(&GroupSpec, usize)> {
+        for g in &self.groups {
+            if global >= g.offset && global < g.offset + g.size {
+                return Ok((g, global - g.offset));
+            }
+        }
+        Err(Error::manifest(format!("filter index {global} out of range")))
+    }
+
+    /// Index of a parameter by name.
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.param_order
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| Error::manifest(format!("unknown param {name}")))
+    }
+}
+
+/// One dataset split.
+#[derive(Clone, Debug)]
+pub struct DataSplit {
+    pub x: String,
+    pub y: String,
+    pub n: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub hist_bins: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub data: BTreeMap<String, DataSplit>,
+}
+
+fn parse_arg_list(v: &Json) -> Result<Vec<ArgSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|a| {
+            let parts = a.as_arr()?;
+            if parts.len() != 3 {
+                return Err(Error::manifest("arg spec wants [name, shape, dtype]"));
+            }
+            Ok(ArgSpec {
+                name: parts[0].as_str()?.to_string(),
+                shape: parts[1].as_usize_vec()?,
+                dtype: DType::parse(parts[2].as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+fn parse_model(name: &str, v: &Json) -> Result<ModelManifest> {
+    let param_order = v
+        .req("param_order")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.req("name")?.as_str()?.to_string(),
+                shape: p.req("shape")?.as_usize_vec()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let groups = v
+        .req("groups")?
+        .as_arr()?
+        .iter()
+        .map(|g| {
+            Ok(GroupSpec {
+                id: g.req("id")?.as_usize()?,
+                name: g.req("name")?.as_str()?.to_string(),
+                size: g.req("size")?.as_usize()?,
+                offset: g.req("offset")?.as_usize()?,
+                members: g
+                    .req("members")?
+                    .as_arr()?
+                    .iter()
+                    .map(|m| {
+                        let parts = m.as_arr()?;
+                        Ok((parts[0].as_str()?.to_string(), parts[1].as_usize()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                producer: g.req("producer")?.as_str()?.to_string(),
+                producer_axis: g.req("producer_axis")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let taps = v
+        .req("taps")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TapSpec {
+                id: t.req("id")?.as_usize()?,
+                op: t.req("op")?.as_str()?.to_string(),
+                shape: t.req("shape")?.as_usize_vec()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let ops = v
+        .req("ops")?
+        .as_arr()?
+        .iter()
+        .map(|o| {
+            let group = match o.req("group")? {
+                Json::Null => None,
+                g => Some(g.as_usize()?),
+            };
+            let tap = match o.req("tap")? {
+                Json::Null => None,
+                t => Some(t.as_usize()?),
+            };
+            Ok(OpSpec {
+                id: o.req("id")?.as_usize()?,
+                kind: o.req("kind")?.as_str()?.to_string(),
+                name: o.req("name")?.as_str()?.to_string(),
+                inputs: o.req("inputs")?.as_usize_vec()?,
+                output: o.req("output")?.as_usize()?,
+                attrs: o
+                    .req("attrs")?
+                    .as_obj()?
+                    .iter()
+                    .map(|(k, val)| (k.clone(), val.clone()))
+                    .collect(),
+                params: o
+                    .req("params")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| Ok(p.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                group,
+                tap,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let tensor_shapes = v
+        .req("tensor_shapes")?
+        .as_obj()?
+        .iter()
+        .map(|(k, shape)| {
+            let tid = k
+                .parse::<usize>()
+                .map_err(|e| Error::manifest(format!("bad tensor id {k}: {e}")))?;
+            Ok((tid, shape.as_usize_vec()?))
+        })
+        .collect::<Result<BTreeMap<_, _>>>()?;
+
+    let artifacts = v
+        .req("artifacts")?
+        .as_obj()?
+        .iter()
+        .map(|(fn_name, a)| {
+            Ok((
+                fn_name.clone(),
+                ArtifactSpec {
+                    file: a.req("file")?.as_str()?.to_string(),
+                    extra_args: parse_arg_list(a.req("extra_args")?)?,
+                    outputs: parse_arg_list(a.req("outputs")?)?,
+                },
+            ))
+        })
+        .collect::<Result<BTreeMap<_, _>>>()?;
+
+    Ok(ModelManifest {
+        name: name.to_string(),
+        input_hw: v.req("input_hw")?.as_usize()?,
+        num_classes: v.req("num_classes")?.as_usize()?,
+        baseline_val_acc: v.req("baseline_val_acc")?.as_f64()?,
+        eval_batch: v.req("eval_batch")?.as_usize()?,
+        fisher_batch: v.req("fisher_batch")?.as_usize()?,
+        hist_batch: v.req("hist_batch")?.as_usize()?,
+        weights_dir: v.req("weights_dir")?.as_str()?.to_string(),
+        param_order,
+        groups,
+        taps,
+        ops,
+        tensor_shapes,
+        artifacts,
+    })
+}
+
+impl Manifest {
+    /// Parse a manifest from JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let models = v
+            .req("models")?
+            .as_obj()?
+            .iter()
+            .map(|(name, m)| Ok((name.clone(), parse_model(name, m)?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let data = v
+            .req("data")?
+            .as_obj()?
+            .iter()
+            .map(|(split, d)| {
+                Ok((
+                    split.clone(),
+                    DataSplit {
+                        x: d.req("x")?.as_str()?.to_string(),
+                        y: d.req("y")?.as_str()?.to_string(),
+                        n: d.req("n")?.as_usize()?,
+                    },
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Manifest {
+            hist_bins: v.req("hist_bins")?.as_usize()?,
+            models,
+            data,
+        })
+    }
+
+    /// Load from `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let path = root.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::manifest(format!("{}: {e}", path.display())))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::manifest(format!("unknown model {name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1, "hist_bins": 2048,
+      "models": {
+        "m": {
+          "input_hw": 8, "num_classes": 2, "baseline_val_acc": 0.9,
+          "eval_batch": 4, "fisher_batch": 2, "hist_batch": 4,
+          "weights_dir": "weights/m",
+          "param_order": [{"name": "c.w", "shape": [3, 3, 3, 4]}],
+          "groups": [{"id": 0, "name": "c", "size": 4, "offset": 0,
+                      "members": [["c.w", 3]], "producer": "c.w", "producer_axis": 3}],
+          "taps": [{"id": 0, "op": "c", "shape": [1, 8, 8, 3]}],
+          "ops": [{"id": 0, "kind": "conv", "name": "c", "inputs": [0], "output": 1,
+                   "attrs": {"cin": 3, "cout": 4, "k": 3, "stride": 1, "groups": 1,
+                             "h": 8, "w": 8},
+                   "params": ["c.w"], "group": 0, "tap": 0}],
+          "tensor_shapes": {"0": [1, 8, 8, 3], "1": [1, 8, 8, 4]},
+          "artifacts": {
+            "eval": {"file": "m_eval.hlo.txt",
+                     "extra_args": [["x", [4, 8, 8, 3], "f32"]],
+                     "outputs": [["logits", [4, 2], "f32"]]}
+          }
+        }
+      },
+      "data": {"val": {"x": "data/val_x.npy", "y": "data/val_y.npy", "n": 8}}
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.hist_bins, 2048);
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.total_filters(), 4);
+        assert_eq!(mm.param_order[0].shape, vec![3, 3, 3, 4]);
+        assert_eq!(mm.groups[0].members, vec![("c.w".to_string(), 3)]);
+        let art = &mm.artifacts["eval"];
+        assert_eq!(art.extra_args[0].dtype, DType::F32);
+        assert_eq!(art.outputs[0].shape, vec![4, 2]);
+        assert_eq!(mm.ops[0].attr("cout").unwrap(), 4);
+        assert_eq!(m.data["val"].n, 8);
+    }
+
+    #[test]
+    fn locate_filter_maps_offsets() {
+        let m = Manifest::parse(MINI).unwrap();
+        let mm = m.model("m").unwrap();
+        let (g, j) = mm.locate_filter(2).unwrap();
+        assert_eq!(g.id, 0);
+        assert_eq!(j, 2);
+        assert!(mm.locate_filter(4).is_err());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

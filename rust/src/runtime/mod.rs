@@ -1,0 +1,157 @@
+//! L3 runtime: loads the AOT artifacts and executes them on the PJRT CPU
+//! client (`xla` crate → xla_extension 0.5.1).
+//!
+//! Pattern (see /opt/xla-example): HLO **text** → `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`. Artifacts are compiled lazily and cached for the process
+//! lifetime; dataset batches are uploaded to device buffers once per split
+//! and reused across the entire pruning loop (the validation sweep is the
+//! coordinator's hot path — see EXPERIMENTS.md §Perf).
+
+pub mod manifest;
+mod params;
+mod session;
+
+pub use manifest::{ArtifactSpec, DType, GroupSpec, Manifest, ModelManifest, OpSpec, TapSpec};
+pub use params::ParamStore;
+pub use session::{Counters, DataSet, Session};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::tensor::{Tensor, TensorI32};
+
+/// An opened artifacts directory: manifest + PJRT client + executable cache.
+pub struct Workspace {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    execs: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Workspace {
+    /// Open `<root>/manifest.json` and create the PJRT CPU client.
+    pub fn open(root: impl AsRef<Path>) -> Result<Workspace> {
+        let root = root.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Workspace {
+            root,
+            manifest,
+            client,
+            execs: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `<model>_<fn>`.
+    pub fn executable(
+        &self,
+        model: &str,
+        fn_name: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{model}_{fn_name}");
+        if let Some(e) = self.execs.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let mm = self.manifest.model(model)?;
+        let art = mm
+            .artifacts
+            .get(fn_name)
+            .ok_or_else(|| Error::manifest(format!("{model}: no artifact '{fn_name}'")))?;
+        let path = self.root.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::manifest("non-utf8 artifact path"))?,
+        )
+        .map_err(wrap_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+        let rc = std::rc::Rc::new(exe);
+        self.execs.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Load one dataset split (x f32 + y i32) from the artifacts dir.
+    pub fn load_split(&self, split: &str) -> Result<(Tensor, TensorI32)> {
+        let d = self
+            .manifest
+            .data
+            .get(split)
+            .ok_or_else(|| Error::manifest(format!("unknown split {split}")))?;
+        let x = crate::formats::npy::read_npy_f32(self.root.join(&d.x))?;
+        let y = crate::formats::npy::read_npy_i32(self.root.join(&d.y))?;
+        if x.shape()[0] != d.n || y.shape()[0] != d.n {
+            return Err(Error::manifest(format!(
+                "split {split}: shape mismatch vs manifest n={}",
+                d.n
+            )));
+        }
+        Ok((x, y))
+    }
+}
+
+pub(crate) fn wrap_xla<E: std::fmt::Display>(e: E) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// Upload an f32 tensor to a device buffer.
+pub fn to_buffer(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(t.data(), t.shape(), None)
+        .map_err(wrap_xla)
+}
+
+/// Upload an i32 tensor to a device buffer.
+pub fn to_buffer_i32(client: &xla::PjRtClient, t: &TensorI32) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(t.data(), t.shape(), None)
+        .map_err(wrap_xla)
+}
+
+/// Execute with pre-uploaded buffers; decompose the 1-tuple output into
+/// host tensors shaped per the artifact output spec.
+pub fn run_buffers(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+    outputs: &[manifest::ArgSpec],
+) -> Result<Vec<Tensor>> {
+    let results = exe.execute_b(args).map_err(wrap_xla)?;
+    let out = results
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| Error::Xla("empty execution result".into()))?;
+    let lit = out.to_literal_sync().map_err(wrap_xla)?;
+    let parts = lit.to_tuple().map_err(wrap_xla)?;
+    if parts.len() != outputs.len() {
+        return Err(Error::Xla(format!(
+            "expected {} outputs, got {}",
+            outputs.len(),
+            parts.len()
+        )));
+    }
+    parts
+        .iter()
+        .zip(outputs)
+        .map(|(p, spec)| {
+            let v = p.to_vec::<f32>().map_err(wrap_xla)?;
+            Tensor::new(spec.shape.clone(), v)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // Workspace/Session round-trips against real artifacts live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts`).
+}

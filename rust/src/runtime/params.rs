@@ -1,0 +1,184 @@
+//! Parameter store: the in-memory copy of a model's weights that the HQP
+//! pipeline mutates (filter masking, INT8 grid projection) and feeds to the
+//! AOT executables as leading arguments.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::formats::npy::read_npy_f32;
+use crate::runtime::manifest::{GroupSpec, ModelManifest};
+use crate::tensor::Tensor;
+
+/// Ordered parameter tensors + name index. Cloning is cheap enough at the
+/// model sizes involved (<1 MB) and is how candidate models are built in
+/// Algorithm 1's accept/reject loop.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Load `p0000.npy..` from the model's weights dir, in manifest order.
+    pub fn load(root: &Path, mm: &ModelManifest) -> Result<ParamStore> {
+        let dir = root.join(&mm.weights_dir);
+        let mut tensors = Vec::with_capacity(mm.param_order.len());
+        let mut index = HashMap::new();
+        for (i, spec) in mm.param_order.iter().enumerate() {
+            let t = read_npy_f32(dir.join(format!("p{i:04}.npy")))?;
+            if t.shape() != spec.shape.as_slice() {
+                return Err(Error::manifest(format!(
+                    "param {} ({}): shape {:?} != manifest {:?}",
+                    i,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                )));
+            }
+            index.insert(spec.name.clone(), i);
+            tensors.push(t);
+        }
+        Ok(ParamStore { tensors, index })
+    }
+
+    /// Build from raw tensors (tests).
+    pub fn from_tensors(named: Vec<(String, Tensor)>) -> ParamStore {
+        let mut tensors = Vec::new();
+        let mut index = HashMap::new();
+        for (i, (n, t)) in named.into_iter().enumerate() {
+            index.insert(n, i);
+            tensors.push(t);
+        }
+        ParamStore { tensors, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| Error::manifest(format!("unknown param {name}")))?;
+        Ok(&self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| Error::manifest(format!("unknown param {name}")))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    /// Replace a tensor wholesale (PTQ weight substitution).
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let cur = self.get_mut(name)?;
+        if cur.shape() != t.shape() {
+            return Err(Error::shape(format!(
+                "set {name}: shape {:?} != {:?}",
+                t.shape(),
+                cur.shape()
+            )));
+        }
+        *cur = t;
+        Ok(())
+    }
+
+    /// Mask (zero) channel `j` of a prune group across all its members.
+    /// This IS structural pruning under the fixed-shape artifact contract
+    /// (DESIGN.md §2).
+    pub fn mask_filter(&mut self, group: &GroupSpec, j: usize) -> Result<()> {
+        if j >= group.size {
+            return Err(Error::hqp(format!(
+                "filter {j} out of range for group {} (size {})",
+                group.name, group.size
+            )));
+        }
+        for (pname, axis) in &group.members {
+            self.get_mut(pname)?.zero_slice(*axis, j)?;
+        }
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Count of exactly-zero elements (masked sparsity diagnostics).
+    pub fn num_zero(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| t.data().iter().filter(|v| **v == 0.0).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::from_tensors(vec![
+            ("c.w".into(), Tensor::full(vec![3, 3, 2, 4], 1.0)),
+            ("c.gamma".into(), Tensor::full(vec![4], 2.0)),
+            ("c.beta".into(), Tensor::full(vec![4], 3.0)),
+        ])
+    }
+
+    fn group() -> GroupSpec {
+        GroupSpec {
+            id: 0,
+            name: "c".into(),
+            size: 4,
+            offset: 0,
+            members: vec![("c.w".into(), 3), ("c.gamma".into(), 0), ("c.beta".into(), 0)],
+            producer: "c.w".into(),
+            producer_axis: 3,
+        }
+    }
+
+    #[test]
+    fn mask_filter_zeroes_all_members() {
+        let mut s = store();
+        s.mask_filter(&group(), 1).unwrap();
+        assert_eq!(s.get("c.gamma").unwrap().data()[1], 0.0);
+        assert_eq!(s.get("c.beta").unwrap().data()[1], 0.0);
+        assert_eq!(s.get("c.gamma").unwrap().data()[0], 2.0);
+        // conv weight: out-channel 1 of every (k,k,i) position is zero
+        let w = s.get("c.w").unwrap();
+        for (i, &v) in w.data().iter().enumerate() {
+            if i % 4 == 1 {
+                assert_eq!(v, 0.0);
+            } else {
+                assert_eq!(v, 1.0);
+            }
+        }
+        assert_eq!(s.num_zero(), 9 * 2 + 2);
+    }
+
+    #[test]
+    fn mask_filter_range_checked() {
+        let mut s = store();
+        assert!(s.mask_filter(&group(), 4).is_err());
+    }
+
+    #[test]
+    fn set_validates_shape() {
+        let mut s = store();
+        assert!(s.set("c.gamma", Tensor::zeros(vec![5])).is_err());
+        assert!(s.set("c.gamma", Tensor::zeros(vec![4])).is_ok());
+        assert_eq!(s.get("c.gamma").unwrap().data()[0], 0.0);
+    }
+}

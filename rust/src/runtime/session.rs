@@ -1,0 +1,327 @@
+//! Session: one model bound to the workspace, with device-resident dataset
+//! caches and the measurement primitives the HQP pipeline is built from.
+//!
+//! Perf note (§Perf L3): dataset batches are uploaded to PJRT buffers once
+//! per (split, batch-size) and reused for every execution — Algorithm 1
+//! re-validates after every pruning step, so the x-batch upload would
+//! otherwise dominate the loop. Parameters are re-uploaded per call (they
+//! change between calls: masking / quantization), which is ~1 MB.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArgSpec, ModelManifest};
+use crate::runtime::{run_buffers, to_buffer, to_buffer_i32, ParamStore, Workspace};
+use crate::tensor::{count_correct, Tensor, TensorI32};
+
+/// One uploaded batch (x on device, labels on host for the accuracy
+/// reduction, y on device for gradient artifacts).
+struct Batch {
+    x: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    labels: Vec<i32>,
+    valid: usize,
+}
+
+/// A dataset split with device-buffer caches keyed by batch size.
+pub struct DataSet {
+    pub n: usize,
+    x: Tensor,
+    y: TensorI32,
+    batches: HashMap<usize, Vec<Batch>>,
+}
+
+/// Execution counters — the measured side of the paper's §III-C cost model
+/// (C_HQP = calib·C_grad + T_prune·val·C_inf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counters {
+    /// Forward-pass executions (eval/quant_eval/absmax/hist), in samples.
+    pub inference_samples: u64,
+    /// Backward-pass executions (fisher), in samples.
+    pub grad_samples: u64,
+    /// PJRT execute() calls.
+    pub executions: u64,
+}
+
+/// One model + its datasets, bound to a [`Workspace`].
+pub struct Session<'w> {
+    pub ws: &'w Workspace,
+    pub mm: ModelManifest,
+    /// Pristine trained parameters (the paper's M_train).
+    pub baseline: ParamStore,
+    data: HashMap<String, DataSet>,
+    pub counters: Counters,
+}
+
+impl<'w> Session<'w> {
+    pub fn new(ws: &'w Workspace, model: &str) -> Result<Session<'w>> {
+        let mm = ws.manifest.model(model)?.clone();
+        let baseline = ParamStore::load(&ws.root, &mm)?;
+        Ok(Session {
+            ws,
+            mm,
+            baseline,
+            data: HashMap::new(),
+            counters: Counters::default(),
+        })
+    }
+
+    /// Ensure `split` is loaded and batched at `batch` rows (device upload);
+    /// returns the number of batches.
+    fn ensure_batches(&mut self, split: &str, batch: usize) -> Result<usize> {
+        if !self.data.contains_key(split) {
+            let (x, y) = self.ws.load_split(split)?;
+            self.data.insert(
+                split.to_string(),
+                DataSet { n: x.shape()[0], x, y, batches: HashMap::new() },
+            );
+        }
+        let client = self.ws.client().clone();
+        let ds = self.data.get_mut(split).unwrap();
+        if !ds.batches.contains_key(&batch) {
+            let mut list = Vec::new();
+            let n = ds.n;
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + batch).min(n);
+                let xb = ds.x.rows(lo, hi)?.pad_rows_to(batch)?;
+                let yb = ds.y.rows(lo, hi)?.pad_rows_to(batch)?;
+                list.push(Batch {
+                    x: to_buffer(&client, &xb)?,
+                    y: to_buffer_i32(&client, &yb)?,
+                    labels: yb.data()[..hi - lo].to_vec(),
+                    valid: hi - lo,
+                });
+                lo = hi;
+            }
+            ds.batches.insert(batch, list);
+        }
+        Ok(ds.batches[&batch].len())
+    }
+
+    fn batch(&self, split: &str, batch: usize, i: usize) -> &Batch {
+        &self.data[split].batches[&batch][i]
+    }
+
+    /// Upload the parameter list once for a sequence of executions.
+    fn upload_params(&self, params: &ParamStore) -> Result<Vec<xla::PjRtBuffer>> {
+        params
+            .tensors()
+            .iter()
+            .map(|t| to_buffer(self.ws.client(), t))
+            .collect()
+    }
+
+    fn outputs(&self, fn_name: &str) -> Result<Vec<ArgSpec>> {
+        Ok(self
+            .mm
+            .artifacts
+            .get(fn_name)
+            .ok_or_else(|| Error::manifest(format!("no artifact '{fn_name}'")))?
+            .outputs
+            .clone())
+    }
+
+    /// Top-1 accuracy of `params` on `split` through the FP32 eval artifact.
+    pub fn accuracy(&mut self, params: &ParamStore, split: &str) -> Result<f64> {
+        let eb = self.mm.eval_batch;
+        let outputs = self.outputs("eval")?;
+        let exe = self.ws.executable(&self.mm.name, "eval")?;
+        let pbufs = self.upload_params(params)?;
+        let nb = self.ensure_batches(split, eb)?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..nb {
+            let valid = {
+                let b = self.batch(split, eb, i);
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                args.push(&b.x);
+                let out = run_buffers(&exe, &args, &outputs)?;
+                correct += count_correct(&out[0], &b.labels, b.valid);
+                total += b.valid;
+                b.valid
+            };
+            self.counters.executions += 1;
+            self.counters.inference_samples += valid as u64;
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Top-1 accuracy through the fake-quant INT8 artifact (Pallas qmatmul
+    /// hot spots), with per-tensor activation `scales` (len = taps).
+    pub fn quant_accuracy(
+        &mut self,
+        params: &ParamStore,
+        scales: &[f32],
+        split: &str,
+    ) -> Result<f64> {
+        if scales.len() != self.mm.taps.len() {
+            return Err(Error::hqp(format!(
+                "scales len {} != taps {}",
+                scales.len(),
+                self.mm.taps.len()
+            )));
+        }
+        let eb = self.mm.eval_batch;
+        let outputs = self.outputs("quant_eval")?;
+        let exe = self.ws.executable(&self.mm.name, "quant_eval")?;
+        let pbufs = self.upload_params(params)?;
+        let sbuf = to_buffer(self.ws.client(), &Tensor::from_slice(scales))?;
+        let nb = self.ensure_batches(split, eb)?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..nb {
+            let valid = {
+                let b = self.batch(split, eb, i);
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                args.push(&sbuf);
+                args.push(&b.x);
+                let out = run_buffers(&exe, &args, &outputs)?;
+                correct += count_correct(&out[0], &b.labels, b.valid);
+                total += b.valid;
+                b.valid
+            };
+            self.counters.executions += 1;
+            self.counters.inference_samples += valid as u64;
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Fisher sensitivity vector S over (up to) `max_samples` of the calib
+    /// split: S_f = (1/N) Σ_i ||∂L_i/∂W_f||² — paper §II-B. One backward
+    /// pass over D_calib, exactly as Algorithm 1 line 7 prescribes.
+    pub fn fisher_scores(
+        &mut self,
+        params: &ParamStore,
+        max_samples: usize,
+    ) -> Result<Vec<f32>> {
+        let fb = self.mm.fisher_batch;
+        let outputs = self.outputs("fisher")?;
+        let exe = self.ws.executable(&self.mm.name, "fisher")?;
+        let pbufs = self.upload_params(params)?;
+        let nb = self.ensure_batches("calib", fb)?;
+        let mut acc = vec![0f32; self.mm.total_filters()];
+        let mut seen = 0usize;
+        for i in 0..nb {
+            if seen >= max_samples {
+                break;
+            }
+            let valid = {
+                let b = self.batch("calib", fb, i);
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                args.push(&b.x);
+                args.push(&b.y);
+                let out = run_buffers(&exe, &args, &outputs)?;
+                for (a, v) in acc.iter_mut().zip(out[0].data()) {
+                    *a += v;
+                }
+                seen += b.valid;
+                b.valid
+            };
+            self.counters.executions += 1;
+            self.counters.grad_samples += valid as u64;
+        }
+        if seen == 0 {
+            return Err(Error::hqp("fisher: no calibration samples"));
+        }
+        let inv = 1.0 / seen as f32;
+        for a in &mut acc {
+            *a *= inv;
+        }
+        Ok(acc)
+    }
+
+    /// Per-tap max |activation| over the calib split (calibration pass 1).
+    pub fn act_absmax(&mut self, params: &ParamStore) -> Result<Vec<f32>> {
+        let hb = self.mm.hist_batch;
+        let outputs = self.outputs("absmax")?;
+        let exe = self.ws.executable(&self.mm.name, "absmax")?;
+        let pbufs = self.upload_params(params)?;
+        let nb = self.ensure_batches("calib", hb)?;
+        let mut maxes = vec![0f32; self.mm.taps.len()];
+        for i in 0..nb {
+            let valid = {
+                let b = self.batch("calib", hb, i);
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                args.push(&b.x);
+                let out = run_buffers(&exe, &args, &outputs)?;
+                for (m, v) in maxes.iter_mut().zip(out[0].data()) {
+                    if *v > *m {
+                        *m = *v;
+                    }
+                }
+                b.valid
+            };
+            self.counters.executions += 1;
+            self.counters.inference_samples += valid as u64;
+        }
+        Ok(maxes)
+    }
+
+    /// Per-tap |activation| histograms over the calib split (calibration
+    /// pass 2; `ranges` from [`Session::act_absmax`]). Returns a (taps ×
+    /// hist_bins) row-major tensor of counts.
+    pub fn act_hist(&mut self, params: &ParamStore, ranges: &[f32]) -> Result<Tensor> {
+        let hb = self.mm.hist_batch;
+        let outputs = self.outputs("hist")?;
+        let exe = self.ws.executable(&self.mm.name, "hist")?;
+        let pbufs = self.upload_params(params)?;
+        let rbuf = to_buffer(self.ws.client(), &Tensor::from_slice(ranges))?;
+        let nb = self.ensure_batches("calib", hb)?;
+        let taps = self.mm.taps.len();
+        let bins = outputs[0].shape[1];
+        let mut acc = Tensor::zeros(vec![taps, bins]);
+        for i in 0..nb {
+            let valid = {
+                let b = self.batch("calib", hb, i);
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                args.push(&b.x);
+                args.push(&rbuf);
+                let out = run_buffers(&exe, &args, &outputs)?;
+                for (a, v) in acc.data_mut().iter_mut().zip(out[0].data()) {
+                    *a += v;
+                }
+                b.valid
+            };
+            self.counters.executions += 1;
+            self.counters.inference_samples += valid as u64;
+        }
+        Ok(acc)
+    }
+
+    /// Raw logits of the FP32 eval artifact on an arbitrary input batch
+    /// (used by integration tests and the quickstart example).
+    pub fn eval_logits(&mut self, params: &ParamStore, x: &Tensor) -> Result<Tensor> {
+        let eb = self.mm.eval_batch;
+        if x.shape()[0] > eb {
+            return Err(Error::shape(format!(
+                "batch {} exceeds artifact batch {eb}",
+                x.shape()[0]
+            )));
+        }
+        let valid = x.shape()[0];
+        let xp = x.pad_rows_to(eb)?;
+        let outputs = self.outputs("eval")?;
+        let exe = self.ws.executable(&self.mm.name, "eval")?;
+        let pbufs = self.upload_params(params)?;
+        let xbuf = to_buffer(self.ws.client(), &xp)?;
+        let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+        args.push(&xbuf);
+        self.counters.executions += 1;
+        self.counters.inference_samples += valid as u64;
+        let out = run_buffers(&exe, &args, &outputs)?;
+        out[0].rows(0, valid)
+    }
+
+    /// Number of samples in a split.
+    pub fn split_len(&mut self, split: &str) -> Result<usize> {
+        if !self.data.contains_key(split) {
+            let (x, y) = self.ws.load_split(split)?;
+            self.data.insert(
+                split.to_string(),
+                DataSet { n: x.shape()[0], x, y, batches: HashMap::new() },
+            );
+        }
+        Ok(self.data[split].n)
+    }
+}

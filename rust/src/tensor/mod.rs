@@ -1,0 +1,383 @@
+//! Minimal dense tensor type used across the coordinator.
+//!
+//! Deliberately small: the heavy math lives in the AOT-compiled XLA
+//! executables; the Rust side only needs parameter surgery (filter masking,
+//! INT8 grid projection), batching, accuracy reduction and accounting.
+//! Row-major (C-order) f32 / i32 tensors, matching `.npy` and XLA literal
+//! layouts.
+
+mod ops;
+
+pub use ops::{argmax_rows, count_correct};
+
+use crate::error::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Dense row-major i32 tensor (labels, indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl Tensor {
+    /// Build from raw parts; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Filled tensor.
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn from_slice(v: &[f32]) -> Self {
+        Tensor { shape: vec![v.len()], data: v.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::shape(format!(
+                "reshape {:?} -> {shape:?}: element count mismatch",
+                self.shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Zero every element whose index along `axis` equals `idx`.
+    ///
+    /// This is the filter-masking primitive of Algorithm 1: pruning filter
+    /// `j` of a group zeroes slice `j` of every member tensor (producer
+    /// conv weights along the out-channel axis, BN gamma/beta along axis 0,
+    /// depthwise filters along their channel axis). See DESIGN.md §2.
+    pub fn zero_slice(&mut self, axis: usize, idx: usize) -> Result<()> {
+        if axis >= self.shape.len() {
+            return Err(Error::shape(format!(
+                "zero_slice axis {axis} out of range for {:?}",
+                self.shape
+            )));
+        }
+        if idx >= self.shape[axis] {
+            return Err(Error::shape(format!(
+                "zero_slice idx {idx} out of range for axis {axis} of {:?}",
+                self.shape
+            )));
+        }
+        let strides = self.strides();
+        let axis_stride = strides[axis];
+        let axis_len = self.shape[axis];
+        // Iterate blocks of the outer dimensions; within each, the slice at
+        // `idx` occupies a contiguous run of `axis_stride` elements.
+        let outer: usize = self.shape[..axis].iter().product();
+        let block = axis_len * axis_stride;
+        for o in 0..outer {
+            let base = o * block + idx * axis_stride;
+            self.data[base..base + axis_stride].fill(0.0);
+        }
+        Ok(())
+    }
+
+    /// Sum of squares of the slice at `idx` along `axis` (used by the
+    /// magnitude-pruning baselines: L1/L2 filter norms).
+    pub fn slice_norm(&self, axis: usize, idx: usize, l1: bool) -> Result<f32> {
+        if axis >= self.shape.len() || idx >= self.shape[axis] {
+            return Err(Error::shape(format!(
+                "slice_norm axis {axis}/{idx} out of range for {:?}",
+                self.shape
+            )));
+        }
+        let strides = self.strides();
+        let axis_stride = strides[axis];
+        let axis_len = self.shape[axis];
+        let outer: usize = self.shape[..axis].iter().product();
+        let block = axis_len * axis_stride;
+        let mut acc = 0.0f32;
+        for o in 0..outer {
+            let base = o * block + idx * axis_stride;
+            for &v in &self.data[base..base + axis_stride] {
+                acc += if l1 { v.abs() } else { v * v };
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Max |x| over the whole tensor.
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Max |x| per slice along `axis` (per-channel dynamic ranges).
+    pub fn absmax_along(&self, axis: usize) -> Result<Vec<f32>> {
+        if axis >= self.shape.len() {
+            return Err(Error::shape(format!(
+                "absmax_along axis {axis} out of range for {:?}",
+                self.shape
+            )));
+        }
+        let strides = self.strides();
+        let axis_stride = strides[axis];
+        let axis_len = self.shape[axis];
+        let outer: usize = self.shape[..axis].iter().product();
+        let block = axis_len * axis_stride;
+        let mut out = vec![0.0f32; axis_len];
+        for o in 0..outer {
+            for j in 0..axis_len {
+                let base = o * block + j * axis_stride;
+                for &v in &self.data[base..base + axis_stride] {
+                    if v.abs() > out[j] {
+                        out[j] = v.abs();
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Rows `lo..hi` of a rank-2+ tensor along axis 0 (batch slicing).
+    pub fn rows(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            return Err(Error::shape(format!(
+                "rows {lo}..{hi} out of range for {:?}",
+                self.shape
+            )));
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(Tensor { shape, data: self.data[lo * row..hi * row].to_vec() })
+    }
+
+    /// Concatenate along axis 0.
+    pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| Error::shape("concat of nothing"))?;
+        let mut shape = first.shape.clone();
+        let mut data = Vec::new();
+        let mut rows = 0usize;
+        for p in parts {
+            if p.shape[1..] != first.shape[1..] {
+                return Err(Error::shape("concat_rows: trailing dims differ"));
+            }
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Tensor::new(shape, data)
+    }
+
+    /// Pad with zero rows along axis 0 up to `n` rows.
+    pub fn pad_rows_to(&self, n: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || self.shape[0] > n {
+            return Err(Error::shape(format!(
+                "pad_rows_to {n} from {:?}",
+                self.shape
+            )));
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        let mut data = self.data.clone();
+        data.resize(n * row, 0.0);
+        Tensor::new(shape, data)
+    }
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(TensorI32 { shape, data })
+    }
+
+    pub fn from_slice(v: &[i32]) -> Self {
+        TensorI32 { shape: vec![v.len()], data: v.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn rows(&self, lo: usize, hi: usize) -> Result<TensorI32> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            return Err(Error::shape(format!(
+                "rows {lo}..{hi} out of range for {:?}",
+                self.shape
+            )));
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(TensorI32 { shape, data: self.data[lo * row..hi * row].to_vec() })
+    }
+
+    pub fn pad_rows_to(&self, n: usize) -> Result<TensorI32> {
+        if self.shape.is_empty() || self.shape[0] > n {
+            return Err(Error::shape(format!("pad_rows_to {n} from {:?}", self.shape)));
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        let mut data = self.data.clone();
+        data.resize(n * row, 0);
+        TensorI32::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn zero_slice_axis0() {
+        let mut t = Tensor::new(vec![3, 2], (0..6).map(|v| v as f32 + 1.0).collect()).unwrap();
+        t.zero_slice(0, 1).unwrap();
+        assert_eq!(t.data(), &[1.0, 2.0, 0.0, 0.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn zero_slice_axis1() {
+        let mut t = Tensor::new(vec![2, 3], (0..6).map(|v| v as f32 + 1.0).collect()).unwrap();
+        t.zero_slice(1, 0).unwrap();
+        assert_eq!(t.data(), &[0.0, 2.0, 3.0, 0.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn zero_slice_last_axis_of_conv_weight() {
+        // (k,k,I,O) conv weight: zero out-channel 1 of 2
+        let mut t = Tensor::full(vec![3, 3, 4, 2], 1.0);
+        t.zero_slice(3, 1).unwrap();
+        let sum: f32 = t.data().iter().sum();
+        assert_eq!(sum, (3 * 3 * 4) as f32);
+    }
+
+    #[test]
+    fn slice_norm_l1_l2() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        assert_eq!(t.slice_norm(0, 1, true).unwrap(), 7.0);
+        assert_eq!(t.slice_norm(0, 1, false).unwrap(), 25.0);
+        assert_eq!(t.slice_norm(1, 0, true).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn absmax_along_channels() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5]).unwrap();
+        assert_eq!(t.absmax_along(1).unwrap(), vec![3.0, 5.0, 2.0]);
+        assert_eq!(t.absmax(), 5.0);
+    }
+
+    #[test]
+    fn rows_and_pad() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|v| v as f32).collect()).unwrap();
+        let r = t.rows(1, 3).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.data(), &[2.0, 3.0, 4.0, 5.0]);
+        let p = r.pad_rows_to(4).unwrap();
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(&p.data()[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let t = Tensor::new(vec![4, 3], (0..12).map(|v| v as f32).collect()).unwrap();
+        let a = t.rows(0, 2).unwrap();
+        let b = t.rows(2, 4).unwrap();
+        assert_eq!(Tensor::concat_rows(&[a, b]).unwrap(), t);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(vec![2, 6]);
+        assert!(t.clone().reshape(vec![3, 4]).is_ok());
+        assert!(t.reshape(vec![5]).is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! Free-standing tensor reductions used on the coordinator hot path.
+
+use super::Tensor;
+
+/// Argmax of each row of a (N, C) tensor.
+pub fn argmax_rows(logits: &Tensor) -> Vec<usize> {
+    assert_eq!(logits.rank(), 2, "argmax_rows wants rank-2");
+    let (n, c) = (logits.shape()[0], logits.shape()[1]);
+    let d = logits.data();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &d[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = j;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+/// Count of rows whose argmax equals the label. `labels` may be longer than
+/// the logits row count (padding tail ignored).
+pub fn count_correct(logits: &Tensor, labels: &[i32], valid_rows: usize) -> usize {
+    let preds = argmax_rows(logits);
+    preds
+        .iter()
+        .take(valid_rows)
+        .zip(labels.iter())
+        .filter(|(p, &y)| **p == y as usize)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 3.0, -1.0, 2.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        let t = Tensor::new(vec![1, 3], vec![1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![0]);
+    }
+
+    #[test]
+    fn correct_counts_with_padding() {
+        let t = Tensor::new(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]).unwrap();
+        // only first 2 rows are valid
+        assert_eq!(count_correct(&t, &[0, 1], 2), 2);
+        assert_eq!(count_correct(&t, &[1, 1], 2), 1);
+    }
+}

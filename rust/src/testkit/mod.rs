@@ -1,0 +1,8 @@
+//! Test substrates: deterministic PRNG + a small property-testing harness
+//! (proptest is unavailable offline — see Cargo.toml note).
+
+pub mod prng;
+pub mod prop;
+
+pub use prng::Prng;
+pub use prop::{forall, Gen};

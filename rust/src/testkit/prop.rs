@@ -1,0 +1,126 @@
+//! Minimal property-testing harness (proptest substitute).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs; on
+//! failure it greedily shrinks via the generator's `shrink` and panics with
+//! the minimal counterexample. Generators are plain structs over the
+//! [`Prng`]; compose them with closures.
+
+use super::prng::Prng;
+
+/// A generator of values + an optional shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Prng) -> Self::Value;
+
+    /// Candidate smaller values (default: none).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs (seeded deterministically so
+/// CI failures reproduce); panics with the (shrunk) counterexample.
+pub fn forall<G: Gen>(cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Prng::new(P_SEED ^ cases as u64);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // shrink loop
+            let mut cur = v.clone();
+            'outer: loop {
+                for cand in gen.shrink(&cur) {
+                    if !prop(&cand) {
+                        cur = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!("property failed on case {case}: {cur:?} (shrunk from {v:?})");
+        }
+    }
+}
+
+const P_SEED: u64 = 0x1CEB00DA;
+
+/// Usize generator in [lo, hi].
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Prng) -> usize {
+        rng.range(self.lo as i64, self.hi as i64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 vector generator with bounded length and magnitude.
+pub struct VecF32Gen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub max_abs: f32,
+}
+
+impl Gen for VecF32Gen {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Prng) -> Vec<f32> {
+        let n = rng.range(self.min_len as i64, self.max_len as i64) as usize;
+        (0..n)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * self.max_abs)
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // zero out elements
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(200, &UsizeGen { lo: 0, hi: 100 }, |&v| v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_case() {
+        forall(200, &UsizeGen { lo: 0, hi: 100 }, |&v| v < 50);
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecF32Gen { min_len: 1, max_len: 16, max_abs: 2.0 };
+        forall(100, &g, |v| {
+            v.len() >= 1 && v.len() <= 16 && v.iter().all(|x| x.abs() <= 2.0)
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Shared helpers for integration tests (need `make artifacts` first).
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory (env override for CI layouts).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("HQP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Panic with a helpful message when artifacts are missing.
+pub fn require_artifacts() -> PathBuf {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "integration tests need AOT artifacts — run `make artifacts` first \
+         (looked in {})",
+        dir.display()
+    );
+    dir
+}

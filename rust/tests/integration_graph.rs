@@ -1,0 +1,181 @@
+//! Integration: graph IR + optimizer + hardware model against the real
+//! manifests (no PJRT execution — structural/deployment checks only).
+
+mod common;
+
+use hqp::gopt::{optimize, OptimizeOptions};
+use hqp::graph::{full_masks, Graph, Liveness};
+use hqp::hwsim::{simulate, Device};
+use hqp::runtime::Workspace;
+
+const MODELS: &[&str] = &["mobilenetv3", "resnet18"];
+
+fn graph(ws: &Workspace, model: &str) -> Graph {
+    Graph::from_manifest(ws.manifest.model(model).unwrap()).unwrap()
+}
+
+#[test]
+fn graphs_build_and_validate() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let g = graph(&ws, model);
+        g.validate().unwrap();
+        assert!(g.dense_flops() > 1_000_000, "{model} should be MFLOP-scale");
+        assert!(g.dense_params() > 10_000);
+    }
+}
+
+#[test]
+fn full_liveness_keeps_every_channel() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let g = graph(&ws, model);
+        let live = Liveness::analyze(&g, &full_masks(&g)).unwrap();
+        for n in &g.nodes {
+            assert_eq!(
+                live.count(n.output),
+                g.channels(n.output),
+                "{model}/{}: full masks must keep all channels",
+                n.name
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_coupling_limits_elimination_on_resnet() {
+    // Masking a residual-block conv2 channel must NOT eliminate the trunk
+    // channel (the skip path keeps it alive) — the §V-D coupling story.
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let g = graph(&ws, "resnet18");
+    let gid = g
+        .groups
+        .iter()
+        .find(|gr| gr.name == "stage0.block1.conv2")
+        .expect("conv2 group")
+        .id;
+    let mut masks = full_masks(&g);
+    masks[gid][0] = false;
+    let live = Liveness::analyze(&g, &masks).unwrap();
+    let add_node = g
+        .nodes
+        .iter()
+        .find(|n| n.name == "stage0.block1.add")
+        .unwrap();
+    assert_eq!(
+        live.count(add_node.output),
+        g.channels(add_node.output),
+        "skip path must keep the trunk channel alive"
+    );
+}
+
+#[test]
+fn mobilenet_expansion_masking_shrinks_depthwise() {
+    // Masking expansion channels must propagate through the depthwise conv
+    // (same prune group) and shrink the deployed engine.
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let g = graph(&ws, "mobilenetv3");
+    let gid = g
+        .groups
+        .iter()
+        .find(|gr| gr.name == "block1.expand")
+        .expect("expand group")
+        .id;
+    let mut masks = full_masks(&g);
+    let half = g.groups[gid].size / 2;
+    for j in 0..half {
+        masks[gid][j] = false;
+    }
+    let full_eng = optimize(&g, &full_masks(&g), &OptimizeOptions::fp32()).unwrap();
+    let prun_eng = optimize(&g, &masks, &OptimizeOptions::fp32()).unwrap();
+    assert!(prun_eng.flops() < full_eng.flops());
+    let dw = prun_eng
+        .ops
+        .iter()
+        .find(|o| o.name == "block1.dw")
+        .expect("depthwise op survives");
+    assert_eq!(dw.cout, g.groups[gid].size - half);
+}
+
+#[test]
+fn deployment_orderings_hold_on_every_device() {
+    // The relations the paper's tables depend on must hold structurally:
+    // int8 ≤ fp32 latency; pruned+int8 ≤ int8; sizes likewise.
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let g = graph(&ws, model);
+        let masks_full = full_masks(&g);
+        let mut masks_third = masks_full.clone();
+        for (gi, gr) in g.groups.iter().enumerate() {
+            for j in 0..gr.size / 3 {
+                masks_third[gi][j] = false;
+            }
+        }
+        let fp32 = optimize(&g, &masks_full, &OptimizeOptions::fp32()).unwrap();
+        let int8 = optimize(&g, &masks_full, &OptimizeOptions::int8()).unwrap();
+        let hqp8 = optimize(&g, &masks_third, &OptimizeOptions::int8()).unwrap();
+        assert!(int8.weight_bytes < fp32.weight_bytes);
+        assert!(hqp8.weight_bytes < int8.weight_bytes);
+        for dev in Device::all() {
+            let l32 = simulate(&fp32, &dev).latency_ms;
+            let l8 = simulate(&int8, &dev).latency_ms;
+            let lh = simulate(&hqp8, &dev).latency_ms;
+            assert!(l8 <= l32 * 1.0001, "{model}@{}: int8 {l8} vs fp32 {l32}", dev.name);
+            assert!(lh <= l8 * 1.0001, "{model}@{}: hqp {lh} vs int8 {l8}", dev.name);
+        }
+    }
+}
+
+#[test]
+fn int8_speedup_larger_on_nx_than_nano() {
+    // §IV-A heterogeneity: tensor cores only on NX.
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let g = graph(&ws, model);
+        let fp32 = optimize(&g, &full_masks(&g), &OptimizeOptions::fp32()).unwrap();
+        let int8 = optimize(&g, &full_masks(&g), &OptimizeOptions::int8()).unwrap();
+        let sp =
+            |dev: &Device| simulate(&fp32, dev).latency_ms / simulate(&int8, dev).latency_ms;
+        let nano = sp(&Device::jetson_nano());
+        let nx = sp(&Device::xavier_nx());
+        assert!(
+            nx > nano,
+            "{model}: NX int8 speedup {nx:.2} must exceed Nano {nano:.2}"
+        );
+    }
+}
+
+#[test]
+fn fusion_reduces_deployed_latency() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let g = graph(&ws, model);
+        let mut no_fuse = OptimizeOptions::fp32();
+        no_fuse.fusion = false;
+        let fused = optimize(&g, &full_masks(&g), &OptimizeOptions::fp32()).unwrap();
+        let unfused = optimize(&g, &full_masks(&g), &no_fuse).unwrap();
+        assert!(fused.ops.len() < unfused.ops.len());
+        let dev = Device::xavier_nx();
+        assert!(
+            simulate(&fused, &dev).latency_ms < simulate(&unfused, &dev).latency_ms,
+            "{model}: fusion must reduce latency"
+        );
+    }
+}
+
+#[test]
+fn masking_everything_but_one_group_still_validates() {
+    // Extreme masks must not break the optimizer (degenerate engines are
+    // legal as long as at least the classifier path survives).
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let g = graph(&ws, "resnet18");
+    let mut masks = full_masks(&g);
+    for m in masks.iter_mut() {
+        for j in 1..m.len() {
+            m[j] = false; // keep exactly one filter per group
+        }
+    }
+    let eng = optimize(&g, &masks, &OptimizeOptions::int8()).unwrap();
+    assert!(eng.flops() > 0);
+    assert!(simulate(&eng, &Device::xavier_nx()).latency_ms > 0.0);
+}

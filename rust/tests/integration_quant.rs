@@ -1,0 +1,101 @@
+//! Integration: the PTQ stack (calibration + weight projection + measured
+//! INT8 accuracy) against the real artifacts.
+
+mod common;
+
+use hqp::hqp::{ptq, HqpConfig};
+use hqp::quant::{CalibMethod, Calibrator};
+use hqp::runtime::{Session, Workspace};
+
+#[test]
+fn ptq_produces_valid_scales_and_grid_weights() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let cfg = HqpConfig::default();
+    let params = sess.baseline.clone();
+    let res = ptq::quantize(&mut sess, &params, &cfg).unwrap();
+
+    assert_eq!(res.scales.len(), sess.mm.taps.len());
+    assert!(res.scales.iter().all(|&s| s > 0.0 && s.is_finite()));
+    assert!(res.thresholds.iter().all(|&t| t > 0.0));
+
+    // every quantized weight tensor lies exactly on its int8 grid
+    for spec in &sess.mm.param_order.clone() {
+        if !spec.name.ends_with(".w") {
+            continue;
+        }
+        let w = res.params.get(&spec.name).unwrap();
+        let s = w.absmax() / 127.0;
+        if s == 0.0 {
+            continue;
+        }
+        for &v in w.data().iter().take(200) {
+            let q = v / s;
+            assert!(
+                (q - q.round()).abs() < 1e-3,
+                "{}: {v} not on grid (s={s})",
+                spec.name
+            );
+        }
+    }
+    // and accuracy is sane (measured through the Pallas quant_eval path)
+    assert!(res.accuracy > 0.5, "int8 accuracy collapsed: {}", res.accuracy);
+}
+
+#[test]
+fn kl_calibration_never_exceeds_minmax_threshold() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let ranges = sess.act_absmax(&params).unwrap();
+    let hist = sess.act_hist(&params, &ranges).unwrap();
+    let bins = hist.shape()[1];
+    let kl = Calibrator::new(CalibMethod::Kl);
+    let mm = Calibrator::new(CalibMethod::MinMax);
+    for (i, &r) in ranges.iter().enumerate() {
+        let row = &hist.data()[i * bins..(i + 1) * bins];
+        let t_kl = kl.threshold(row, r);
+        let t_mm = mm.threshold(row, r);
+        assert!(t_kl <= t_mm + 1e-6, "tap {i}: KL {t_kl} > minmax {t_mm}");
+        assert!(t_kl > 0.0);
+    }
+}
+
+#[test]
+fn per_channel_weights_do_not_hurt_accuracy() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let mut cfg = HqpConfig::default();
+    let pt = ptq::quantize(&mut sess, &params, &cfg).unwrap();
+    cfg.per_channel_weights = true;
+    let pc = ptq::quantize(&mut sess, &params, &cfg).unwrap();
+    // Per-channel scales isolate per-filter outliers; they can only help
+    // (allow a tiny tolerance for rounding luck).
+    assert!(
+        pc.accuracy >= pt.accuracy - 0.01,
+        "per-channel {:.4} much worse than per-tensor {:.4}",
+        pc.accuracy,
+        pt.accuracy
+    );
+}
+
+#[test]
+fn minmax_calibration_is_not_better_than_kl() {
+    // The paper's premise: naive minmax activation ranges are vulnerable to
+    // outliers; KL should match or beat them on accuracy.
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let mut cfg = HqpConfig::default();
+    cfg.calib_method = CalibMethod::Kl;
+    let kl = ptq::quantize(&mut sess, &params, &cfg).unwrap();
+    cfg.calib_method = CalibMethod::MinMax;
+    let mm = ptq::quantize(&mut sess, &params, &cfg).unwrap();
+    assert!(
+        kl.accuracy >= mm.accuracy - 0.015,
+        "KL {:.4} should not lose to minmax {:.4} by a wide margin",
+        kl.accuracy,
+        mm.accuracy
+    );
+}

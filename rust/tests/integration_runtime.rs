@@ -1,0 +1,219 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Exercises the full L2→L3 contract: manifest parse, weight/dataset
+//! loading, HLO-text compile, buffer execution, masking semantics.
+//! One `#[test]` per concern, all sharing a single workspace (PJRT client
+//! creation is cheap but executable compiles are not — tests are grouped
+//! to compile each artifact once).
+
+mod common;
+
+use hqp::graph::Graph;
+use hqp::runtime::{ParamStore, Session, Workspace};
+use hqp::tensor::Tensor;
+
+const MODELS: &[&str] = &["mobilenetv3", "resnet18"];
+
+#[test]
+fn manifest_contract_holds_for_all_models() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let mm = ws.manifest.model(model).unwrap();
+        // group offsets tile the filter space exactly
+        let mut expect = 0usize;
+        for g in &mm.groups {
+            assert_eq!(g.offset, expect, "{model}: group {} offset", g.name);
+            expect += g.size;
+            // every member param exists with the named axis in range
+            for (p, axis) in &g.members {
+                let spec = &mm.param_order[mm.param_index(p).unwrap()];
+                assert!(
+                    *axis < spec.shape.len(),
+                    "{model}: member {p} axis {axis} vs {:?}",
+                    spec.shape
+                );
+                assert_eq!(
+                    spec.shape[*axis], g.size,
+                    "{model}: member {p} axis len != group size"
+                );
+            }
+        }
+        assert_eq!(expect, mm.total_filters());
+        // artifacts present for the full exported fn set
+        for fn_name in ["eval", "fisher", "absmax", "hist", "quant_eval"] {
+            let art = mm.artifacts.get(fn_name).expect(fn_name);
+            assert!(
+                ws.root.join(&art.file).exists(),
+                "{model}: missing artifact file {}",
+                art.file
+            );
+        }
+        // the graph IR builds and validates from the same manifest
+        let g = Graph::from_manifest(mm).unwrap();
+        assert!(g.dense_flops() > 0);
+        assert_eq!(g.groups.len(), mm.groups.len());
+    }
+}
+
+#[test]
+fn weights_and_datasets_load_with_expected_shapes() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let mm = ws.manifest.model(model).unwrap();
+        let ps = ParamStore::load(&ws.root, mm).unwrap();
+        assert_eq!(ps.len(), mm.param_order.len());
+        assert!(ps.num_elements() > 10_000, "{model} suspiciously small");
+    }
+    for split in ["calib", "val", "test"] {
+        let (x, y) = ws.load_split(split).unwrap();
+        assert_eq!(x.shape()[1..], [32, 32, 3]);
+        assert_eq!(x.shape()[0], y.shape()[0]);
+        // labels are valid classes
+        assert!(y.data().iter().all(|&c| (0..10).contains(&c)));
+        // images normalized to [0, 1]
+        assert!(x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}
+
+#[test]
+fn eval_executes_and_baseline_accuracy_matches_manifest() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    for model in MODELS {
+        let mut sess = Session::new(&ws, model).unwrap();
+        let params = sess.baseline.clone();
+        let acc = sess.accuracy(&params, "val").unwrap();
+        let expect = sess.mm.baseline_val_acc;
+        assert!(
+            (acc - expect).abs() < 0.01,
+            "{model}: rust-measured {acc} vs python-measured {expect}"
+        );
+        assert!(sess.counters.executions > 0);
+        assert_eq!(sess.counters.inference_samples, 1024);
+    }
+}
+
+#[test]
+fn eval_logits_padding_invariance() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let (x, _y) = ws.load_split("val").unwrap();
+    let full = x.rows(0, 8).unwrap();
+    let l8 = sess.eval_logits(&params, &full).unwrap();
+    let l3 = sess.eval_logits(&params, &x.rows(0, 3).unwrap()).unwrap();
+    assert_eq!(l8.shape(), &[8, 10]);
+    assert_eq!(l3.shape(), &[3, 10]);
+    // same inputs -> same logits regardless of padding rows
+    for i in 0..3 * 10 {
+        assert!(
+            (l8.data()[i] - l3.data()[i]).abs() < 1e-4,
+            "logit {i}: {} vs {}",
+            l8.data()[i],
+            l3.data()[i]
+        );
+    }
+}
+
+#[test]
+fn masking_a_filter_is_structural_removal() {
+    // Zeroing a group via its member list must (a) change the logits of the
+    // model only as much as removing that channel would, and (b) be exactly
+    // reproducible: masking twice == masking once (idempotent).
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let mm = sess.mm.clone();
+    let (x, _y) = ws.load_split("val").unwrap();
+    let xb = x.rows(0, 16).unwrap();
+
+    let mut masked = sess.baseline.clone();
+    let g = &mm.groups[2];
+    masked.mask_filter(g, 0).unwrap();
+    let once = sess.eval_logits(&masked, &xb).unwrap();
+
+    let mut twice = masked.clone();
+    twice.mask_filter(g, 0).unwrap();
+    let again = sess.eval_logits(&twice, &xb).unwrap();
+    assert_eq!(once.data(), again.data(), "masking must be idempotent");
+
+    // and the zero slices really are zero
+    let w = masked.get(&g.producer).unwrap();
+    assert_eq!(w.slice_norm(g.producer_axis, 0, true).unwrap(), 0.0);
+}
+
+#[test]
+fn quant_eval_rejects_wrong_scale_count() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let bad = vec![0.1f32; 3];
+    assert!(sess.quant_accuracy(&params, &bad, "val").is_err());
+}
+
+#[test]
+fn quant_eval_with_absmax_scales_tracks_fp32() {
+    // With per-tap scales = absmax/127 (full range, no saturation) the
+    // INT8 artifact must compute nearly the same function as the FP32 one
+    // — unquantized weights, only activations on the grid.
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let fp32 = sess.accuracy(&params, "val").unwrap();
+    let ranges = sess.act_absmax(&params).unwrap();
+    let scales: Vec<f32> = ranges.iter().map(|&r| r / 127.0).collect();
+    let q = sess.quant_accuracy(&params, &scales, "val").unwrap();
+    assert!(
+        (fp32 - q).abs() < 0.03,
+        "absmax-scale quant_eval {q} strays from fp32 {fp32}"
+    );
+
+    // and saturating scales must hurt badly (sanity that scales matter)
+    let saturating = vec![1e-4f32; sess.mm.taps.len()];
+    let qs = sess.quant_accuracy(&params, &saturating, "val").unwrap();
+    assert!(qs < fp32 - 0.2, "saturating scales should collapse accuracy, got {qs}");
+}
+
+#[test]
+fn absmax_and_hist_are_consistent() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let ranges = sess.act_absmax(&params).unwrap();
+    assert_eq!(ranges.len(), sess.mm.taps.len());
+    assert!(ranges.iter().all(|&r| r > 0.0), "activations can't be all-zero");
+
+    let hist = sess.act_hist(&params, &ranges).unwrap();
+    assert_eq!(hist.shape(), &[sess.mm.taps.len(), 2048]);
+    let total: f32 = hist.data().iter().sum();
+    assert!(total > 0.0);
+    // every tap's histogram mass equals the number of activation elements
+    // counted — and no mass can land beyond the measured absmax except the
+    // clamped top bin; sanity: all counts non-negative.
+    assert!(hist.data().iter().all(|&c| c >= 0.0));
+}
+
+#[test]
+fn fisher_scores_nonnegative_and_informative() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let s = sess.fisher_scores(&params, 64).unwrap();
+    assert_eq!(s.len(), sess.mm.total_filters());
+    assert!(s.iter().all(|&v| v >= 0.0), "squared grads are non-negative");
+    let nonzero = s.iter().filter(|&&v| v > 0.0).count();
+    assert!(
+        nonzero > s.len() / 2,
+        "most filters should carry gradient signal ({nonzero}/{})",
+        s.len()
+    );
+    assert!(sess.counters.grad_samples >= 64);
+}
+
+#[test]
+fn pad_rows_respects_batch_contract() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let eb = sess.mm.eval_batch;
+    let too_big = Tensor::zeros(vec![eb + 1, 32, 32, 3]);
+    assert!(sess.eval_logits(&params, &too_big).is_err());
+}

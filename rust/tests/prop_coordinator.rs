@@ -1,0 +1,219 @@
+//! Property tests over the coordinator invariants (testkit harness — the
+//! offline substitute for proptest; see DESIGN.md §Substitutions).
+//!
+//! These run WITHOUT artifacts: they drive the pure-Rust substrates
+//! (liveness, quantization, calibration, JSON/npy, autotune, ranking) over
+//! randomized inputs.
+
+use hqp::formats::json::Json;
+use hqp::formats::npy::{read_npy_f32, write_npy_f32};
+use hqp::gopt::autotune::{autotune, tile_efficiency, DEFAULT_TILES};
+use hqp::quant::{dequantize, quantize_per_channel, quantize_per_tensor, Calibrator, CalibMethod};
+use hqp::tensor::Tensor;
+use hqp::testkit::prng::Prng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_quantize_roundtrip_error_bounded_by_half_step() {
+    let mut rng = Prng::new(101);
+    for _ in 0..CASES {
+        let n = rng.below(64) + 1;
+        let amp = rng.next_f32() * 100.0 + 1e-3;
+        let data: Vec<f32> = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * amp).collect();
+        let t = Tensor::from_slice(&data);
+        let q = quantize_per_tensor(&t, 8);
+        let d = dequantize(&q).unwrap();
+        let s = q.scales[0];
+        for (a, b) in t.data().iter().zip(d.data()) {
+            assert!(
+                (a - b).abs() <= 0.5 * s + 1e-6,
+                "|{a} - {b}| > s/2 = {}",
+                0.5 * s
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_per_channel_error_never_worse_than_per_tensor() {
+    let mut rng = Prng::new(202);
+    for _ in 0..CASES {
+        let c = rng.below(8) + 2;
+        let k = rng.below(16) + 1;
+        let mut data = Vec::with_capacity(c * k);
+        for ch in 0..c {
+            // channels with wildly different magnitudes
+            let amp = 10f32.powi(rng.range(-2, 2) as i32) * (ch as f32 + 1.0);
+            for _ in 0..k {
+                data.push((rng.next_f32() * 2.0 - 1.0) * amp);
+            }
+        }
+        let t = Tensor::new(vec![c, k], data).unwrap();
+        let err = |d: &Tensor| -> f64 {
+            t.data()
+                .iter()
+                .zip(d.data())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let e_pt = err(&dequantize(&quantize_per_tensor(&t, 8)).unwrap());
+        let e_pc = err(&dequantize(&quantize_per_channel(&t, 0, 8).unwrap()).unwrap());
+        assert!(
+            e_pc <= e_pt * 1.0001 + 1e-12,
+            "per-channel mse {e_pc} > per-tensor {e_pt}"
+        );
+    }
+}
+
+#[test]
+fn prop_calibrator_threshold_in_range() {
+    let mut rng = Prng::new(303);
+    let cals = [
+        Calibrator::new(CalibMethod::MinMax),
+        Calibrator::new(CalibMethod::Percentile),
+        Calibrator::new(CalibMethod::Kl),
+    ];
+    for _ in 0..60 {
+        let bins = 2048;
+        let mut hist = vec![0f32; bins];
+        // random mixture of gaussians + outlier spikes
+        for _ in 0..rng.below(4) + 1 {
+            let center = rng.below(bins);
+            let sigma = (rng.below(200) + 5) as f64;
+            for (i, h) in hist.iter_mut().enumerate() {
+                let d = (i as f64 - center as f64) / sigma;
+                *h += (1000.0 * (-0.5 * d * d).exp()) as f32;
+            }
+        }
+        if rng.next_f32() < 0.5 {
+            let spike = bins - 1 - rng.below(50);
+            hist[spike] += (rng.below(10) + 1) as f32;
+        }
+        let range = rng.next_f32() * 20.0 + 0.01;
+        for cal in &cals {
+            let t = cal.threshold(&hist, range);
+            assert!(
+                t > 0.0 && t <= range * 1.0001,
+                "threshold {t} out of (0, {range}]"
+            );
+            let s = cal.scale(&hist, range);
+            assert!(s > 0.0 && s.is_finite());
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Prng::new(404);
+    fn gen(rng: &mut Prng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 1e3 - 1000.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..CASES {
+        let v = gen(&mut rng, 0);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(compact, v);
+        assert_eq!(pretty, v);
+    }
+}
+
+#[test]
+fn prop_npy_roundtrip() {
+    let mut rng = Prng::new(505);
+    let dir = std::env::temp_dir().join("hqp_prop_npy");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..60 {
+        let rank = rng.below(3) + 1;
+        let shape: Vec<usize> = (0..rank).map(|_| rng.below(6) + 1).collect();
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 1e4).collect();
+        let t = Tensor::new(shape, data).unwrap();
+        let p = dir.join(format!("case{case}.npy"));
+        write_npy_f32(&p, &t).unwrap();
+        assert_eq!(read_npy_f32(&p).unwrap(), t);
+    }
+}
+
+#[test]
+fn prop_autotune_never_worse_than_any_candidate() {
+    let mut rng = Prng::new(606);
+    for _ in 0..CASES {
+        let m = rng.below(2000) + 1;
+        let n = rng.below(2000) + 1;
+        let k = rng.below(2000) + 1;
+        let (_, best) = autotune(m, n, k, DEFAULT_TILES);
+        for &t in DEFAULT_TILES {
+            assert!(
+                best >= tile_efficiency(m, n, k, t) - 1e-12,
+                "autotune missed a better tile for {m}x{n}x{k}"
+            );
+        }
+        assert!(best > 0.0 && best <= 1.0);
+    }
+}
+
+#[test]
+fn prop_ranking_sorts_scores_ascending() {
+    let mut rng = Prng::new(707);
+    for _ in 0..CASES {
+        let n = rng.below(500) + 1;
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_f32() * 10.0).collect();
+        let mut ranking: Vec<usize> = (0..n).collect();
+        ranking.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+        for w in ranking.windows(2) {
+            assert!(scores[w[0]] <= scores[w[1]]);
+        }
+        // ranking is a permutation
+        let mut seen = vec![false; n];
+        for &i in &ranking {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+}
+
+#[test]
+fn prop_zero_slice_only_touches_its_slice() {
+    let mut rng = Prng::new(808);
+    for _ in 0..CASES {
+        let rank = rng.below(3) + 1;
+        let shape: Vec<usize> = (0..rank).map(|_| rng.below(5) + 1).collect();
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let mut t = Tensor::new(shape.clone(), data.clone()).unwrap();
+        let axis = rng.below(rank);
+        let idx = rng.below(shape[axis]);
+        t.zero_slice(axis, idx).unwrap();
+        let strides = t.strides();
+        for (i, (&v, &orig)) in t.data().iter().zip(&data).enumerate() {
+            let coord = (i / strides[axis]) % shape[axis];
+            if coord == idx {
+                assert_eq!(v, 0.0);
+            } else {
+                assert_eq!(v, orig);
+            }
+        }
+    }
+}
