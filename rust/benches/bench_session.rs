@@ -1,0 +1,168 @@
+//! `cargo bench --bench bench_session [-- --smoke]` — measurement-loop
+//! perf: the incremental device-buffer cache, the copy-on-write
+//! [`ParamStore`] clone, and early-exit bounded validation.
+//!
+//! Emits `BENCH_session.json` (benchkit [`Report`]) with both timing stats
+//! and the counter-derived effectiveness metrics, so the perf trajectory of
+//! the HQP measurement hot path is tracked from this PR onward:
+//!
+//! * `upload_bytes_cold`      — parameter bytes a cold call moves
+//! * `upload_bytes_step`      — bytes one accepted δ-step re-uploads
+//! * `upload_ratio`           — cold / step (acceptance floor: ≥ 5×)
+//! * `bounded_batches_saved`  — validation batches early exit avoided on a
+//!                              collapsed candidate
+//! * `e2e_batches_skipped`    — batches the full HQP pipeline skipped
+//!
+//! `--smoke` shrinks iteration counts (CI) and skips the e2e pipeline; the
+//! host-side section runs even without artifacts so the bench always
+//! produces a report.
+
+use hqp::benchkit::{bench, section, Report};
+use hqp::hqp::{pipeline, HqpConfig};
+use hqp::runtime::{ParamStore, Session, Workspace};
+use hqp::tensor::Tensor;
+
+fn host_side(report: &mut Report, iters: usize) {
+    section("host side — copy-on-write ParamStore");
+    // a model-shaped store: a few conv-like tensors + BN vectors
+    let named: Vec<(String, Tensor)> = (0..16)
+        .flat_map(|i| {
+            vec![
+                (format!("b{i}.w"), Tensor::full(vec![3, 3, 16, 32], 0.5)),
+                (format!("b{i}.gamma"), Tensor::full(vec![32], 1.0)),
+                (format!("b{i}.beta"), Tensor::full(vec![32], 0.0)),
+            ]
+        })
+        .collect();
+    let store = ParamStore::from_tensors(named);
+    report.push(bench("paramstore.clone (cow, 48 slots)", 3, iters, || {
+        store.clone()
+    }));
+    report.push(bench("clone + mask 1 filter (cow write)", 3, iters, || {
+        let mut c = store.clone();
+        c.get_mut("b0.gamma").unwrap().data_mut()[0] = 0.0;
+        c
+    }));
+    report.metric("paramstore_bytes", store.num_bytes() as f64);
+}
+
+fn device_side(report: &mut Report, smoke: bool) {
+    let root = std::env::var("HQP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&root).join("manifest.json").exists() {
+        println!("\n(no artifacts under {root} — skipping PJRT sections; run `make artifacts`)");
+        return;
+    }
+    let ws = Workspace::open(&root).expect("workspace");
+    let model = "resnet18";
+    let mut sess = Session::new(&ws, model).expect("session");
+    let params = sess.baseline.clone();
+    let mm = sess.mm.clone();
+    let total = mm.total_filters();
+    let step = ((total as f64 * 0.01).round() as usize).max(1); // paper δ = 1 %
+    let (warm_iters, eval_iters) = if smoke { (5, 1) } else { (30, 5) };
+
+    // ---- upload: cold vs dirty-only ---------------------------------------
+    section("device side — parameter upload (cold vs dirty-only)");
+    report.push(bench("upload cold (full model)", 1, warm_iters, || {
+        sess.reset_param_cache();
+        sess.warm_params(&params).unwrap()
+    }));
+    sess.warm_params(&params).unwrap();
+    // evolve ONE store like the real accept loop does (masks accumulate):
+    // a fresh clone of pristine params each iteration would also revert the
+    // previous window's slots and double the measured upload set
+    let mut cand = params.clone();
+    let mut j = 0usize;
+    report.push(bench("upload dirty-only (1 δ-step of filters)", 1, warm_iters, || {
+        for f in 0..step {
+            let (g, k) = mm.locate_filter((j + f) % total).unwrap();
+            cand.mask_filter(g, k).unwrap();
+        }
+        j = (j + step) % total;
+        sess.warm_params(&cand).unwrap()
+    }));
+
+    // counter-derived byte accounting for one accepted prune step
+    sess.reset_param_cache();
+    let before = sess.counters;
+    sess.warm_params(&params).unwrap();
+    let cold_bytes = sess.counters.upload_bytes - before.upload_bytes;
+    let mut accepted = params.clone();
+    for f in 0..step {
+        let (g, k) = mm.locate_filter(f).unwrap();
+        accepted.mask_filter(g, k).unwrap();
+    }
+    let before = sess.counters;
+    sess.warm_params(&accepted).unwrap();
+    let step_bytes = sess.counters.upload_bytes - before.upload_bytes;
+    report.metric("upload_bytes_cold", cold_bytes as f64);
+    report.metric("upload_bytes_step", step_bytes as f64);
+    let ratio = cold_bytes as f64 / (step_bytes as f64).max(1.0);
+    report.metric("upload_ratio", ratio);
+    assert!(
+        ratio >= 5.0,
+        "acceptance floor: dirty-only upload must move ≥5x fewer bytes \
+         (cold {cold_bytes} vs step {step_bytes})"
+    );
+
+    // ---- validation: full sweep vs bounded early exit ---------------------
+    section("device side — full vs early-exit validation");
+    let base_acc = sess.accuracy(&params, "val").unwrap();
+    // a collapsed candidate: masking the most filters the manifest allows
+    // makes the reject decision fall out of the first batch or two
+    let mut collapsed = params.clone();
+    for f in 0..total / 2 {
+        let (g, k) = mm.locate_filter(f).unwrap();
+        collapsed.mask_filter(g, k).unwrap();
+    }
+    report.push(bench("accuracy full sweep (candidate)", 1, eval_iters, || {
+        sess.accuracy(&collapsed, "val").unwrap()
+    }));
+    report.push(bench("accuracy_bounded (same candidate)", 1, eval_iters, || {
+        sess.accuracy_bounded(&collapsed, "val", base_acc, 0.015).unwrap()
+    }));
+    let full = sess.accuracy(&collapsed, "val").unwrap();
+    let bounded = sess
+        .accuracy_bounded(&collapsed, "val", base_acc, 0.015)
+        .unwrap();
+    assert_eq!(
+        bounded.accepted,
+        base_acc - full <= 0.015,
+        "bounded decision must equal the full-sweep decision"
+    );
+    report.metric("bounded_batches_run", bounded.batches_run as f64);
+    report.metric("bounded_batches_saved", bounded.batches_skipped as f64);
+
+    // ---- e2e: the conditional loop with caching + early exit --------------
+    if !smoke {
+        section("e2e — HQP pipeline counters");
+        let mut e2e = Session::new(&ws, model).expect("session");
+        let cfg = HqpConfig {
+            delta_step_frac: 0.02,
+            calib_samples: 128,
+            ..Default::default()
+        };
+        pipeline::run_hqp(&mut e2e, &cfg).expect("hqp");
+        let c = e2e.counters;
+        report.metric("e2e_executions", c.executions as f64);
+        report.metric("e2e_upload_tensors", c.upload_tensors as f64);
+        report.metric("e2e_upload_bytes", c.upload_bytes as f64);
+        report.metric("e2e_batches_skipped", c.batches_skipped as f64);
+        let cold = params.num_bytes() as f64;
+        let steps = (c.executions as f64 / 4.0).max(1.0); // ~4 val batches/sweep
+        println!(
+            "  (cold model = {cold:.0} B; uploaded {:.0} B over ~{steps:.0} sweeps)",
+            c.upload_bytes as f64
+        );
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 20 } else { 200 };
+    let mut report = Report::new();
+    host_side(&mut report, iters);
+    device_side(&mut report, smoke);
+    report.write_json("BENCH_session.json").expect("write BENCH_session.json");
+    println!("\nwrote BENCH_session.json");
+}

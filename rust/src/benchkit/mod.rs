@@ -2,10 +2,15 @@
 //!
 //! `cargo bench` targets are plain binaries (`harness = false`) built on
 //! this module: warmup + timed iterations, robust stats, aligned text
-//! output. Used both by the micro benches (§Perf L3) and as the driver for
-//! the table/figure regeneration benches.
+//! output, and a machine-readable [`Report`] that serializes stats plus
+//! named scalar metrics (counter deltas, ratios) to `BENCH_*.json` so the
+//! perf trajectory is tracked across PRs. Used both by the micro benches
+//! (§Perf L3) and as the driver for the table/figure regeneration benches.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::formats::json::Json;
 
 /// Timing statistics over a batch of iterations.
 #[derive(Clone, Debug)]
@@ -75,6 +80,62 @@ pub fn section(title: &str) {
     println!("\n=== {title} {}", "=".repeat(68usize.saturating_sub(title.len())));
 }
 
+/// Machine-readable benchmark report: collected [`Stats`] + named scalar
+/// metrics, serialized as `BENCH_<name>.json` for cross-PR tracking.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    stats: Vec<Stats>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Record (and print) one timing result.
+    pub fn push(&mut self, s: Stats) {
+        println!("{}", s.line());
+        self.stats.push(s);
+    }
+
+    /// Record a named scalar (counter delta, ratio, byte count, …).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        println!("{key:<44} {value:>14.3}");
+        self.metrics.push((key.to_string(), value));
+    }
+
+    fn to_json(&self) -> Json {
+        let stats = Json::Arr(
+            self.stats
+                .iter()
+                .map(|s| {
+                    Json::obj()
+                        .set("name", s.name.clone())
+                        .set("iters", s.iters as f64)
+                        .set("mean_ms", s.mean_ms)
+                        .set("p50_ms", s.p50_ms)
+                        .set("p95_ms", s.p95_ms)
+                        .set("min_ms", s.min_ms)
+                        .set("max_ms", s.max_ms)
+                        .set("std_ms", s.std_ms)
+                })
+                .collect(),
+        );
+        let metrics = self
+            .metrics
+            .iter()
+            .fold(Json::obj(), |o, (k, v)| o.set(k.clone(), *v));
+        Json::obj().set("stats", stats).set("metrics", metrics)
+    }
+
+    /// Serialize to `path` (pretty JSON).
+    pub fn write_json(&self, path: impl AsRef<Path>) -> crate::error::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +171,25 @@ mod tests {
         let (v, ms) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn report_serializes_stats_and_metrics() {
+        let mut r = Report::new();
+        r.push(Stats::from_samples("fast", vec![1.0, 2.0, 3.0]));
+        r.metric("upload_bytes_cold", 708608.0);
+        r.metric("upload_ratio", 11.4);
+        let path = std::env::temp_dir().join("BENCH_benchkit_test.json");
+        r.write_json(&path).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let stats = v.req("stats").unwrap().as_arr().unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].req("name").unwrap().as_str().unwrap(), "fast");
+        let m = v.req("metrics").unwrap();
+        assert_eq!(m.req("upload_ratio").unwrap().as_f64().unwrap(), 11.4);
+        assert_eq!(
+            m.req("upload_bytes_cold").unwrap().as_f64().unwrap(),
+            708608.0
+        );
     }
 }

@@ -97,6 +97,10 @@ pub fn run_method(
         .map(|s| (s.sparsity, s.accuracy, s.accepted))
         .collect();
 
+    // Counters describe the (device-independent) method run; every device
+    // row carries the same snapshot so consumers of a single row see the
+    // measured C_HQP terms and cache effectiveness alongside the report.
+    let counters = sess.counters;
     let rows: Vec<ResultRow> = devices
         .iter()
         .map(|dev| {
@@ -105,6 +109,7 @@ pub fn run_method(
                 trace: trace.clone(),
                 group_sparsity: group_sparsity.clone(),
                 group_saliency: group_saliency.clone(),
+                counters,
             })
         })
         .collect::<Result<Vec<_>>>()?;

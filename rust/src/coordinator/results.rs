@@ -7,6 +7,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::formats::json::Json;
 use crate::hqp::MethodReport;
+use crate::runtime::Counters;
 
 /// One persisted row = [`MethodReport`] + optional prune trace.
 #[derive(Clone, Debug)]
@@ -18,6 +19,10 @@ pub struct ResultRow {
     pub group_sparsity: Vec<f64>,
     /// Per-group mean Fisher S (layer-wise analysis).
     pub group_saliency: Vec<f64>,
+    /// Session execution counters of the method run that produced this row
+    /// (the measured §III-C cost terms + caching effectiveness: uploaded
+    /// parameter tensors/bytes, early-exit batches skipped).
+    pub counters: Counters,
 }
 
 fn report_to_json(r: &MethodReport) -> Json {
@@ -34,6 +39,34 @@ fn report_to_json(r: &MethodReport) -> Json {
         .set("energy_mj", r.energy_mj)
         .set("energy_ratio", r.energy_ratio)
         .set("flops", r.flops as f64)
+}
+
+fn counters_to_json(c: &Counters) -> Json {
+    Json::obj()
+        .set("inference_samples", c.inference_samples as f64)
+        .set("grad_samples", c.grad_samples as f64)
+        .set("executions", c.executions as f64)
+        .set("upload_bytes", c.upload_bytes as f64)
+        .set("upload_tensors", c.upload_tensors as f64)
+        .set("batches_skipped", c.batches_skipped as f64)
+}
+
+/// Missing key → zero counters: rows cached before the counters field
+/// existed stay loadable.
+fn counters_from_json(v: &Json) -> Result<Counters> {
+    let c = match v.get("counters") {
+        Some(c) => c,
+        None => return Ok(Counters::default()),
+    };
+    let u = |key: &str| -> Result<u64> { Ok(c.req(key)?.as_f64()? as u64) };
+    Ok(Counters {
+        inference_samples: u("inference_samples")?,
+        grad_samples: u("grad_samples")?,
+        executions: u("executions")?,
+        upload_bytes: u("upload_bytes")?,
+        upload_tensors: u("upload_tensors")?,
+        batches_skipped: u("batches_skipped")?,
+    })
 }
 
 fn report_from_json(v: &Json) -> Result<MethodReport> {
@@ -74,6 +107,7 @@ pub fn save_results(dir: impl AsRef<Path>, name: &str, rows: &[ResultRow]) -> Re
                     )
                     .set("group_sparsity", r.group_sparsity.clone())
                     .set("group_saliency", r.group_saliency.clone())
+                    .set("counters", counters_to_json(&r.counters))
             })
             .collect(),
     );
@@ -122,6 +156,7 @@ pub fn load_results(dir: impl AsRef<Path>, name: &str) -> Result<Option<Vec<Resu
                 trace,
                 group_sparsity,
                 group_saliency,
+                counters: counters_from_json(r)?,
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -151,6 +186,14 @@ mod tests {
             trace: vec![(0.01, 0.93, true), (0.02, 0.92, false)],
             group_sparsity: vec![0.0, 0.5],
             group_saliency: vec![1.5, 0.1],
+            counters: Counters {
+                inference_samples: 9216,
+                grad_samples: 128,
+                executions: 40,
+                upload_bytes: 708_608,
+                upload_tensors: 62,
+                batches_skipped: 5,
+            },
         }
     }
 
@@ -166,6 +209,30 @@ mod tests {
         assert_eq!(back[0].trace.len(), 2);
         assert_eq!(back[0].trace[1].2, false);
         assert_eq!(back[0].group_sparsity, vec![0.0, 0.5]);
+        let c = back[0].counters;
+        assert_eq!(c.inference_samples, 9216);
+        assert_eq!(c.upload_bytes, 708_608);
+        assert_eq!(c.upload_tensors, 62);
+        assert_eq!(c.batches_skipped, 5);
+    }
+
+    #[test]
+    fn rows_without_counters_load_as_zero() {
+        // pre-counters cache files stay readable
+        let dir = std::env::temp_dir().join("hqp_results_test_compat");
+        save_results(&dir, "t2", &[row()]).unwrap();
+        let path = dir.join("t2.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut arr = crate::formats::json::Json::parse(&text).unwrap();
+        if let crate::formats::json::Json::Arr(rows) = &mut arr {
+            if let crate::formats::json::Json::Obj(entries) = &mut rows[0] {
+                entries.retain(|(k, _)| k != "counters");
+            }
+        }
+        std::fs::write(&path, arr.to_string_pretty()).unwrap();
+        let back = load_results(&dir, "t2").unwrap().unwrap();
+        assert_eq!(back[0].counters.executions, 0);
+        assert_eq!(back[0].counters.upload_bytes, 0);
     }
 
     #[test]

@@ -2,6 +2,12 @@
 //! P50-only, and HQP — each producing an [`Outcome`] with *measured*
 //! accuracy (through the PJRT artifacts) and the filter masks + scales
 //! that define the deployable engine.
+//!
+//! Every method here shares one [`Session`], so the incremental parameter
+//! buffer cache carries across phases: the baseline-accuracy pass warms the
+//! device copy of M_train, the conditional loop re-uploads only each
+//! candidate's δ-masked tensors, and its validation sweeps early-exit via
+//! `Session::accuracy_bounded` (see `runtime::session` §Perf).
 
 use crate::error::Result;
 use crate::runtime::{ParamStore, Session};
@@ -79,8 +85,9 @@ pub fn run_baseline(sess: &mut Session) -> Result<Outcome> {
 /// Q8-only: direct PTQ of M_train — the paper's quantization baseline
 /// (the one that fails on ResNet-18 without pruning pre-conditioning).
 pub fn run_q8(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
-    let baseline_acc = sess.accuracy(&sess.baseline.clone(), "val")?;
-    let ptq = quantize(sess, &sess.baseline.clone(), cfg)?;
+    let baseline = sess.baseline.clone(); // O(slots) copy-on-write
+    let baseline_acc = sess.accuracy(&baseline, "val")?;
+    let ptq = quantize(sess, &baseline, cfg)?;
     Ok(Outcome {
         method: "q8-only".into(),
         model: sess.mm.name.clone(),

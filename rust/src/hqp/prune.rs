@@ -16,6 +16,12 @@
 //! The masks double as the dead-channel map handed to [`crate::gopt`] for
 //! the deployed engine, so "filters removed" here IS "channels eliminated"
 //! there.
+//!
+//! Perf: the per-candidate `clone()` is O(groups) thanks to the
+//! copy-on-write [`ParamStore`], and step (b) runs through
+//! [`Session::accuracy_bounded`], which stops the validation sweep as soon
+//! as the remaining batches cannot flip the accept/reject decision — the
+//! decision is provably identical to a full sweep (see `runtime::session`).
 
 use crate::error::Result;
 use crate::runtime::{ParamStore, Session};
@@ -30,7 +36,8 @@ pub struct PruneStep {
     pub masked: usize,
     /// Sparsity θ after this step.
     pub sparsity: f64,
-    /// Validation accuracy of the candidate.
+    /// Validation accuracy of the candidate (over the batches the bounded
+    /// sweep executed; exact when no early exit fired).
     pub accuracy: f64,
     pub accepted: bool,
 }
@@ -67,10 +74,13 @@ pub fn conditional_prune(
     let step = ((total as f64 * cfg.delta_step_frac).round() as usize).max(1);
     let max_masked = (total as f64 * cfg.max_sparsity) as usize;
 
+    // O(groups) copy-on-write clone — candidates only pay for the δ
+    // filters' member tensors they actually mask.
     let mut params = baseline_params.clone();
     let mut masks: Vec<Vec<bool>> = mm.groups.iter().map(|g| vec![true; g.size]).collect();
     let mut trace = PruneTrace::default();
     let mut accepted_acc = baseline_acc;
+    let mut accepted_exact = true;
     let mut masked = 0usize;
     let mut cursor = 0usize;
 
@@ -92,28 +102,35 @@ pub fn conditional_prune(
             cand_masks[g.id][j] = false;
         }
 
-        // b. Validation.
-        let acc = sess.accuracy(&candidate, &cfg.val_split)?;
+        // b + c. Bounded validation: stops once the Δ_max decision is
+        // forced; the decision equals the full-sweep one exactly.
+        let bounded =
+            sess.accuracy_bounded(&candidate, &cfg.val_split, baseline_acc, cfg.delta_max)?;
         let cand_masked = masked + take.len();
-
-        // c. Constraint check (paper: A_baseline − A_candidate ≤ Δ_max).
-        let drop = baseline_acc - acc;
-        let accepted = drop <= cfg.delta_max;
         trace.steps.push(PruneStep {
             masked: cand_masked,
             sparsity: cand_masked as f64 / total as f64,
-            accuracy: acc,
-            accepted,
+            accuracy: bounded.accuracy,
+            accepted: bounded.accepted,
         });
-        if accepted {
+        if bounded.accepted {
             params = candidate;
             masks = cand_masks;
             masked = cand_masked;
-            accepted_acc = acc;
+            accepted_acc = bounded.accuracy;
+            accepted_exact = bounded.exact;
             cursor += take.len();
         } else {
             break; // reject and terminate (Algorithm 1 line 24)
         }
+    }
+
+    // The returned accuracy must be the exact full-split value of M_sparse;
+    // re-measure only if the last accepted sweep early-exited. (If the loop
+    // ended on a rejection, the cache holds the rejected candidate's δ
+    // members, so this pass re-uploads just those few tensors.)
+    if !accepted_exact {
+        accepted_acc = sess.accuracy(&params, &cfg.val_split)?;
     }
 
     Ok(PruneResult {

@@ -56,6 +56,9 @@ pub fn quantize(sess: &mut Session, params: &ParamStore, cfg: &HqpConfig) -> Res
     }
 
     // ---- weight projection ----------------------------------------------
+    // CoW clone: only the ".w" tensors projected below are un-shared and
+    // re-uploaded by the final measurement pass; BN params and biases keep
+    // their version stamps (and device buffers).
     let mm = sess.mm.clone();
     let mut q = params.clone();
     for spec in &mm.param_order {

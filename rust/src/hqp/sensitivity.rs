@@ -63,9 +63,11 @@ pub struct Saliency {
 /// Compute scores for every filter under `method`.
 ///
 /// Fisher runs the backward-pass artifact over the calibration split (the
-/// paper's "single backward pass over D_calib"); the magnitude/BN-γ
-/// heuristics read the parameter store directly (no data needed — exactly
-/// why the paper calls them cheap but myopic).
+/// paper's "single backward pass over D_calib"); when `params` is the same
+/// (unmutated) store a previous measurement warmed, the session's
+/// version-keyed buffer cache makes this pass upload-free. The
+/// magnitude/BN-γ heuristics read the parameter store directly (no data
+/// needed — exactly why the paper calls them cheap but myopic).
 pub fn compute(
     sess: &mut Session,
     params: &ParamStore,

@@ -323,6 +323,13 @@ fn cmd_overhead(artifacts: &str, args: &Args) -> Result<()> {
         qat_imagenet.total_inf_equiv(),
         cost::overhead_ratio(&hcost, &qat_imagenet)
     );
+    let c = sess.counters;
+    println!(
+        "  caching: {} param tensors / {} KB uploaded, {} validation batches early-exited",
+        c.upload_tensors,
+        c.upload_bytes / 1024,
+        c.batches_skipped
+    );
     Ok(())
 }
 

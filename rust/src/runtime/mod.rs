@@ -5,8 +5,10 @@
 //! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
 //! `execute`. Artifacts are compiled lazily and cached for the process
 //! lifetime; dataset batches are uploaded to device buffers once per split
-//! and reused across the entire pruning loop (the validation sweep is the
-//! coordinator's hot path — see EXPERIMENTS.md §Perf).
+//! and parameter tensors stay device-resident behind a version-stamped
+//! buffer cache, so each Algorithm-1 step re-uploads only the δ filters'
+//! touched tensors (the validation sweep is the coordinator's hot path —
+//! see EXPERIMENTS.md §Perf and the caching contract atop `session.rs`).
 
 pub mod manifest;
 mod params;
@@ -14,7 +16,9 @@ mod session;
 
 pub use manifest::{ArtifactSpec, DType, GroupSpec, Manifest, ModelManifest, OpSpec, TapSpec};
 pub use params::ParamStore;
-pub use session::{Counters, DataSet, Session};
+pub use session::{
+    BoundedAccuracy, BoundedEval, BoundedVerdict, Counters, DataSet, Session,
+};
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,25 +1,64 @@
 //! Parameter store: the in-memory copy of a model's weights that the HQP
 //! pipeline mutates (filter masking, INT8 grid projection) and feeds to the
 //! AOT executables as leading arguments.
+//!
+//! The store is **copy-on-write**: each slot holds an `Arc<Tensor>` plus a
+//! version stamp, so `clone()` is O(slots) — pointer bumps, not byte copies
+//! — and Algorithm 1's per-candidate clone in the accept/reject loop costs
+//! nothing until a tensor is actually written. Every mutation (masking, PTQ
+//! substitution) goes through [`ParamStore::get_mut`], which un-shares just
+//! the touched tensor (`Arc::make_mut`) and stamps it with a fresh,
+//! process-globally-unique version. The [`crate::runtime::Session`] keys its
+//! device-buffer cache on `(slot, version)`, so an unchanged tensor — by far
+//! the common case per δ-step — is never re-uploaded.
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::formats::npy::read_npy_f32;
 use crate::runtime::manifest::{GroupSpec, ModelManifest};
 use crate::tensor::Tensor;
 
-/// Ordered parameter tensors + name index. Cloning is cheap enough at the
-/// model sizes involved (<1 MB) and is how candidate models are built in
-/// Algorithm 1's accept/reject loop.
+/// Process-global version source. Versions must be unique across *all*
+/// stores (two sibling clones that each mutate the same slot must end up
+/// with different stamps, or the session buffer cache would serve one
+/// candidate's weights to the other), so a single atomic counter hands out
+/// every stamp.
+static NEXT_VERSION: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_version() -> u64 {
+    NEXT_VERSION.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One copy-on-write tensor slot.
+#[derive(Clone, Debug)]
+struct Slot {
+    tensor: Arc<Tensor>,
+    version: u64,
+}
+
+/// Ordered parameter tensors + name index, with per-slot version stamps.
+/// Cloning shares every tensor (and the index) until a writer un-shares it.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
-    tensors: Vec<Tensor>,
-    index: HashMap<String, usize>,
+    slots: Vec<Slot>,
+    index: Arc<HashMap<String, usize>>,
 }
 
 impl ParamStore {
+    fn from_parts(tensors: Vec<Tensor>, index: HashMap<String, usize>) -> ParamStore {
+        ParamStore {
+            slots: tensors
+                .into_iter()
+                .map(|t| Slot { tensor: Arc::new(t), version: fresh_version() })
+                .collect(),
+            index: Arc::new(index),
+        }
+    }
+
     /// Load `p0000.npy..` from the model's weights dir, in manifest order.
     pub fn load(root: &Path, mm: &ModelManifest) -> Result<ParamStore> {
         let dir = root.join(&mm.weights_dir);
@@ -39,7 +78,7 @@ impl ParamStore {
             index.insert(spec.name.clone(), i);
             tensors.push(t);
         }
-        Ok(ParamStore { tensors, index })
+        Ok(ParamStore::from_parts(tensors, index))
     }
 
     /// Build from raw tensors (tests).
@@ -50,54 +89,72 @@ impl ParamStore {
             index.insert(n, i);
             tensors.push(t);
         }
-        ParamStore { tensors, index }
+        ParamStore::from_parts(tensors, index)
     }
 
     pub fn len(&self) -> usize {
-        self.tensors.len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tensors.is_empty()
+        self.slots.is_empty()
     }
 
-    pub fn tensors(&self) -> &[Tensor] {
-        &self.tensors
+    /// Borrow every tensor in slot order (diagnostics; the upload hot path
+    /// uses [`ParamStore::tensor`]/[`ParamStore::version`] per slot).
+    pub fn tensors(&self) -> Vec<&Tensor> {
+        self.slots.iter().map(|s| s.tensor.as_ref()).collect()
+    }
+
+    /// Tensor in slot `i` (panics out of range, like slice indexing).
+    pub fn tensor(&self, i: usize) -> &Tensor {
+        self.slots[i].tensor.as_ref()
+    }
+
+    /// Version stamp of slot `i`. Stamps are process-globally unique: equal
+    /// stamps imply identical bytes, across clones of the same lineage.
+    pub fn version(&self, i: usize) -> u64 {
+        self.slots[i].version
+    }
+
+    fn slot_index(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::manifest(format!("unknown param {name}")))
     }
 
     pub fn get(&self, name: &str) -> Result<&Tensor> {
-        let i = *self
-            .index
-            .get(name)
-            .ok_or_else(|| Error::manifest(format!("unknown param {name}")))?;
-        Ok(&self.tensors[i])
+        let i = self.slot_index(name)?;
+        Ok(self.slots[i].tensor.as_ref())
     }
 
+    /// Mutable access: un-shares the slot's tensor (copy-on-write) and
+    /// stamps a fresh version, invalidating any device buffer cached for it.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
-        let i = *self
-            .index
-            .get(name)
-            .ok_or_else(|| Error::manifest(format!("unknown param {name}")))?;
-        Ok(&mut self.tensors[i])
+        let i = self.slot_index(name)?;
+        let slot = &mut self.slots[i];
+        slot.version = fresh_version();
+        Ok(Arc::make_mut(&mut slot.tensor))
     }
 
     /// Replace a tensor wholesale (PTQ weight substitution).
     pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
-        let cur = self.get_mut(name)?;
-        if cur.shape() != t.shape() {
+        let i = self.slot_index(name)?;
+        if self.slots[i].tensor.shape() != t.shape() {
             return Err(Error::shape(format!(
                 "set {name}: shape {:?} != {:?}",
                 t.shape(),
-                cur.shape()
+                self.slots[i].tensor.shape()
             )));
         }
-        *cur = t;
+        self.slots[i] = Slot { tensor: Arc::new(t), version: fresh_version() };
         Ok(())
     }
 
     /// Mask (zero) channel `j` of a prune group across all its members.
     /// This IS structural pruning under the fixed-shape artifact contract
-    /// (DESIGN.md §2).
+    /// (DESIGN.md §2). Only the member tensors' versions are bumped.
     pub fn mask_filter(&mut self, group: &GroupSpec, j: usize) -> Result<()> {
         if j >= group.size {
             return Err(Error::hqp(format!(
@@ -113,14 +170,19 @@ impl ParamStore {
 
     /// Total parameter count.
     pub fn num_elements(&self) -> usize {
-        self.tensors.iter().map(|t| t.len()).sum()
+        self.slots.iter().map(|s| s.tensor.len()).sum()
+    }
+
+    /// Total parameter bytes (f32 payload; what a cold upload moves).
+    pub fn num_bytes(&self) -> usize {
+        self.num_elements() * std::mem::size_of::<f32>()
     }
 
     /// Count of exactly-zero elements (masked sparsity diagnostics).
     pub fn num_zero(&self) -> usize {
-        self.tensors
+        self.slots
             .iter()
-            .map(|t| t.data().iter().filter(|v| **v == 0.0).count())
+            .map(|s| s.tensor.data().iter().filter(|v| **v == 0.0).count())
             .sum()
     }
 }
@@ -180,5 +242,62 @@ mod tests {
         assert!(s.set("c.gamma", Tensor::zeros(vec![5])).is_err());
         assert!(s.set("c.gamma", Tensor::zeros(vec![4])).is_ok());
         assert_eq!(s.get("c.gamma").unwrap().data()[0], 0.0);
+    }
+
+    #[test]
+    fn clone_shares_until_write() {
+        let s = store();
+        let mut c = s.clone();
+        // clone keeps every version: nothing to re-upload
+        for i in 0..s.len() {
+            assert_eq!(s.version(i), c.version(i));
+        }
+        // writing through the clone un-shares exactly one slot
+        c.get_mut("c.gamma").unwrap().data_mut()[0] = 9.0;
+        assert_eq!(s.get("c.gamma").unwrap().data()[0], 2.0, "original untouched");
+        assert_eq!(c.get("c.gamma").unwrap().data()[0], 9.0);
+        assert_ne!(s.version(1), c.version(1), "touched slot re-stamped");
+        assert_eq!(s.version(0), c.version(0), "untouched slots still shared");
+        assert_eq!(s.version(2), c.version(2));
+    }
+
+    #[test]
+    fn mask_filter_bumps_only_member_versions() {
+        let mut s = store();
+        let before: Vec<u64> = (0..s.len()).map(|i| s.version(i)).collect();
+        // a group touching only gamma: beta/w keep their stamps
+        let g = GroupSpec {
+            id: 0,
+            name: "c".into(),
+            size: 4,
+            offset: 0,
+            members: vec![("c.gamma".into(), 0)],
+            producer: "c.w".into(),
+            producer_axis: 3,
+        };
+        s.mask_filter(&g, 2).unwrap();
+        assert_eq!(s.version(0), before[0], "c.w not a member: stamp kept");
+        assert_ne!(s.version(1), before[1], "c.gamma masked: stamp bumped");
+        assert_eq!(s.version(2), before[2], "c.beta not a member: stamp kept");
+    }
+
+    #[test]
+    fn sibling_clones_get_distinct_versions() {
+        // Two candidates forked from the same store must never collide on a
+        // (slot, version) key even when both mutate the same slot.
+        let s = store();
+        let mut a = s.clone();
+        let mut b = s.clone();
+        a.get_mut("c.w").unwrap().data_mut()[0] = 1.5;
+        b.get_mut("c.w").unwrap().data_mut()[0] = 2.5;
+        assert_ne!(a.version(0), b.version(0));
+    }
+
+    #[test]
+    fn set_restamps_slot() {
+        let mut s = store();
+        let v0 = s.version(1);
+        s.set("c.gamma", Tensor::zeros(vec![4])).unwrap();
+        assert_ne!(s.version(1), v0);
     }
 }

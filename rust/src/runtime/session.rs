@@ -1,13 +1,33 @@
 //! Session: one model bound to the workspace, with device-resident dataset
 //! caches and the measurement primitives the HQP pipeline is built from.
 //!
-//! Perf note (§Perf L3): dataset batches are uploaded to PJRT buffers once
-//! per (split, batch-size) and reused for every execution — Algorithm 1
-//! re-validates after every pruning step, so the x-batch upload would
-//! otherwise dominate the loop. Parameters are re-uploaded per call (they
-//! change between calls: masking / quantization), which is ~1 MB.
+//! Perf note (§Perf L3) — the caching contract:
+//!
+//! * **Dataset batches** are uploaded to PJRT buffers once per
+//!   (split, batch-size) and reused for every execution — Algorithm 1
+//!   re-validates after every pruning step, so the x-batch upload would
+//!   otherwise dominate the loop.
+//! * **Parameters** are device-resident too: the session keeps one
+//!   [`PjRtBuffer`](xla::PjRtBuffer) per [`ParamStore`] slot, keyed by the
+//!   slot's copy-on-write version stamp. A measurement call re-uploads only
+//!   the tensors whose stamp changed since the last call — for a δ-step of
+//!   Algorithm 1 that is the masked filters' member tensors, not the whole
+//!   model. Version stamps are process-globally unique (see
+//!   [`crate::runtime::ParamStore`]), so serving a cached buffer for an
+//!   equal stamp is always byte-exact, across candidate clones.
+//! * **Validation** can stop early: [`Session::accuracy_bounded`] walks the
+//!   batches and exits as soon as the remaining samples cannot change the
+//!   accept/reject decision against `(baseline_acc, delta_max)` — an exact
+//!   bound (the comparison is monotone in the correct-count), not an
+//!   approximation, so the decision is provably identical to a full sweep.
+//!
+//! Every cache's effect is *measured*, not asserted: [`Counters`] tracks
+//! uploaded parameter tensors/bytes and skipped validation batches next to
+//! the paper's execution/sample counts, and `benches/bench_session.rs`
+//! records the trajectory.
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{ArgSpec, ModelManifest};
@@ -32,7 +52,8 @@ pub struct DataSet {
 }
 
 /// Execution counters — the measured side of the paper's §III-C cost model
-/// (C_HQP = calib·C_grad + T_prune·val·C_inf).
+/// (C_HQP = calib·C_grad + T_prune·val·C_inf), plus the caching layer's
+/// own effectiveness metrics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Counters {
     /// Forward-pass executions (eval/quant_eval/absmax/hist), in samples.
@@ -41,6 +62,122 @@ pub struct Counters {
     pub grad_samples: u64,
     /// PJRT execute() calls.
     pub executions: u64,
+    /// Parameter bytes actually moved host→device (cache misses only).
+    pub upload_bytes: u64,
+    /// Parameter tensors actually moved host→device (cache misses only).
+    pub upload_tensors: u64,
+    /// Validation batches skipped by early-exit bounded validation.
+    pub batches_skipped: u64,
+}
+
+/// One device-resident parameter tensor, valid for a specific version stamp.
+struct CachedParam {
+    version: u64,
+    buf: Rc<xla::PjRtBuffer>,
+}
+
+/// Device-buffer cache over [`ParamStore`] slots: slot `i` holds the buffer
+/// of the last-uploaded tensor and the version it was uploaded at.
+#[derive(Default)]
+struct ParamBufferCache {
+    slots: Vec<Option<CachedParam>>,
+}
+
+/// Verdict of the incremental accept/reject evaluator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundedVerdict {
+    /// Even if every remaining sample were wrong, the drop stays ≤ Δ_max.
+    Accept,
+    /// Even if every remaining sample were right, the drop exceeds Δ_max.
+    Reject,
+    /// The remaining samples can still swing the decision.
+    Undecided,
+}
+
+/// Incremental early-exit evaluator for the Δ_max accept/reject decision.
+///
+/// Pure host-side arithmetic (property-tested without artifacts): feed it
+/// per-batch `(correct, valid)` counts and it reports, after each batch,
+/// whether the final full-split decision is already forced. The decision
+/// predicate is the *same expression* Algorithm 1 evaluates on the full
+/// sweep — `baseline_acc − correct/total ≤ delta_max` — and every f64 step
+/// of it (division, subtraction, comparison) is monotone in `correct`, so
+/// "the lower bound already accepts" / "the upper bound still rejects" are
+/// exact, rounding included, never approximations.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundedEval {
+    total: usize,
+    seen: usize,
+    correct: usize,
+    baseline_acc: f64,
+    delta_max: f64,
+}
+
+impl BoundedEval {
+    /// `total` = full split size the final decision would be taken over.
+    pub fn new(total: usize, baseline_acc: f64, delta_max: f64) -> BoundedEval {
+        BoundedEval { total, seen: 0, correct: 0, baseline_acc, delta_max }
+    }
+
+    /// The full-sweep predicate for a hypothetical final correct-count.
+    fn accepts(&self, correct: usize) -> bool {
+        self.baseline_acc - correct as f64 / self.total as f64 <= self.delta_max
+    }
+
+    /// Fold in one batch's result and return the (possibly forced) verdict.
+    pub fn update(&mut self, correct: usize, valid: usize) -> BoundedVerdict {
+        debug_assert!(correct <= valid);
+        debug_assert!(self.seen + valid <= self.total);
+        self.correct += correct;
+        self.seen += valid;
+        self.verdict()
+    }
+
+    /// Current verdict given the batches folded in so far.
+    pub fn verdict(&self) -> BoundedVerdict {
+        let remaining = self.total - self.seen;
+        if self.accepts(self.correct) {
+            // final correct ≥ current correct, and accepts() is monotone
+            BoundedVerdict::Accept
+        } else if !self.accepts(self.correct + remaining) {
+            // final correct ≤ current + remaining
+            BoundedVerdict::Reject
+        } else {
+            BoundedVerdict::Undecided
+        }
+    }
+
+    /// Accuracy over the samples folded in so far (the exact full-split
+    /// accuracy when [`BoundedEval::is_complete`]).
+    pub fn accuracy(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.seen as f64
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.seen == self.total
+    }
+}
+
+/// Result of [`Session::accuracy_bounded`].
+#[derive(Clone, Copy, Debug)]
+pub struct BoundedAccuracy {
+    /// The accept/reject decision — identical to what a full sweep through
+    /// [`Session::accuracy`] plus the Δ_max predicate would produce.
+    pub accepted: bool,
+    /// Accuracy over the batches actually executed; the exact full-split
+    /// accuracy iff `exact`.
+    pub accuracy: f64,
+    /// True when every batch ran (no early exit).
+    pub exact: bool,
+    /// Batches executed before the decision was forced.
+    pub batches_run: usize,
+    /// Batches the early exit avoided (also accumulated into
+    /// [`Counters::batches_skipped`]).
+    pub batches_skipped: usize,
 }
 
 /// One model + its datasets, bound to a [`Workspace`].
@@ -50,6 +187,7 @@ pub struct Session<'w> {
     /// Pristine trained parameters (the paper's M_train).
     pub baseline: ParamStore,
     data: HashMap<String, DataSet>,
+    pcache: ParamBufferCache,
     pub counters: Counters,
 }
 
@@ -62,13 +200,13 @@ impl<'w> Session<'w> {
             mm,
             baseline,
             data: HashMap::new(),
+            pcache: ParamBufferCache::default(),
             counters: Counters::default(),
         })
     }
 
-    /// Ensure `split` is loaded and batched at `batch` rows (device upload);
-    /// returns the number of batches.
-    fn ensure_batches(&mut self, split: &str, batch: usize) -> Result<usize> {
+    /// Ensure `split` is loaded (host-side); returns its dataset entry.
+    fn ensure_split(&mut self, split: &str) -> Result<&mut DataSet> {
         if !self.data.contains_key(split) {
             let (x, y) = self.ws.load_split(split)?;
             self.data.insert(
@@ -76,8 +214,14 @@ impl<'w> Session<'w> {
                 DataSet { n: x.shape()[0], x, y, batches: HashMap::new() },
             );
         }
-        let client = self.ws.client().clone();
-        let ds = self.data.get_mut(split).unwrap();
+        Ok(self.data.get_mut(split).unwrap())
+    }
+
+    /// Ensure `split` is loaded and batched at `batch` rows (device upload);
+    /// returns the number of batches.
+    fn ensure_batches(&mut self, split: &str, batch: usize) -> Result<usize> {
+        let ws = self.ws;
+        let ds = self.ensure_split(split)?;
         if !ds.batches.contains_key(&batch) {
             let mut list = Vec::new();
             let n = ds.n;
@@ -87,8 +231,8 @@ impl<'w> Session<'w> {
                 let xb = ds.x.rows(lo, hi)?.pad_rows_to(batch)?;
                 let yb = ds.y.rows(lo, hi)?.pad_rows_to(batch)?;
                 list.push(Batch {
-                    x: to_buffer(&client, &xb)?,
-                    y: to_buffer_i32(&client, &yb)?,
+                    x: to_buffer(ws.client(), &xb)?,
+                    y: to_buffer_i32(ws.client(), &yb)?,
                     labels: yb.data()[..hi - lo].to_vec(),
                     valid: hi - lo,
                 });
@@ -103,13 +247,45 @@ impl<'w> Session<'w> {
         &self.data[split].batches[&batch][i]
     }
 
-    /// Upload the parameter list once for a sequence of executions.
-    fn upload_params(&self, params: &ParamStore) -> Result<Vec<xla::PjRtBuffer>> {
-        params
-            .tensors()
-            .iter()
-            .map(|t| to_buffer(self.ws.client(), t))
-            .collect()
+    /// Resolve the device-resident argument list for `params`, uploading
+    /// only the tensors whose version stamp misses the cache. Returns
+    /// cheap `Rc` handles so callers hold no borrow of the session.
+    fn upload_params(&mut self, params: &ParamStore) -> Result<Vec<Rc<xla::PjRtBuffer>>> {
+        let n = params.len();
+        if self.pcache.slots.len() != n {
+            // model changed shape-of-store (only happens across sessions in
+            // tests); drop everything rather than alias slots.
+            self.pcache.slots = (0..n).map(|_| None).collect();
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let version = params.version(i);
+            let hit = match &self.pcache.slots[i] {
+                Some(c) => c.version == version,
+                None => false,
+            };
+            if !hit {
+                let t = params.tensor(i);
+                let buf = Rc::new(to_buffer(self.ws.client(), t)?);
+                self.counters.upload_tensors += 1;
+                self.counters.upload_bytes += (t.len() * std::mem::size_of::<f32>()) as u64;
+                self.pcache.slots[i] = Some(CachedParam { version, buf });
+            }
+            out.push(self.pcache.slots[i].as_ref().unwrap().buf.clone());
+        }
+        Ok(out)
+    }
+
+    /// Upload any dirty tensors of `params` without executing anything
+    /// (benchmarks; a warm cache makes the next measurement upload-free).
+    pub fn warm_params(&mut self, params: &ParamStore) -> Result<()> {
+        self.upload_params(params).map(|_| ())
+    }
+
+    /// Drop every cached parameter buffer (benchmarks: forces the next
+    /// upload to run cold).
+    pub fn reset_param_cache(&mut self) {
+        self.pcache.slots.clear();
     }
 
     fn outputs(&self, fn_name: &str) -> Result<Vec<ArgSpec>> {
@@ -134,7 +310,7 @@ impl<'w> Session<'w> {
         for i in 0..nb {
             let valid = {
                 let b = self.batch(split, eb, i);
-                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
                 args.push(&b.x);
                 let out = run_buffers(&exe, &args, &outputs)?;
                 correct += count_correct(&out[0], &b.labels, b.valid);
@@ -145,6 +321,60 @@ impl<'w> Session<'w> {
             self.counters.inference_samples += valid as u64;
         }
         Ok(correct as f64 / total as f64)
+    }
+
+    /// Top-1 accuracy on `split` with early exit: stop as soon as the
+    /// remaining batches cannot change the accept/reject decision against
+    /// `baseline_acc − acc ≤ delta_max`. The decision is exactly the one a
+    /// full [`Session::accuracy`] sweep would yield (see [`BoundedEval`]);
+    /// the reported accuracy is exact iff the sweep completed.
+    pub fn accuracy_bounded(
+        &mut self,
+        params: &ParamStore,
+        split: &str,
+        baseline_acc: f64,
+        delta_max: f64,
+    ) -> Result<BoundedAccuracy> {
+        let eb = self.mm.eval_batch;
+        let outputs = self.outputs("eval")?;
+        let exe = self.ws.executable(&self.mm.name, "eval")?;
+        let pbufs = self.upload_params(params)?;
+        let nb = self.ensure_batches(split, eb)?;
+        let total = self.data[split].n;
+        if total == 0 {
+            return Err(Error::hqp(format!("accuracy_bounded: empty split {split}")));
+        }
+        let mut ev = BoundedEval::new(total, baseline_acc, delta_max);
+        let mut batches_run = 0usize;
+        // a degenerate threshold (baseline_acc ≤ delta_max) is decided
+        // before any batch runs
+        if ev.verdict() == BoundedVerdict::Undecided {
+            for i in 0..nb {
+                let (correct, valid) = {
+                    let b = self.batch(split, eb, i);
+                    let mut args: Vec<&xla::PjRtBuffer> =
+                        pbufs.iter().map(|b| &**b).collect();
+                    args.push(&b.x);
+                    let out = run_buffers(&exe, &args, &outputs)?;
+                    (count_correct(&out[0], &b.labels, b.valid), b.valid)
+                };
+                self.counters.executions += 1;
+                self.counters.inference_samples += valid as u64;
+                batches_run += 1;
+                if ev.update(correct, valid) != BoundedVerdict::Undecided {
+                    break;
+                }
+            }
+        }
+        let batches_skipped = nb - batches_run;
+        self.counters.batches_skipped += batches_skipped as u64;
+        Ok(BoundedAccuracy {
+            accepted: ev.verdict() == BoundedVerdict::Accept,
+            accuracy: ev.accuracy(),
+            exact: ev.is_complete(),
+            batches_run,
+            batches_skipped,
+        })
     }
 
     /// Top-1 accuracy through the fake-quant INT8 artifact (Pallas qmatmul
@@ -173,7 +403,7 @@ impl<'w> Session<'w> {
         for i in 0..nb {
             let valid = {
                 let b = self.batch(split, eb, i);
-                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
                 args.push(&sbuf);
                 args.push(&b.x);
                 let out = run_buffers(&exe, &args, &outputs)?;
@@ -208,7 +438,7 @@ impl<'w> Session<'w> {
             }
             let valid = {
                 let b = self.batch("calib", fb, i);
-                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
                 args.push(&b.x);
                 args.push(&b.y);
                 let out = run_buffers(&exe, &args, &outputs)?;
@@ -242,7 +472,7 @@ impl<'w> Session<'w> {
         for i in 0..nb {
             let valid = {
                 let b = self.batch("calib", hb, i);
-                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
                 args.push(&b.x);
                 let out = run_buffers(&exe, &args, &outputs)?;
                 for (m, v) in maxes.iter_mut().zip(out[0].data()) {
@@ -274,7 +504,7 @@ impl<'w> Session<'w> {
         for i in 0..nb {
             let valid = {
                 let b = self.batch("calib", hb, i);
-                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+                let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
                 args.push(&b.x);
                 args.push(&rbuf);
                 let out = run_buffers(&exe, &args, &outputs)?;
@@ -305,7 +535,7 @@ impl<'w> Session<'w> {
         let exe = self.ws.executable(&self.mm.name, "eval")?;
         let pbufs = self.upload_params(params)?;
         let xbuf = to_buffer(self.ws.client(), &xp)?;
-        let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+        let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
         args.push(&xbuf);
         self.counters.executions += 1;
         self.counters.inference_samples += valid as u64;
@@ -315,13 +545,52 @@ impl<'w> Session<'w> {
 
     /// Number of samples in a split.
     pub fn split_len(&mut self, split: &str) -> Result<usize> {
-        if !self.data.contains_key(split) {
-            let (x, y) = self.ws.load_split(split)?;
-            self.data.insert(
-                split.to_string(),
-                DataSet { n: x.shape()[0], x, y, batches: HashMap::new() },
-            );
-        }
-        Ok(self.data[split].n)
+        Ok(self.ensure_split(split)?.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decide_full(total: usize, correct: usize, baseline: f64, dmax: f64) -> bool {
+        baseline - correct as f64 / total as f64 <= dmax
+    }
+
+    #[test]
+    fn bounded_eval_completes_to_exact_accuracy() {
+        let mut ev = BoundedEval::new(10, 2.0, 0.0); // unreachable baseline
+        assert_eq!(ev.update(3, 5), BoundedVerdict::Reject); // pre-decided reject
+        // fresh evaluator with a reachable threshold, run to completion
+        let mut ev = BoundedEval::new(10, 0.9, 0.35);
+        assert_eq!(ev.update(3, 5), BoundedVerdict::Undecided);
+        let v = ev.update(3, 5);
+        assert!(ev.is_complete());
+        assert_eq!(ev.accuracy(), 0.6);
+        assert_eq!(v == BoundedVerdict::Accept, decide_full(10, 6, 0.9, 0.35));
+    }
+
+    #[test]
+    fn bounded_eval_early_accept() {
+        // threshold = 0.5−0.2 = 0.3 → 3 correct of 10 forces accept
+        let mut ev = BoundedEval::new(10, 0.5, 0.2);
+        assert_eq!(ev.update(4, 4), BoundedVerdict::Accept);
+        assert!(!ev.is_complete());
+    }
+
+    #[test]
+    fn bounded_eval_early_reject() {
+        // threshold 0.9: after 0/8 correct, best case 2/10 = 0.2 < 0.9
+        let mut ev = BoundedEval::new(10, 0.95, 0.05);
+        assert_eq!(ev.update(0, 8), BoundedVerdict::Reject);
+        assert!(!ev.is_complete());
+    }
+
+    #[test]
+    fn bounded_eval_degenerate_threshold_pre_decided() {
+        // baseline ≤ delta_max: accept before any batch
+        let ev = BoundedEval::new(10, 0.01, 0.05);
+        assert_eq!(ev.verdict(), BoundedVerdict::Accept);
+        assert_eq!(ev.accuracy(), 0.0);
     }
 }

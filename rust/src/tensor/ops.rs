@@ -23,16 +23,39 @@ pub fn argmax_rows(logits: &Tensor) -> Vec<usize> {
     out
 }
 
-/// Count of rows whose argmax equals the label. `labels` may be longer than
-/// the logits row count (padding tail ignored).
+/// Count of rows whose argmax equals the label, in a single pass over the
+/// logits (no intermediate argmax Vec). `labels` may be longer than
+/// `valid_rows` (padding tail ignored) but never shorter — a short label
+/// slice would silently undercount, so it is rejected loudly.
 pub fn count_correct(logits: &Tensor, labels: &[i32], valid_rows: usize) -> usize {
-    let preds = argmax_rows(logits);
-    preds
-        .iter()
-        .take(valid_rows)
-        .zip(labels.iter())
-        .filter(|(p, &y)| **p == y as usize)
-        .count()
+    assert_eq!(logits.rank(), 2, "count_correct wants rank-2 logits");
+    let (n, c) = (logits.shape()[0], logits.shape()[1]);
+    assert!(
+        valid_rows <= n,
+        "valid_rows {valid_rows} exceeds logits rows {n}"
+    );
+    assert!(
+        labels.len() >= valid_rows,
+        "labels ({}) shorter than valid_rows ({valid_rows}) would undercount",
+        labels.len()
+    );
+    let d = logits.data();
+    let mut correct = 0usize;
+    for i in 0..valid_rows {
+        let row = &d[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = j;
+            }
+        }
+        if best == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct
 }
 
 #[cfg(test)]
@@ -57,5 +80,33 @@ mod tests {
         // only first 2 rows are valid
         assert_eq!(count_correct(&t, &[0, 1], 2), 2);
         assert_eq!(count_correct(&t, &[1, 1], 2), 1);
+        // labels longer than valid rows: padding tail ignored
+        assert_eq!(count_correct(&t, &[0, 1, 0, 1], 2), 2);
+    }
+
+    #[test]
+    fn correct_matches_argmax_composition() {
+        let t = Tensor::new(
+            vec![4, 3],
+            vec![0.1, 0.9, 0.0, 3.0, -1.0, 2.0, 0.0, 0.0, 1.0, 0.5, 0.2, 0.1],
+        )
+        .unwrap();
+        let labels = [1, 0, 2, 1];
+        for valid in 0..=4usize {
+            let slow = argmax_rows(&t)
+                .iter()
+                .take(valid)
+                .zip(labels.iter())
+                .filter(|(p, &y)| **p == y as usize)
+                .count();
+            assert_eq!(count_correct(&t, &labels, valid), slow);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter than valid_rows")]
+    fn correct_rejects_short_labels() {
+        let t = Tensor::new(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]).unwrap();
+        count_correct(&t, &[0, 1], 3);
     }
 }

@@ -209,6 +209,100 @@ fn fisher_scores_nonnegative_and_informative() {
 }
 
 #[test]
+fn param_buffer_cache_uploads_cold_then_nothing() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+
+    // first call: every tensor moves host→device
+    sess.accuracy(&params, "val").unwrap();
+    let after_cold = sess.counters;
+    assert_eq!(after_cold.upload_tensors as usize, params.len());
+    assert_eq!(after_cold.upload_bytes as usize, params.num_bytes());
+
+    // same (unmutated) params again: zero uploads
+    sess.accuracy(&params, "val").unwrap();
+    assert_eq!(sess.counters.upload_tensors, after_cold.upload_tensors);
+    assert_eq!(sess.counters.upload_bytes, after_cold.upload_bytes);
+
+    // a CLONE of the same params shares every version: still zero uploads
+    let cloned = params.clone();
+    sess.accuracy(&cloned, "val").unwrap();
+    assert_eq!(sess.counters.upload_tensors, after_cold.upload_tensors);
+}
+
+#[test]
+fn param_buffer_cache_invalidates_exactly_the_masked_tensors() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let mm = sess.mm.clone();
+    sess.accuracy(&params, "val").unwrap(); // warm
+
+    // mask one filter of one group: only that group's member tensors (and
+    // exactly their bytes) re-upload
+    let g = mm.groups[2].clone();
+    let mut cand = params.clone();
+    cand.mask_filter(&g, 0).unwrap();
+    let before = sess.counters;
+    let acc_masked = sess.accuracy(&cand, "val").unwrap();
+    let uploaded = (sess.counters.upload_tensors - before.upload_tensors) as usize;
+    assert_eq!(uploaded, g.members.len(), "one δ-step uploads only dirty tensors");
+    let member_bytes: usize = g
+        .members
+        .iter()
+        .map(|(name, _)| cand.get(name).unwrap().len() * std::mem::size_of::<f32>())
+        .sum();
+    assert_eq!(
+        (sess.counters.upload_bytes - before.upload_bytes) as usize,
+        member_bytes
+    );
+
+    // and the cached-buffer path computes the same answer as a fresh session
+    let mut fresh = Session::new(&ws, "resnet18").unwrap();
+    let acc_fresh = fresh.accuracy(&cand, "val").unwrap();
+    assert_eq!(acc_masked, acc_fresh, "cache must be byte-exact");
+}
+
+#[test]
+fn accuracy_bounded_matches_full_sweep_decision_and_value() {
+    let ws = Workspace::open(common::require_artifacts()).unwrap();
+    let mut sess = Session::new(&ws, "resnet18").unwrap();
+    let params = sess.baseline.clone();
+    let mm = sess.mm.clone();
+    let base = sess.accuracy(&params, "val").unwrap();
+
+    // healthy candidate: decision accept, and (if the sweep completed) the
+    // exact same accuracy as the full pass
+    let b = sess.accuracy_bounded(&params, "val", base, 0.015).unwrap();
+    assert!(b.accepted);
+    if b.exact {
+        assert_eq!(b.accuracy, base);
+    }
+
+    // collapsed candidate: early reject, with batches actually skipped
+    let mut collapsed = params.clone();
+    for f in 0..mm.total_filters() / 2 {
+        let (g, j) = mm.locate_filter(f).unwrap();
+        collapsed.mask_filter(g, j).unwrap();
+    }
+    let full = sess.accuracy(&collapsed, "val").unwrap();
+    let before = sess.counters;
+    let b = sess.accuracy_bounded(&collapsed, "val", base, 0.015).unwrap();
+    assert_eq!(b.accepted, base - full <= 0.015);
+    assert_eq!(
+        sess.counters.batches_skipped - before.batches_skipped,
+        b.batches_skipped as u64
+    );
+    if !b.accepted {
+        assert!(
+            b.batches_skipped > 0,
+            "a collapsed candidate should reject before the last batch"
+        );
+    }
+}
+
+#[test]
 fn pad_rows_respects_batch_contract() {
     let ws = Workspace::open(common::require_artifacts()).unwrap();
     let mut sess = Session::new(&ws, "resnet18").unwrap();

@@ -1,0 +1,164 @@
+//! Property tests for the early-exit bounded-validation evaluator
+//! (testkit harness; runs WITHOUT artifacts — [`BoundedEval`] is pure
+//! host-side arithmetic, exactly the code `Session::accuracy_bounded`
+//! drives batch by batch).
+//!
+//! The contract under test (ISSUE 1 acceptance): the bounded sweep returns
+//! the *identical* accept/reject decision as the full sweep — rounding
+//! included — and, when it runs to completion, the identical accuracy.
+
+use hqp::runtime::{BoundedEval, BoundedVerdict};
+use hqp::testkit::prng::Prng;
+use hqp::testkit::prop::{forall, Gen};
+
+/// One randomized validation sweep: a split of `total` samples cut into
+/// batches, with a per-batch correct-count, against a (baseline, Δ_max)
+/// constraint. Constraint values deliberately stray outside [0, 1] to hit
+/// the degenerate always-accept / never-accept regimes.
+#[derive(Clone, Debug)]
+struct Sweep {
+    batches: Vec<(usize, usize)>, // (correct, valid), Σ valid = total
+    baseline_acc: f64,
+    delta_max: f64,
+}
+
+impl Sweep {
+    fn total(&self) -> usize {
+        self.batches.iter().map(|&(_, v)| v).sum()
+    }
+
+    /// The historical full-sweep predicate of Algorithm 1, verbatim.
+    fn full_decision(&self) -> bool {
+        let total = self.total();
+        let correct: usize = self.batches.iter().map(|&(c, _)| c).sum();
+        let acc = correct as f64 / total as f64;
+        self.baseline_acc - acc <= self.delta_max
+    }
+
+    fn full_accuracy(&self) -> f64 {
+        let correct: usize = self.batches.iter().map(|&(c, _)| c).sum();
+        correct as f64 / self.total() as f64
+    }
+}
+
+struct SweepGen;
+
+impl Gen for SweepGen {
+    type Value = Sweep;
+
+    fn generate(&self, rng: &mut Prng) -> Sweep {
+        let total = rng.below(600) + 1;
+        let batch = rng.below(total) + 1;
+        // per-batch accuracy regimes: collapsed, marginal, healthy
+        let p = match rng.below(3) {
+            0 => rng.next_f64() * 0.2,
+            1 => 0.85 + rng.next_f64() * 0.1,
+            _ => rng.next_f64(),
+        };
+        let mut batches = Vec::new();
+        let mut lo = 0usize;
+        while lo < total {
+            let valid = batch.min(total - lo);
+            let correct = (0..valid).filter(|_| rng.next_f64() < p).count();
+            batches.push((correct, valid));
+            lo += valid;
+        }
+        let baseline_acc = rng.next_f64() * 1.4 - 0.2; // [-0.2, 1.2]
+        let delta_max = rng.next_f64() * 0.6 - 0.1; // [-0.1, 0.5]
+        Sweep { batches, baseline_acc, delta_max }
+    }
+
+    fn shrink(&self, v: &Sweep) -> Vec<Sweep> {
+        let mut out = Vec::new();
+        if v.batches.len() > 1 {
+            let mut fewer = v.clone();
+            fewer.batches.pop();
+            out.push(fewer);
+        }
+        if v.batches.iter().any(|&(c, _)| c > 0) {
+            let mut zeroed = v.clone();
+            for b in &mut zeroed.batches {
+                b.0 = 0;
+            }
+            out.push(zeroed);
+        }
+        out
+    }
+}
+
+/// Run the evaluator the way `Session::accuracy_bounded` does: fold batches
+/// until the verdict is forced (or the sweep is pre-decided), then stop.
+fn run_bounded(s: &Sweep) -> (BoundedEval, usize) {
+    let mut ev = BoundedEval::new(s.total(), s.baseline_acc, s.delta_max);
+    let mut run = 0usize;
+    if ev.verdict() == BoundedVerdict::Undecided {
+        for &(correct, valid) in &s.batches {
+            run += 1;
+            if ev.update(correct, valid) != BoundedVerdict::Undecided {
+                break;
+            }
+        }
+    }
+    (ev, run)
+}
+
+#[test]
+fn prop_bounded_decision_equals_full_sweep() {
+    forall(3000, &SweepGen, |s| {
+        let (ev, _) = run_bounded(s);
+        match ev.verdict() {
+            BoundedVerdict::Accept => s.full_decision(),
+            BoundedVerdict::Reject => !s.full_decision(),
+            // Σ valid = total, so a finished fold is always decided
+            BoundedVerdict::Undecided => false,
+        }
+    });
+}
+
+#[test]
+fn prop_bounded_accuracy_exact_when_complete() {
+    forall(3000, &SweepGen, |s| {
+        let (ev, _) = run_bounded(s);
+        // bitwise equality, not epsilon: a completed bounded sweep computes
+        // the same correct/total division as the full sweep
+        !ev.is_complete() || ev.accuracy() == s.full_accuracy()
+    });
+}
+
+#[test]
+fn prop_verdict_is_stable_once_decided() {
+    // Folding in the batches an early exit would have skipped can never
+    // flip the verdict — the definition of "the decision was forced".
+    forall(3000, &SweepGen, |s| {
+        let (ev, run) = run_bounded(s);
+        let early = ev.verdict();
+        if early == BoundedVerdict::Undecided {
+            return false;
+        }
+        let mut cont = ev;
+        for &(correct, valid) in &s.batches[run..] {
+            cont.update(correct, valid);
+        }
+        cont.verdict() == early
+    });
+}
+
+#[test]
+fn prop_skipped_batches_only_on_forced_decisions() {
+    // If the bounded run stopped early, flipping every remaining sample
+    // (all-correct vs all-wrong) must still produce the same decision.
+    forall(3000, &SweepGen, |s| {
+        let (ev, run) = run_bounded(s);
+        if run == s.batches.len() {
+            return true; // nothing skipped
+        }
+        let decided = ev.verdict();
+        let mut best = ev;
+        let mut worst = ev;
+        for &(_, valid) in &s.batches[run..] {
+            best.update(valid, valid);
+            worst.update(0, valid);
+        }
+        best.verdict() == decided && worst.verdict() == decided
+    });
+}
