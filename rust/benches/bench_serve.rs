@@ -1,0 +1,102 @@
+//! `cargo bench --bench bench_serve [-- --smoke]` — serving-level
+//! performance of the deployed HQP variants, and the simulator's own
+//! event-loop throughput.
+//!
+//! Emits `BENCH_serve.json` (benchkit [`Report`]) so the serving
+//! trajectory is tracked across PRs:
+//!
+//! * `offered_rps` / `slo_ms`        — the matched-load scenario
+//! * `slo_attain_baseline|hqp`       — SLO attainment at the same offered
+//!                                     load (acceptance: hqp strictly higher
+//!                                     — the serving analogue of the paper's
+//!                                     3.12x speedup)
+//! * `p99_ms_baseline|hqp`           — tail latency under that load
+//! * `throughput_rps_baseline|hqp`   — goodput under that load
+//! * `capacity_rps_*`                — open-loop roofline capacities
+//! * `sim_events_per_sec`            — events/s the virtual-time heap
+//!                                     sustains (host-side, no artifacts)
+//!
+//! Runs without artifacts: fleets come from the paper-anchored reference
+//! profiles, so this bench (like `bench_session --smoke`) always produces
+//! a report in CI.
+
+use hqp::benchkit::{bench, section, Report};
+use hqp::hwsim::Device;
+use hqp::serve::{reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = Report::new();
+    let dev = Device::xavier_nx();
+    let duration_ms = if smoke { 1_000.0 } else { 4_000.0 };
+
+    // ---- matched-load SLO comparison: baseline vs hqp ---------------------
+    section("serve — SLO attainment at matched offered load (resnet18, xavier-nx)");
+    let base_fleet = reference_fleet("resnet18", &[dev.clone()], &["baseline"], 8).expect("fleet");
+    let hqp_fleet = reference_fleet("resnet18", &[dev.clone()], &["hqp"], 8).expect("fleet");
+    let cap_base = base_fleet.servers[0].variants[0].capacity_rps();
+    let cap_hqp = hqp_fleet.servers[0].variants[0].capacity_rps();
+    // 2x the baseline's capacity: saturates fp32, well inside hqp's roof
+    let offered = cap_base * 2.0;
+    let slo_ms = base_fleet.servers[0].variants[0].batch1_ms() * 4.0;
+    let cfg = ServeConfig { slo_ms, policy: Policy::AccFastest, ..Default::default() };
+    let arrivals = trace::generate(&ArrivalProcess::Poisson { rps: offered }, duration_ms, 7);
+
+    let s_base = simulate_fleet(&base_fleet, &arrivals, &cfg).expect("baseline sim");
+    let s_hqp = simulate_fleet(&hqp_fleet, &arrivals, &cfg).expect("hqp sim");
+
+    report.metric("offered_rps", offered);
+    report.metric("slo_ms", slo_ms);
+    report.metric("capacity_rps_baseline", cap_base);
+    report.metric("capacity_rps_hqp", cap_hqp);
+    report.metric("slo_attain_baseline", s_base.slo_attainment());
+    report.metric("slo_attain_hqp", s_hqp.slo_attainment());
+    report.metric("p99_ms_baseline", s_base.p99_ms);
+    report.metric("p99_ms_hqp", s_hqp.p99_ms);
+    report.metric("throughput_rps_baseline", s_base.throughput_rps);
+    report.metric("throughput_rps_hqp", s_hqp.throughput_rps);
+    assert!(
+        s_hqp.slo_attainment() > s_base.slo_attainment(),
+        "acceptance: hqp attainment {:.3} must strictly beat baseline {:.3} \
+         at {offered:.0} rps",
+        s_hqp.slo_attainment(),
+        s_base.slo_attainment()
+    );
+
+    // ---- full fleet under the accuracy-constrained router -----------------
+    section("serve — full variant fleet, acc-fastest router");
+    let fleet = reference_fleet(
+        "resnet18",
+        &[dev.clone()],
+        &["baseline", "q8", "p50", "hqp", "mixed"],
+        8,
+    )
+    .expect("fleet");
+    let s_fleet = simulate_fleet(&fleet, &arrivals, &cfg).expect("fleet sim");
+    report.metric("fleet_slo_attain", s_fleet.slo_attainment());
+    report.metric("fleet_acc_mix", s_fleet.acc_mix);
+    report.metric("fleet_mean_batch", s_fleet.mean_batch);
+    let p50_served = s_fleet
+        .per_variant
+        .iter()
+        .find(|u| u.variant == "p50")
+        .map(|u| u.completed)
+        .unwrap_or(0);
+    assert_eq!(p50_served, 0, "Δmax-violating p50 must never be scheduled");
+
+    // ---- simulator hot path: events per wall-clock second -----------------
+    section("serve — event-loop throughput (host side)");
+    let iters = if smoke { 5 } else { 30 };
+    let bench_arrivals =
+        trace::generate(&ArrivalProcess::Poisson { rps: 400.0 }, 2_000.0, 11);
+    let n_events = bench_arrivals.len() as f64;
+    let stats = bench("simulate_fleet (5 variants, 2s @ 400rps)", 2, iters, || {
+        simulate_fleet(&fleet, &bench_arrivals, &cfg).unwrap()
+    });
+    // >= 1 event per request (arrival) plus flush/batch-done traffic
+    report.metric("sim_events_per_sec", n_events / (stats.mean_ms / 1e3));
+    report.push(stats);
+
+    report.write_json("BENCH_serve.json").expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+}

@@ -63,6 +63,30 @@ pub struct FusedOp {
     pub k: usize,
 }
 
+/// Deployed weight-element count of a fused-op shape. The single source
+/// of truth shared by the roofline's weight/activation traffic split
+/// ([`crate::hwsim::simulate_batch`]) and the serving reference engines
+/// ([`crate::serve::fleet`]): changing a factor here changes both sides
+/// consistently.
+pub fn weight_elems(kind: FusedKind, k: usize, cin: usize, cout: usize) -> u64 {
+    match kind {
+        FusedKind::ConvBnAct => (k * k * cin * cout) as u64,
+        // depthwise: one k×k filter per channel
+        FusedKind::DwConvBnAct => (k * k * cout) as u64,
+        FusedKind::Gemm => (cin * cout) as u64,
+        // squeeze-excitation: two bottleneck FCs (reduction ≈ 8)
+        FusedKind::Se => (cin * cout / 4) as u64,
+        FusedKind::Elementwise | FusedKind::Pool => 0,
+    }
+}
+
+impl FusedOp {
+    /// [`weight_elems`] of this op's geometry.
+    pub fn weight_elems(&self) -> u64 {
+        weight_elems(self.kind, self.k, self.cin, self.cout)
+    }
+}
+
 /// The deployable engine: fused ops + storage accounting.
 #[derive(Clone, Debug)]
 pub struct OptimizedGraph {

@@ -37,18 +37,49 @@ pub struct LatencyReport {
     pub energy_mj: f64,
 }
 
-/// Price one optimized graph on one device.
+/// Price one optimized graph on one device (batch 1).
 pub fn simulate(graph: &OptimizedGraph, dev: &Device) -> LatencyReport {
+    simulate_batch(graph, dev, 1)
+}
+
+/// Deployed weight bytes of one fused op at its precision, from the
+/// shared [`crate::gopt::weight_elems`] formula. Bounded by `op.bytes`
+/// (which also carries activation traffic) so the activation share
+/// `op.bytes - weight_bytes(op)` is never negative.
+fn weight_bytes(op: &crate::gopt::FusedOp) -> f64 {
+    (op.weight_elems() as f64 * op.precision.bytes()).min(op.bytes as f64)
+}
+
+/// Price one optimized graph on one device at batch size `batch`.
+///
+/// The batching extension of the roofline (consumed by the serving
+/// simulator, [`crate::serve`]): compute and *activation* traffic scale
+/// linearly with the batch, while weight traffic and kernel-launch
+/// overhead are paid once per batch —
+///
+/// ```text
+/// t(op, b) = max( b·flops / (peak_rate · util),
+///                 (w_bytes + b·act_bytes) / mem_bw )  + launch_overhead
+/// ```
+///
+/// At `batch == 1` this reduces exactly to the batch-1 model above
+/// (`w + act == bytes`), so [`simulate`] simply delegates here. The
+/// returned [`LatencyReport`] prices the *whole batch* (divide by `batch`
+/// for per-sample cost); energy likewise is per batch.
+pub fn simulate_batch(graph: &OptimizedGraph, dev: &Device, batch: usize) -> LatencyReport {
+    let b = batch.max(1) as f64;
     let mut per_op_ms = Vec::with_capacity(graph.ops.len());
     let mut mem_bound = 0usize;
     for op in &graph.ops {
         let rate = dev.rate_gflops(op.precision) * dev.utilization(op.kind);
         let t_comp_ms = if rate > 0.0 {
-            op.flops as f64 / (rate * 1e9) * 1e3
+            b * op.flops as f64 / (rate * 1e9) * 1e3
         } else {
             f64::INFINITY
         };
-        let t_mem_ms = op.bytes as f64 / (dev.mem_bw_gbps * 1e9) * 1e3;
+        let w = weight_bytes(op);
+        let act = op.bytes as f64 - w;
+        let t_mem_ms = (w + b * act) / (dev.mem_bw_gbps * 1e9) * 1e3;
         if t_mem_ms > t_comp_ms {
             mem_bound += 1;
         }
@@ -140,6 +171,64 @@ mod tests {
         let g = graph(vec![op(1_000_000, 1_000_000, Precision::Fp32)]);
         let r = simulate(&g, &dev);
         assert!((r.energy_mj - dev.power_w * r.latency_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_one_matches_simulate() {
+        let dev = Device::xavier_nx();
+        let g = graph(vec![
+            op(2_000_000, 400_000, Precision::Fp32),
+            op(10, 500_000_000, Precision::Int8),
+        ]);
+        let a = simulate(&g, &dev);
+        let b = simulate_batch(&g, &dev, 1);
+        assert_eq!(a.latency_ms, b.latency_ms);
+        assert_eq!(a.per_op_ms, b.per_op_ms);
+        assert_eq!(a.memory_bound_frac, b.memory_bound_frac);
+    }
+
+    #[test]
+    fn batching_amortizes_but_stays_monotone() {
+        let dev = Device::xavier_nx();
+        // realistically conv-shaped op: weights + activations in bytes
+        let mut o = op(50_000_000, 0, Precision::Fp32);
+        o.cin = 64;
+        o.cout = 64;
+        o.k = 3;
+        o.bytes = (3 * 3 * 64 * 64 * 4 + 2 * 56 * 56 * 64 * 4) as u64;
+        let g = graph(vec![o]);
+        let mut prev = 0.0;
+        for b in 1..=16usize {
+            let t = simulate_batch(&g, &dev, b).latency_ms;
+            assert!(t > prev, "batch latency must grow with batch size");
+            // amortization: a batch of b is cheaper than b batches of 1
+            let t1 = simulate_batch(&g, &dev, 1).latency_ms;
+            assert!(
+                t < b as f64 * t1 + 1e-12,
+                "batch {b}: {t} ms not cheaper than {b}x{t1} ms"
+            );
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn weight_split_never_exceeds_total_bytes() {
+        let dev = Device::jetson_nano();
+        // tiny bytes but huge nominal weight geometry: the weight estimate
+        // must clamp to op.bytes so activation traffic never goes negative
+        let mut o = op(1_000, 100, Precision::Fp32);
+        o.cin = 512;
+        o.cout = 512;
+        o.k = 3;
+        let g = graph(vec![o]);
+        for b in [1usize, 2, 8] {
+            let t = simulate_batch(&g, &dev, b).latency_ms;
+            assert!(t.is_finite() && t > 0.0);
+        }
+        // with act == 0 the memory term is batch-invariant
+        let t1 = simulate_batch(&g, &dev, 1).per_op_ms[0];
+        let t8 = simulate_batch(&g, &dev, 8).per_op_ms[0];
+        assert!(t8 >= t1);
     }
 
     #[test]

@@ -12,8 +12,9 @@
 //! * **L3 (this crate)** — the paper's contribution: the HQP coordinator
 //!   ([`hqp`]), the INT8 calibration machinery ([`quant`]), the
 //!   TensorRT-like deployment optimizer ([`gopt`]), the Jetson-class
-//!   hardware model ([`hwsim`]) and the experiment coordinator
-//!   ([`coordinator`]).
+//!   hardware model ([`hwsim`]), the experiment coordinator
+//!   ([`coordinator`]) and the trace-driven edge serving simulator
+//!   ([`serve`]).
 //! * **L2/L1 (build time)** — `python/compile/`: JAX models with Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!   Python is never on the request path.
@@ -30,6 +31,7 @@ pub mod hwsim;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testkit;
 
@@ -51,5 +53,6 @@ pub mod prelude {
     pub use crate::hwsim::{Device, DeviceKind};
     pub use crate::quant::CalibMethod;
     pub use crate::runtime::{Session, Workspace};
+    pub use crate::serve::{simulate_fleet, ArrivalProcess, Fleet, Policy, ServeConfig};
     pub use crate::tensor::Tensor;
 }

@@ -14,6 +14,7 @@
 //! hqp devices                 §IV-A heterogeneity sweep (Nano vs NX)
 //! hqp run --model M --method hqp|q8|p50|prune|baseline
 //! hqp mixed --model M         §VI-A mixed-precision extension
+//! hqp serve                   trace-driven serving simulator (SLO routing)
 //! hqp info                    workspace/platform diagnostics
 //! ```
 
@@ -27,11 +28,22 @@ use hqp::hwsim::{simulate, Device, Precision};
 use hqp::quant::CalibMethod;
 use hqp::report::{self, bar_chart, scatter, BarRow};
 use hqp::runtime::{Session, Workspace};
+use hqp::serve::{self, ArrivalProcess, Policy, ServeConfig};
 
 const COMMON_FLAGS: &[&str] = &[
     "artifacts", "device", "model", "force", "delta-max", "delta-step", "ranking",
     "calib", "per-channel", "id", "method", "theta",
 ];
+
+/// Flags only `hqp serve` accepts (other commands reject them, the same
+/// typo-hardening `--device` gets).
+const SERVE_FLAGS: &[&str] = &[
+    "rps", "slo-ms", "policy", "duration-s", "seed", "max-batch",
+    "batch-timeout-ms", "queue-cap", "arrivals", "smoke",
+];
+
+/// Valid `--device` names (aliases included), shown when the flag is bad.
+const DEVICE_NAMES: &str = "jetson-nano|nano, xavier-nx|nx, ideal";
 
 const HELP: &str = "hqp — Sensitivity-Aware Hybrid Quantization and Pruning (paper reproduction)
 
@@ -44,6 +56,7 @@ commands:
   devices               \u{a7}IV-A heterogeneity sweep (Nano vs NX vs ideal)
   run                   one method: --model M --method hqp|q8|p50|prune|baseline
   mixed                 \u{a7}VI-A S-guided mixed precision
+  serve                 trace-driven serving simulator over deployed variants
   info                  workspace diagnostics
 options:
   --artifacts DIR   artifacts root (default: artifacts)
@@ -54,7 +67,18 @@ options:
   --ranking R       fisher | mag-l1 | mag-l2 | bn-gamma | random
   --calib C         kl | minmax | percentile
   --per-channel     per-channel weight scales (ablation)
-  --force           ignore cached results";
+  --force           ignore cached results
+serve options:
+  --rps X               offered load, requests/s (default 100; 50 w/ --smoke)
+  --slo-ms X            per-request latency SLO (default 50)
+  --policy P            round-robin | least-loaded | acc-fastest (default)
+  --duration-s X        trace length (default 10; 1 w/ --smoke)
+  --arrivals A          poisson | mmpp (default poisson)
+  --seed N              trace seed (default 42; identical seed => identical summary)
+  --max-batch N         dynamic batcher max batch size (default 8)
+  --batch-timeout-ms X  batching timeout (default 2)
+  --queue-cap N         per-server admission queue cap (default 256)
+  --smoke               tiny 1 s trace (CI smoke)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -93,12 +117,28 @@ fn config_from(args: &Args) -> Result<HqpConfig> {
 
 fn device_from(args: &Args) -> Result<Device> {
     let name = args.flag_or("device", "xavier-nx");
-    Device::by_name(name).ok_or_else(|| hqp::Error::Cli(format!("unknown device {name}")))
+    Device::by_name(name)
+        .ok_or_else(|| hqp::Error::Cli(format!("unknown device {name} (valid: {DEVICE_NAMES})")))
 }
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
-    args.expect_known(COMMON_FLAGS)?;
+    if args.command == "serve" {
+        let mut known = COMMON_FLAGS.to_vec();
+        known.extend_from_slice(SERVE_FLAGS);
+        args.expect_known(&known)?;
+    } else {
+        args.expect_known(COMMON_FLAGS)?;
+    }
+    // validate --device up front so commands that don't consume it still
+    // reject typos (e.g. `hqp energy --device h100` used to silently run)
+    if let Some(name) = args.flag("device") {
+        if Device::by_name(name).is_none() {
+            return Err(hqp::Error::Cli(format!(
+                "unknown device {name} (valid: {DEVICE_NAMES})"
+            )));
+        }
+    }
     let artifacts = args.flag_or("artifacts", "artifacts").to_string();
 
     match args.command.as_str() {
@@ -115,6 +155,7 @@ fn run(argv: &[String]) -> Result<()> {
         "devices" => cmd_devices(&artifacts, &args),
         "run" => cmd_run(&artifacts, &args),
         "mixed" => cmd_mixed(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
         "help" | "-h" | "--help" => {
             println!("{HELP}");
             Ok(())
@@ -422,5 +463,65 @@ fn cmd_mixed(artifacts: &str, args: &Args) -> Result<()> {
         mix.latency_ms,
         base.latency_ms / mix.latency_ms
     );
+    Ok(())
+}
+
+/// `hqp serve` — replay a synthetic trace against a fleet of deployed
+/// variants. Uses workspace engines + cached measured accuracy when
+/// artifacts exist, the paper-anchored reference profiles otherwise, so
+/// the command runs end-to-end on a bare checkout.
+fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let smoke = args.switch("smoke");
+    let model = args.flag_or("model", "resnet18");
+    let dev = device_from(args)?;
+    let policy_name = args.flag_or("policy", "acc-fastest");
+    let policy = Policy::parse(policy_name).ok_or_else(|| {
+        hqp::Error::Cli(format!(
+            "unknown policy {policy_name} (valid: round-robin, least-loaded, acc-fastest)"
+        ))
+    })?;
+    let rps = args.flag_f64("rps", if smoke { 50.0 } else { 100.0 })?;
+    let duration_s = args.flag_f64("duration-s", if smoke { 1.0 } else { 10.0 })?;
+    let seed = args.flag_usize("seed", 42)? as u64;
+    let arrivals_name = args.flag_or("arrivals", "poisson");
+    let process = ArrivalProcess::parse(arrivals_name, rps).ok_or_else(|| {
+        hqp::Error::Cli(format!("unknown arrival process {arrivals_name} (valid: poisson, mmpp)"))
+    })?;
+    let cfg = ServeConfig {
+        slo_ms: args.flag_f64("slo-ms", 50.0)?,
+        delta_max: args.flag_f64("delta-max", 0.015)?,
+        policy,
+        max_batch: args.flag_usize("max-batch", 8)?,
+        batch_timeout_ms: args.flag_f64("batch-timeout-ms", 2.0)?,
+        queue_cap: args.flag_usize("queue-cap", 256)?,
+    };
+
+    let methods = ["baseline", "q8", "p50", "hqp", "mixed"];
+    let (fleet, source) =
+        serve::fleet_for(artifacts, model, &[dev.clone()], &methods, cfg.max_batch)?;
+    let arrivals = serve::trace::generate(&process, duration_s * 1e3, seed);
+
+    println!(
+        "serving {model} on {}: {} variants ({source})",
+        dev.name,
+        fleet.num_variants()
+    );
+    println!(
+        "trace: {} over {duration_s:.1} s at {rps:.0} rps (seed {seed}) -> {} requests",
+        process.name(),
+        arrivals.len()
+    );
+    for v in &fleet.servers[0].variants {
+        println!(
+            "  variant {:<9} acc_drop {:>5.2}%  batch-1 {:>8.3} ms  capacity {:>7.0} rps{}",
+            v.name,
+            v.acc_drop * 100.0,
+            v.batch1_ms(),
+            v.capacity_rps(),
+            if v.compliant(cfg.delta_max) { "" } else { "   << excluded (Δmax)" }
+        );
+    }
+    let summary = serve::simulate_fleet(&fleet, &arrivals, &cfg)?;
+    println!("{}", summary.render());
     Ok(())
 }

@@ -1,0 +1,222 @@
+//! Dynamic batching for one server: per-variant FIFO admission queues
+//! with a max-batch-size / batching-timeout policy.
+//!
+//! Invariants the event loop relies on (property-tested in
+//! `tests/prop_serve.rs`):
+//!
+//! * a request enters exactly one queue and leaves it exactly once —
+//!   either inside a dispatched batch or counted as *expired* (its SLO
+//!   deadline passed while it waited);
+//! * `total()` always equals the sum of queue lengths (admission control
+//!   caps it);
+//! * flush tokens make timeout events idempotent: any dispatch from a
+//!   queue invalidates that queue's pending timeout, so a stale `Flush`
+//!   event can never double-dispatch.
+
+use std::collections::VecDeque;
+
+/// One queued request.
+#[derive(Clone, Copy, Debug)]
+pub struct QueuedReq {
+    pub id: usize,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+}
+
+/// What the caller must do after an enqueue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnqueueAction {
+    /// Queue reached `max_batch` — dispatch now if the device is idle.
+    BatchReady,
+    /// First request in an empty queue — arm a flush timer with this
+    /// token (fires `timeout_ms` after the enqueue).
+    ArmFlush(u64),
+    /// Queue was already non-empty and below `max_batch`: nothing to do.
+    Queued,
+}
+
+/// A dispatched batch plus the requests that expired while queued.
+#[derive(Clone, Debug, Default)]
+pub struct TakenBatch {
+    pub reqs: Vec<QueuedReq>,
+    pub expired: Vec<QueuedReq>,
+}
+
+/// Per-variant admission queues + batching policy for one server.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub timeout_ms: f64,
+    queues: Vec<VecDeque<QueuedReq>>,
+    flush_tokens: Vec<u64>,
+    total: usize,
+}
+
+impl Batcher {
+    pub fn new(num_variants: usize, max_batch: usize, timeout_ms: f64) -> Batcher {
+        Batcher {
+            max_batch: max_batch.max(1),
+            timeout_ms: timeout_ms.max(0.0),
+            queues: vec![VecDeque::new(); num_variants],
+            flush_tokens: vec![0; num_variants],
+            total: 0,
+        }
+    }
+
+    /// Requests currently queued across all variants.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Queue length of one variant.
+    pub fn len(&self, variant: usize) -> usize {
+        self.queues[variant].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Enqueue a routed request.
+    pub fn enqueue(&mut self, variant: usize, req: QueuedReq) -> EnqueueAction {
+        let was_empty = self.queues[variant].is_empty();
+        self.queues[variant].push_back(req);
+        self.total += 1;
+        if self.queues[variant].len() >= self.max_batch {
+            EnqueueAction::BatchReady
+        } else if was_empty {
+            self.flush_tokens[variant] += 1;
+            EnqueueAction::ArmFlush(self.flush_tokens[variant])
+        } else {
+            EnqueueAction::Queued
+        }
+    }
+
+    /// Is a flush event with this token still live for the variant?
+    pub fn flush_live(&self, variant: usize, token: u64) -> bool {
+        self.flush_tokens[variant] == token && !self.queues[variant].is_empty()
+    }
+
+    /// Pop up to `max_batch` requests from one variant's queue, dropping
+    /// (and reporting) the ones whose deadline passed before service
+    /// could start. Invalidates any pending flush for the variant.
+    pub fn take_batch(&mut self, variant: usize, now_ms: f64) -> TakenBatch {
+        self.flush_tokens[variant] += 1;
+        let mut out = TakenBatch::default();
+        while out.reqs.len() < self.max_batch {
+            let Some(req) = self.queues[variant].pop_front() else { break };
+            self.total -= 1;
+            if req.deadline_ms < now_ms {
+                out.expired.push(req);
+            } else {
+                out.reqs.push(req);
+            }
+        }
+        out
+    }
+
+    /// The non-empty variant queue whose head request has waited longest
+    /// (FIFO across variants; ties break on the lower variant index, so
+    /// selection is deterministic).
+    pub fn oldest_nonempty(&self) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (v, q) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                let better = match best {
+                    None => true,
+                    Some((t, _)) => head.arrival_ms < t,
+                };
+                if better {
+                    best = Some((head.arrival_ms, v));
+                }
+            }
+        }
+        best.map(|(_, v)| v)
+    }
+
+    /// Estimated backlog of one variant in requests (router input).
+    pub fn backlog(&self, variant: usize) -> usize {
+        self.queues[variant].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: f64, deadline: f64) -> QueuedReq {
+        QueuedReq { id, arrival_ms: arrival, deadline_ms: deadline }
+    }
+
+    #[test]
+    fn enqueue_actions() {
+        let mut b = Batcher::new(2, 3, 5.0);
+        assert_eq!(b.enqueue(0, req(0, 0.0, 50.0)), EnqueueAction::ArmFlush(1));
+        assert_eq!(b.enqueue(0, req(1, 1.0, 50.0)), EnqueueAction::Queued);
+        assert_eq!(b.enqueue(0, req(2, 2.0, 50.0)), EnqueueAction::BatchReady);
+        assert_eq!(b.total(), 3);
+        assert_eq!(b.len(0), 3);
+        assert_eq!(b.len(1), 0);
+    }
+
+    #[test]
+    fn take_batch_respects_max_and_expiry() {
+        let mut b = Batcher::new(1, 2, 5.0);
+        b.enqueue(0, req(0, 0.0, 1.0)); // will expire
+        b.enqueue(0, req(1, 0.5, 50.0));
+        b.enqueue(0, req(2, 0.6, 50.0));
+        let t = b.take_batch(0, 10.0);
+        assert_eq!(t.expired.len(), 1);
+        assert_eq!(t.expired[0].id, 0);
+        assert_eq!(t.reqs.len(), 2);
+        assert_eq!(b.total(), 0);
+    }
+
+    #[test]
+    fn flush_tokens_invalidate_on_dispatch() {
+        let mut b = Batcher::new(1, 8, 5.0);
+        let EnqueueAction::ArmFlush(tok) = b.enqueue(0, req(0, 0.0, 50.0)) else {
+            panic!("expected flush arm");
+        };
+        assert!(b.flush_live(0, tok));
+        b.take_batch(0, 1.0);
+        assert!(!b.flush_live(0, tok), "dispatch must kill the pending flush");
+        // re-arming after the queue refills issues a fresh token
+        let EnqueueAction::ArmFlush(tok2) = b.enqueue(0, req(1, 2.0, 50.0)) else {
+            panic!("expected flush arm");
+        };
+        assert!(tok2 > tok);
+        assert!(b.flush_live(0, tok2));
+    }
+
+    #[test]
+    fn oldest_nonempty_is_fifo_across_variants() {
+        let mut b = Batcher::new(3, 8, 5.0);
+        b.enqueue(2, req(0, 1.0, 50.0));
+        b.enqueue(0, req(1, 2.0, 50.0));
+        assert_eq!(b.oldest_nonempty(), Some(2));
+        b.take_batch(2, 3.0);
+        assert_eq!(b.oldest_nonempty(), Some(0));
+        b.take_batch(0, 3.0);
+        assert_eq!(b.oldest_nonempty(), None);
+    }
+
+    #[test]
+    fn conservation_under_interleaving() {
+        let mut b = Batcher::new(2, 4, 1.0);
+        let mut popped = 0;
+        for i in 0..100 {
+            b.enqueue(i % 2, req(i, i as f64, i as f64 + 20.0));
+            if i % 3 == 0 {
+                let t = b.take_batch(i % 2, i as f64);
+                popped += t.reqs.len() + t.expired.len();
+            }
+        }
+        while let Some(v) = b.oldest_nonempty() {
+            let t = b.take_batch(v, 1e9);
+            popped += t.reqs.len() + t.expired.len();
+        }
+        assert_eq!(popped, 100);
+        assert_eq!(b.total(), 0);
+    }
+}

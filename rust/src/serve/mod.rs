@@ -1,0 +1,722 @@
+//! Trace-driven edge serving simulator with SLO-aware routing over HQP
+//! variants — the deployment layer the paper's tables stop short of.
+//!
+//! The paper's single-inference roofline numbers (Tables I/II) say how
+//! fast one request runs; this module says what that buys under *load*: a
+//! fleet of [`crate::hwsim`] devices, each loaded with deployed HQP
+//! variants ([`fleet::VariantProfile`] — the serving view of the
+//! [`crate::hqp::deploy::MethodReport`] engines), replays a synthetic
+//! request trace ([`trace`]) through an admission queue, a dynamic
+//! batcher ([`batcher`]) and an SLO-aware router ([`router`]) that picks
+//! device × variant per request subject to the paper's Δ_max accuracy
+//! constraint.
+//!
+//! ## Design: a virtual-time event heap, not threads
+//!
+//! The simulator is deliberately single-threaded (the same documented
+//! one-core constraint as [`crate::coordinator`]): a discrete-event loop
+//! over a virtual-time min-heap. Service times come from the batched
+//! roofline ([`crate::hwsim::simulate_batch`]), so no wall-clock time is
+//! spent "serving" — a 10-minute trace simulates in milliseconds — and
+//! every run is exactly reproducible: the same `(fleet, trace, config)`
+//! triple produces a byte-identical [`Summary`]. That determinism is what
+//! makes the event-loop conservation laws property-testable
+//! (`tests/prop_serve.rs`).
+//!
+//! ## Request lifecycle
+//!
+//! Every generated request ends in exactly one of three states:
+//!
+//! * **rejected** — at admission: no Δ_max-compliant variant exists, or
+//!   the routed server's queue is at capacity;
+//! * **expired** — its SLO deadline passed while it waited in a queue
+//!   (dropped at batch-formation time, never served);
+//! * **completed** — served in a batch; it *attains* the SLO iff it
+//!   finishes by `arrival + slo_ms`.
+//!
+//! See `rust/DESIGN.md` §Serving for the model's limits (no network cost,
+//! open-loop arrivals, serial devices, linear activation scaling).
+
+pub mod batcher;
+pub mod fleet;
+pub mod router;
+pub mod trace;
+
+pub use fleet::{fleet_for, reference_fleet, workspace_fleet, Fleet, Server, VariantProfile};
+pub use router::{Candidate, Policy, Router};
+pub use trace::ArrivalProcess;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::error::{Error, Result};
+use crate::report::Table;
+
+use batcher::{Batcher, EnqueueAction, QueuedReq};
+
+/// Serving-simulation parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Per-request latency SLO, ms (deadline = arrival + slo).
+    pub slo_ms: f64,
+    /// Δ_max: the accuracy-drop budget the router must respect.
+    pub delta_max: f64,
+    pub policy: Policy,
+    /// Dynamic batcher: max batch size…
+    pub max_batch: usize,
+    /// …and how long an idle device waits for a batch to fill, ms.
+    pub batch_timeout_ms: f64,
+    /// Admission cap on queued requests per server.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            slo_ms: 50.0,
+            delta_max: 0.015,
+            policy: Policy::AccFastest,
+            max_batch: 8,
+            batch_timeout_ms: 2.0,
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Per-(server, variant) serving statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantUsage {
+    pub server: usize,
+    pub device: String,
+    pub variant: String,
+    pub acc_drop: f64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub busy_ms: f64,
+    /// busy_ms / makespan.
+    pub utilization: f64,
+    pub energy_mj: f64,
+}
+
+/// One simulation's results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub model: String,
+    pub policy: &'static str,
+    pub slo_ms: f64,
+    pub delta_max: f64,
+    pub generated: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Of the rejections: requests with no Δ_max-compliant variant.
+    pub rejected_noncompliant: u64,
+    pub expired: u64,
+    /// Completed within their SLO deadline.
+    pub slo_attained: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Virtual time of the last event.
+    pub makespan_ms: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    /// Completion-weighted mean accuracy drop across served variants.
+    pub acc_mix: f64,
+    pub energy_mj: f64,
+    pub per_variant: Vec<VariantUsage>,
+}
+
+impl Summary {
+    /// SLO attainment over *offered* load (rejected and expired requests
+    /// count against it — dropping traffic is not meeting its SLO).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.slo_attained as f64 / self.generated as f64
+        }
+    }
+
+    /// Render the summary (the `hqp serve` output). Deterministic: equal
+    /// summaries render byte-identically.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "serve summary — {} (policy {}, slo {:.1} ms, Δmax {:.2}%)\n",
+            self.model,
+            self.policy,
+            self.slo_ms,
+            self.delta_max * 100.0
+        );
+        s.push_str(&format!(
+            "  requests : {} generated = {} completed + {} rejected + {} expired\n",
+            self.generated, self.completed, self.rejected, self.expired
+        ));
+        s.push_str(&format!(
+            "  slo      : {:.2}% attainment   throughput {:.1} rps   mean batch {:.2}\n",
+            self.slo_attainment() * 100.0,
+            self.throughput_rps,
+            self.mean_batch
+        ));
+        s.push_str(&format!(
+            "  latency  : p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms   mean {:.3} ms\n",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_ms
+        ));
+        s.push_str(&format!(
+            "  quality  : completion-weighted acc drop {:.3}%   energy {:.1} mJ\n",
+            self.acc_mix * 100.0,
+            self.energy_mj
+        ));
+        let mut t = Table::new(vec![
+            "Device",
+            "Variant",
+            "Acc Drop",
+            "Completed",
+            "Batches",
+            "Mean Batch",
+            "Util",
+            "Energy (mJ)",
+        ]);
+        for u in &self.per_variant {
+            t.row(vec![
+                u.device.clone(),
+                u.variant.clone(),
+                format!("{:.2}%", u.acc_drop * 100.0),
+                format!("{}", u.completed),
+                format!("{}", u.batches),
+                format!("{:.2}", u.mean_batch),
+                format!("{:.1}%", u.utilization * 100.0),
+                format!("{:.1}", u.energy_mj),
+            ]);
+        }
+        s.push_str(&t.render());
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event machinery
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    Arrival { req: usize },
+    Flush { server: usize, variant: usize, token: u64 },
+    BatchDone { server: usize, variant: usize, reqs: Vec<QueuedReq> },
+}
+
+/// Heap key: virtual time, ties broken by insertion sequence — a total
+/// order, so the pop order (and therefore the whole simulation) is
+/// deterministic.
+#[derive(Clone, Debug)]
+struct Event {
+    time_ms: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Event) -> std::cmp::Ordering {
+        self.time_ms
+            .total_cmp(&other.time_ms)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct ServerState {
+    batcher: Batcher,
+    busy: bool,
+    busy_until: f64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct UsageAcc {
+    completed: u64,
+    batches: u64,
+    occupancy: u64,
+    busy_ms: f64,
+    energy_mj: f64,
+}
+
+#[derive(Default)]
+struct Acc {
+    completed: u64,
+    rejected_full: u64,
+    rejected_noncompliant: u64,
+    expired: u64,
+    slo_attained: u64,
+    latencies: Vec<f64>,
+    usage: Vec<Vec<UsageAcc>>,
+}
+
+/// Form and launch a batch on server `s` starting from variant `v`,
+/// falling through to the variant whose head has waited longest when `v`
+/// turns out empty (or fully expired). Leaves the server idle when no
+/// servable request remains.
+#[allow(clippy::too_many_arguments)]
+fn try_dispatch(
+    s: usize,
+    mut v: usize,
+    now: f64,
+    st: &mut ServerState,
+    server: &Server,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    acc: &mut Acc,
+) {
+    loop {
+        let taken = st.batcher.take_batch(v, now);
+        acc.expired += taken.expired.len() as u64;
+        if taken.reqs.is_empty() {
+            match st.batcher.oldest_nonempty() {
+                Some(next) => {
+                    v = next;
+                    continue;
+                }
+                None => {
+                    st.busy = false;
+                    return;
+                }
+            }
+        }
+        let b = taken.reqs.len();
+        let prof = &server.variants[v];
+        let service_ms = prof.batch_ms[b - 1];
+        st.busy = true;
+        st.busy_until = now + service_ms;
+        let u = &mut acc.usage[s][v];
+        u.batches += 1;
+        u.occupancy += b as u64;
+        u.busy_ms += service_ms;
+        u.energy_mj += prof.energy_mj[b - 1];
+        *seq += 1;
+        heap.push(Reverse(Event {
+            time_ms: st.busy_until,
+            seq: *seq,
+            kind: EventKind::BatchDone { server: s, variant: v, reqs: taken.reqs },
+        }));
+        return;
+    }
+}
+
+/// Replay `arrivals` (sorted ms timestamps from [`trace::generate`])
+/// against `fleet` under `cfg`. Virtual-time monotonicity is checked on
+/// every event; a regression is an internal invariant violation and
+/// errors out rather than silently producing garbage.
+pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Result<Summary> {
+    if fleet.servers.is_empty() {
+        return Err(Error::hqp("serve: empty fleet"));
+    }
+    if cfg.max_batch == 0 {
+        return Err(Error::hqp("serve: max_batch must be >= 1"));
+    }
+    if cfg.slo_ms <= 0.0 {
+        return Err(Error::hqp("serve: slo_ms must be positive"));
+    }
+    if fleet.max_batch() < cfg.max_batch {
+        return Err(Error::hqp(format!(
+            "serve: fleet profiles support batches up to {}, config wants {}",
+            fleet.max_batch(),
+            cfg.max_batch
+        )));
+    }
+
+    let mut router = Router::new(fleet, cfg.delta_max, cfg.policy);
+    let mut state: Vec<ServerState> = fleet
+        .servers
+        .iter()
+        .map(|srv| ServerState {
+            batcher: Batcher::new(srv.variants.len(), cfg.max_batch, cfg.batch_timeout_ms),
+            busy: false,
+            busy_until: 0.0,
+        })
+        .collect();
+    let mut acc = Acc {
+        usage: fleet
+            .servers
+            .iter()
+            .map(|srv| vec![UsageAcc::default(); srv.variants.len()])
+            .collect(),
+        ..Default::default()
+    };
+
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(arrivals.len() + 16);
+    let mut seq: u64 = 0;
+    for (i, &t) in arrivals.iter().enumerate() {
+        seq += 1;
+        heap.push(Reverse(Event { time_ms: t, seq, kind: EventKind::Arrival { req: i } }));
+    }
+
+    let mut backlog = vec![0.0f64; fleet.servers.len()];
+    let mut last_time = f64::NEG_INFINITY;
+    let mut makespan = 0.0f64;
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        let now = ev.time_ms;
+        if now < last_time {
+            return Err(Error::hqp(format!(
+                "serve: virtual time regressed from {last_time} to {now}"
+            )));
+        }
+        last_time = now;
+        makespan = now;
+
+        match ev.kind {
+            EventKind::Arrival { req } => {
+                // router input: remaining busy time + queued work estimate
+                for (s, st) in state.iter().enumerate() {
+                    let mut est = if st.busy { (st.busy_until - now).max(0.0) } else { 0.0 };
+                    for (v, prof) in fleet.servers[s].variants.iter().enumerate() {
+                        est += st.batcher.backlog(v) as f64 * prof.batch1_ms();
+                    }
+                    backlog[s] = est;
+                }
+                let Some(c) = router.route(&backlog) else {
+                    acc.rejected_noncompliant += 1;
+                    continue;
+                };
+                let st = &mut state[c.server];
+                if st.batcher.total() >= cfg.queue_cap {
+                    acc.rejected_full += 1;
+                    continue;
+                }
+                let qreq = QueuedReq {
+                    id: req,
+                    arrival_ms: now,
+                    deadline_ms: now + cfg.slo_ms,
+                };
+                match st.batcher.enqueue(c.variant, qreq) {
+                    EnqueueAction::BatchReady => {
+                        if !st.busy {
+                            try_dispatch(
+                                c.server,
+                                c.variant,
+                                now,
+                                st,
+                                &fleet.servers[c.server],
+                                &mut heap,
+                                &mut seq,
+                                &mut acc,
+                            );
+                        }
+                    }
+                    EnqueueAction::ArmFlush(token) => {
+                        if !st.busy {
+                            seq += 1;
+                            heap.push(Reverse(Event {
+                                time_ms: now + cfg.batch_timeout_ms,
+                                seq,
+                                kind: EventKind::Flush {
+                                    server: c.server,
+                                    variant: c.variant,
+                                    token,
+                                },
+                            }));
+                        }
+                    }
+                    EnqueueAction::Queued => {}
+                }
+            }
+            EventKind::Flush { server, variant, token } => {
+                let st = &mut state[server];
+                if !st.busy && st.batcher.flush_live(variant, token) {
+                    try_dispatch(
+                        server,
+                        variant,
+                        now,
+                        st,
+                        &fleet.servers[server],
+                        &mut heap,
+                        &mut seq,
+                        &mut acc,
+                    );
+                }
+            }
+            EventKind::BatchDone { server, variant, reqs } => {
+                for r in &reqs {
+                    acc.completed += 1;
+                    acc.latencies.push(now - r.arrival_ms);
+                    if now <= r.deadline_ms {
+                        acc.slo_attained += 1;
+                    }
+                    acc.usage[server][variant].completed += 1;
+                }
+                let st = &mut state[server];
+                st.busy = false;
+                if let Some(next) = st.batcher.oldest_nonempty() {
+                    try_dispatch(
+                        server,
+                        next,
+                        now,
+                        st,
+                        &fleet.servers[server],
+                        &mut heap,
+                        &mut seq,
+                        &mut acc,
+                    );
+                }
+            }
+        }
+    }
+
+    // every queue must have drained: the heap only empties once no flush
+    // or batch-done event is pending anywhere
+    debug_assert!(state.iter().all(|st| st.batcher.is_empty()));
+
+    Ok(build_summary(fleet, cfg, acc, makespan))
+}
+
+fn build_summary(fleet: &Fleet, cfg: &ServeConfig, mut acc: Acc, makespan_ms: f64) -> Summary {
+    acc.latencies.sort_by(f64::total_cmp);
+    let n = acc.latencies.len();
+    let pct = |p: f64| -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            acc.latencies[((n - 1) as f64 * p).round() as usize]
+        }
+    };
+    let mean_ms = if n == 0 {
+        0.0
+    } else {
+        acc.latencies.iter().sum::<f64>() / n as f64
+    };
+
+    let mut per_variant = Vec::new();
+    let mut total_batches = 0u64;
+    let mut total_occupancy = 0u64;
+    let mut acc_weighted = 0.0f64;
+    let mut energy = 0.0f64;
+    for (s, server) in fleet.servers.iter().enumerate() {
+        for (v, prof) in server.variants.iter().enumerate() {
+            let u = acc.usage[s][v];
+            total_batches += u.batches;
+            total_occupancy += u.occupancy;
+            acc_weighted += u.completed as f64 * prof.acc_drop;
+            energy += u.energy_mj;
+            per_variant.push(VariantUsage {
+                server: s,
+                device: server.device.name.clone(),
+                variant: prof.name.clone(),
+                acc_drop: prof.acc_drop,
+                completed: u.completed,
+                batches: u.batches,
+                mean_batch: if u.batches == 0 {
+                    0.0
+                } else {
+                    u.occupancy as f64 / u.batches as f64
+                },
+                busy_ms: u.busy_ms,
+                utilization: if makespan_ms > 0.0 { u.busy_ms / makespan_ms } else { 0.0 },
+                energy_mj: u.energy_mj,
+            });
+        }
+    }
+
+    let generated =
+        acc.completed + acc.rejected_full + acc.rejected_noncompliant + acc.expired;
+    Summary {
+        model: fleet.model.clone(),
+        policy: cfg.policy.name(),
+        slo_ms: cfg.slo_ms,
+        delta_max: cfg.delta_max,
+        generated,
+        completed: acc.completed,
+        rejected: acc.rejected_full + acc.rejected_noncompliant,
+        rejected_noncompliant: acc.rejected_noncompliant,
+        expired: acc.expired,
+        slo_attained: acc.slo_attained,
+        mean_ms,
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        makespan_ms,
+        throughput_rps: if makespan_ms > 0.0 {
+            acc.completed as f64 / (makespan_ms / 1e3)
+        } else {
+            0.0
+        },
+        mean_batch: if total_batches == 0 {
+            0.0
+        } else {
+            total_occupancy as f64 / total_batches as f64
+        },
+        acc_mix: if acc.completed == 0 {
+            0.0
+        } else {
+            acc_weighted / acc.completed as f64
+        },
+        energy_mj: energy,
+        per_variant,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::Device;
+
+    fn var(name: &str, acc_drop: f64, b1: f64, b2: f64) -> VariantProfile {
+        VariantProfile {
+            name: name.into(),
+            acc_drop,
+            batch_ms: vec![b1, b2],
+            energy_mj: vec![b1 * 15.0, b2 * 15.0],
+        }
+    }
+
+    fn one_server(v: Vec<VariantProfile>) -> Fleet {
+        Fleet::single("toy", Device::xavier_nx(), v)
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            slo_ms: 100.0,
+            delta_max: 0.015,
+            policy: Policy::AccFastest,
+            max_batch: 2,
+            batch_timeout_ms: 5.0,
+            queue_cap: 64,
+        }
+    }
+
+    #[test]
+    fn full_batches_dispatch_immediately() {
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        let s = simulate_fleet(&fleet, &[0.0, 1.0, 2.0, 3.0], &cfg()).unwrap();
+        // batch [0,1] launches at t=1 (full), completes 17; [2,3] at 17→33
+        assert_eq!(s.generated, 4);
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.expired, 0);
+        assert_eq!(s.slo_attained, 4);
+        assert_eq!(s.makespan_ms, 33.0);
+        assert_eq!(s.mean_batch, 2.0);
+        assert_eq!(s.per_variant[0].batches, 2);
+        // latencies: 17, 16, 31, 30
+        assert_eq!(s.p50_ms, 30.0);
+        assert!((s.mean_ms - 23.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_the_timeout() {
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        let s = simulate_fleet(&fleet, &[0.0], &cfg()).unwrap();
+        // flush at 5, service 10 → completes 15
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.makespan_ms, 15.0);
+        assert!((s.mean_ms - 15.0).abs() < 1e-12);
+        assert_eq!(s.per_variant[0].mean_batch, 1.0);
+    }
+
+    #[test]
+    fn expiry_and_slo_misses_are_distinct() {
+        let mut c = cfg();
+        c.slo_ms = 3.0;
+        c.batch_timeout_ms = 2.0;
+        c.max_batch = 1;
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        // req0: dispatched at 0 (max_batch 1), completes at 10 > deadline 3
+        //   → completed but SLO missed
+        // req1 (t=1): queued while busy; at t=10 its deadline 4 < 10
+        //   → expired, never served
+        let s = simulate_fleet(&fleet, &[0.0, 1.0], &c).unwrap();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.slo_attained, 0);
+        assert_eq!(s.generated, 2);
+    }
+
+    #[test]
+    fn queue_cap_rejects_at_admission() {
+        let mut c = cfg();
+        c.queue_cap = 2;
+        c.max_batch = 2;
+        let fleet = one_server(vec![var("hqp", 0.012, 50.0, 80.0)]);
+        // t=0,0,0,0: first two fill the queue (and dispatch), during the
+        // long service the cap keeps further arrivals out
+        let s = simulate_fleet(&fleet, &[0.0, 0.0, 0.0, 0.0, 0.0], &c).unwrap();
+        assert!(s.rejected > 0);
+        assert_eq!(s.generated, 5);
+        assert_eq!(s.completed + s.rejected + s.expired, 5);
+    }
+
+    #[test]
+    fn noncompliant_only_fleet_rejects_everything() {
+        let fleet = one_server(vec![var("p50", 0.021, 1.0, 1.6)]);
+        let s = simulate_fleet(&fleet, &[0.0, 1.0, 2.0], &cfg()).unwrap();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.rejected_noncompliant, 3);
+        assert_eq!(s.slo_attainment(), 0.0);
+    }
+
+    #[test]
+    fn same_inputs_reproduce_identical_summaries() {
+        let fleet = reference_fleet(
+            "resnet18",
+            &[Device::xavier_nx()],
+            &["baseline", "q8", "p50", "hqp"],
+            8,
+        )
+        .unwrap();
+        let arrivals = trace::generate(&ArrivalProcess::Poisson { rps: 300.0 }, 2_000.0, 42);
+        let mut c = cfg();
+        c.max_batch = 8;
+        let a = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        let b = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.render(), b.render(), "rendered summary must be byte-identical");
+        assert_eq!(a.generated, arrivals.len() as u64);
+    }
+
+    #[test]
+    fn router_never_serves_noncompliant_variants() {
+        let fleet = one_server(vec![
+            var("baseline", 0.0, 8.0, 13.0),
+            var("p50", 0.021, 0.5, 0.8),
+            var("hqp", 0.012, 1.0, 1.6),
+        ]);
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
+            let mut c = cfg();
+            c.policy = policy;
+            let arrivals: Vec<f64> = (0..200).map(|i| i as f64 * 0.9).collect();
+            let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+            for u in &s.per_variant {
+                if u.completed > 0 || u.batches > 0 {
+                    assert!(
+                        u.acc_drop <= c.delta_max,
+                        "{policy:?} served non-compliant {}",
+                        u.variant
+                    );
+                }
+            }
+            assert!(s.completed > 0);
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        let fleet = one_server(vec![var("hqp", 0.012, 1.0, 1.6)]);
+        let mut c = cfg();
+        c.max_batch = 4; // profiles only go to 2
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
+        let mut c = cfg();
+        c.slo_ms = 0.0;
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
+        let empty = Fleet { model: "m".into(), servers: vec![] };
+        assert!(simulate_fleet(&empty, &[0.0], &cfg()).is_err());
+    }
+}

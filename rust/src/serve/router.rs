@@ -1,0 +1,251 @@
+//! SLO-aware routing: pick a (server, variant) per request.
+//!
+//! Every policy routes only over the *compliant* candidate set — variants
+//! whose measured accuracy drop is within Δ_max. This lifts the paper's
+//! pruning-level guarantee (Algorithm 1's accept condition) into a
+//! serving-level admission criterion: a request can never be served by an
+//! engine that violates the accuracy budget, no matter the load. When no
+//! compliant variant exists the router returns `None` and the request is
+//! rejected at admission.
+
+use super::fleet::Fleet;
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Cycle through the compliant (server, variant) pairs.
+    RoundRobin,
+    /// Least-loaded server (by estimated backlog ms), fastest compliant
+    /// variant on it.
+    LeastLoaded,
+    /// Accuracy-constrained fastest: minimize estimated completion time
+    /// (server backlog + the variant's batch-1 service time) over all
+    /// compliant pairs.
+    AccFastest,
+}
+
+impl Policy {
+    pub fn parse(name: &str) -> Option<Policy> {
+        match name {
+            "round-robin" | "rr" => Some(Policy::RoundRobin),
+            "least-loaded" | "ll" => Some(Policy::LeastLoaded),
+            "acc-fastest" | "af" => Some(Policy::AccFastest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::AccFastest => "acc-fastest",
+        }
+    }
+}
+
+/// A routable (server, variant) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Candidate {
+    pub server: usize,
+    pub variant: usize,
+}
+
+/// The router: a policy over the precomputed compliant candidate set.
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: Policy,
+    candidates: Vec<Candidate>,
+    /// batch-1 ms per candidate (est. completion = backlog + this).
+    batch1_ms: Vec<f64>,
+    acc_drop: Vec<f64>,
+    rr_cursor: usize,
+}
+
+impl Router {
+    /// Build the compliant candidate set (enumeration order: server index,
+    /// then variant index — the deterministic tie-break everywhere).
+    pub fn new(fleet: &Fleet, delta_max: f64, policy: Policy) -> Router {
+        let mut candidates = Vec::new();
+        let mut batch1_ms = Vec::new();
+        let mut acc_drop = Vec::new();
+        for (s, server) in fleet.servers.iter().enumerate() {
+            for (v, var) in server.variants.iter().enumerate() {
+                if var.compliant(delta_max) {
+                    candidates.push(Candidate { server: s, variant: v });
+                    batch1_ms.push(var.batch1_ms());
+                    acc_drop.push(var.acc_drop);
+                }
+            }
+        }
+        Router { policy, candidates, batch1_ms, acc_drop, rr_cursor: 0 }
+    }
+
+    /// Number of compliant (server, variant) pairs.
+    pub fn num_candidates(&self) -> usize {
+        self.candidates.len()
+    }
+
+    /// Route one request. `backlog_ms[s]` estimates server `s`'s current
+    /// backlog (remaining busy time + queued work). Returns `None` when no
+    /// compliant variant exists anywhere in the fleet.
+    pub fn route(&mut self, backlog_ms: &[f64]) -> Option<Candidate> {
+        if self.candidates.is_empty() {
+            return None;
+        }
+        match self.policy {
+            Policy::RoundRobin => {
+                let c = self.candidates[self.rr_cursor % self.candidates.len()];
+                self.rr_cursor = (self.rr_cursor + 1) % self.candidates.len();
+                Some(c)
+            }
+            Policy::LeastLoaded => {
+                // least-loaded server among those with a compliant variant…
+                let mut best_server = None::<(f64, usize)>;
+                for c in &self.candidates {
+                    let load = backlog_ms[c.server];
+                    let better = match best_server {
+                        None => true,
+                        Some((l, s)) => load < l || (load == l && c.server < s),
+                    };
+                    if better {
+                        best_server = Some((load, c.server));
+                    }
+                }
+                let (_, server) = best_server?;
+                // …then its fastest compliant variant
+                self.best_on(server, |i| self.batch1_ms[i])
+            }
+            Policy::AccFastest => {
+                let mut best = None::<(f64, f64, usize)>; // (finish, drop, idx)
+                for (i, c) in self.candidates.iter().enumerate() {
+                    let finish = backlog_ms[c.server] + self.batch1_ms[i];
+                    let key = (finish, self.acc_drop[i]);
+                    let better = match best {
+                        None => true,
+                        Some((f, d, _)) => key.0 < f || (key.0 == f && key.1 < d),
+                    };
+                    if better {
+                        best = Some((key.0, key.1, i));
+                    }
+                }
+                best.map(|(_, _, i)| self.candidates[i])
+            }
+        }
+    }
+
+    /// Lowest-key candidate on one server (first index wins ties).
+    fn best_on(&self, server: usize, key: impl Fn(usize) -> f64) -> Option<Candidate> {
+        let mut best = None::<(f64, usize)>;
+        for (i, c) in self.candidates.iter().enumerate() {
+            if c.server != server {
+                continue;
+            }
+            let k = key(i);
+            let better = match best {
+                None => true,
+                Some((bk, _)) => k < bk,
+            };
+            if better {
+                best = Some((k, i));
+            }
+        }
+        best.map(|(_, i)| self.candidates[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::fleet::{Fleet, Server, VariantProfile};
+    use crate::hwsim::Device;
+
+    fn var(name: &str, acc_drop: f64, ms: f64) -> VariantProfile {
+        VariantProfile {
+            name: name.into(),
+            acc_drop,
+            batch_ms: vec![ms, ms * 1.6],
+            energy_mj: vec![ms * 10.0, ms * 16.0],
+        }
+    }
+
+    fn fleet() -> Fleet {
+        Fleet {
+            model: "m".into(),
+            servers: vec![
+                Server {
+                    device: Device::xavier_nx(),
+                    variants: vec![
+                        var("baseline", 0.0, 8.0),
+                        var("p50", 0.021, 1.0), // violates Δmax
+                        var("hqp", 0.012, 0.5),
+                    ],
+                },
+                Server {
+                    device: Device::jetson_nano(),
+                    variants: vec![var("baseline", 0.0, 20.0), var("hqp", 0.012, 4.0)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn non_compliant_variants_are_never_candidates() {
+        let r = Router::new(&fleet(), 0.015, Policy::AccFastest);
+        assert_eq!(r.num_candidates(), 4, "p50 must be excluded");
+        let mut r = Router::new(&fleet(), 0.015, Policy::RoundRobin);
+        for _ in 0..20 {
+            let c = r.route(&[0.0, 0.0]).unwrap();
+            assert!(!(c.server == 0 && c.variant == 1), "routed to p50");
+        }
+    }
+
+    #[test]
+    fn no_compliant_variant_means_reject() {
+        let mut f = fleet();
+        f.servers.truncate(1);
+        f.servers[0].variants = vec![var("p50", 0.021, 1.0)];
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
+            let mut r = Router::new(&f, 0.015, policy);
+            assert_eq!(r.route(&[0.0]), None);
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_deterministically() {
+        let mut r = Router::new(&fleet(), 0.015, Policy::RoundRobin);
+        let seq: Vec<Candidate> = (0..8).map(|_| r.route(&[0.0, 0.0]).unwrap()).collect();
+        assert_eq!(seq[0], seq[4]);
+        assert_eq!(seq[1], seq[5]);
+        let distinct: std::collections::BTreeSet<Candidate> = seq[..4].iter().copied().collect();
+        assert_eq!(distinct.len(), 4, "first cycle visits all 4 compliant pairs");
+    }
+
+    #[test]
+    fn acc_fastest_picks_global_fastest_then_respects_backlog() {
+        let mut r = Router::new(&fleet(), 0.015, Policy::AccFastest);
+        let c = r.route(&[0.0, 0.0]).unwrap();
+        assert_eq!((c.server, c.variant), (0, 2), "hqp on NX is fastest");
+        // heavy NX backlog shifts routing to Nano's hqp
+        let c = r.route(&[100.0, 0.0]).unwrap();
+        assert_eq!((c.server, c.variant), (1, 1));
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_server() {
+        let mut r = Router::new(&fleet(), 0.015, Policy::LeastLoaded);
+        let c = r.route(&[50.0, 1.0]).unwrap();
+        assert_eq!(c.server, 1);
+        assert_eq!(c.variant, 1, "fastest compliant on nano is hqp");
+        let c = r.route(&[0.0, 1.0]).unwrap();
+        assert_eq!((c.server, c.variant), (0, 2));
+    }
+
+    #[test]
+    fn parse_policy_names() {
+        assert_eq!(Policy::parse("acc-fastest"), Some(Policy::AccFastest));
+        assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("least-loaded"), Some(Policy::LeastLoaded));
+        assert!(Policy::parse("random").is_none());
+        assert_eq!(Policy::AccFastest.name(), "acc-fastest");
+    }
+}

@@ -1,0 +1,180 @@
+//! Synthetic request traces: open-loop arrival-time generators.
+//!
+//! Two processes, both seeded through [`crate::testkit::prng::Prng`] so a
+//! `(process, duration, seed)` triple always reproduces the identical
+//! trace (the serving simulator's determinism contract hangs off this):
+//!
+//! * **Poisson** — memoryless arrivals at a constant rate; the classic
+//!   open-loop serving workload.
+//! * **MMPP(2)** — a two-state Markov-modulated Poisson process: the rate
+//!   switches between a low and a high state with exponentially
+//!   distributed dwell times. This is the bursty regime that
+//!   Environment-Aware Dynamic Pruning (O'Quinn et al., 2025) argues edge
+//!   pipelines must survive: the mean offered load can be modest while
+//!   bursts transiently exceed a variant's capacity.
+
+use crate::testkit::prng::Prng;
+
+/// An arrival process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Constant-rate Poisson arrivals.
+    Poisson { rps: f64 },
+    /// Two-state MMPP: exponential dwell in each state, Poisson arrivals
+    /// at the state's rate.
+    Mmpp {
+        rps_low: f64,
+        rps_high: f64,
+        mean_dwell_ms: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI name into a process around a base rate.
+    pub fn parse(name: &str, rps: f64) -> Option<ArrivalProcess> {
+        match name {
+            "poisson" => Some(ArrivalProcess::Poisson { rps }),
+            // bursty preset: equal mean dwell in each state, so the
+            // long-run mean is (0.4 + 1.6)/2 = exactly the requested rps,
+            // with a 4x peak-to-trough swing
+            "mmpp" => Some(ArrivalProcess::Mmpp {
+                rps_low: rps * 0.4,
+                rps_high: rps * 1.6,
+                mean_dwell_ms: 250.0,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Mmpp { .. } => "mmpp",
+        }
+    }
+}
+
+/// Exponential variate with mean `1/rate_per_ms` (rate in events/ms).
+fn exp_ms(rng: &mut Prng, rate_per_ms: f64) -> f64 {
+    // 1 - u in (0, 1]: ln never sees 0
+    -(1.0 - rng.next_f64()).ln() / rate_per_ms
+}
+
+/// Generate the sorted arrival times (ms, in `[0, duration_ms)`) of one
+/// trace. Deterministic per `(process, duration_ms, seed)`.
+pub fn generate(process: &ArrivalProcess, duration_ms: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    let mut out = Vec::new();
+    match *process {
+        ArrivalProcess::Poisson { rps } => {
+            if rps <= 0.0 {
+                return out;
+            }
+            let rate = rps / 1e3;
+            let mut t = exp_ms(&mut rng, rate);
+            while t < duration_ms {
+                out.push(t);
+                t += exp_ms(&mut rng, rate);
+            }
+        }
+        ArrivalProcess::Mmpp { rps_low, rps_high, mean_dwell_ms } => {
+            if rps_low <= 0.0 || rps_high <= 0.0 || mean_dwell_ms <= 0.0 {
+                return out;
+            }
+            let mut high = false;
+            let mut t = 0.0f64;
+            let mut switch_at = exp_ms(&mut rng, 1.0 / mean_dwell_ms);
+            while t < duration_ms {
+                let rate = if high { rps_high } else { rps_low } / 1e3;
+                let next = t + exp_ms(&mut rng, rate);
+                if next < switch_at {
+                    // arrival within the current state
+                    t = next;
+                    if t < duration_ms {
+                        out.push(t);
+                    }
+                } else {
+                    // state switch first; memorylessness lets us redraw
+                    // the arrival gap from the new state's rate
+                    t = switch_at;
+                    high = !high;
+                    switch_at = t + exp_ms(&mut rng, 1.0 / mean_dwell_ms);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let p = ArrivalProcess::Poisson { rps: 200.0 };
+        let t = generate(&p, 60_000.0, 7);
+        let got = t.len() as f64 / 60.0;
+        assert!(
+            (got - 200.0).abs() < 12.0,
+            "poisson@200rps over 60s gave {got:.1} rps"
+        );
+    }
+
+    #[test]
+    fn traces_are_sorted_in_range_and_deterministic() {
+        for p in [
+            ArrivalProcess::Poisson { rps: 50.0 },
+            ArrivalProcess::parse("mmpp", 50.0).unwrap(),
+        ] {
+            let a = generate(&p, 5_000.0, 42);
+            let b = generate(&p, 5_000.0, 42);
+            assert_eq!(a, b, "same seed must reproduce the trace");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+            assert!(a.iter().all(|&t| t >= 0.0 && t < 5_000.0), "in range");
+            let c = generate(&p, 5_000.0, 43);
+            assert_ne!(a, c, "different seed must differ");
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // compare per-100ms-bin arrival-count variance at matched means
+        let dur = 60_000.0;
+        let po = generate(&ArrivalProcess::Poisson { rps: 100.0 }, dur, 11);
+        let mm = generate(
+            &ArrivalProcess::Mmpp { rps_low: 40.0, rps_high: 250.0, mean_dwell_ms: 250.0 },
+            dur,
+            11,
+        );
+        let var = |ts: &[f64]| {
+            let bins = (dur / 100.0) as usize;
+            let mut counts = vec![0f64; bins];
+            for &t in ts {
+                counts[((t / 100.0) as usize).min(bins - 1)] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / bins as f64;
+            let v = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / bins as f64;
+            // index of dispersion: var/mean (Poisson ≈ 1)
+            v / mean.max(1e-9)
+        };
+        assert!(
+            var(&mm) > var(&po) * 2.0,
+            "mmpp dispersion {} must exceed poisson {}",
+            var(&mm),
+            var(&po)
+        );
+    }
+
+    #[test]
+    fn zero_rate_yields_empty_trace() {
+        assert!(generate(&ArrivalProcess::Poisson { rps: 0.0 }, 1000.0, 1).is_empty());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ArrivalProcess::parse("poisson", 10.0).unwrap().name(), "poisson");
+        assert_eq!(ArrivalProcess::parse("mmpp", 10.0).unwrap().name(), "mmpp");
+        assert!(ArrivalProcess::parse("uniform", 10.0).is_none());
+    }
+}

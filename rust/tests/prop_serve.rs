@@ -1,0 +1,198 @@
+//! Property tests for the serving simulator's conservation laws (testkit
+//! harness — the offline proptest substitute, DESIGN.md §Substitutions).
+//!
+//! These run WITHOUT artifacts: fleets come from the paper-anchored
+//! reference profiles. Over randomized (fleet, trace, config) triples:
+//!
+//! * **conservation** — every generated request is exactly one of
+//!   {completed, rejected, expired};
+//! * **determinism** — the same seed reproduces a byte-identical summary;
+//! * **admission** — the router never serves a variant whose accuracy
+//!   drop exceeds Δ_max;
+//! * **monotone virtual time** — the event loop never travels backwards
+//!   (`simulate_fleet` errors out on regression, so `Ok` is the proof);
+//! * **sanity** — percentiles are ordered, attainment ⊆ completions.
+
+use hqp::hwsim::Device;
+use hqp::serve::{reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig};
+use hqp::testkit::prng::Prng;
+
+const CASES: usize = 50;
+const METHODS: [&str; 5] = ["baseline", "q8", "p50", "hqp", "mixed"];
+const POLICIES: [Policy; 3] = [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest];
+
+struct Case {
+    model: &'static str,
+    methods: Vec<&'static str>,
+    two_servers: bool,
+    cfg: ServeConfig,
+    process: ArrivalProcess,
+    duration_ms: f64,
+    trace_seed: u64,
+}
+
+fn gen_case(rng: &mut Prng) -> Case {
+    let mut methods: Vec<&'static str> =
+        METHODS.iter().copied().filter(|_| rng.next_f64() < 0.6).collect();
+    if methods.is_empty() {
+        methods.push(if rng.next_f64() < 0.5 { "baseline" } else { "p50" });
+    }
+    let rps = 20.0 + rng.next_f64() * 1200.0;
+    let process = if rng.next_f64() < 0.5 {
+        ArrivalProcess::Poisson { rps }
+    } else {
+        ArrivalProcess::parse("mmpp", rps).unwrap()
+    };
+    Case {
+        model: if rng.next_f64() < 0.5 { "resnet18" } else { "mobilenetv3" },
+        methods,
+        two_servers: rng.next_f64() < 0.4,
+        cfg: ServeConfig {
+            slo_ms: 1.0 + rng.next_f64() * 80.0,
+            delta_max: [0.004, 0.01, 0.015, 0.03][rng.below(4)],
+            policy: POLICIES[rng.below(3)],
+            max_batch: rng.below(8) + 1,
+            batch_timeout_ms: rng.next_f64() * 4.0,
+            queue_cap: rng.below(124) + 4,
+        },
+        duration_ms: 300.0 + rng.next_f64() * 1200.0,
+        trace_seed: rng.next_u64(),
+    }
+}
+
+fn run_case(case: &Case) -> (hqp::serve::Summary, Vec<f64>) {
+    let devices = if case.two_servers {
+        vec![Device::xavier_nx(), Device::jetson_nano()]
+    } else {
+        vec![Device::xavier_nx()]
+    };
+    let fleet =
+        reference_fleet(case.model, &devices, &case.methods, case.cfg.max_batch).unwrap();
+    let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
+    let summary = simulate_fleet(&fleet, &arrivals, &case.cfg)
+        .expect("virtual time must stay monotone and the config is valid");
+    (summary, arrivals)
+}
+
+#[test]
+fn prop_conservation_every_request_accounted_once() {
+    let mut rng = Prng::new(0x5E21E);
+    for case_no in 0..CASES {
+        let case = gen_case(&mut rng);
+        let (s, arrivals) = run_case(&case);
+        assert_eq!(
+            s.generated,
+            arrivals.len() as u64,
+            "case {case_no}: generated != trace length"
+        );
+        assert_eq!(
+            s.completed + s.rejected + s.expired,
+            s.generated,
+            "case {case_no}: {} completed + {} rejected + {} expired != {} generated",
+            s.completed,
+            s.rejected,
+            s.expired,
+            s.generated
+        );
+        let per_variant_completed: u64 = s.per_variant.iter().map(|u| u.completed).sum();
+        assert_eq!(per_variant_completed, s.completed, "case {case_no}: usage split");
+    }
+}
+
+#[test]
+fn prop_same_seed_reproduces_identical_summary() {
+    let mut rng = Prng::new(0xDE7E12);
+    for case_no in 0..CASES / 2 {
+        let case = gen_case(&mut rng);
+        let (a, _) = run_case(&case);
+        let (b, _) = run_case(&case);
+        assert_eq!(a, b, "case {case_no}: summaries diverged on identical inputs");
+        assert_eq!(
+            a.render(),
+            b.render(),
+            "case {case_no}: rendered summaries not byte-identical"
+        );
+    }
+}
+
+#[test]
+fn prop_router_respects_delta_max() {
+    let mut rng = Prng::new(0xACCE55);
+    for case_no in 0..CASES {
+        let case = gen_case(&mut rng);
+        let (s, _) = run_case(&case);
+        for u in &s.per_variant {
+            if u.completed > 0 || u.batches > 0 {
+                assert!(
+                    u.acc_drop <= case.cfg.delta_max,
+                    "case {case_no}: served {} (drop {:.3}%) above Δmax {:.3}%",
+                    u.variant,
+                    u.acc_drop * 100.0,
+                    case.cfg.delta_max * 100.0
+                );
+            }
+        }
+        // with Δmax = 0.03 every variant is admissible; with a fleet of
+        // only-violating variants everything must be rejected
+        if s.per_variant.iter().all(|u| u.acc_drop > case.cfg.delta_max) {
+            assert_eq!(s.completed, 0, "case {case_no}");
+            assert_eq!(s.rejected_noncompliant, s.generated, "case {case_no}");
+        }
+    }
+}
+
+#[test]
+fn prop_summary_stats_are_sane() {
+    let mut rng = Prng::new(0x57A75);
+    for case_no in 0..CASES {
+        let case = gen_case(&mut rng);
+        let (s, _) = run_case(&case);
+        assert!(
+            s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms,
+            "case {case_no}: percentiles out of order"
+        );
+        assert!(s.slo_attained <= s.completed, "case {case_no}");
+        assert!(s.throughput_rps >= 0.0 && s.mean_ms >= 0.0, "case {case_no}");
+        assert!(s.acc_mix <= 0.03 + 1e-12, "case {case_no}: acc mix above any budget");
+        if s.completed > 0 {
+            assert!(s.p50_ms > 0.0, "case {case_no}: zero latency is impossible");
+            assert!(
+                s.per_variant.iter().any(|u| u.completed > 0),
+                "case {case_no}: completions must be attributed to a variant"
+            );
+            assert!(s.mean_batch >= 1.0, "case {case_no}: batches can't be empty");
+        }
+    }
+}
+
+/// The acceptance-criterion scenario, pinned: at an offered load chosen
+/// between the two capacities, HQP's compressed engine sustains strictly
+/// higher SLO attainment than the FP32 baseline — the serving-level
+/// analogue of the paper's 3.12× single-inference speedup.
+#[test]
+fn hqp_beats_baseline_slo_attainment_under_load() {
+    let dev = Device::xavier_nx();
+    let base_fleet = reference_fleet("resnet18", &[dev.clone()], &["baseline"], 8).unwrap();
+    let hqp_fleet = reference_fleet("resnet18", &[dev], &["hqp"], 8).unwrap();
+    let cap_base = base_fleet.servers[0].variants[0].capacity_rps();
+    let cap_hqp = hqp_fleet.servers[0].variants[0].capacity_rps();
+    assert!(cap_hqp > cap_base * 3.0, "hqp capacity {cap_hqp:.0} vs base {cap_base:.0}");
+
+    let offered = cap_base * 2.0; // saturates baseline, well under hqp
+    let slo = base_fleet.servers[0].variants[0].batch1_ms() * 4.0;
+    let cfg = ServeConfig {
+        slo_ms: slo,
+        policy: Policy::AccFastest,
+        ..Default::default()
+    };
+    let arrivals = trace::generate(&ArrivalProcess::Poisson { rps: offered }, 4_000.0, 7);
+    let s_base = simulate_fleet(&base_fleet, &arrivals, &cfg).unwrap();
+    let s_hqp = simulate_fleet(&hqp_fleet, &arrivals, &cfg).unwrap();
+    assert!(
+        s_hqp.slo_attainment() > s_base.slo_attainment(),
+        "hqp {:.3} must strictly beat baseline {:.3} at {offered:.0} rps",
+        s_hqp.slo_attainment(),
+        s_base.slo_attainment()
+    );
+    assert!(s_hqp.p99_ms < s_base.p99_ms, "hqp p99 must be lower under equal load");
+}
