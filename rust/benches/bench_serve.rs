@@ -13,6 +13,12 @@
 //! * `p99_ms_baseline|hqp`           — tail latency under that load
 //! * `throughput_rps_baseline|hqp`   — goodput under that load
 //! * `capacity_rps_*`                — open-loop roofline capacities
+//! * `slo_attain_static_best|swap_aware`, `swap_count`, `swap_ms`,
+//!   `swap_expired_mid`              — stateful residency: a 48 MB NX that
+//!                                     can't hold baseline + hqp at once,
+//!                                     under an MMPP burst (acceptance:
+//!                                     swap-aware >= the best static policy,
+//!                                     with at least one hot-swap charged)
 //! * `sim_events_per_sec`            — events/s the virtual-time heap
 //!                                     sustains (host-side, no artifacts)
 //!
@@ -83,6 +89,43 @@ fn main() {
         .map(|u| u.completed)
         .unwrap_or(0);
     assert_eq!(p50_served, 0, "Δmax-violating p50 must never be scheduled");
+
+    // ---- stateful residency: swap-aware vs static under capped memory -----
+    section("serve — swap-aware hot-swap vs static policies (48 MB cap, mmpp burst)");
+    let capped = reference_fleet("resnet18", &[dev.clone()], &["baseline", "hqp"], 8)
+        .expect("fleet")
+        .with_mem_cap_mb(48.0);
+    assert_eq!(
+        capped.servers[0].initial_residency(),
+        vec![true, false],
+        "48 MB holds baseline (~46.7 MB) but not baseline + hqp"
+    );
+    // fixed 4 s window even under --smoke: virtual time costs nothing, and
+    // the asserted hot-swap needs the burst to actually arrive (the MMPP
+    // starts in its low state)
+    let burst =
+        trace::generate(&ArrivalProcess::parse("mmpp", offered).unwrap(), 4_000.0, 13);
+    let mut best_static = 0.0f64;
+    for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
+        let cfg = ServeConfig { slo_ms, policy, ..Default::default() };
+        let s = simulate_fleet(&capped, &burst, &cfg).expect("static sim");
+        assert_eq!(s.swaps, 0, "static policies never swap");
+        best_static = best_static.max(s.slo_attainment());
+    }
+    let swap_cfg = ServeConfig { slo_ms, policy: Policy::SwapAware, ..Default::default() };
+    let s_swap = simulate_fleet(&capped, &burst, &swap_cfg).expect("swap-aware sim");
+    report.metric("slo_attain_static_best", best_static);
+    report.metric("slo_attain_swap_aware", s_swap.slo_attainment());
+    report.metric("swap_count", s_swap.swaps as f64);
+    report.metric("swap_ms", s_swap.swap_ms);
+    report.metric("swap_expired_mid", s_swap.expired_during_swap as f64);
+    assert!(s_swap.swaps >= 1, "queue pressure through the burst must trigger a hot-swap");
+    assert!(
+        s_swap.slo_attainment() >= best_static,
+        "acceptance: swap-aware {:.3} must reach at least the best static {:.3}",
+        s_swap.slo_attainment(),
+        best_static
+    );
 
     // ---- simulator hot path: events per wall-clock second -----------------
     section("serve — event-loop throughput (host side)");

@@ -137,6 +137,16 @@ impl Device {
         }
     }
 
+    /// Hardware-aware engine hot-swap cost (the HALP-style pricing the
+    /// serving layer charges when a device changes its resident variant
+    /// set): streaming `weight_bytes` of engine weights over DRAM
+    /// bandwidth, plus a fixed engine-initialization overhead. Like the
+    /// rest of the roofline this is a model, not a measurement — §7's
+    /// ratios-not-milliseconds caveat applies.
+    pub fn swap_in_ms(&self, weight_bytes: u64, init_ms: f64) -> f64 {
+        weight_bytes as f64 / (self.mem_bw_gbps * 1e9) * 1e3 + init_ms
+    }
+
     /// Sustained-utilization factor by op type: what a tuned engine
     /// achieves relative to peak. Depthwise convolutions are notoriously
     /// bandwidth/occupancy limited on these GPUs; dense GEMM-shaped work is
@@ -175,6 +185,17 @@ mod tests {
         let d = Device::xavier_nx();
         assert!(d.rate_gflops(Precision::Int8) > d.rate_gflops(Precision::Fp16));
         assert!(d.rate_gflops(Precision::Fp16) > d.rate_gflops(Precision::Fp32));
+    }
+
+    #[test]
+    fn swap_cost_is_bytes_over_bandwidth_plus_init() {
+        let nx = Device::xavier_nx();
+        // 59.7 MB at 59.7 GB/s is exactly 1 ms of weight streaming
+        assert!((nx.swap_in_ms(59_700_000, 5.0) - 6.0).abs() < 1e-9);
+        assert_eq!(nx.swap_in_ms(0, 2.5), 2.5);
+        // slower DRAM pays more for the same engine
+        let nano = Device::jetson_nano();
+        assert!(nano.swap_in_ms(10_000_000, 0.0) > nx.swap_in_ms(10_000_000, 0.0));
     }
 
     #[test]

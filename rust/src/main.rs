@@ -39,7 +39,8 @@ const COMMON_FLAGS: &[&str] = &[
 /// typo-hardening `--device` gets).
 const SERVE_FLAGS: &[&str] = &[
     "rps", "slo-ms", "policy", "duration-s", "seed", "max-batch",
-    "batch-timeout-ms", "queue-cap", "arrivals", "smoke",
+    "batch-timeout-ms", "queue-cap", "arrivals", "smoke", "mem-mb",
+    "swap-init-ms", "link-mbps",
 ];
 
 /// Valid `--device` names (aliases included), shown when the flag is bad.
@@ -71,13 +72,19 @@ options:
 serve options:
   --rps X               offered load, requests/s (default 100; 50 w/ --smoke)
   --slo-ms X            per-request latency SLO (default 50)
-  --policy P            round-robin | least-loaded | acc-fastest (default)
+  --policy P            round-robin | least-loaded | acc-fastest (default) | swap-aware
   --duration-s X        trace length (default 10; 1 w/ --smoke)
   --arrivals A          poisson | mmpp (default poisson)
   --seed N              trace seed (default 42; identical seed => identical summary)
   --max-batch N         dynamic batcher max batch size (default 8)
   --batch-timeout-ms X  batching timeout (default 2)
   --queue-cap N         per-server admission queue cap (default 256)
+  --mem-mb X            per-server engine memory capacity, MB (default: unlimited;
+                        finite caps make variants resident-or-deployable and enable
+                        hot-swaps under --policy swap-aware)
+  --swap-init-ms X      fixed engine-init overhead charged per hot-swap (default 5)
+  --link-mbps X         uplink bandwidth for request payloads, Mbit/s
+                        (default: unlimited = no network cost)
   --smoke               tiny 1 s trace (CI smoke)";
 
 fn main() {
@@ -469,7 +476,9 @@ fn cmd_mixed(artifacts: &str, args: &Args) -> Result<()> {
 /// `hqp serve` — replay a synthetic trace against a fleet of deployed
 /// variants. Uses workspace engines + cached measured accuracy when
 /// artifacts exist, the paper-anchored reference profiles otherwise, so
-/// the command runs end-to-end on a bare checkout.
+/// the command runs end-to-end on a bare checkout. With `--mem-mb` each
+/// server holds only the variants that fit (resident vs deployable), and
+/// `--policy swap-aware` may hot-swap engines under load.
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let smoke = args.switch("smoke");
     let model = args.flag_or("model", "resnet18");
@@ -477,7 +486,8 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let policy_name = args.flag_or("policy", "acc-fastest");
     let policy = Policy::parse(policy_name).ok_or_else(|| {
         hqp::Error::Cli(format!(
-            "unknown policy {policy_name} (valid: round-robin, least-loaded, acc-fastest)"
+            "unknown policy {policy_name} (valid: {})",
+            Policy::NAMES.join(", ")
         ))
     })?;
     let rps = args.flag_f64("rps", if smoke { 50.0 } else { 100.0 })?;
@@ -485,7 +495,10 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let seed = args.flag_usize("seed", 42)? as u64;
     let arrivals_name = args.flag_or("arrivals", "poisson");
     let process = ArrivalProcess::parse(arrivals_name, rps).ok_or_else(|| {
-        hqp::Error::Cli(format!("unknown arrival process {arrivals_name} (valid: poisson, mmpp)"))
+        hqp::Error::Cli(format!(
+            "unknown arrival process {arrivals_name} (valid: {})",
+            ArrivalProcess::NAMES.join(", ")
+        ))
     })?;
     let cfg = ServeConfig {
         slo_ms: args.flag_f64("slo-ms", 50.0)?,
@@ -494,11 +507,20 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         max_batch: args.flag_usize("max-batch", 8)?,
         batch_timeout_ms: args.flag_f64("batch-timeout-ms", 2.0)?,
         queue_cap: args.flag_usize("queue-cap", 256)?,
+        swap_init_ms: args.flag_f64("swap-init-ms", 5.0)?,
+        link_mbps: args.flag_f64("link-mbps", f64::INFINITY)?,
     };
 
     let methods = ["baseline", "q8", "p50", "hqp", "mixed"];
-    let (fleet, source) =
+    let (mut fleet, source) =
         serve::fleet_for(artifacts, model, &[dev.clone()], &methods, cfg.max_batch)?;
+    if args.flag("mem-mb").is_some() {
+        let mem_mb = args.flag_f64("mem-mb", 0.0)?;
+        if mem_mb <= 0.0 {
+            return Err(hqp::Error::Cli("--mem-mb must be positive".into()));
+        }
+        fleet = fleet.with_mem_cap_mb(mem_mb);
+    }
     let arrivals = serve::trace::generate(&process, duration_s * 1e3, seed);
 
     println!(
@@ -511,15 +533,32 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         process.name(),
         arrivals.len()
     );
-    for v in &fleet.servers[0].variants {
-        println!(
-            "  variant {:<9} acc_drop {:>5.2}%  batch-1 {:>8.3} ms  capacity {:>7.0} rps{}",
-            v.name,
-            v.acc_drop * 100.0,
-            v.batch1_ms(),
-            v.capacity_rps(),
-            if v.compliant(cfg.delta_max) { "" } else { "   << excluded (Δmax)" }
-        );
+    // per-server rows: heterogeneous fleets report every device's variant
+    // set (and its residency), not just servers[0]'s
+    for (si, srv) in fleet.servers.iter().enumerate() {
+        if let Some(cap) = srv.mem_capacity_bytes {
+            println!(
+                "  server {si} ({}): {:.1} MB engine memory ({:.1} MB to hold all variants)",
+                srv.device.name,
+                cap as f64 / 1e6,
+                srv.total_variant_bytes() as f64 / 1e6,
+            );
+        }
+        let res = srv.initial_residency();
+        for (vi, v) in srv.variants.iter().enumerate() {
+            println!(
+                "  s{si} {:<10} {:<9} acc_drop {:>5.2}%  batch-1 {:>8.3} ms  \
+                 capacity {:>7.0} rps  weights {:>6.1} MB  {}{}",
+                srv.device.name,
+                v.name,
+                v.acc_drop * 100.0,
+                v.batch1_ms(),
+                v.capacity_rps(),
+                v.weight_bytes as f64 / 1e6,
+                if res[vi] { "resident" } else { "deployable" },
+                if v.compliant(cfg.delta_max) { "" } else { "   << excluded (Δmax)" }
+            );
+        }
     }
     let summary = serve::simulate_fleet(&fleet, &arrivals, &cfg)?;
     println!("{}", summary.render());

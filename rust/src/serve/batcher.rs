@@ -12,6 +12,17 @@
 //! * flush tokens make timeout events idempotent: any dispatch from a
 //!   queue invalidates that queue's pending timeout, so a stale `Flush`
 //!   event can never double-dispatch.
+//!
+//! ## Eviction semantics (stateful residency)
+//!
+//! When the serving layer evicts a variant mid-swap, its queue is
+//! [`Batcher::drain`]ed: requests whose deadline already passed are
+//! counted expired by the caller, survivors are [`Batcher::requeue`]d
+//! onto another variant's queue as a sorted-by-arrival merge — so FIFO
+//! selection ([`Batcher::oldest_allowed`]) and expiry stay deterministic
+//! and every request still leaves its queue exactly once. Requeueing
+//! happens only while the server is mid-swap (no flush re-arm needed:
+//! dispatch resumes at swap completion).
 
 use std::collections::VecDeque;
 
@@ -119,8 +130,22 @@ impl Batcher {
     /// (FIFO across variants; ties break on the lower variant index, so
     /// selection is deterministic).
     pub fn oldest_nonempty(&self) -> Option<usize> {
+        self.oldest_where(|_| true)
+    }
+
+    /// [`Batcher::oldest_nonempty`] restricted to `allowed` (resident)
+    /// variants — the serving layer's structural guarantee that a
+    /// non-resident variant's queue can never form a batch.
+    pub fn oldest_allowed(&self, allowed: &[bool]) -> Option<usize> {
+        self.oldest_where(|v| allowed[v])
+    }
+
+    fn oldest_where(&self, allowed: impl Fn(usize) -> bool) -> Option<usize> {
         let mut best: Option<(f64, usize)> = None;
         for (v, q) in self.queues.iter().enumerate() {
+            if !allowed(v) {
+                continue;
+            }
             if let Some(head) = q.front() {
                 let better = match best {
                     None => true,
@@ -132,6 +157,52 @@ impl Batcher {
             }
         }
         best.map(|(_, v)| v)
+    }
+
+    /// Remove (and return) every queued request of one variant — the
+    /// eviction path. Invalidates the variant's pending flush; the caller
+    /// decides which survivors to [`Batcher::requeue`] where.
+    pub fn drain(&mut self, variant: usize) -> Vec<QueuedReq> {
+        self.flush_tokens[variant] += 1;
+        let q = std::mem::take(&mut self.queues[variant]);
+        self.total -= q.len();
+        q.into()
+    }
+
+    /// Merge evicted survivors into another variant's queue, keeping it
+    /// sorted by arrival time (ties by request id) so cross-variant FIFO
+    /// and expiry order stay deterministic.
+    pub fn requeue(&mut self, variant: usize, reqs: Vec<QueuedReq>) {
+        if reqs.is_empty() {
+            return;
+        }
+        self.total += reqs.len();
+        let q = &mut self.queues[variant];
+        let mut merged: Vec<QueuedReq> = Vec::with_capacity(q.len() + reqs.len());
+        merged.extend(q.drain(..));
+        merged.extend(reqs);
+        merged.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms).then(a.id.cmp(&b.id)));
+        *q = merged.into();
+    }
+
+    /// Drop every queued request whose deadline has passed, returning the
+    /// dropped requests (variant order, FIFO within a variant) so the
+    /// caller can attribute the expiry — the post-swap purge. Uses the
+    /// same strict `deadline < now` rule as [`Batcher::take_batch`].
+    pub fn purge_expired(&mut self, now_ms: f64) -> Vec<QueuedReq> {
+        let mut dropped = Vec::new();
+        for q in &mut self.queues {
+            q.retain(|r| {
+                if r.deadline_ms < now_ms {
+                    dropped.push(*r);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.total -= dropped.len();
+        dropped
     }
 
     /// Estimated backlog of one variant in requests (router input).
@@ -199,6 +270,63 @@ mod tests {
         assert_eq!(b.oldest_nonempty(), Some(0));
         b.take_batch(0, 3.0);
         assert_eq!(b.oldest_nonempty(), None);
+    }
+
+    #[test]
+    fn drain_requeue_preserves_order_and_conservation() {
+        let mut b = Batcher::new(2, 8, 5.0);
+        b.enqueue(0, req(0, 1.0, 50.0));
+        b.enqueue(1, req(1, 2.0, 50.0));
+        b.enqueue(0, req(2, 3.0, 50.0));
+        let drained = b.drain(0);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(b.total(), 1);
+        assert_eq!(b.len(0), 0);
+        // merge into variant 1: arrival order 1.0, 2.0, 3.0 across sources
+        b.requeue(1, drained);
+        assert_eq!(b.total(), 3);
+        assert_eq!(b.len(1), 3);
+        let t = b.take_batch(1, 4.0);
+        let ids: Vec<usize> = t.reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "requeue must merge sorted by arrival");
+    }
+
+    #[test]
+    fn drain_invalidates_pending_flush() {
+        let mut b = Batcher::new(1, 8, 5.0);
+        let EnqueueAction::ArmFlush(tok) = b.enqueue(0, req(0, 0.0, 50.0)) else {
+            panic!("expected flush arm");
+        };
+        assert!(b.flush_live(0, tok));
+        b.drain(0);
+        assert!(!b.flush_live(0, tok), "eviction must kill the pending flush");
+    }
+
+    #[test]
+    fn purge_expired_drops_only_past_deadlines() {
+        let mut b = Batcher::new(2, 8, 5.0);
+        b.enqueue(0, req(0, 0.0, 3.0));
+        b.enqueue(0, req(1, 1.0, 50.0));
+        b.enqueue(1, req(2, 2.0, 4.0));
+        let dropped = b.purge_expired(10.0);
+        assert_eq!(dropped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(b.total(), 1);
+        assert_eq!(b.len(0), 1);
+        assert_eq!(b.len(1), 0);
+        // boundary: deadline == now survives (strict <, like take_batch)
+        let mut b = Batcher::new(1, 8, 5.0);
+        b.enqueue(0, req(0, 0.0, 10.0));
+        assert!(b.purge_expired(10.0).is_empty());
+    }
+
+    #[test]
+    fn oldest_allowed_skips_masked_variants() {
+        let mut b = Batcher::new(3, 8, 5.0);
+        b.enqueue(2, req(0, 1.0, 50.0));
+        b.enqueue(0, req(1, 2.0, 50.0));
+        assert_eq!(b.oldest_nonempty(), Some(2));
+        assert_eq!(b.oldest_allowed(&[true, true, false]), Some(0));
+        assert_eq!(b.oldest_allowed(&[false, true, false]), None);
     }
 
     #[test]

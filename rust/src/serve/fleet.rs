@@ -3,9 +3,11 @@
 //! A [`VariantProfile`] is the serving-level view of one deployed engine
 //! (one row of the paper's Tables I/II): its measured accuracy drop plus a
 //! per-batch-size latency/energy curve priced by the batched roofline
-//! ([`crate::hwsim::simulate_batch`]). A [`Server`] is one edge device
-//! loaded with several variants; a [`Fleet`] is what the simulator routes
-//! over.
+//! ([`crate::hwsim::simulate_batch`]), plus its engine-memory footprint
+//! (`weight_bytes`). A [`Server`] is one edge device holding several
+//! deployable variants in a finite engine memory — the *resident* subset
+//! is servable now, the rest must be hot-swapped in first; a [`Fleet`] is
+//! what the simulator routes over.
 //!
 //! Two construction paths (DESIGN.md §Serving):
 //!
@@ -34,6 +36,11 @@ pub struct VariantProfile {
     pub name: String,
     /// Measured (or paper-anchored) absolute Top-1 accuracy drop.
     pub acc_drop: f64,
+    /// Deployed engine weight storage ([`crate::gopt::OptimizedGraph`]'s
+    /// `weight_bytes`, itself built on [`crate::gopt::weight_elems`]) —
+    /// the variant's memory footprint, which residency accounting and the
+    /// hot-swap cost model ([`crate::hwsim::Device::swap_in_ms`]) price.
+    pub weight_bytes: u64,
     /// Whole-batch service time for batch size `b` at `batch_ms[b - 1]`.
     pub batch_ms: Vec<f64>,
     /// Whole-batch energy (mJ), same indexing.
@@ -56,7 +63,13 @@ impl VariantProfile {
             batch_ms.push(r.latency_ms);
             energy_mj.push(r.energy_mj);
         }
-        VariantProfile { name: name.to_string(), acc_drop, batch_ms, energy_mj }
+        VariantProfile {
+            name: name.to_string(),
+            acc_drop,
+            weight_bytes: engine.weight_bytes,
+            batch_ms,
+            energy_mj,
+        }
     }
 
     /// Batch-1 service time, ms.
@@ -80,11 +93,61 @@ impl VariantProfile {
     }
 }
 
-/// One edge device with its loaded variants.
+/// One edge device with its deployable variants.
+///
+/// With `mem_capacity_bytes == None` (the default, and the pre-residency
+/// behavior) every variant is permanently resident and swaps never
+/// happen. With a finite capacity the device distinguishes *resident*
+/// variants (engine weights in memory, servable now) from *merely
+/// deployable* ones (known profiles that must be swapped in first, at
+/// [`Server::swap_in_ms`] cost).
 #[derive(Clone, Debug)]
 pub struct Server {
     pub device: Device,
     pub variants: Vec<VariantProfile>,
+    /// Engine memory capacity. `None` = unlimited (all variants resident).
+    pub mem_capacity_bytes: Option<u64>,
+}
+
+impl Server {
+    /// A server with unlimited engine memory (every variant resident).
+    pub fn new(device: Device, variants: Vec<VariantProfile>) -> Server {
+        Server { device, variants, mem_capacity_bytes: None }
+    }
+
+    /// The deterministic initial resident set: greedy in variant order,
+    /// loading each variant that still fits the capacity. Unlimited
+    /// capacity loads everything — the pre-residency behavior.
+    pub fn initial_residency(&self) -> Vec<bool> {
+        let Some(cap) = self.mem_capacity_bytes else {
+            return vec![true; self.variants.len()];
+        };
+        let mut used = 0u64;
+        self.variants
+            .iter()
+            .map(|v| {
+                if used + v.weight_bytes <= cap {
+                    used += v.weight_bytes;
+                    true
+                } else {
+                    false
+                }
+            })
+            .collect()
+    }
+
+    /// Total weight bytes across this server's variants (what unlimited
+    /// residency would occupy).
+    pub fn total_variant_bytes(&self) -> u64 {
+        self.variants.iter().map(|v| v.weight_bytes).sum()
+    }
+
+    /// Hot-swap cost of loading variant `v` on this device: engine weight
+    /// streaming over DRAM bandwidth plus the fixed init overhead
+    /// ([`Device::swap_in_ms`]).
+    pub fn swap_in_ms(&self, v: usize, init_ms: f64) -> f64 {
+        self.device.swap_in_ms(self.variants[v].weight_bytes, init_ms)
+    }
 }
 
 /// The fleet the simulator routes over.
@@ -94,13 +157,38 @@ pub struct Fleet {
     pub servers: Vec<Server>,
 }
 
+/// Per-request input payload at the paper's 224×224 deployment
+/// resolution (one uint8 image) — what the optional network/RPC link
+/// model charges per request.
+pub const INPUT_BYTES: u64 = 224 * 224 * 3;
+
 impl Fleet {
     /// Single-device fleet.
     pub fn single(model: &str, device: Device, variants: Vec<VariantProfile>) -> Fleet {
         Fleet {
             model: model.to_string(),
-            servers: vec![Server { device, variants }],
+            servers: vec![Server::new(device, variants)],
         }
+    }
+
+    /// Cap every server's engine memory at `mb` megabytes (1 MB = 1e6
+    /// bytes, consistent with the SI GB/s bandwidth constants). The CLI's
+    /// `--mem-mb` entry point.
+    pub fn with_mem_cap_mb(mut self, mb: f64) -> Fleet {
+        for s in &mut self.servers {
+            s.mem_capacity_bytes = Some((mb * 1e6) as u64);
+        }
+        self
+    }
+
+    /// Whether any server runs with a finite engine-memory capacity.
+    pub fn residency_limited(&self) -> bool {
+        self.servers.iter().any(|s| s.mem_capacity_bytes.is_some())
+    }
+
+    /// Request input payload, bytes ([`INPUT_BYTES`]).
+    pub fn input_bytes(&self) -> u64 {
+        INPUT_BYTES
     }
 
     /// Largest batch size every variant supports.
@@ -317,7 +405,7 @@ pub fn reference_fleet(
             let (engine, acc_drop) = reference_engine(model, m)?;
             variants.push(VariantProfile::from_engine(m, acc_drop, &engine, dev, max_batch));
         }
-        servers.push(Server { device: dev.clone(), variants });
+        servers.push(Server::new(dev.clone(), variants));
     }
     Ok(Fleet { model: model.to_string(), servers })
 }
@@ -381,7 +469,7 @@ pub fn workspace_fleet(
             let engine = optimize(&graph, &masks, &opts)?;
             variants.push(VariantProfile::from_engine(m, acc_drop, &engine, dev, max_batch));
         }
-        servers.push(Server { device: dev.clone(), variants });
+        servers.push(Server::new(dev.clone(), variants));
     }
     Ok(Some(Fleet { model: model.to_string(), servers }))
 }
@@ -481,9 +569,56 @@ mod tests {
     }
 
     #[test]
+    fn weight_footprints_order_methods_and_anchor_the_cap() {
+        // resnet18 dense fp32 is ~46.7 MB; hqp (θ=0.45, int8) is ~3.7 MB.
+        // The 48 MB demo cap (EXPERIMENTS.md) holds baseline alone but not
+        // baseline + hqp — the scenario the swap-aware policy exploits.
+        let (base, _) = reference_engine("resnet18", "baseline").unwrap();
+        let (hqp, _) = reference_engine("resnet18", "hqp").unwrap();
+        assert!(base.weight_bytes > 46_000_000 && base.weight_bytes < 48_000_000);
+        assert!(hqp.weight_bytes > 3_000_000 && hqp.weight_bytes < 4_500_000);
+        let f = reference_fleet("resnet18", &[Device::xavier_nx()], &["baseline", "hqp"], 4)
+            .unwrap()
+            .with_mem_cap_mb(48.0);
+        assert!(f.residency_limited());
+        assert_eq!(f.servers[0].initial_residency(), vec![true, false]);
+        assert_eq!(
+            f.servers[0].variants[0].weight_bytes, base.weight_bytes,
+            "profile must carry the engine footprint"
+        );
+    }
+
+    #[test]
+    fn initial_residency_is_greedy_in_variant_order() {
+        fn var(name: &str, bytes: u64) -> VariantProfile {
+            VariantProfile {
+                name: name.into(),
+                acc_drop: 0.0,
+                weight_bytes: bytes,
+                batch_ms: vec![1.0],
+                energy_mj: vec![1.0],
+            }
+        }
+        let mut s = Server::new(
+            Device::ideal(),
+            vec![var("a", 50_000_000), var("b", 10_000_000), var("c", 30_000_000)],
+        );
+        assert_eq!(s.initial_residency(), vec![true, true, true], "unlimited loads all");
+        s.mem_capacity_bytes = Some(60_000_000);
+        assert_eq!(s.initial_residency(), vec![true, true, false]);
+        s.mem_capacity_bytes = Some(5_000_000);
+        assert_eq!(s.initial_residency(), vec![false, false, false]);
+        assert_eq!(s.total_variant_bytes(), 90_000_000);
+        // swap cost delegates to the device model
+        let want = s.device.swap_in_ms(10_000_000, 3.0);
+        assert_eq!(s.swap_in_ms(1, 3.0), want);
+    }
+
+    #[test]
     fn workspace_fleet_absent_is_none() {
-        let got = workspace_fleet("/nonexistent/artifacts", "resnet18", &[Device::ideal()], &["hqp"], 2)
-            .unwrap();
+        let got =
+            workspace_fleet("/nonexistent/artifacts", "resnet18", &[Device::ideal()], &["hqp"], 2)
+                .unwrap();
         assert!(got.is_none());
     }
 }

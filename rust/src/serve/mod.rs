@@ -27,15 +27,35 @@
 //!
 //! Every generated request ends in exactly one of three states:
 //!
-//! * **rejected** — at admission: no Δ_max-compliant variant exists, or
-//!   the routed server's queue is at capacity;
+//! * **rejected** — at admission: no Δ_max-compliant variant exists, the
+//!   routed server's queue is at capacity, or (under capped memory) no
+//!   compliant variant is resident on an available server;
 //! * **expired** — its SLO deadline passed while it waited in a queue
-//!   (dropped at batch-formation time, never served);
+//!   (dropped at batch-formation time or at a swap boundary, never
+//!   served);
 //! * **completed** — served in a batch; it *attains* the SLO iff it
 //!   finishes by `arrival + slo_ms`.
 //!
-//! See `rust/DESIGN.md` §Serving for the model's limits (no network cost,
-//! open-loop arrivals, serial devices, linear activation scaling).
+//! ## Stateful variant residency
+//!
+//! With per-server engine-memory capacities ([`Server::mem_capacity_bytes`],
+//! CLI `--mem-mb`) a device holds only a *resident* subset of its
+//! deployable variants. The router ([`router`]) then routes only over
+//! resident variants, and a [`RoutePolicy`] may propose a hot-swap; the
+//! event loop executes it as a `SwapStart`/`SwapDone` event pair: the
+//! evicted variant's queue is drained and requeued ([`batcher`]'s
+//! eviction semantics), the device serves nothing mid-swap (queued
+//! requests wait or expire), and the swap is charged the hardware-aware
+//! cost [`crate::hwsim::Device::swap_in_ms`] (weight streaming over DRAM
+//! bandwidth + a fixed init overhead, [`ServeConfig::swap_init_ms`]).
+//! With capacities unset, every variant is resident, no swap event is
+//! ever scheduled, and the simulation is byte-identical to the
+//! pre-residency simulator.
+//!
+//! See `rust/DESIGN.md` §Serving for the model's limits (open-loop
+//! arrivals, serial devices, linear activation scaling; the optional
+//! [`ServeConfig::link_mbps`] uplink model charges a per-request
+//! transfer delay).
 
 pub mod batcher;
 pub mod fleet;
@@ -43,7 +63,7 @@ pub mod router;
 pub mod trace;
 
 pub use fleet::{fleet_for, reference_fleet, workspace_fleet, Fleet, Server, VariantProfile};
-pub use router::{Candidate, Policy, Router};
+pub use router::{Candidate, FleetView, Policy, RouteCtx, RoutePolicy, Router, SwapPlan};
 pub use trace::ArrivalProcess;
 
 use std::cmp::Reverse;
@@ -68,6 +88,14 @@ pub struct ServeConfig {
     pub batch_timeout_ms: f64,
     /// Admission cap on queued requests per server.
     pub queue_cap: usize,
+    /// Fixed engine-initialization overhead added to every hot-swap, ms
+    /// (on top of streaming the engine weights over DRAM bandwidth).
+    pub swap_init_ms: f64,
+    /// Uplink bandwidth for request payloads, Mbit/s. Each request pays
+    /// `input_bytes / link_mbps` of transfer delay before admission (the
+    /// delay eats into its SLO budget). `f64::INFINITY` (the default)
+    /// disables the network model and preserves byte-identical summaries.
+    pub link_mbps: f64,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +107,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             batch_timeout_ms: 2.0,
             queue_cap: 256,
+            swap_init_ms: 5.0,
+            link_mbps: f64::INFINITY,
         }
     }
 }
@@ -111,7 +141,15 @@ pub struct Summary {
     pub rejected: u64,
     /// Of the rejections: requests with no Δ_max-compliant variant.
     pub rejected_noncompliant: u64,
+    /// Of the rejections: compliant variants exist, but none was resident
+    /// on an available (not mid-swap) server. Always 0 with unlimited
+    /// memory.
+    pub rejected_unavailable: u64,
     pub expired: u64,
+    /// Of the expired: the deadline lapsed while the routed server was
+    /// mid-swap (deadlines in `[swap start, swap done]`). Deadlines that
+    /// had already passed before the swap began count only as `expired`.
+    pub expired_during_swap: u64,
     /// Completed within their SLO deadline.
     pub slo_attained: u64,
     pub mean_ms: f64,
@@ -125,6 +163,14 @@ pub struct Summary {
     /// Completion-weighted mean accuracy drop across served variants.
     pub acc_mix: f64,
     pub energy_mj: f64,
+    /// Engine hot-swaps performed.
+    pub swaps: u64,
+    /// Total virtual time spent swapping (weight streaming + init), ms.
+    pub swap_ms: f64,
+    /// Whether any server ran with a finite engine-memory capacity (gates
+    /// the swap line in [`Summary::render`], keeping unlimited-memory
+    /// output byte-identical to the pre-residency simulator).
+    pub residency_limited: bool,
     pub per_variant: Vec<VariantUsage>,
 }
 
@@ -168,6 +214,13 @@ impl Summary {
             self.acc_mix * 100.0,
             self.energy_mj
         ));
+        if self.residency_limited || self.policy == Policy::SwapAware.name() {
+            s.push_str(&format!(
+                "  swaps    : {} ({:.1} ms swapping)   {} expired mid-swap   \
+                 {} rejected unavailable\n",
+                self.swaps, self.swap_ms, self.expired_during_swap, self.rejected_unavailable
+            ));
+        }
         let mut t = Table::new(vec![
             "Device",
             "Variant",
@@ -204,6 +257,13 @@ enum EventKind {
     Arrival { req: usize },
     Flush { server: usize, variant: usize, token: u64 },
     BatchDone { server: usize, variant: usize, reqs: Vec<QueuedReq> },
+    /// Begin the server's pending hot-swap (re-arms itself while a batch
+    /// is still running).
+    SwapStart { server: usize },
+    /// The swapped-in engine is ready: mark it resident and resume
+    /// dispatch. `started_ms` is when the swap began, so expiry during
+    /// the swap window can be attributed precisely.
+    SwapDone { server: usize, load: usize, started_ms: f64 },
 }
 
 /// Heap key: virtual time, ties broken by insertion sequence — a total
@@ -239,6 +299,19 @@ struct ServerState {
     batcher: Batcher,
     busy: bool,
     busy_until: f64,
+    /// A hot-swap is in flight: the device serves nothing until
+    /// `swap_until`.
+    swapping: bool,
+    swap_until: f64,
+    /// A policy-approved swap waiting for the running batch to finish.
+    pending_swap: Option<SwapPlan>,
+}
+
+impl ServerState {
+    /// Can this server start a batch right now?
+    fn can_dispatch(&self) -> bool {
+        !self.busy && !self.swapping && self.pending_swap.is_none()
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -255,16 +328,23 @@ struct Acc {
     completed: u64,
     rejected_full: u64,
     rejected_noncompliant: u64,
+    rejected_unavailable: u64,
     expired: u64,
+    expired_during_swap: u64,
+    swaps: u64,
+    swap_ms: f64,
     slo_attained: u64,
     latencies: Vec<f64>,
     usage: Vec<Vec<UsageAcc>>,
 }
 
 /// Form and launch a batch on server `s` starting from variant `v`,
-/// falling through to the variant whose head has waited longest when `v`
-/// turns out empty (or fully expired). Leaves the server idle when no
-/// servable request remains.
+/// falling through to the resident variant whose head has waited longest
+/// when `v` turns out empty (or fully expired, or non-resident). Leaves
+/// the server idle when no servable request remains. Only resident
+/// variants can form batches — the structural half of the "never serve a
+/// non-resident engine" invariant (the router enforces the other half at
+/// admission).
 #[allow(clippy::too_many_arguments)]
 fn try_dispatch(
     s: usize,
@@ -272,15 +352,28 @@ fn try_dispatch(
     now: f64,
     st: &mut ServerState,
     server: &Server,
+    resident: &[bool],
     heap: &mut BinaryHeap<Reverse<Event>>,
     seq: &mut u64,
     acc: &mut Acc,
 ) {
     loop {
+        if !resident[v] {
+            match st.batcher.oldest_allowed(resident) {
+                Some(next) => {
+                    v = next;
+                    continue;
+                }
+                None => {
+                    st.busy = false;
+                    return;
+                }
+            }
+        }
         let taken = st.batcher.take_batch(v, now);
         acc.expired += taken.expired.len() as u64;
         if taken.reqs.is_empty() {
-            match st.batcher.oldest_nonempty() {
+            match st.batcher.oldest_allowed(resident) {
                 Some(next) => {
                     v = next;
                     continue;
@@ -313,8 +406,11 @@ fn try_dispatch(
 
 /// Replay `arrivals` (sorted ms timestamps from [`trace::generate`])
 /// against `fleet` under `cfg`. Virtual-time monotonicity is checked on
-/// every event; a regression is an internal invariant violation and
-/// errors out rather than silently producing garbage.
+/// every event, swap plans are validated against live residency and
+/// capacity, and a stranded queue at the end of the trace is reported —
+/// each is an internal invariant violation that errors out rather than
+/// silently producing garbage (so an `Ok` return is itself the proof the
+/// residency and conservation invariants held).
 pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Result<Summary> {
     if fleet.servers.is_empty() {
         return Err(Error::hqp("serve: empty fleet"));
@@ -325,6 +421,12 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
     if cfg.slo_ms <= 0.0 {
         return Err(Error::hqp("serve: slo_ms must be positive"));
     }
+    if cfg.swap_init_ms < 0.0 || cfg.swap_init_ms.is_nan() {
+        return Err(Error::hqp("serve: swap_init_ms must be >= 0"));
+    }
+    if cfg.link_mbps <= 0.0 || cfg.link_mbps.is_nan() {
+        return Err(Error::hqp("serve: link_mbps must be positive (or infinite)"));
+    }
     if fleet.max_batch() < cfg.max_batch {
         return Err(Error::hqp(format!(
             "serve: fleet profiles support batches up to {}, config wants {}",
@@ -333,7 +435,16 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
         )));
     }
 
-    let mut router = Router::new(fleet, cfg.delta_max, cfg.policy);
+    let residency_limited = fleet.residency_limited();
+    // per-request uplink transfer delay (0 with an infinite link, keeping
+    // the arrival schedule bit-exact)
+    let transfer_ms = if cfg.link_mbps.is_finite() {
+        fleet.input_bytes() as f64 * 8.0 / (cfg.link_mbps * 1e6) * 1e3
+    } else {
+        0.0
+    };
+
+    let mut router = Router::new(fleet, cfg.delta_max, cfg.policy, cfg.swap_init_ms);
     let mut state: Vec<ServerState> = fleet
         .servers
         .iter()
@@ -341,8 +452,13 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
             batcher: Batcher::new(srv.variants.len(), cfg.max_batch, cfg.batch_timeout_ms),
             busy: false,
             busy_until: 0.0,
+            swapping: false,
+            swap_until: 0.0,
+            pending_swap: None,
         })
         .collect();
+    let mut resident: Vec<Vec<bool>> =
+        fleet.servers.iter().map(|srv| srv.initial_residency()).collect();
     let mut acc = Acc {
         usage: fleet
             .servers
@@ -356,10 +472,16 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
     let mut seq: u64 = 0;
     for (i, &t) in arrivals.iter().enumerate() {
         seq += 1;
-        heap.push(Reverse(Event { time_ms: t, seq, kind: EventKind::Arrival { req: i } }));
+        heap.push(Reverse(Event {
+            time_ms: t + transfer_ms,
+            seq,
+            kind: EventKind::Arrival { req: i },
+        }));
     }
 
     let mut backlog = vec![0.0f64; fleet.servers.len()];
+    let mut queued = vec![0usize; fleet.servers.len()];
+    let mut unavail = vec![false; fleet.servers.len()];
     let mut last_time = f64::NEG_INFINITY;
     let mut makespan = 0.0f64;
 
@@ -375,69 +497,123 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
 
         match ev.kind {
             EventKind::Arrival { req } => {
-                // router input: remaining busy time + queued work estimate
+                // router input: remaining busy/swap time + queued work
+                // estimate, plus the residency/availability snapshot
                 for (s, st) in state.iter().enumerate() {
-                    let mut est = if st.busy { (st.busy_until - now).max(0.0) } else { 0.0 };
+                    let mut est = if st.busy {
+                        (st.busy_until - now).max(0.0)
+                    } else if st.swapping {
+                        (st.swap_until - now).max(0.0)
+                    } else {
+                        0.0
+                    };
                     for (v, prof) in fleet.servers[s].variants.iter().enumerate() {
                         est += st.batcher.backlog(v) as f64 * prof.batch1_ms();
                     }
                     backlog[s] = est;
+                    queued[s] = st.batcher.total();
+                    unavail[s] = st.swapping || st.pending_swap.is_some();
                 }
-                let Some(c) = router.route(&backlog) else {
-                    acc.rejected_noncompliant += 1;
-                    continue;
+                let view = FleetView {
+                    now_ms: now,
+                    backlog_ms: &backlog,
+                    queued: &queued,
+                    resident: &resident,
+                    unavailable: &unavail,
                 };
-                let st = &mut state[c.server];
-                if st.batcher.total() >= cfg.queue_cap {
-                    acc.rejected_full += 1;
-                    continue;
-                }
-                let qreq = QueuedReq {
-                    id: req,
-                    arrival_ms: now,
-                    deadline_ms: now + cfg.slo_ms,
-                };
-                match st.batcher.enqueue(c.variant, qreq) {
-                    EnqueueAction::BatchReady => {
-                        if !st.busy {
-                            try_dispatch(
-                                c.server,
-                                c.variant,
-                                now,
-                                st,
-                                &fleet.servers[c.server],
-                                &mut heap,
-                                &mut seq,
-                                &mut acc,
-                            );
+                match router.route(&view) {
+                    None => {
+                        if router.num_candidates() == 0 {
+                            acc.rejected_noncompliant += 1;
+                        } else {
+                            acc.rejected_unavailable += 1;
                         }
                     }
-                    EnqueueAction::ArmFlush(token) => {
-                        if !st.busy {
-                            seq += 1;
-                            heap.push(Reverse(Event {
-                                time_ms: now + cfg.batch_timeout_ms,
-                                seq,
-                                kind: EventKind::Flush {
-                                    server: c.server,
-                                    variant: c.variant,
-                                    token,
-                                },
-                            }));
+                    Some(c) => {
+                        let st = &mut state[c.server];
+                        if st.batcher.total() >= cfg.queue_cap {
+                            acc.rejected_full += 1;
+                        } else {
+                            // SLO clock starts at generation: transfer
+                            // delay eats into the budget
+                            let origin = arrivals[req];
+                            let qreq = QueuedReq {
+                                id: req,
+                                arrival_ms: origin,
+                                deadline_ms: origin + cfg.slo_ms,
+                            };
+                            match st.batcher.enqueue(c.variant, qreq) {
+                                EnqueueAction::BatchReady => {
+                                    if st.can_dispatch() {
+                                        try_dispatch(
+                                            c.server,
+                                            c.variant,
+                                            now,
+                                            st,
+                                            &fleet.servers[c.server],
+                                            &resident[c.server],
+                                            &mut heap,
+                                            &mut seq,
+                                            &mut acc,
+                                        );
+                                    }
+                                }
+                                EnqueueAction::ArmFlush(token) => {
+                                    if st.can_dispatch() {
+                                        seq += 1;
+                                        heap.push(Reverse(Event {
+                                            time_ms: now + cfg.batch_timeout_ms,
+                                            seq,
+                                            kind: EventKind::Flush {
+                                                server: c.server,
+                                                variant: c.variant,
+                                                token,
+                                            },
+                                        }));
+                                    }
+                                }
+                                EnqueueAction::Queued => {}
+                            }
                         }
                     }
-                    EnqueueAction::Queued => {}
+                }
+                // hot-swap planning over the same snapshot: only
+                // meaningful under capped memory (static policies never
+                // plan; the guard also keeps the unlimited path's event
+                // stream bit-exact)
+                if residency_limited {
+                    if let Some(plan) = router.plan_swap(&view) {
+                        let sv = plan.server;
+                        let st = &mut state[sv];
+                        // one swap per server at a time is part of the
+                        // RoutePolicy contract — a plan for a server that
+                        // is already swapping is a policy bug
+                        if st.swapping || st.pending_swap.is_some() {
+                            return Err(Error::hqp(
+                                "serve: swap plan targets a server with a swap in flight",
+                            ));
+                        }
+                        let at = if st.busy { st.busy_until } else { now };
+                        st.pending_swap = Some(plan);
+                        seq += 1;
+                        heap.push(Reverse(Event {
+                            time_ms: at,
+                            seq,
+                            kind: EventKind::SwapStart { server: sv },
+                        }));
+                    }
                 }
             }
             EventKind::Flush { server, variant, token } => {
                 let st = &mut state[server];
-                if !st.busy && st.batcher.flush_live(variant, token) {
+                if st.can_dispatch() && st.batcher.flush_live(variant, token) {
                     try_dispatch(
                         server,
                         variant,
                         now,
                         st,
                         &fleet.servers[server],
+                        &resident[server],
                         &mut heap,
                         &mut seq,
                         &mut acc,
@@ -455,30 +631,159 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
                 }
                 let st = &mut state[server];
                 st.busy = false;
-                if let Some(next) = st.batcher.oldest_nonempty() {
-                    try_dispatch(
-                        server,
-                        next,
-                        now,
-                        st,
-                        &fleet.servers[server],
-                        &mut heap,
-                        &mut seq,
-                        &mut acc,
-                    );
+                // a pending swap takes the idle slot: SwapStart is queued
+                // at this very timestamp
+                if st.pending_swap.is_none() {
+                    if let Some(next) = st.batcher.oldest_allowed(&resident[server]) {
+                        try_dispatch(
+                            server,
+                            next,
+                            now,
+                            st,
+                            &fleet.servers[server],
+                            &resident[server],
+                            &mut heap,
+                            &mut seq,
+                            &mut acc,
+                        );
+                    }
+                }
+            }
+            EventKind::SwapStart { server } => {
+                let st = &mut state[server];
+                if st.busy {
+                    // a batch is still running (time tie): retry the
+                    // moment it completes
+                    seq += 1;
+                    heap.push(Reverse(Event {
+                        time_ms: st.busy_until,
+                        seq,
+                        kind: EventKind::SwapStart { server },
+                    }));
+                } else if let Some(plan) = st.pending_swap.take() {
+                    let srv = &fleet.servers[server];
+                    if resident[server][plan.load] {
+                        return Err(Error::hqp(
+                            "serve: swap plan loads an already-resident variant",
+                        ));
+                    }
+                    // evict: mark non-resident and drain the queues
+                    let mut displaced: Vec<QueuedReq> = Vec::new();
+                    for &e in &plan.evict {
+                        if !resident[server][e] {
+                            return Err(Error::hqp(
+                                "serve: swap plan evicts a non-resident variant",
+                            ));
+                        }
+                        resident[server][e] = false;
+                        displaced.extend(st.batcher.drain(e));
+                    }
+                    let res_bytes: u64 = srv
+                        .variants
+                        .iter()
+                        .enumerate()
+                        .filter(|(v, _)| resident[server][*v])
+                        .map(|(_, p)| p.weight_bytes)
+                        .sum();
+                    if let Some(cap) = srv.mem_capacity_bytes {
+                        if res_bytes + srv.variants[plan.load].weight_bytes > cap {
+                            return Err(Error::hqp(
+                                "serve: swap plan exceeds device memory capacity",
+                            ));
+                        }
+                    }
+                    // displaced survivors follow the best remaining
+                    // compliant engine, else the incoming one
+                    if !displaced.is_empty() {
+                        let mut target = plan.load;
+                        let mut best = f64::INFINITY;
+                        for (v, p) in srv.variants.iter().enumerate() {
+                            if resident[server][v]
+                                && p.compliant(cfg.delta_max)
+                                && p.batch1_ms() < best
+                            {
+                                best = p.batch1_ms();
+                                target = v;
+                            }
+                        }
+                        let mut alive = Vec::with_capacity(displaced.len());
+                        for r in displaced {
+                            if r.deadline_ms < now {
+                                // lapsed before the swap even began: plain
+                                // expiry, the eviction only surfaced it
+                                acc.expired += 1;
+                            } else {
+                                alive.push(r);
+                            }
+                        }
+                        st.batcher.requeue(target, alive);
+                    }
+                    let swap_ms = srv.swap_in_ms(plan.load, cfg.swap_init_ms);
+                    st.swapping = true;
+                    st.swap_until = now + swap_ms;
+                    acc.swaps += 1;
+                    acc.swap_ms += swap_ms;
+                    seq += 1;
+                    heap.push(Reverse(Event {
+                        time_ms: st.swap_until,
+                        seq,
+                        kind: EventKind::SwapDone { server, load: plan.load, started_ms: now },
+                    }));
+                }
+            }
+            EventKind::SwapDone { server, load, started_ms } => {
+                let st = &mut state[server];
+                st.swapping = false;
+                resident[server][load] = true;
+                // drop lapsed deadlines; only those that lapsed during the
+                // swap window are attributed to the swap (earlier ones
+                // would have expired at the next batch formation anyway)
+                for r in st.batcher.purge_expired(now) {
+                    acc.expired += 1;
+                    if r.deadline_ms >= started_ms {
+                        acc.expired_during_swap += 1;
+                    }
+                }
+                // the survivors have outwaited any batching timeout:
+                // dispatch immediately
+                if st.can_dispatch() {
+                    if let Some(next) = st.batcher.oldest_allowed(&resident[server]) {
+                        try_dispatch(
+                            server,
+                            next,
+                            now,
+                            st,
+                            &fleet.servers[server],
+                            &resident[server],
+                            &mut heap,
+                            &mut seq,
+                            &mut acc,
+                        );
+                    }
                 }
             }
         }
     }
 
-    // every queue must have drained: the heap only empties once no flush
-    // or batch-done event is pending anywhere
-    debug_assert!(state.iter().all(|st| st.batcher.is_empty()));
+    // every queue must have drained: the heap only empties once no flush,
+    // batch-done or swap event is pending anywhere, so a leftover request
+    // means something routed to a queue residency could never serve
+    if state.iter().any(|st| !st.batcher.is_empty()) {
+        return Err(Error::hqp(
+            "serve: requests stranded in a queue at end of trace (residency routing bug)",
+        ));
+    }
 
-    Ok(build_summary(fleet, cfg, acc, makespan))
+    Ok(build_summary(fleet, cfg, acc, makespan, residency_limited))
 }
 
-fn build_summary(fleet: &Fleet, cfg: &ServeConfig, mut acc: Acc, makespan_ms: f64) -> Summary {
+fn build_summary(
+    fleet: &Fleet,
+    cfg: &ServeConfig,
+    mut acc: Acc,
+    makespan_ms: f64,
+    residency_limited: bool,
+) -> Summary {
     acc.latencies.sort_by(f64::total_cmp);
     let n = acc.latencies.len();
     let pct = |p: f64| -> f64 {
@@ -525,8 +830,8 @@ fn build_summary(fleet: &Fleet, cfg: &ServeConfig, mut acc: Acc, makespan_ms: f6
         }
     }
 
-    let generated =
-        acc.completed + acc.rejected_full + acc.rejected_noncompliant + acc.expired;
+    let rejected = acc.rejected_full + acc.rejected_noncompliant + acc.rejected_unavailable;
+    let generated = acc.completed + rejected + acc.expired;
     Summary {
         model: fleet.model.clone(),
         policy: cfg.policy.name(),
@@ -534,9 +839,14 @@ fn build_summary(fleet: &Fleet, cfg: &ServeConfig, mut acc: Acc, makespan_ms: f6
         delta_max: cfg.delta_max,
         generated,
         completed: acc.completed,
-        rejected: acc.rejected_full + acc.rejected_noncompliant,
+        rejected,
         rejected_noncompliant: acc.rejected_noncompliant,
+        rejected_unavailable: acc.rejected_unavailable,
         expired: acc.expired,
+        expired_during_swap: acc.expired_during_swap,
+        swaps: acc.swaps,
+        swap_ms: acc.swap_ms,
+        residency_limited,
         slo_attained: acc.slo_attained,
         mean_ms,
         p50_ms: pct(0.50),
@@ -572,6 +882,7 @@ mod tests {
         VariantProfile {
             name: name.into(),
             acc_drop,
+            weight_bytes: 10_000_000,
             batch_ms: vec![b1, b2],
             energy_mj: vec![b1 * 15.0, b2 * 15.0],
         }
@@ -589,6 +900,8 @@ mod tests {
             max_batch: 2,
             batch_timeout_ms: 5.0,
             queue_cap: 64,
+            swap_init_ms: 5.0,
+            link_mbps: f64::INFINITY,
         }
     }
 
@@ -716,7 +1029,142 @@ mod tests {
         let mut c = cfg();
         c.slo_ms = 0.0;
         assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
+        let mut c = cfg();
+        c.swap_init_ms = -1.0;
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
+        let mut c = cfg();
+        c.link_mbps = 0.0;
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
         let empty = Fleet { model: "m".into(), servers: vec![] };
         assert!(simulate_fleet(&empty, &[0.0], &cfg()).is_err());
+    }
+
+    #[test]
+    fn unlimited_memory_reports_no_swap_machinery() {
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        for policy in Policy::ALL {
+            let mut c = cfg();
+            c.policy = policy;
+            let s = simulate_fleet(&fleet, &[0.0, 1.0, 2.0], &c).unwrap();
+            assert_eq!(s.swaps, 0);
+            assert_eq!(s.swap_ms, 0.0);
+            assert_eq!(s.expired_during_swap, 0);
+            assert_eq!(s.rejected_unavailable, 0);
+            assert!(!s.residency_limited);
+            // static-policy renders must stay byte-compatible with the
+            // pre-residency simulator: no swap line at all
+            if policy != Policy::SwapAware {
+                assert!(!s.render().contains("swaps    :"), "{policy:?}");
+            } else {
+                assert!(s.render().contains("swaps    :"));
+            }
+        }
+    }
+
+    #[test]
+    fn swap_aware_matches_acc_fastest_when_everything_is_resident() {
+        let fleet = one_server(vec![
+            var("baseline", 0.0, 8.0, 13.0),
+            var("hqp", 0.012, 1.0, 1.6),
+        ]);
+        let arrivals: Vec<f64> = (0..100).map(|i| i as f64 * 0.7).collect();
+        let mut ca = cfg();
+        ca.policy = Policy::AccFastest;
+        let mut cs = cfg();
+        cs.policy = Policy::SwapAware;
+        let a = simulate_fleet(&fleet, &arrivals, &ca).unwrap();
+        let s = simulate_fleet(&fleet, &arrivals, &cs).unwrap();
+        assert_eq!(s.swaps, 0, "nothing to swap in: all variants resident");
+        assert_eq!((a.completed, a.expired, a.rejected), (s.completed, s.expired, s.rejected));
+        assert_eq!(a.slo_attained, s.slo_attained);
+        assert_eq!(a.p99_ms, s.p99_ms);
+        assert_eq!(a.per_variant.len(), s.per_variant.len());
+    }
+
+    #[test]
+    fn capped_memory_keeps_static_policies_on_the_resident_set() {
+        // slow fp32 resident, fast hqp merely deployable
+        let mut fleet = one_server(vec![
+            var("fp32", 0.0, 10.0, 16.0),
+            var("hqp", 0.012, 1.0, 1.6),
+        ]);
+        fleet.servers[0].variants[0].weight_bytes = 40_000_000;
+        fleet.servers[0].variants[1].weight_bytes = 4_000_000;
+        fleet.servers[0].mem_capacity_bytes = Some(41_000_000);
+        assert_eq!(fleet.servers[0].initial_residency(), vec![true, false]);
+        let arrivals: Vec<f64> = (0..40).map(|i| i as f64 * 2.0).collect();
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
+            let mut c = cfg();
+            c.policy = policy;
+            let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+            assert_eq!(s.swaps, 0, "{policy:?} must never swap");
+            assert!(s.residency_limited);
+            let hqp = s.per_variant.iter().find(|u| u.variant == "hqp").unwrap();
+            assert_eq!(hqp.completed, 0, "{policy:?} served a non-resident variant");
+            assert_eq!(hqp.batches, 0);
+            assert!(s.completed > 0, "{policy:?} must still serve the resident one");
+        }
+    }
+
+    #[test]
+    fn swap_aware_hot_swaps_under_pressure_and_counts_it() {
+        let mut fleet = one_server(vec![
+            var("fp32", 0.0, 10.0, 16.0),
+            var("hqp", 0.012, 1.0, 1.6),
+        ]);
+        fleet.servers[0].variants[0].weight_bytes = 40_000_000;
+        fleet.servers[0].variants[1].weight_bytes = 4_000_000;
+        fleet.servers[0].mem_capacity_bytes = Some(41_000_000);
+        // overload the resident fp32 engine: 1 req/ms against ~0.1 req/ms
+        let arrivals: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let mut c = cfg();
+        c.policy = Policy::SwapAware;
+        let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert_eq!(s.swaps, 1, "one swap to hqp, then stable");
+        let expected_swap = Device::xavier_nx().swap_in_ms(4_000_000, c.swap_init_ms);
+        assert!((s.swap_ms - expected_swap).abs() < 1e-9);
+        let fp32 = s.per_variant.iter().find(|u| u.variant == "fp32").unwrap();
+        let hqp = s.per_variant.iter().find(|u| u.variant == "hqp").unwrap();
+        assert!(fp32.completed > 0, "the resident engine serves before the swap");
+        assert!(hqp.completed > fp32.completed, "post-swap hqp carries the load");
+        assert_eq!(
+            s.completed + s.rejected + s.expired,
+            s.generated,
+            "conservation holds across the swap"
+        );
+        assert!(s.render().contains("swaps    : 1"));
+        // the swap-aware run must beat every static policy stuck on fp32
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
+            let mut cs = cfg();
+            cs.policy = policy;
+            let stat = simulate_fleet(&fleet, &arrivals, &cs).unwrap();
+            assert!(
+                s.slo_attainment() >= stat.slo_attainment(),
+                "swap-aware {:.3} < {policy:?} {:.3}",
+                s.slo_attainment(),
+                stat.slo_attainment()
+            );
+        }
+    }
+
+    #[test]
+    fn finite_link_delays_admission_and_eats_slo_budget() {
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        let mut c = cfg();
+        // 150528 input bytes at 1 Mbit/s ≈ 1204 ms per request
+        c.link_mbps = 1.0;
+        c.slo_ms = 100.0;
+        let s = simulate_fleet(&fleet, &[0.0], &c).unwrap();
+        assert_eq!(s.generated, 1);
+        // the deadline (t=100) passes during the ~1204 ms transfer: the
+        // request is admitted but expires before service
+        assert_eq!(s.completed + s.expired, 1);
+        assert_eq!(s.completed, 0, "transfer delay must count against the SLO");
+        // a fat link is exactly the no-network model
+        let mut fat = cfg();
+        fat.link_mbps = f64::INFINITY;
+        let a = simulate_fleet(&fleet, &[0.0, 1.0, 2.0], &fat).unwrap();
+        let b = simulate_fleet(&fleet, &[0.0, 1.0, 2.0], &cfg()).unwrap();
+        assert_eq!(a, b, "infinite link must be byte-identical to the default");
     }
 }

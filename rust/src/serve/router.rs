@@ -1,44 +1,89 @@
-//! SLO-aware routing: pick a (server, variant) per request.
+//! SLO-aware routing: pick a (server, variant) per request, and decide
+//! when a device should hot-swap its resident variant set.
 //!
 //! Every policy routes only over the *compliant* candidate set — variants
 //! whose measured accuracy drop is within Δ_max. This lifts the paper's
 //! pruning-level guarantee (Algorithm 1's accept condition) into a
 //! serving-level admission criterion: a request can never be served by an
-//! engine that violates the accuracy budget, no matter the load. When no
-//! compliant variant exists the router returns `None` and the request is
-//! rejected at admission.
+//! engine that violates the accuracy budget, no matter the load. Stateful
+//! residency adds a second filter: [`Router::route`] only offers policies
+//! the *live* candidates — compliant pairs whose variant is resident on
+//! an available (not mid-swap) server — so a non-resident engine can
+//! never be scheduled either. When no live candidate exists the router
+//! returns `None` and the request is rejected at admission.
+//!
+//! ## The `RoutePolicy` trait
+//!
+//! Policies are open-ended implementations of [`RoutePolicy`] over a
+//! [`FleetView`] snapshot (backlogs, queue depths, residency, in-flight
+//! swaps) plus the static [`RouteCtx`] tables derived from the fleet at
+//! build time. The CLI-facing [`Policy`] enum is just a name registry
+//! ([`Policy::NAMES`]) that builds the trait object. Besides routing, a
+//! policy may propose an engine hot-swap ([`RoutePolicy::plan_swap`]);
+//! the event loop executes the plan, charging the HALP-style swap cost
+//! ([`crate::hwsim::Device::swap_in_ms`]).
 
 use super::fleet::Fleet;
 
-/// Routing policy.
+/// Routing policy names — the CLI registry. [`Policy::build`] yields the
+/// actual [`RoutePolicy`] implementation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
-    /// Cycle through the compliant (server, variant) pairs.
+    /// Cycle through the live (server, variant) pairs.
     RoundRobin,
-    /// Least-loaded server (by estimated backlog ms), fastest compliant
+    /// Least-loaded server (by estimated backlog ms), fastest live
     /// variant on it.
     LeastLoaded,
     /// Accuracy-constrained fastest: minimize estimated completion time
     /// (server backlog + the variant's batch-1 service time) over all
-    /// compliant pairs.
+    /// live pairs.
     AccFastest,
+    /// [`Policy::AccFastest`] routing plus hot-swap planning: under
+    /// sustained queue pressure, swap a faster compliant variant into a
+    /// capacity-limited server when the projected queue-clearing saving
+    /// exceeds the swap cost.
+    SwapAware,
 }
 
 impl Policy {
+    /// Canonical CLI names, in enum order — the single source of truth
+    /// shared by [`Policy::parse`], [`Policy::name`] and the `main.rs`
+    /// "valid: …" error strings.
+    pub const NAMES: [&'static str; 4] =
+        ["round-robin", "least-loaded", "acc-fastest", "swap-aware"];
+
+    /// Every policy (sweeps and property tests).
+    pub const ALL: [Policy; 4] =
+        [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest, Policy::SwapAware];
+
     pub fn parse(name: &str) -> Option<Policy> {
         match name {
             "round-robin" | "rr" => Some(Policy::RoundRobin),
             "least-loaded" | "ll" => Some(Policy::LeastLoaded),
             "acc-fastest" | "af" => Some(Policy::AccFastest),
+            "swap-aware" | "sa" => Some(Policy::SwapAware),
             _ => None,
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
-            Policy::RoundRobin => "round-robin",
-            Policy::LeastLoaded => "least-loaded",
-            Policy::AccFastest => "acc-fastest",
+            Policy::RoundRobin => Policy::NAMES[0],
+            Policy::LeastLoaded => Policy::NAMES[1],
+            Policy::AccFastest => Policy::NAMES[2],
+            Policy::SwapAware => Policy::NAMES[3],
+        }
+    }
+
+    /// Build the policy implementation.
+    fn build(self, num_servers: usize) -> Box<dyn RoutePolicy> {
+        match self {
+            Policy::RoundRobin => Box::new(RoundRobinPolicy { cursor: 0 }),
+            Policy::LeastLoaded => Box::new(LeastLoadedPolicy),
+            Policy::AccFastest => Box::new(AccFastestPolicy),
+            Policy::SwapAware => Box::new(SwapAwarePolicy {
+                pressure_since: vec![f64::NAN; num_servers],
+            }),
         }
     }
 }
@@ -50,24 +95,99 @@ pub struct Candidate {
     pub variant: usize,
 }
 
-/// The router: a policy over the precomputed compliant candidate set.
+/// Immutable per-decision snapshot of the fleet's runtime state, built by
+/// the event loop on every arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetView<'a> {
+    /// Virtual time of the decision.
+    pub now_ms: f64,
+    /// Estimated backlog per server, ms (busy/swap remainder + queued
+    /// work at batch-1 service times).
+    pub backlog_ms: &'a [f64],
+    /// Queued request count per server.
+    pub queued: &'a [usize],
+    /// `resident[s][v]`: is variant `v` loaded in server `s`'s engine
+    /// memory right now?
+    pub resident: &'a [Vec<bool>],
+    /// Server cannot take new work (a swap is pending or in flight).
+    pub unavailable: &'a [bool],
+}
+
+/// Static routing tables derived from `(fleet, Δ_max)` at router build
+/// time. Indices into the per-candidate vectors are candidate indices;
+/// `variant_bytes` / `swap_in_ms` / `compliant` are `[server][variant]`.
 #[derive(Clone, Debug)]
+pub struct RouteCtx {
+    /// Compliant (server, variant) pairs in (server, variant) enumeration
+    /// order — the deterministic tie-break everywhere.
+    pub candidates: Vec<Candidate>,
+    /// Batch-1 ms per candidate (est. completion = backlog + this).
+    pub batch1_ms: Vec<f64>,
+    pub acc_drop: Vec<f64>,
+    pub num_servers: usize,
+    /// Engine-memory capacity per server (`None` = unlimited).
+    pub capacity_bytes: Vec<Option<u64>>,
+    /// Weight footprint of every variant, resident or not.
+    pub variant_bytes: Vec<Vec<u64>>,
+    /// Batch-1 service time of every variant, compliant or not (the
+    /// per-candidate `batch1_ms` only covers compliant pairs).
+    pub variant_batch1_ms: Vec<Vec<f64>>,
+    /// Precomputed hot-swap cost (weight streaming + init overhead) of
+    /// loading each variant on each server.
+    pub swap_in_ms: Vec<Vec<f64>>,
+    /// Δ_max compliance of every variant (eviction ordering needs it for
+    /// non-candidate variants too).
+    pub compliant: Vec<Vec<bool>>,
+}
+
+/// A hot-swap proposal: evict `evict` (in order) from `server`, then load
+/// `load`. The event loop validates it against live residency and charges
+/// the swap cost.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SwapPlan {
+    pub server: usize,
+    pub evict: Vec<usize>,
+    pub load: usize,
+}
+
+/// An open-ended routing policy over the fleet snapshot.
+pub trait RoutePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Pick one of `live` — indices into `ctx.candidates` whose variant
+    /// is resident on an available server (never empty). Returning an
+    /// index outside `live` is a policy bug; [`Router::route`] re-checks
+    /// residency and rejects the request rather than scheduling it.
+    fn route(&mut self, ctx: &RouteCtx, view: &FleetView, live: &[usize]) -> Option<usize>;
+
+    /// Optionally propose an engine hot-swap. Called once per arrival
+    /// (after routing) when the fleet is residency-limited. Default: a
+    /// static policy that never swaps.
+    fn plan_swap(&mut self, _ctx: &RouteCtx, _view: &FleetView) -> Option<SwapPlan> {
+        None
+    }
+}
+
+/// The router: live-candidate filtering plus a boxed [`RoutePolicy`].
 pub struct Router {
-    policy: Policy,
-    candidates: Vec<Candidate>,
-    /// batch-1 ms per candidate (est. completion = backlog + this).
-    batch1_ms: Vec<f64>,
-    acc_drop: Vec<f64>,
-    rr_cursor: usize,
+    ctx: RouteCtx,
+    policy: Box<dyn RoutePolicy>,
+    /// Scratch: live candidate indices, rebuilt per decision.
+    live: Vec<usize>,
 }
 
 impl Router {
-    /// Build the compliant candidate set (enumeration order: server index,
-    /// then variant index — the deterministic tie-break everywhere).
-    pub fn new(fleet: &Fleet, delta_max: f64, policy: Policy) -> Router {
+    /// Build the compliant candidate set and static tables (enumeration
+    /// order: server index, then variant index).
+    pub fn new(fleet: &Fleet, delta_max: f64, policy: Policy, swap_init_ms: f64) -> Router {
         let mut candidates = Vec::new();
         let mut batch1_ms = Vec::new();
         let mut acc_drop = Vec::new();
+        let mut capacity_bytes = Vec::with_capacity(fleet.servers.len());
+        let mut variant_bytes = Vec::with_capacity(fleet.servers.len());
+        let mut variant_batch1_ms = Vec::with_capacity(fleet.servers.len());
+        let mut swap_in_ms = Vec::with_capacity(fleet.servers.len());
+        let mut compliant = Vec::with_capacity(fleet.servers.len());
         for (s, server) in fleet.servers.iter().enumerate() {
             for (v, var) in server.variants.iter().enumerate() {
                 if var.compliant(delta_max) {
@@ -76,71 +196,116 @@ impl Router {
                     acc_drop.push(var.acc_drop);
                 }
             }
+            capacity_bytes.push(server.mem_capacity_bytes);
+            variant_bytes.push(server.variants.iter().map(|v| v.weight_bytes).collect());
+            variant_batch1_ms.push(server.variants.iter().map(|v| v.batch1_ms()).collect());
+            swap_in_ms.push(
+                (0..server.variants.len())
+                    .map(|v| server.swap_in_ms(v, swap_init_ms))
+                    .collect(),
+            );
+            compliant.push(server.variants.iter().map(|v| v.compliant(delta_max)).collect());
         }
-        Router { policy, candidates, batch1_ms, acc_drop, rr_cursor: 0 }
+        let ctx = RouteCtx {
+            candidates,
+            batch1_ms,
+            acc_drop,
+            num_servers: fleet.servers.len(),
+            capacity_bytes,
+            variant_bytes,
+            variant_batch1_ms,
+            swap_in_ms,
+            compliant,
+        };
+        let policy = policy.build(ctx.num_servers);
+        Router { ctx, policy, live: Vec::new() }
     }
 
-    /// Number of compliant (server, variant) pairs.
+    /// Number of compliant (server, variant) pairs, resident or not.
     pub fn num_candidates(&self) -> usize {
-        self.candidates.len()
+        self.ctx.candidates.len()
     }
 
-    /// Route one request. `backlog_ms[s]` estimates server `s`'s current
-    /// backlog (remaining busy time + queued work). Returns `None` when no
-    /// compliant variant exists anywhere in the fleet.
-    pub fn route(&mut self, backlog_ms: &[f64]) -> Option<Candidate> {
-        if self.candidates.is_empty() {
+    /// Route one request over the live candidates. `None` means reject:
+    /// either no compliant variant exists anywhere
+    /// ([`Router::num_candidates`] is 0), or none is resident on an
+    /// available server right now.
+    pub fn route(&mut self, view: &FleetView) -> Option<Candidate> {
+        self.live.clear();
+        for (i, c) in self.ctx.candidates.iter().enumerate() {
+            if !view.unavailable[c.server] && view.resident[c.server][c.variant] {
+                self.live.push(i);
+            }
+        }
+        if self.live.is_empty() {
             return None;
         }
-        match self.policy {
-            Policy::RoundRobin => {
-                let c = self.candidates[self.rr_cursor % self.candidates.len()];
-                self.rr_cursor = (self.rr_cursor + 1) % self.candidates.len();
-                Some(c)
-            }
-            Policy::LeastLoaded => {
-                // least-loaded server among those with a compliant variant…
-                let mut best_server = None::<(f64, usize)>;
-                for c in &self.candidates {
-                    let load = backlog_ms[c.server];
-                    let better = match best_server {
-                        None => true,
-                        Some((l, s)) => load < l || (load == l && c.server < s),
-                    };
-                    if better {
-                        best_server = Some((load, c.server));
-                    }
-                }
-                let (_, server) = best_server?;
-                // …then its fastest compliant variant
-                self.best_on(server, |i| self.batch1_ms[i])
-            }
-            Policy::AccFastest => {
-                let mut best = None::<(f64, f64, usize)>; // (finish, drop, idx)
-                for (i, c) in self.candidates.iter().enumerate() {
-                    let finish = backlog_ms[c.server] + self.batch1_ms[i];
-                    let key = (finish, self.acc_drop[i]);
-                    let better = match best {
-                        None => true,
-                        Some((f, d, _)) => key.0 < f || (key.0 == f && key.1 < d),
-                    };
-                    if better {
-                        best = Some((key.0, key.1, i));
-                    }
-                }
-                best.map(|(_, _, i)| self.candidates[i])
-            }
+        let i = self.policy.route(&self.ctx, view, &self.live)?;
+        let c = self.ctx.candidates[i];
+        // residency is a hard serving invariant — re-check the policy's
+        // answer rather than trusting it
+        if view.unavailable[c.server] || !view.resident[c.server][c.variant] {
+            debug_assert!(false, "policy {} returned a non-live candidate", self.policy.name());
+            return None;
         }
+        Some(c)
     }
 
-    /// Lowest-key candidate on one server (first index wins ties).
-    fn best_on(&self, server: usize, key: impl Fn(usize) -> f64) -> Option<Candidate> {
+    /// Ask the policy for a hot-swap proposal.
+    pub fn plan_swap(&mut self, view: &FleetView) -> Option<SwapPlan> {
+        self.policy.plan_swap(&self.ctx, view)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy implementations
+// ---------------------------------------------------------------------------
+
+struct RoundRobinPolicy {
+    cursor: usize,
+}
+
+impl RoutePolicy for RoundRobinPolicy {
+    fn name(&self) -> &'static str {
+        Policy::NAMES[0]
+    }
+
+    fn route(&mut self, _ctx: &RouteCtx, _view: &FleetView, live: &[usize]) -> Option<usize> {
+        let i = live[self.cursor % live.len()];
+        self.cursor = (self.cursor + 1) % live.len();
+        Some(i)
+    }
+}
+
+struct LeastLoadedPolicy;
+
+impl RoutePolicy for LeastLoadedPolicy {
+    fn name(&self) -> &'static str {
+        Policy::NAMES[1]
+    }
+
+    fn route(&mut self, ctx: &RouteCtx, view: &FleetView, live: &[usize]) -> Option<usize> {
+        // least-loaded server among those with a live variant…
+        let mut best_server = None::<(f64, usize)>;
+        for &i in live {
+            let s = ctx.candidates[i].server;
+            let load = view.backlog_ms[s];
+            let better = match best_server {
+                None => true,
+                Some((l, bs)) => load < l || (load == l && s < bs),
+            };
+            if better {
+                best_server = Some((load, s));
+            }
+        }
+        let (_, server) = best_server?;
+        // …then its fastest live variant (first index wins ties)
         let mut best = None::<(f64, usize)>;
-        for (i, c) in self.candidates.iter().enumerate() {
-            if c.server != server {
+        for &i in live {
+            if ctx.candidates[i].server != server {
                 continue;
             }
-            let k = key(i);
+            let k = ctx.batch1_ms[i];
             let better = match best {
                 None => true,
                 Some((bk, _)) => k < bk,
@@ -149,20 +314,202 @@ impl Router {
                 best = Some((k, i));
             }
         }
-        best.map(|(_, i)| self.candidates[i])
+        best.map(|(_, i)| i)
+    }
+}
+
+/// Shared by [`AccFastestPolicy`] and [`SwapAwarePolicy`]: minimize
+/// estimated completion time, ties broken toward the lower accuracy drop,
+/// then the lower candidate index.
+fn acc_fastest_route(ctx: &RouteCtx, view: &FleetView, live: &[usize]) -> Option<usize> {
+    let mut best = None::<(f64, f64, usize)>; // (finish, drop, idx)
+    for &i in live {
+        let c = ctx.candidates[i];
+        let finish = view.backlog_ms[c.server] + ctx.batch1_ms[i];
+        let drop = ctx.acc_drop[i];
+        let better = match best {
+            None => true,
+            Some((f, d, _)) => finish < f || (finish == f && drop < d),
+        };
+        if better {
+            best = Some((finish, drop, i));
+        }
+    }
+    best.map(|(_, _, i)| i)
+}
+
+struct AccFastestPolicy;
+
+impl RoutePolicy for AccFastestPolicy {
+    fn name(&self) -> &'static str {
+        Policy::NAMES[2]
+    }
+
+    fn route(&mut self, ctx: &RouteCtx, view: &FleetView, live: &[usize]) -> Option<usize> {
+        acc_fastest_route(ctx, view, live)
+    }
+}
+
+/// Backlog threshold, in multiples of the best resident batch-1 service
+/// time, above which a server counts as pressured.
+pub const SWAP_PRESSURE_BATCHES: f64 = 4.0;
+
+/// How long (virtual ms) pressure must persist before a swap triggers —
+/// the anti-thrash guard against transient spikes.
+pub const SWAP_SUSTAIN_MS: f64 = 25.0;
+
+/// Swap-aware policy: acc-fastest routing plus a hot-swap planner.
+///
+/// A server is *pressured* when its estimated backlog exceeds
+/// [`SWAP_PRESSURE_BATCHES`] times its best resident compliant batch-1
+/// time (or when it has no resident compliant variant at all — starved).
+/// A pressured server triggers a swap to the fastest fitting non-resident
+/// compliant variant once the projected queue-clearing saving
+/// `queued · (b1_resident − b1_new)` exceeds the swap cost and the
+/// pressure has persisted for [`SWAP_SUSTAIN_MS`]; a starved server swaps
+/// immediately. Eviction frees memory in deterministic order:
+/// non-compliant residents first, then compliant residents —
+/// slowest-first within each rank.
+struct SwapAwarePolicy {
+    /// Virtual time each server's pressure episode began (NaN = none).
+    pressure_since: Vec<f64>,
+}
+
+impl SwapAwarePolicy {
+    fn plan_for_server(&mut self, ctx: &RouteCtx, view: &FleetView, s: usize) -> Option<SwapPlan> {
+        let cap = ctx.capacity_bytes[s]?;
+        let num_variants = view.resident[s].len();
+        // best resident compliant service time on s
+        let mut b1_res = f64::INFINITY;
+        for v in 0..num_variants {
+            if ctx.compliant[s][v] && view.resident[s][v] {
+                b1_res = b1_res.min(ctx.variant_batch1_ms[s][v]);
+            }
+        }
+        // fastest strictly-faster non-resident compliant variant that can
+        // fit the capacity at all (ties go to the lower variant index)
+        let mut load = None::<(f64, usize)>; // (b1, variant)
+        for v in 0..num_variants {
+            if !ctx.compliant[s][v]
+                || view.resident[s][v]
+                || ctx.variant_bytes[s][v] > cap
+            {
+                continue;
+            }
+            let b1 = ctx.variant_batch1_ms[s][v];
+            if b1 >= b1_res {
+                continue;
+            }
+            let better = match load {
+                None => true,
+                Some((lb, _)) => b1 < lb,
+            };
+            if better {
+                load = Some((b1, v));
+            }
+        }
+        let Some((b1_new, v_new)) = load else {
+            self.pressure_since[s] = f64::NAN;
+            return None;
+        };
+
+        let starved = !b1_res.is_finite();
+        let pressured = starved
+            || (view.queued[s] > 0 && view.backlog_ms[s] > SWAP_PRESSURE_BATCHES * b1_res);
+        if !pressured {
+            self.pressure_since[s] = f64::NAN;
+            return None;
+        }
+        // benefit: clearing today's queue on the faster engine must
+        // out-earn the swap cost (HALP-style hardware-aware pricing)
+        let benefit = if starved {
+            f64::INFINITY
+        } else {
+            view.queued[s] as f64 * (b1_res - b1_new)
+        };
+        if benefit <= ctx.swap_in_ms[s][v_new] {
+            self.pressure_since[s] = f64::NAN;
+            return None;
+        }
+        if !starved {
+            if self.pressure_since[s].is_nan() {
+                self.pressure_since[s] = view.now_ms;
+                return None;
+            }
+            if view.now_ms - self.pressure_since[s] < SWAP_SUSTAIN_MS {
+                return None;
+            }
+        }
+
+        // evict until the incoming engine fits: non-compliant residents
+        // first, then compliant residents — slowest-first within each
+        // rank, index as the final tie-break
+        let resident_bytes: u64 = (0..num_variants)
+            .filter(|&v| view.resident[s][v])
+            .map(|v| ctx.variant_bytes[s][v])
+            .sum();
+        let mut order: Vec<usize> = (0..num_variants).filter(|&v| view.resident[s][v]).collect();
+        order.sort_by(|&a, &b| {
+            let rank = |v: usize| usize::from(ctx.compliant[s][v]);
+            rank(a)
+                .cmp(&rank(b))
+                .then_with(|| {
+                    ctx.variant_batch1_ms[s][b].total_cmp(&ctx.variant_batch1_ms[s][a])
+                })
+                .then(a.cmp(&b))
+        });
+        let mut evict = Vec::new();
+        let mut freed = 0u64;
+        let need = (resident_bytes + ctx.variant_bytes[s][v_new]).saturating_sub(cap);
+        for v in order {
+            if freed >= need {
+                break;
+            }
+            evict.push(v);
+            freed += ctx.variant_bytes[s][v];
+        }
+        self.pressure_since[s] = f64::NAN;
+        Some(SwapPlan { server: s, evict, load: v_new })
+    }
+}
+
+impl RoutePolicy for SwapAwarePolicy {
+    fn name(&self) -> &'static str {
+        Policy::NAMES[3]
+    }
+
+    fn route(&mut self, ctx: &RouteCtx, view: &FleetView, live: &[usize]) -> Option<usize> {
+        acc_fastest_route(ctx, view, live)
+    }
+
+    fn plan_swap(&mut self, ctx: &RouteCtx, view: &FleetView) -> Option<SwapPlan> {
+        for s in 0..ctx.num_servers {
+            if view.unavailable[s] {
+                continue;
+            }
+            if let Some(plan) = self.plan_for_server(ctx, view, s) {
+                return Some(plan);
+            }
+        }
+        None
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::fleet::{Fleet, Server, VariantProfile};
     use crate::hwsim::Device;
+    use crate::serve::fleet::{Fleet, Server, VariantProfile};
 
     fn var(name: &str, acc_drop: f64, ms: f64) -> VariantProfile {
+        var_sized(name, acc_drop, ms, 10_000_000)
+    }
+
+    fn var_sized(name: &str, acc_drop: f64, ms: f64, bytes: u64) -> VariantProfile {
         VariantProfile {
             name: name.into(),
             acc_drop,
+            weight_bytes: bytes,
             batch_ms: vec![ms, ms * 1.6],
             energy_mj: vec![ms * 10.0, ms * 16.0],
         }
@@ -172,29 +519,60 @@ mod tests {
         Fleet {
             model: "m".into(),
             servers: vec![
-                Server {
-                    device: Device::xavier_nx(),
-                    variants: vec![
+                Server::new(
+                    Device::xavier_nx(),
+                    vec![
                         var("baseline", 0.0, 8.0),
                         var("p50", 0.021, 1.0), // violates Δmax
                         var("hqp", 0.012, 0.5),
                     ],
-                },
-                Server {
-                    device: Device::jetson_nano(),
-                    variants: vec![var("baseline", 0.0, 20.0), var("hqp", 0.012, 4.0)],
-                },
+                ),
+                Server::new(
+                    Device::jetson_nano(),
+                    vec![var("baseline", 0.0, 20.0), var("hqp", 0.012, 4.0)],
+                ),
             ],
+        }
+    }
+
+    /// All-resident, all-available view over zeroed state.
+    struct ViewState {
+        backlog: Vec<f64>,
+        queued: Vec<usize>,
+        resident: Vec<Vec<bool>>,
+        unavail: Vec<bool>,
+    }
+
+    impl ViewState {
+        fn of(f: &Fleet) -> ViewState {
+            ViewState {
+                backlog: vec![0.0; f.servers.len()],
+                queued: vec![0; f.servers.len()],
+                resident: f.servers.iter().map(|s| s.initial_residency()).collect(),
+                unavail: vec![false; f.servers.len()],
+            }
+        }
+
+        fn view(&self, now: f64) -> FleetView<'_> {
+            FleetView {
+                now_ms: now,
+                backlog_ms: &self.backlog,
+                queued: &self.queued,
+                resident: &self.resident,
+                unavailable: &self.unavail,
+            }
         }
     }
 
     #[test]
     fn non_compliant_variants_are_never_candidates() {
-        let r = Router::new(&fleet(), 0.015, Policy::AccFastest);
+        let f = fleet();
+        let st = ViewState::of(&f);
+        let r = Router::new(&f, 0.015, Policy::AccFastest, 5.0);
         assert_eq!(r.num_candidates(), 4, "p50 must be excluded");
-        let mut r = Router::new(&fleet(), 0.015, Policy::RoundRobin);
+        let mut r = Router::new(&f, 0.015, Policy::RoundRobin, 5.0);
         for _ in 0..20 {
-            let c = r.route(&[0.0, 0.0]).unwrap();
+            let c = r.route(&st.view(0.0)).unwrap();
             assert!(!(c.server == 0 && c.variant == 1), "routed to p50");
         }
     }
@@ -204,16 +582,19 @@ mod tests {
         let mut f = fleet();
         f.servers.truncate(1);
         f.servers[0].variants = vec![var("p50", 0.021, 1.0)];
-        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
-            let mut r = Router::new(&f, 0.015, policy);
-            assert_eq!(r.route(&[0.0]), None);
+        let st = ViewState::of(&f);
+        for policy in Policy::ALL {
+            let mut r = Router::new(&f, 0.015, policy, 5.0);
+            assert_eq!(r.route(&st.view(0.0)), None);
         }
     }
 
     #[test]
     fn round_robin_cycles_deterministically() {
-        let mut r = Router::new(&fleet(), 0.015, Policy::RoundRobin);
-        let seq: Vec<Candidate> = (0..8).map(|_| r.route(&[0.0, 0.0]).unwrap()).collect();
+        let f = fleet();
+        let st = ViewState::of(&f);
+        let mut r = Router::new(&f, 0.015, Policy::RoundRobin, 5.0);
+        let seq: Vec<Candidate> = (0..8).map(|_| r.route(&st.view(0.0)).unwrap()).collect();
         assert_eq!(seq[0], seq[4]);
         assert_eq!(seq[1], seq[5]);
         let distinct: std::collections::BTreeSet<Candidate> = seq[..4].iter().copied().collect();
@@ -222,22 +603,135 @@ mod tests {
 
     #[test]
     fn acc_fastest_picks_global_fastest_then_respects_backlog() {
-        let mut r = Router::new(&fleet(), 0.015, Policy::AccFastest);
-        let c = r.route(&[0.0, 0.0]).unwrap();
+        let f = fleet();
+        let mut st = ViewState::of(&f);
+        let mut r = Router::new(&f, 0.015, Policy::AccFastest, 5.0);
+        let c = r.route(&st.view(0.0)).unwrap();
         assert_eq!((c.server, c.variant), (0, 2), "hqp on NX is fastest");
         // heavy NX backlog shifts routing to Nano's hqp
-        let c = r.route(&[100.0, 0.0]).unwrap();
+        st.backlog = vec![100.0, 0.0];
+        let c = r.route(&st.view(0.0)).unwrap();
         assert_eq!((c.server, c.variant), (1, 1));
     }
 
     #[test]
     fn least_loaded_prefers_idle_server() {
-        let mut r = Router::new(&fleet(), 0.015, Policy::LeastLoaded);
-        let c = r.route(&[50.0, 1.0]).unwrap();
+        let f = fleet();
+        let mut st = ViewState::of(&f);
+        let mut r = Router::new(&f, 0.015, Policy::LeastLoaded, 5.0);
+        st.backlog = vec![50.0, 1.0];
+        let c = r.route(&st.view(0.0)).unwrap();
         assert_eq!(c.server, 1);
         assert_eq!(c.variant, 1, "fastest compliant on nano is hqp");
-        let c = r.route(&[0.0, 1.0]).unwrap();
+        st.backlog = vec![0.0, 1.0];
+        let c = r.route(&st.view(0.0)).unwrap();
         assert_eq!((c.server, c.variant), (0, 2));
+    }
+
+    #[test]
+    fn non_resident_variants_are_never_routed() {
+        let f = fleet();
+        let mut st = ViewState::of(&f);
+        // only the slow baselines resident anywhere
+        st.resident = vec![vec![true, false, false], vec![true, false]];
+        for policy in Policy::ALL {
+            let mut r = Router::new(&f, 0.015, policy, 5.0);
+            for _ in 0..10 {
+                let c = r.route(&st.view(0.0)).unwrap();
+                assert_eq!(c.variant, 0, "{policy:?} routed a non-resident variant");
+            }
+        }
+        // nothing resident at all → reject, even though candidates exist
+        st.resident = vec![vec![false; 3], vec![false; 2]];
+        for policy in Policy::ALL {
+            let mut r = Router::new(&f, 0.015, policy, 5.0);
+            assert!(r.num_candidates() > 0);
+            assert_eq!(r.route(&st.view(0.0)), None);
+        }
+    }
+
+    #[test]
+    fn unavailable_servers_are_skipped() {
+        let f = fleet();
+        let mut st = ViewState::of(&f);
+        st.unavail = vec![true, false];
+        let mut r = Router::new(&f, 0.015, Policy::AccFastest, 5.0);
+        let c = r.route(&st.view(0.0)).unwrap();
+        assert_eq!(c.server, 1, "mid-swap server must not take new work");
+    }
+
+    #[test]
+    fn swap_aware_plans_after_sustained_pressure() {
+        // one NX: slow compliant resident, fast compliant non-resident
+        let f = Fleet {
+            model: "m".into(),
+            servers: vec![Server {
+                device: Device::xavier_nx(),
+                variants: vec![
+                    var_sized("fp32", 0.0, 10.0, 40_000_000),
+                    var_sized("hqp", 0.012, 1.0, 4_000_000),
+                ],
+                mem_capacity_bytes: Some(41_000_000),
+            }],
+        };
+        assert_eq!(f.servers[0].initial_residency(), vec![true, false]);
+        let mut st = ViewState::of(&f);
+        let mut r = Router::new(&f, 0.015, Policy::SwapAware, 5.0);
+
+        // no pressure → no plan
+        assert_eq!(r.plan_swap(&st.view(0.0)), None);
+
+        // pressured (backlog > 4×10 ms, queue deep enough to out-earn the
+        // ~5.07 ms swap cost): first sighting only starts the episode
+        st.backlog = vec![60.0];
+        st.queued = vec![6];
+        assert_eq!(r.plan_swap(&st.view(100.0)), None, "sustain guard");
+        assert_eq!(r.plan_swap(&st.view(110.0)), None, "still within sustain");
+        let plan = r.plan_swap(&st.view(100.0 + SWAP_SUSTAIN_MS)).unwrap();
+        assert_eq!(plan, SwapPlan { server: 0, evict: vec![0], load: 1 });
+
+        // pressure that clears resets the episode
+        st.backlog = vec![0.0];
+        st.queued = vec![0];
+        assert_eq!(r.plan_swap(&st.view(200.0)), None);
+        st.backlog = vec![60.0];
+        st.queued = vec![6];
+        assert_eq!(r.plan_swap(&st.view(201.0)), None, "episode restarted");
+    }
+
+    #[test]
+    fn swap_aware_swaps_immediately_when_starved() {
+        // capacity admits only the Δ-violating p50; hqp fits after evicting
+        let f = Fleet {
+            model: "m".into(),
+            servers: vec![Server {
+                device: Device::xavier_nx(),
+                variants: vec![
+                    var_sized("p50", 0.021, 1.0, 10_000_000),
+                    var_sized("hqp", 0.012, 2.0, 9_000_000),
+                ],
+                mem_capacity_bytes: Some(12_000_000),
+            }],
+        };
+        assert_eq!(f.servers[0].initial_residency(), vec![true, false]);
+        let st = ViewState::of(&f);
+        let mut r = Router::new(&f, 0.015, Policy::SwapAware, 5.0);
+        // no resident compliant engine: swap without waiting for pressure,
+        // evicting the useless non-compliant resident
+        let plan = r.plan_swap(&st.view(0.0)).unwrap();
+        assert_eq!(plan, SwapPlan { server: 0, evict: vec![0], load: 1 });
+    }
+
+    #[test]
+    fn swap_aware_never_plans_on_unlimited_memory() {
+        let f = fleet(); // no capacities
+        let mut st = ViewState::of(&f);
+        st.backlog = vec![1e6, 1e6];
+        st.queued = vec![500, 500];
+        let mut r = Router::new(&f, 0.015, Policy::SwapAware, 5.0);
+        for t in 0..10 {
+            assert_eq!(r.plan_swap(&st.view(t as f64 * 100.0)), None);
+        }
     }
 
     #[test]
@@ -245,7 +739,15 @@ mod tests {
         assert_eq!(Policy::parse("acc-fastest"), Some(Policy::AccFastest));
         assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
         assert_eq!(Policy::parse("least-loaded"), Some(Policy::LeastLoaded));
+        assert_eq!(Policy::parse("swap-aware"), Some(Policy::SwapAware));
+        assert_eq!(Policy::parse("sa"), Some(Policy::SwapAware));
         assert!(Policy::parse("random").is_none());
-        assert_eq!(Policy::AccFastest.name(), "acc-fastest");
+        // NAMES is the single source of truth: every listed name parses
+        // back to a policy whose name() round-trips
+        for (i, name) in Policy::NAMES.iter().enumerate() {
+            let p = Policy::parse(name).expect("every listed name must parse");
+            assert_eq!(p, Policy::ALL[i]);
+            assert_eq!(p.name(), *name);
+        }
     }
 }

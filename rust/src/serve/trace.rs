@@ -30,6 +30,11 @@ pub enum ArrivalProcess {
 }
 
 impl ArrivalProcess {
+    /// Canonical CLI names, the single source of truth shared by
+    /// [`ArrivalProcess::parse`], [`ArrivalProcess::name`] and the
+    /// `main.rs` "valid: …" error strings.
+    pub const NAMES: [&'static str; 2] = ["poisson", "mmpp"];
+
     /// Parse a CLI name into a process around a base rate.
     pub fn parse(name: &str, rps: f64) -> Option<ArrivalProcess> {
         match name {
@@ -48,8 +53,8 @@ impl ArrivalProcess {
 
     pub fn name(&self) -> &'static str {
         match self {
-            ArrivalProcess::Poisson { .. } => "poisson",
-            ArrivalProcess::Mmpp { .. } => "mmpp",
+            ArrivalProcess::Poisson { .. } => ArrivalProcess::NAMES[0],
+            ArrivalProcess::Mmpp { .. } => ArrivalProcess::NAMES[1],
         }
     }
 }
@@ -176,5 +181,10 @@ mod tests {
         assert_eq!(ArrivalProcess::parse("poisson", 10.0).unwrap().name(), "poisson");
         assert_eq!(ArrivalProcess::parse("mmpp", 10.0).unwrap().name(), "mmpp");
         assert!(ArrivalProcess::parse("uniform", 10.0).is_none());
+        // NAMES is the single source of truth: every listed name parses
+        // and round-trips through name()
+        for name in ArrivalProcess::NAMES {
+            assert_eq!(ArrivalProcess::parse(name, 10.0).unwrap().name(), name);
+        }
     }
 }

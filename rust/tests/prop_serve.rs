@@ -2,29 +2,38 @@
 //! harness — the offline proptest substitute, DESIGN.md §Substitutions).
 //!
 //! These run WITHOUT artifacts: fleets come from the paper-anchored
-//! reference profiles. Over randomized (fleet, trace, config) triples:
+//! reference profiles. Over randomized (fleet, trace, config) triples —
+//! including capped engine memory, the swap-aware policy and finite
+//! uplinks:
 //!
 //! * **conservation** — every generated request is exactly one of
-//!   {completed, rejected, expired};
-//! * **determinism** — the same seed reproduces a byte-identical summary;
+//!   {completed, rejected, expired}, swaps included;
+//! * **determinism** — the same seed reproduces a byte-identical summary,
+//!   swap counters included;
 //! * **admission** — the router never serves a variant whose accuracy
-//!   drop exceeds Δ_max;
-//! * **monotone virtual time** — the event loop never travels backwards
-//!   (`simulate_fleet` errors out on regression, so `Ok` is the proof);
-//! * **sanity** — percentiles are ordered, attainment ⊆ completions.
+//!   drop exceeds Δ_max, and never serves a non-resident variant
+//!   (`simulate_fleet` errors out on a residency violation — a stranded
+//!   queue or an invalid swap plan — so `Ok` is the proof; static
+//!   policies are additionally pinned to the initial resident set);
+//! * **monotone virtual time** — the event loop never travels backwards;
+//! * **sanity** — percentiles are ordered, attainment ⊆ completions,
+//!   swap counters are internally consistent.
 
-use hqp::hwsim::Device;
+use hqp::gopt::{FusedKind, FusedOp, OptimizedGraph};
+use hqp::hwsim::{simulate, simulate_batch, Device, Precision};
 use hqp::serve::{reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig};
 use hqp::testkit::prng::Prng;
 
 const CASES: usize = 50;
 const METHODS: [&str; 5] = ["baseline", "q8", "p50", "hqp", "mixed"];
-const POLICIES: [Policy; 3] = [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest];
 
 struct Case {
     model: &'static str,
     methods: Vec<&'static str>,
     two_servers: bool,
+    /// Per-server engine-memory cap as a fraction of that server's total
+    /// variant bytes (None = unlimited — the pre-residency behavior).
+    mem_frac: Option<f64>,
     cfg: ServeConfig,
     process: ArrivalProcess,
     duration_ms: f64,
@@ -47,30 +56,53 @@ fn gen_case(rng: &mut Prng) -> Case {
         model: if rng.next_f64() < 0.5 { "resnet18" } else { "mobilenetv3" },
         methods,
         two_servers: rng.next_f64() < 0.4,
+        mem_frac: if rng.next_f64() < 0.5 {
+            Some(0.15 + rng.next_f64() * 0.95)
+        } else {
+            None
+        },
         cfg: ServeConfig {
             slo_ms: 1.0 + rng.next_f64() * 80.0,
             delta_max: [0.004, 0.01, 0.015, 0.03][rng.below(4)],
-            policy: POLICIES[rng.below(3)],
+            policy: Policy::ALL[rng.below(Policy::ALL.len())],
             max_batch: rng.below(8) + 1,
             batch_timeout_ms: rng.next_f64() * 4.0,
             queue_cap: rng.below(124) + 4,
+            swap_init_ms: rng.next_f64() * 10.0,
+            link_mbps: if rng.next_f64() < 0.25 {
+                10.0 + rng.next_f64() * 990.0
+            } else {
+                f64::INFINITY
+            },
         },
+        process,
         duration_ms: 300.0 + rng.next_f64() * 1200.0,
         trace_seed: rng.next_u64(),
     }
 }
 
-fn run_case(case: &Case) -> (hqp::serve::Summary, Vec<f64>) {
+fn build_fleet(case: &Case) -> hqp::serve::Fleet {
     let devices = if case.two_servers {
         vec![Device::xavier_nx(), Device::jetson_nano()]
     } else {
         vec![Device::xavier_nx()]
     };
-    let fleet =
+    let mut fleet =
         reference_fleet(case.model, &devices, &case.methods, case.cfg.max_batch).unwrap();
+    if let Some(frac) = case.mem_frac {
+        for s in &mut fleet.servers {
+            s.mem_capacity_bytes = Some((s.total_variant_bytes() as f64 * frac) as u64);
+        }
+    }
+    fleet
+}
+
+fn run_case(case: &Case) -> (hqp::serve::Summary, Vec<f64>) {
+    let fleet = build_fleet(case);
     let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
-    let summary = simulate_fleet(&fleet, &arrivals, &case.cfg)
-        .expect("virtual time must stay monotone and the config is valid");
+    let summary = simulate_fleet(&fleet, &arrivals, &case.cfg).expect(
+        "virtual time must stay monotone, residency must hold and the config is valid",
+    );
     (summary, arrivals)
 }
 
@@ -96,6 +128,29 @@ fn prop_conservation_every_request_accounted_once() {
         );
         let per_variant_completed: u64 = s.per_variant.iter().map(|u| u.completed).sum();
         assert_eq!(per_variant_completed, s.completed, "case {case_no}: usage split");
+        // swap counters are internally consistent
+        assert!(s.expired_during_swap <= s.expired, "case {case_no}");
+        assert!(
+            s.rejected_noncompliant + s.rejected_unavailable <= s.rejected,
+            "case {case_no}"
+        );
+        if case.cfg.policy != Policy::SwapAware {
+            assert_eq!(s.swaps, 0, "case {case_no}: static policies never swap");
+        }
+        if s.swaps > 0 {
+            assert!(
+                s.swap_ms >= s.swaps as f64 * case.cfg.swap_init_ms - 1e-9,
+                "case {case_no}: each swap pays at least the init overhead"
+            );
+        } else {
+            assert_eq!(s.swap_ms, 0.0, "case {case_no}");
+            assert_eq!(s.expired_during_swap, 0, "case {case_no}");
+        }
+        if case.mem_frac.is_none() {
+            assert!(!s.residency_limited, "case {case_no}");
+            assert_eq!(s.rejected_unavailable, 0, "case {case_no}");
+            assert_eq!(s.swaps, 0, "case {case_no}: unlimited memory never swaps");
+        }
     }
 }
 
@@ -133,10 +188,45 @@ fn prop_router_respects_delta_max() {
             }
         }
         // with Δmax = 0.03 every variant is admissible; with a fleet of
-        // only-violating variants everything must be rejected
+        // only-violating variants everything must be rejected — swaps
+        // can't help because no compliant engine exists to load
         if s.per_variant.iter().all(|u| u.acc_drop > case.cfg.delta_max) {
             assert_eq!(s.completed, 0, "case {case_no}");
             assert_eq!(s.rejected_noncompliant, s.generated, "case {case_no}");
+            assert_eq!(s.swaps, 0, "case {case_no}");
+        }
+    }
+}
+
+#[test]
+fn prop_static_policies_serve_only_the_initial_resident_set() {
+    let mut rng = Prng::new(0x2E51D);
+    for case_no in 0..CASES {
+        let mut case = gen_case(&mut rng);
+        // force a cap and a static policy
+        case.mem_frac = Some(0.15 + rng.next_f64() * 0.8);
+        case.cfg.policy =
+            [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest][rng.below(3)];
+        let fleet = build_fleet(&case);
+        let residency: Vec<Vec<bool>> =
+            fleet.servers.iter().map(|srv| srv.initial_residency()).collect();
+        let (s, _) = run_case(&case);
+        assert_eq!(s.swaps, 0, "case {case_no}");
+        for u in &s.per_variant {
+            if u.completed > 0 || u.batches > 0 {
+                let v = fleet.servers[u.server]
+                    .variants
+                    .iter()
+                    .position(|p| p.name == u.variant)
+                    .expect("usage row names a fleet variant");
+                assert!(
+                    residency[u.server][v],
+                    "case {case_no}: static {:?} served non-resident {} on server {}",
+                    case.cfg.policy,
+                    u.variant,
+                    u.server
+                );
+            }
         }
     }
 }
@@ -161,6 +251,86 @@ fn prop_summary_stats_are_sane() {
                 "case {case_no}: completions must be attributed to a variant"
             );
             assert!(s.mean_batch >= 1.0, "case {case_no}: batches can't be empty");
+        }
+    }
+}
+
+/// The documented batched-roofline identity, property-tested: at batch 1
+/// the weight/activation traffic split must cancel (`w + act == bytes`),
+/// so `simulate_batch(g, d, 1)` must reproduce the closed-form batch-1
+/// roofline `max(flops / (rate·util), bytes / mem_bw) + launch` per op —
+/// recomputed here independently of the split — and `simulate(g, d)`
+/// must equal it exactly. For every device and random op mixes across
+/// kinds and precisions.
+#[test]
+fn prop_simulate_batch_at_one_equals_simulate() {
+    let kinds = [
+        FusedKind::ConvBnAct,
+        FusedKind::DwConvBnAct,
+        FusedKind::Gemm,
+        FusedKind::Se,
+        FusedKind::Elementwise,
+        FusedKind::Pool,
+    ];
+    let precs = [Precision::Fp32, Precision::Fp16, Precision::Int8, Precision::Int4];
+    let mut rng = Prng::new(0xBA7C41);
+    for case_no in 0..100 {
+        let n_ops = rng.below(8) + 1;
+        let ops: Vec<FusedOp> = (0..n_ops)
+            .map(|i| {
+                let k = [1, 3, 5, 7][rng.below(4)];
+                let hw = [1, 7, 14, 56, 112][rng.below(5)];
+                FusedOp {
+                    name: format!("op{i}"),
+                    kind: kinds[rng.below(kinds.len())],
+                    flops: rng.next_u64() % 1_000_000_000,
+                    bytes: rng.next_u64() % 100_000_000,
+                    precision: precs[rng.below(precs.len())],
+                    h: hw,
+                    w: hw,
+                    cin: rng.below(512) + 1,
+                    cout: rng.below(512) + 1,
+                    k,
+                }
+            })
+            .collect();
+        let g = OptimizedGraph {
+            model: "prop".into(),
+            ops,
+            weight_bytes: 0,
+            dense_weight_bytes: 0,
+        };
+        for dev in Device::all() {
+            let a = simulate(&g, &dev);
+            let b = simulate_batch(&g, &dev, 1);
+            // the closed-form batch-1 roofline, independent of how the
+            // implementation splits weight vs activation traffic (at b=1
+            // they must sum back to op.bytes, so any split regression —
+            // e.g. weights charged per-sample — shows up far beyond ulp)
+            for (i, op) in g.ops.iter().enumerate() {
+                let rate = dev.rate_gflops(op.precision) * dev.utilization(op.kind);
+                let t_comp = op.flops as f64 / (rate * 1e9) * 1e3;
+                let t_mem = op.bytes as f64 / (dev.mem_bw_gbps * 1e9) * 1e3;
+                let want = t_comp.max(t_mem) + dev.launch_overhead_ms;
+                let got = b.per_op_ms[i];
+                assert!(
+                    (got - want).abs() <= want.abs() * 1e-9 + 1e-12,
+                    "case {case_no} op {i} on {}: got {got}, closed form {want}",
+                    dev.name
+                );
+            }
+            let want_total: f64 = b.per_op_ms.iter().sum();
+            assert_eq!(b.latency_ms, want_total, "case {case_no} on {}", dev.name);
+            assert_eq!(b.energy_mj, dev.power_w * b.latency_ms, "case {case_no}");
+            // and simulate() must be exactly the b=1 pricing
+            assert_eq!(a.latency_ms, b.latency_ms, "case {case_no} on {}", dev.name);
+            assert_eq!(a.per_op_ms, b.per_op_ms, "case {case_no} on {}", dev.name);
+            assert_eq!(a.energy_mj, b.energy_mj, "case {case_no} on {}", dev.name);
+            assert_eq!(
+                a.memory_bound_frac, b.memory_bound_frac,
+                "case {case_no} on {}",
+                dev.name
+            );
         }
     }
 }
@@ -195,4 +365,52 @@ fn hqp_beats_baseline_slo_attainment_under_load() {
         s_base.slo_attainment()
     );
     assert!(s_hqp.p99_ms < s_base.p99_ms, "hqp p99 must be lower under equal load");
+}
+
+/// The residency acceptance scenario, pinned: a 48 MB Xavier NX holds the
+/// fp32 baseline but not baseline + hqp. Static policies are stuck
+/// serving the resident fp32 engine through an MMPP burst at 2× its
+/// capacity; swap-aware pays the hot-swap cost once, serves the rest on
+/// hqp, and must reach at least the best static policy's attainment.
+#[test]
+fn swap_aware_beats_static_policies_under_capped_memory() {
+    let dev = Device::xavier_nx();
+    let fleet = reference_fleet("resnet18", &[dev.clone()], &["baseline", "hqp"], 8)
+        .unwrap()
+        .with_mem_cap_mb(48.0);
+    assert_eq!(
+        fleet.servers[0].initial_residency(),
+        vec![true, false],
+        "48 MB must hold baseline (~46.7 MB) but not baseline + hqp (~50.4 MB)"
+    );
+    let cap_base = fleet.servers[0].variants[0].capacity_rps();
+    let offered = cap_base * 2.0;
+    let slo = fleet.servers[0].variants[0].batch1_ms() * 4.0;
+    let arrivals =
+        trace::generate(&ArrivalProcess::parse("mmpp", offered).unwrap(), 4_000.0, 13);
+    let run = |policy: Policy| {
+        let cfg = ServeConfig { slo_ms: slo, policy, ..Default::default() };
+        simulate_fleet(&fleet, &arrivals, &cfg).unwrap()
+    };
+
+    let mut best_static = 0.0f64;
+    for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
+        let s = run(policy);
+        assert_eq!(s.swaps, 0, "{policy:?} must never swap");
+        let hqp_row = s.per_variant.iter().find(|u| u.variant == "hqp").unwrap();
+        assert_eq!(hqp_row.completed, 0, "{policy:?} served the non-resident engine");
+        best_static = best_static.max(s.slo_attainment());
+    }
+
+    let s = run(Policy::SwapAware);
+    assert!(s.swaps >= 1, "pressure through the burst must trigger a hot-swap");
+    assert!(s.swap_ms > 0.0);
+    assert!(
+        s.slo_attainment() >= best_static,
+        "swap-aware {:.3} must reach at least the best static {:.3}",
+        s.slo_attainment(),
+        best_static
+    );
+    let hqp_row = s.per_variant.iter().find(|u| u.variant == "hqp").unwrap();
+    assert!(hqp_row.completed > 0, "the swapped-in engine must carry load");
 }
