@@ -19,6 +19,14 @@
 //!                                     under an MMPP burst (acceptance:
 //!                                     swap-aware >= the best static policy,
 //!                                     with at least one hot-swap charged)
+//! * `slo_attain_fixed_mean|fixed_peak|autoscaled`, `scale_ups`,
+//!   `scale_downs`, `wake_ms`, `wake_energy_mj`, `scale_reaction_ms`
+//!                                   — elastic autoscaling: a 4-server hqp
+//!                                     fleet under an MMPP burst, queue-depth
+//!                                     controller (acceptance: autoscaled ≥
+//!                                     the fixed fleet of equal *mean*
+//!                                     capacity, with at least one scale-up
+//!                                     and its wake cost + E = P·L charged)
 //! * `sim_events_per_sec`            — events/s the virtual-time heap
 //!                                     sustains (host-side, no artifacts)
 //!
@@ -28,7 +36,10 @@
 
 use hqp::benchkit::{bench, section, Report};
 use hqp::hwsim::Device;
-use hqp::serve::{reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig};
+use hqp::serve::{
+    reference_fleet, simulate_fleet, trace, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy,
+    ServeConfig,
+};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -125,6 +136,55 @@ fn main() {
         "acceptance: swap-aware {:.3} must reach at least the best static {:.3}",
         s_swap.slo_attainment(),
         best_static
+    );
+
+    // ---- elastic autoscaling: tracking an MMPP burst ----------------------
+    section("serve — autoscaled vs fixed fleets under an mmpp burst (hqp on 4x nx)");
+    // peak fleet: 4 hqp-only NX servers; mean offered load needs ~2.4 of
+    // them, the burst's high state ~3.84 — so a fixed fleet at the *mean*
+    // capacity (2 servers) sheds through every burst while the elastic
+    // fleet (2..4 active, queue-depth controller) wakes capacity into it
+    let one = reference_fleet("resnet18", &[dev.clone()], &["hqp"], 8).expect("fleet");
+    let cap_one = one.servers[0].variants[0].capacity_rps();
+    let slo_auto = one.servers[0].variants[0].batch1_ms() * 8.0;
+    let peak_fleet = one.clone().replicate_to(4).expect("peak fleet");
+    let mean_fleet = one.replicate_to(2).expect("mean fleet");
+    // fixed 4 s window even under --smoke, same reasoning as the swap
+    // scenario: the asserted scale-up needs the burst to actually arrive
+    let auto_burst =
+        trace::generate(&ArrivalProcess::parse("mmpp", cap_one * 2.4).unwrap(), 4_000.0, 17);
+    let fixed_cfg = ServeConfig { slo_ms: slo_auto, ..Default::default() };
+    let auto_cfg = ServeConfig {
+        slo_ms: slo_auto,
+        autoscale: AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth,
+            interval_ms: 50.0,
+            min_active: 2,
+            max_active: 4,
+            ..AutoscaleConfig::off()
+        },
+        ..Default::default()
+    };
+    let s_mean = simulate_fleet(&mean_fleet, &auto_burst, &fixed_cfg).expect("fixed-mean sim");
+    let s_peak = simulate_fleet(&peak_fleet, &auto_burst, &fixed_cfg).expect("fixed-peak sim");
+    let s_auto = simulate_fleet(&peak_fleet, &auto_burst, &auto_cfg).expect("autoscaled sim");
+    assert!(!s_mean.autoscaled && s_mean.scale_ups == 0, "fixed fleets never scale");
+    report.metric("autoscale_offered_rps", cap_one * 2.4);
+    report.metric("slo_attain_fixed_mean", s_mean.slo_attainment());
+    report.metric("slo_attain_fixed_peak", s_peak.slo_attainment());
+    report.metric("slo_attain_autoscaled", s_auto.slo_attainment());
+    report.metric("scale_ups", s_auto.scale_ups as f64);
+    report.metric("scale_downs", s_auto.scale_downs as f64);
+    report.metric("wake_ms", s_auto.wake_ms);
+    report.metric("wake_energy_mj", s_auto.wake_energy_mj);
+    report.metric("scale_reaction_ms", s_auto.mean_reaction_ms);
+    assert!(s_auto.scale_ups >= 1, "the burst must wake capacity at least once");
+    assert!(
+        s_auto.slo_attainment() >= s_mean.slo_attainment(),
+        "acceptance: autoscaled {:.3} must reach at least the equal-mean-capacity \
+         fixed fleet {:.3}",
+        s_auto.slo_attainment(),
+        s_mean.slo_attainment()
     );
 
     // ---- simulator hot path: events per wall-clock second -----------------

@@ -45,7 +45,9 @@ pub enum DeviceKind {
 /// An edge device for the roofline simulator.
 #[derive(Clone, Debug)]
 pub struct Device {
+    /// Canonical CLI name ([`Device::by_name`]).
     pub name: String,
+    /// Which device model this descriptor instantiates.
     pub kind: DeviceKind,
     /// Peak dense-compute rates in GFLOP/s (GOP/s for int paths).
     pub fp32_gflops: f64,
@@ -140,8 +142,11 @@ impl Device {
     /// Hardware-aware engine hot-swap cost (the HALP-style pricing the
     /// serving layer charges when a device changes its resident variant
     /// set): streaming `weight_bytes` of engine weights over DRAM
-    /// bandwidth, plus a fixed engine-initialization overhead. Like the
-    /// rest of the roofline this is a model, not a measurement — §7's
+    /// bandwidth, plus a fixed engine-initialization overhead. The
+    /// autoscaler prices a server *wake* with the same formula — the
+    /// initial resident set's bytes streamed cold — and additionally
+    /// charges the wake window E = P·L of energy. Like the rest of the
+    /// roofline this is a model, not a measurement — §7's
     /// ratios-not-milliseconds caveat applies.
     pub fn swap_in_ms(&self, weight_bytes: u64, init_ms: f64) -> f64 {
         weight_bytes as f64 / (self.mem_bw_gbps * 1e9) * 1e3 + init_ms

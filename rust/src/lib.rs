@@ -53,6 +53,8 @@ pub mod prelude {
     pub use crate::hwsim::{Device, DeviceKind};
     pub use crate::quant::CalibMethod;
     pub use crate::runtime::{Session, Workspace};
-    pub use crate::serve::{simulate_fleet, ArrivalProcess, Fleet, Policy, ServeConfig};
+    pub use crate::serve::{
+        simulate_fleet, ArrivalProcess, AutoscaleConfig, Fleet, Policy, ScalePolicy, ServeConfig,
+    };
     pub use crate::tensor::Tensor;
 }

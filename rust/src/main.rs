@@ -28,7 +28,7 @@ use hqp::hwsim::{simulate, Device, Precision};
 use hqp::quant::CalibMethod;
 use hqp::report::{self, bar_chart, scatter, BarRow};
 use hqp::runtime::{Session, Workspace};
-use hqp::serve::{self, ArrivalProcess, Policy, ServeConfig};
+use hqp::serve::{self, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy, ServeConfig};
 
 const COMMON_FLAGS: &[&str] = &[
     "artifacts", "device", "model", "force", "delta-max", "delta-step", "ranking",
@@ -40,7 +40,8 @@ const COMMON_FLAGS: &[&str] = &[
 const SERVE_FLAGS: &[&str] = &[
     "rps", "slo-ms", "policy", "duration-s", "seed", "max-batch",
     "batch-timeout-ms", "queue-cap", "arrivals", "smoke", "mem-mb",
-    "swap-init-ms", "link-mbps",
+    "swap-init-ms", "link-mbps", "autoscale", "scale-interval-ms",
+    "min-servers", "max-servers", "scale-high-water", "scale-low-water",
 ];
 
 /// Valid `--device` names (aliases included), shown when the flag is bad.
@@ -85,6 +86,18 @@ serve options:
   --swap-init-ms X      fixed engine-init overhead charged per hot-swap (default 5)
   --link-mbps X         uplink bandwidth for request payloads, Mbit/s
                         (default: unlimited = no network cost)
+  --autoscale P         off (default) | queue-depth | attainment — elastic fleet
+                        controller (wake cost = initial-residency weights over
+                        DRAM bandwidth + init; wake energy E = P·L is charged)
+  --scale-interval-ms X control interval for autoscale decisions (default 100)
+  --min-servers N       lower bound on active servers; also how many start
+                        awake (default 1; requires --autoscale)
+  --max-servers N       fleet size / upper bound on awake servers — replicates
+                        the per-device servers cyclically up to N
+  --scale-high-water X  queue-depth policy: queued per active server above
+                        which the fleet is pressured (default 8)
+  --scale-low-water X   queue-depth policy: mark below which the idlest server
+                        drains (default 1)
   --smoke               tiny 1 s trace (CI smoke)";
 
 fn main() {
@@ -500,6 +513,47 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
             ArrivalProcess::NAMES.join(", ")
         ))
     })?;
+    // elastic autoscaling: --autoscale names the controller; the knobs
+    // below are rejected without one (the same typo-hardening --device
+    // gets), and the watermark overrides only exist for queue-depth
+    let scale_name = args.flag_or("autoscale", "off");
+    let scale_policy = ScalePolicy::parse(scale_name).ok_or_else(|| {
+        hqp::Error::Cli(format!(
+            "unknown autoscale policy {scale_name} (valid: {})",
+            ScalePolicy::NAMES.join(", ")
+        ))
+    })?;
+    if scale_policy == ScalePolicy::Off {
+        for f in ["scale-interval-ms", "min-servers", "scale-high-water", "scale-low-water"] {
+            if args.flag(f).is_some() {
+                return Err(hqp::Error::Cli(format!(
+                    "--{f} requires --autoscale queue-depth|attainment"
+                )));
+            }
+        }
+    } else if scale_policy != ScalePolicy::QueueDepth {
+        for f in ["scale-high-water", "scale-low-water"] {
+            if args.flag(f).is_some() {
+                return Err(hqp::Error::Cli(format!(
+                    "--{f} only applies to --autoscale queue-depth"
+                )));
+            }
+        }
+    }
+    let mut autoscale = AutoscaleConfig::off();
+    autoscale.policy = scale_policy;
+    autoscale.interval_ms = args.flag_f64("scale-interval-ms", autoscale.interval_ms)?;
+    autoscale.min_active = args.flag_usize("min-servers", autoscale.min_active)?;
+    autoscale.queue_high = args.flag_f64("scale-high-water", autoscale.queue_high)?;
+    autoscale.queue_low = args.flag_f64("scale-low-water", autoscale.queue_low)?;
+    let max_servers = match args.flag("max-servers") {
+        Some(_) => Some(args.flag_usize("max-servers", 0)?),
+        None => None,
+    };
+    if let Some(n) = max_servers {
+        autoscale.max_active = n;
+    }
+
     let cfg = ServeConfig {
         slo_ms: args.flag_f64("slo-ms", 50.0)?,
         delta_max: args.flag_f64("delta-max", 0.015)?,
@@ -509,11 +563,17 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         queue_cap: args.flag_usize("queue-cap", 256)?,
         swap_init_ms: args.flag_f64("swap-init-ms", 5.0)?,
         link_mbps: args.flag_f64("link-mbps", f64::INFINITY)?,
+        autoscale,
     };
 
     let methods = ["baseline", "q8", "p50", "hqp", "mixed"];
     let (mut fleet, source) =
         serve::fleet_for(artifacts, model, &[dev.clone()], &methods, cfg.max_batch)?;
+    if let Some(n) = max_servers {
+        // --max-servers sizes the fleet (the peak an elastic run may wake
+        // up to; with --autoscale off, a fixed fleet of n)
+        fleet = fleet.replicate_to(n)?;
+    }
     if args.flag("mem-mb").is_some() {
         let mem_mb = args.flag_f64("mem-mb", 0.0)?;
         if mem_mb <= 0.0 {
@@ -533,9 +593,30 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         process.name(),
         arrivals.len()
     );
+    // elastic-fleet header, gated so fixed-fleet output stays
+    // byte-identical to the pre-autoscaling CLI
+    if cfg.autoscale.enabled() {
+        println!(
+            "autoscale: {} every {:.0} ms, {}..{} active of {} servers \
+             (servers 0..{} start awake)",
+            cfg.autoscale.policy.name(),
+            cfg.autoscale.interval_ms,
+            cfg.autoscale.min_active,
+            cfg.autoscale.max_active.min(fleet.servers.len()),
+            fleet.servers.len(),
+            cfg.autoscale.min_active,
+        );
+    }
     // per-server rows: heterogeneous fleets report every device's variant
     // set (and its residency), not just servers[0]'s
     for (si, srv) in fleet.servers.iter().enumerate() {
+        if cfg.autoscale.enabled() {
+            println!(
+                "  server {si} ({}): starts {}",
+                srv.device.name,
+                if si < cfg.autoscale.min_active { "active" } else { "asleep" }
+            );
+        }
         if let Some(cap) = srv.mem_capacity_bytes {
             println!(
                 "  server {si} ({}): {:.1} MB engine memory ({:.1} MB to hold all variants)",

@@ -1,0 +1,665 @@
+//! Elastic fleet autoscaling: a deterministic controller that wakes and
+//! drains servers from queue-depth / SLO-attainment signals.
+//!
+//! The paper's 3.12× speedup and Δ_max ≤ 1.5 % guarantee only pay off at
+//! the fleet level if capacity tracks load. This module closes that loop
+//! the way Environment-Aware Dynamic Pruning (O'Quinn et al., 2025)
+//! adapts compression to runtime conditions — except the adaptation knob
+//! here is the number of *awake servers*, and every scale decision is
+//! priced against real activation cost in the spirit of HALP's
+//! hardware-aware latency accounting (Shen et al., 2021): waking a server
+//! streams its initial-residency engine weights over DRAM bandwidth plus
+//! a fixed init overhead ([`crate::hwsim::Device::swap_in_ms`] — the same
+//! pricing as a cold hot-swap), and the wake window is charged energy
+//! E = P·L against the summary.
+//!
+//! ## Control plane
+//!
+//! The event loop ([`crate::serve::simulate_fleet`]) fires a `Control`
+//! event every [`AutoscaleConfig::interval_ms`] of virtual time for the
+//! duration of the offered trace. Each tick builds the same
+//! [`FleetView`] snapshot the router sees, folds the window's outcomes
+//! into EWMA signals ([`SignalTracker`] → [`ScaleSignals`]), and asks the
+//! configured [`AutoscalePolicy`] for a [`ScaleDecision`]. The loop —
+//! not the policy — enforces the `min_active..=max_active` bounds,
+//! picks the wake target (lowest-index asleep server) and the drain
+//! target (idlest active server), and executes the decision as
+//! `ScaleUp`/`WakeDone`/`DrainStart`/`ScaleDown` events with the same
+//! hard-error discipline as hot-swaps: routing to an asleep or draining
+//! server is structurally impossible, and a scale event that finds its
+//! server in the wrong lifecycle state is an internal invariant
+//! violation that errors out.
+//!
+//! ## Lifecycle
+//!
+//! ```text
+//!          ScaleUp ... WakeDone            DrainStart
+//!  Asleep ────────────────────▶ Active ───────────────▶ Draining
+//!    ▲                                                     │
+//!    └──────────────── ScaleDown (queue drained) ──────────┘
+//! ```
+//!
+//! A draining server takes no new work but finishes everything already
+//! queued (batch timeouts are bypassed — it dispatches as fast as the
+//! device allows), then sleeps. A waking server is asleep until its
+//! `WakeDone` fires; it resumes with its *initial* resident set (that is
+//! exactly what the wake cost streamed).
+//!
+//! Everything here is deterministic: the signals are pure functions of
+//! the event stream, the policies are pure state machines over the
+//! signals, and tie-breaks are by server index — so autoscaled runs
+//! reproduce byte-identically, and `ScalePolicy::Off` leaves the event
+//! stream (and therefore the summary) bit-exact with the fixed-fleet
+//! simulator.
+
+use super::router::FleetView;
+
+/// Where a server is in its serving lifecycle. With autoscaling off every
+/// server is permanently [`Lifecycle::Active`] — the fixed-fleet
+/// behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Routable and serving.
+    Active,
+    /// Finishing its queued work; takes no new requests; sleeps when the
+    /// queue empties.
+    Draining,
+    /// Powered down for serving purposes. Waking it costs
+    /// initial-residency weight streaming + init (and E = P·L of energy).
+    Asleep,
+}
+
+/// EWMA smoothing factor for the control signals: one control interval
+/// carries half the weight of all history before it.
+pub const EWMA_ALPHA: f64 = 0.5;
+
+/// Queue-depth policy: queued requests per active server above which the
+/// fleet counts as pressured (scale-up side).
+pub const QUEUE_HIGH_WATER: f64 = 8.0;
+
+/// Queue-depth policy: queued requests per active server below which the
+/// fleet counts as over-provisioned (scale-down side).
+pub const QUEUE_LOW_WATER: f64 = 1.0;
+
+/// Consecutive control ticks a queue-depth signal must persist before a
+/// decision fires — the anti-thrash hysteresis (both directions).
+pub const SCALE_CONSECUTIVE: u32 = 2;
+
+/// Attainment policy: EWMA SLO attainment below this triggers the
+/// scale-up side of the band.
+pub const ATTAIN_LOW: f64 = 0.92;
+
+/// Attainment policy: EWMA SLO attainment above this triggers the
+/// scale-down side of the band.
+pub const ATTAIN_HIGH: f64 = 0.99;
+
+/// Consecutive ticks below [`ATTAIN_LOW`] before an attainment scale-up.
+pub const ATTAIN_UP_TICKS: u32 = 2;
+
+/// Consecutive ticks above [`ATTAIN_HIGH`] before an attainment
+/// scale-down — deliberately slower than the up side: releasing capacity
+/// is cheap to defer, missing SLOs is not.
+pub const ATTAIN_DOWN_TICKS: u32 = 6;
+
+/// Autoscaling parameters ([`crate::serve::ServeConfig::autoscale`]).
+/// [`AutoscaleConfig::off`] (the default) disables the control plane
+/// entirely: no `Control` events are scheduled and the simulation is
+/// byte-identical to the fixed-fleet simulator, whatever the other knobs
+/// say.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Which controller drives scale decisions (`Off` = fixed fleet).
+    pub policy: ScalePolicy,
+    /// Control interval, virtual ms (CLI `--scale-interval-ms`).
+    pub interval_ms: f64,
+    /// Lower bound on active servers; also how many servers start awake
+    /// (CLI `--min-servers`).
+    pub min_active: usize,
+    /// Upper bound on awake-or-waking servers, clamped to the fleet size
+    /// (CLI `--max-servers`; `usize::MAX` = the whole fleet).
+    pub max_active: usize,
+    /// Queue-depth high-water mark override (CLI `--scale-high-water`;
+    /// default [`QUEUE_HIGH_WATER`]). Only the queue-depth policy reads it.
+    pub queue_high: f64,
+    /// Queue-depth low-water mark override (CLI `--scale-low-water`;
+    /// default [`QUEUE_LOW_WATER`]).
+    pub queue_low: f64,
+}
+
+impl AutoscaleConfig {
+    /// The fixed-fleet configuration: no controller, knobs inert.
+    pub fn off() -> AutoscaleConfig {
+        AutoscaleConfig {
+            policy: ScalePolicy::Off,
+            interval_ms: 100.0,
+            min_active: 1,
+            max_active: usize::MAX,
+            queue_high: QUEUE_HIGH_WATER,
+            queue_low: QUEUE_LOW_WATER,
+        }
+    }
+
+    /// Is the control plane on at all?
+    pub fn enabled(&self) -> bool {
+        self.policy != ScalePolicy::Off
+    }
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig::off()
+    }
+}
+
+/// Autoscaling policy names — the CLI registry, mirroring
+/// [`super::router::Policy`]: [`ScalePolicy::build`] yields the actual
+/// [`AutoscalePolicy`] implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalePolicy {
+    /// Fixed fleet: no control plane (the default).
+    Off,
+    /// Scale on queued-requests-per-active-server watermarks with
+    /// consecutive-tick hysteresis ([`QueueDepthPolicy`]).
+    QueueDepth,
+    /// Scale to hold EWMA SLO attainment inside a target band
+    /// ([`AttainmentPolicy`]).
+    Attainment,
+}
+
+impl ScalePolicy {
+    /// Canonical CLI names, in enum order — the single source of truth
+    /// shared by [`ScalePolicy::parse`], [`ScalePolicy::name`] and the
+    /// `main.rs` "valid: …" error strings.
+    pub const NAMES: [&'static str; 3] = ["off", "queue-depth", "attainment"];
+
+    /// Every policy (sweeps and property tests).
+    pub const ALL: [ScalePolicy; 3] =
+        [ScalePolicy::Off, ScalePolicy::QueueDepth, ScalePolicy::Attainment];
+
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Option<ScalePolicy> {
+        match name {
+            "off" => Some(ScalePolicy::Off),
+            "queue-depth" | "qd" => Some(ScalePolicy::QueueDepth),
+            "attainment" | "at" => Some(ScalePolicy::Attainment),
+            _ => None,
+        }
+    }
+
+    /// Canonical name of this policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScalePolicy::Off => ScalePolicy::NAMES[0],
+            ScalePolicy::QueueDepth => ScalePolicy::NAMES[1],
+            ScalePolicy::Attainment => ScalePolicy::NAMES[2],
+        }
+    }
+
+    /// Build the policy implementation (`None` for `Off`).
+    pub fn build(&self, cfg: &AutoscaleConfig) -> Option<Box<dyn AutoscalePolicy>> {
+        match self {
+            ScalePolicy::Off => None,
+            ScalePolicy::QueueDepth => Some(Box::new(QueueDepthPolicy::new(
+                cfg.queue_high,
+                cfg.queue_low,
+                SCALE_CONSECUTIVE,
+            ))),
+            ScalePolicy::Attainment => Some(Box::new(AttainmentPolicy::new(
+                ATTAIN_LOW,
+                ATTAIN_HIGH,
+                ATTAIN_UP_TICKS,
+                ATTAIN_DOWN_TICKS,
+            ))),
+        }
+    }
+}
+
+/// One control tick's smoothed view of fleet health — what a policy
+/// decides from, alongside the raw [`FleetView`].
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleSignals {
+    /// Virtual time of the tick.
+    pub now_ms: f64,
+    /// Servers currently [`Lifecycle::Active`].
+    pub active: usize,
+    /// Asleep servers with a wake in flight (capacity already committed).
+    pub waking: usize,
+    /// Servers currently [`Lifecycle::Draining`].
+    pub draining: usize,
+    /// Servers currently [`Lifecycle::Asleep`] (wake-eligible ones).
+    pub asleep: usize,
+    /// Instantaneous queued requests across active servers, per active
+    /// server.
+    pub queue_per_active: f64,
+    /// EWMA of [`ScaleSignals::queue_per_active`] ([`EWMA_ALPHA`]).
+    pub queue_ewma: f64,
+    /// SLO attainment over this control window's outcomes (completed
+    /// within SLO / all requests that reached an outcome; 1.0 for an idle
+    /// window — no traffic is not an SLO miss).
+    pub window_attainment: f64,
+    /// EWMA of [`ScaleSignals::window_attainment`].
+    pub attainment_ewma: f64,
+}
+
+/// What a policy wants done this tick. The event loop clamps the
+/// decision to the `min_active..=max_active` bounds and picks the
+/// concrete server (lowest-index asleep to wake, idlest active to
+/// drain); a decision that cannot be applied is dropped, not queued.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleDecision {
+    /// No change.
+    Hold,
+    /// Wake one asleep server. `since_ms` is when the triggering pressure
+    /// episode began — the reaction-time clock starts there, so the
+    /// summary's `mean_reaction_ms` covers detection hysteresis *and* the
+    /// wake itself.
+    Up { since_ms: f64 },
+    /// Drain the idlest active server (it sleeps once its queue empties).
+    Down,
+}
+
+/// An open-ended autoscaling controller, decided once per control tick
+/// over the live [`FleetView`] snapshot and the EWMA [`ScaleSignals`].
+/// Implementations must be deterministic state machines: same tick
+/// sequence, same decisions.
+pub trait AutoscalePolicy {
+    /// Canonical policy name (summary + CLI).
+    fn name(&self) -> &'static str;
+
+    /// Decide this tick. The event loop applies bounds and target
+    /// selection; returning `Up`/`Down` when no capacity change is
+    /// possible is allowed (the decision is dropped).
+    fn decide(&mut self, view: &FleetView, sig: &ScaleSignals) -> ScaleDecision;
+}
+
+/// Folds per-window outcome counts into the EWMA control signals. Owned
+/// by the event loop; [`SignalTracker::tick`] is called exactly once per
+/// control tick with *cumulative* counters (it keeps the last snapshot
+/// and differences internally).
+#[derive(Clone, Debug)]
+pub struct SignalTracker {
+    last_outcomes: u64,
+    last_attained: u64,
+    queue_ewma: f64,
+    attain_ewma: f64,
+}
+
+impl SignalTracker {
+    /// A fresh tracker: attainment optimistic (1.0), queues empty.
+    pub fn new() -> SignalTracker {
+        SignalTracker {
+            last_outcomes: 0,
+            last_attained: 0,
+            queue_ewma: 0.0,
+            attain_ewma: 1.0,
+        }
+    }
+
+    /// Advance one control window. `outcomes` / `attained` are cumulative
+    /// (completed + rejected + expired, and completed-within-SLO);
+    /// `queued_active` is the instantaneous queued total across active
+    /// servers; the lifecycle counts describe the fleet right now.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tick(
+        &mut self,
+        now_ms: f64,
+        outcomes: u64,
+        attained: u64,
+        queued_active: usize,
+        active: usize,
+        waking: usize,
+        draining: usize,
+        asleep: usize,
+    ) -> ScaleSignals {
+        let d_out = outcomes - self.last_outcomes;
+        let d_att = attained - self.last_attained;
+        self.last_outcomes = outcomes;
+        self.last_attained = attained;
+        // an idle window is neutral, not a miss: hold the signal at 1.0
+        let window_attainment = if d_out == 0 { 1.0 } else { d_att as f64 / d_out as f64 };
+        let queue_per_active = queued_active as f64 / active.max(1) as f64;
+        self.queue_ewma = EWMA_ALPHA * queue_per_active + (1.0 - EWMA_ALPHA) * self.queue_ewma;
+        self.attain_ewma =
+            EWMA_ALPHA * window_attainment + (1.0 - EWMA_ALPHA) * self.attain_ewma;
+        ScaleSignals {
+            now_ms,
+            active,
+            waking,
+            draining,
+            asleep,
+            queue_per_active,
+            queue_ewma: self.queue_ewma,
+            window_attainment,
+            attainment_ewma: self.attain_ewma,
+        }
+    }
+}
+
+impl Default for SignalTracker {
+    fn default() -> Self {
+        SignalTracker::new()
+    }
+}
+
+/// Queue-depth controller: scale up when the EWMA backlog per active
+/// server has exceeded the high-water mark for [`SCALE_CONSECUTIVE`]
+/// consecutive ticks; drain the idlest server once it has sat below the
+/// low-water mark just as long. The dead band between the marks is the
+/// hysteresis that keeps a borderline fleet from thrashing.
+pub struct QueueDepthPolicy {
+    high: f64,
+    low: f64,
+    need: u32,
+    above: u32,
+    below: u32,
+    /// When the current pressure episode began (NaN = none) — the
+    /// reaction-time anchor reported through [`ScaleDecision::Up`].
+    episode_ms: f64,
+}
+
+impl QueueDepthPolicy {
+    /// Controller with explicit watermarks (`high > low >= 0`) and the
+    /// consecutive-tick requirement (`need >= 1`). The CLI path goes
+    /// through [`ScalePolicy::build`], which validates via
+    /// [`crate::serve::simulate_fleet`]'s config checks.
+    pub fn new(high: f64, low: f64, need: u32) -> QueueDepthPolicy {
+        QueueDepthPolicy {
+            high,
+            low,
+            need: need.max(1),
+            above: 0,
+            below: 0,
+            episode_ms: f64::NAN,
+        }
+    }
+}
+
+impl AutoscalePolicy for QueueDepthPolicy {
+    fn name(&self) -> &'static str {
+        ScalePolicy::NAMES[1]
+    }
+
+    fn decide(&mut self, _view: &FleetView, sig: &ScaleSignals) -> ScaleDecision {
+        if sig.queue_ewma > self.high {
+            self.below = 0;
+            if self.episode_ms.is_nan() {
+                self.episode_ms = sig.now_ms;
+            }
+            self.above += 1;
+            if self.above >= self.need {
+                // the tick counter resets (rate limit between fires) but
+                // the episode anchor survives: if the event loop drops
+                // this decision at the max-active bound, the eventual
+                // wake still reports the full reaction time since
+                // pressure began
+                self.above = 0;
+                return ScaleDecision::Up { since_ms: self.episode_ms };
+            }
+        } else if sig.queue_ewma < self.low {
+            self.above = 0;
+            self.episode_ms = f64::NAN;
+            self.below += 1;
+            if self.below >= self.need {
+                self.below = 0;
+                return ScaleDecision::Down;
+            }
+        } else {
+            // inside the dead band: hold, and forget partial episodes
+            self.above = 0;
+            self.below = 0;
+            self.episode_ms = f64::NAN;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Attainment controller: hold EWMA SLO attainment inside the
+/// `[ATTAIN_LOW, ATTAIN_HIGH]` band. Below the band for
+/// [`ATTAIN_UP_TICKS`] → wake a server; above it for the (deliberately
+/// longer) [`ATTAIN_DOWN_TICKS`] → drain one. The asymmetric tick counts
+/// are the hysteresis: capacity is added eagerly and released lazily.
+pub struct AttainmentPolicy {
+    low: f64,
+    high: f64,
+    up_need: u32,
+    down_need: u32,
+    below: u32,
+    above: u32,
+    episode_ms: f64,
+}
+
+impl AttainmentPolicy {
+    /// Controller with an explicit attainment band (`0 <= low < high <= 1`)
+    /// and per-direction consecutive-tick requirements.
+    pub fn new(low: f64, high: f64, up_need: u32, down_need: u32) -> AttainmentPolicy {
+        AttainmentPolicy {
+            low,
+            high,
+            up_need: up_need.max(1),
+            down_need: down_need.max(1),
+            below: 0,
+            above: 0,
+            episode_ms: f64::NAN,
+        }
+    }
+}
+
+impl AutoscalePolicy for AttainmentPolicy {
+    fn name(&self) -> &'static str {
+        ScalePolicy::NAMES[2]
+    }
+
+    fn decide(&mut self, _view: &FleetView, sig: &ScaleSignals) -> ScaleDecision {
+        if sig.attainment_ewma < self.low {
+            self.above = 0;
+            if self.episode_ms.is_nan() {
+                self.episode_ms = sig.now_ms;
+            }
+            self.below += 1;
+            if self.below >= self.up_need {
+                // as in [`QueueDepthPolicy`]: the counter resets, the
+                // episode anchor persists until the signal recovers
+                self.below = 0;
+                return ScaleDecision::Up { since_ms: self.episode_ms };
+            }
+        } else if sig.attainment_ewma > self.high {
+            self.below = 0;
+            self.episode_ms = f64::NAN;
+            self.above += 1;
+            if self.above >= self.down_need {
+                self.above = 0;
+                return ScaleDecision::Down;
+            }
+        } else {
+            self.below = 0;
+            self.above = 0;
+            self.episode_ms = f64::NAN;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trivial all-active FleetView over `n` servers (the policies under
+    /// test decide from the EWMA signals; the view is along for the ride).
+    struct ViewState {
+        backlog: Vec<f64>,
+        queued: Vec<usize>,
+        resident: Vec<Vec<bool>>,
+        unavail: Vec<bool>,
+    }
+
+    impl ViewState {
+        fn new(n: usize) -> ViewState {
+            ViewState {
+                backlog: vec![0.0; n],
+                queued: vec![0; n],
+                resident: vec![vec![true]; n],
+                unavail: vec![false; n],
+            }
+        }
+
+        fn view(&self, now: f64) -> FleetView<'_> {
+            FleetView {
+                now_ms: now,
+                backlog_ms: &self.backlog,
+                queued: &self.queued,
+                resident: &self.resident,
+                unavailable: &self.unavail,
+            }
+        }
+    }
+
+    /// Hand-built signal for a tick: only the fields a policy reads vary.
+    fn sig(now: f64, queue_ewma: f64, attain_ewma: f64) -> ScaleSignals {
+        ScaleSignals {
+            now_ms: now,
+            active: 2,
+            waking: 0,
+            draining: 0,
+            asleep: 2,
+            queue_per_active: queue_ewma,
+            queue_ewma,
+            window_attainment: attain_ewma,
+            attainment_ewma: attain_ewma,
+        }
+    }
+
+    #[test]
+    fn queue_depth_scale_up_needs_consecutive_pressure() {
+        let st = ViewState::new(4);
+        let mut p = QueueDepthPolicy::new(8.0, 1.0, 2);
+        // tick 1 above the mark: episode starts, no decision yet
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 12.0, 0.5)), ScaleDecision::Hold);
+        // tick 2 still above: fire, reaction clock anchored at tick 1
+        assert_eq!(
+            p.decide(&st.view(150.0), &sig(150.0, 14.0, 0.5)),
+            ScaleDecision::Up { since_ms: 100.0 }
+        );
+        // the tick counter resets (a rate limit between fires) but the
+        // episode anchor persists while pressure holds: a re-fire — e.g.
+        // after the event loop dropped the first decision at the
+        // max-active bound — still reports the original episode start
+        assert_eq!(p.decide(&st.view(200.0), &sig(200.0, 14.0, 0.5)), ScaleDecision::Hold);
+        assert_eq!(
+            p.decide(&st.view(250.0), &sig(250.0, 14.0, 0.5)),
+            ScaleDecision::Up { since_ms: 100.0 }
+        );
+    }
+
+    #[test]
+    fn queue_depth_dead_band_holds_and_resets_episodes() {
+        let st = ViewState::new(4);
+        let mut p = QueueDepthPolicy::new(8.0, 1.0, 2);
+        assert_eq!(p.decide(&st.view(0.0), &sig(0.0, 12.0, 1.0)), ScaleDecision::Hold);
+        // dip into the dead band: the half-built episode is forgotten
+        assert_eq!(p.decide(&st.view(50.0), &sig(50.0, 4.0, 1.0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 12.0, 1.0)), ScaleDecision::Hold);
+        assert_eq!(
+            p.decide(&st.view(150.0), &sig(150.0, 12.0, 1.0)),
+            ScaleDecision::Up { since_ms: 100.0 },
+            "episode must restart after the dead-band reset"
+        );
+    }
+
+    #[test]
+    fn queue_depth_drains_after_sustained_idleness() {
+        let st = ViewState::new(4);
+        let mut p = QueueDepthPolicy::new(8.0, 1.0, 2);
+        assert_eq!(p.decide(&st.view(0.0), &sig(0.0, 0.2, 1.0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(50.0), &sig(50.0, 0.1, 1.0)), ScaleDecision::Down);
+        // and again, independently
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 0.0, 1.0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(150.0), &sig(150.0, 0.0, 1.0)), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn attainment_band_has_asymmetric_hysteresis() {
+        let st = ViewState::new(4);
+        let mut p = AttainmentPolicy::new(0.92, 0.99, 2, 3);
+        // below the band: up after 2 ticks, anchored at the first
+        assert_eq!(p.decide(&st.view(0.0), &sig(0.0, 0.0, 0.80)), ScaleDecision::Hold);
+        assert_eq!(
+            p.decide(&st.view(50.0), &sig(50.0, 0.0, 0.85)),
+            ScaleDecision::Up { since_ms: 0.0 }
+        );
+        // inside the band: hold forever
+        for t in 0..5 {
+            assert_eq!(
+                p.decide(&st.view(100.0 + t as f64), &sig(100.0 + t as f64, 0.0, 0.95)),
+                ScaleDecision::Hold
+            );
+        }
+        // above the band: down only after the longer 3-tick run
+        assert_eq!(p.decide(&st.view(200.0), &sig(200.0, 0.0, 0.995)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(250.0), &sig(250.0, 0.0, 0.995)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(300.0), &sig(300.0, 0.0, 0.995)), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn attainment_up_run_is_broken_by_recovery() {
+        let st = ViewState::new(2);
+        let mut p = AttainmentPolicy::new(0.92, 0.99, 2, 3);
+        assert_eq!(p.decide(&st.view(0.0), &sig(0.0, 0.0, 0.80)), ScaleDecision::Hold);
+        // recovery into the band resets the below-run
+        assert_eq!(p.decide(&st.view(50.0), &sig(50.0, 0.0, 0.95)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 0.0, 0.80)), ScaleDecision::Hold);
+        assert_eq!(
+            p.decide(&st.view(150.0), &sig(150.0, 0.0, 0.80)),
+            ScaleDecision::Up { since_ms: 100.0 }
+        );
+    }
+
+    #[test]
+    fn signal_tracker_differences_cumulative_counters() {
+        let mut t = SignalTracker::new();
+        // idle first window: attainment neutral at 1.0, queues empty
+        let s = t.tick(100.0, 0, 0, 0, 2, 0, 0, 0);
+        assert_eq!(s.window_attainment, 1.0);
+        assert_eq!(s.attainment_ewma, 1.0);
+        assert_eq!(s.queue_ewma, 0.0);
+        // window with 10 outcomes, 5 attained: window attainment 0.5,
+        // EWMA halfway between 1.0 and 0.5
+        let s = t.tick(200.0, 10, 5, 8, 2, 0, 0, 0);
+        assert_eq!(s.window_attainment, 0.5);
+        assert!((s.attainment_ewma - 0.75).abs() < 1e-12);
+        assert_eq!(s.queue_per_active, 4.0);
+        assert!((s.queue_ewma - 2.0).abs() < 1e-12);
+        // next window only sees the *delta*: 10 more outcomes, all attained
+        let s = t.tick(300.0, 20, 15, 0, 2, 0, 0, 0);
+        assert_eq!(s.window_attainment, 1.0);
+        assert!((s.attainment_ewma - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_scale_policy_names() {
+        assert_eq!(ScalePolicy::parse("off"), Some(ScalePolicy::Off));
+        assert_eq!(ScalePolicy::parse("queue-depth"), Some(ScalePolicy::QueueDepth));
+        assert_eq!(ScalePolicy::parse("qd"), Some(ScalePolicy::QueueDepth));
+        assert_eq!(ScalePolicy::parse("attainment"), Some(ScalePolicy::Attainment));
+        assert_eq!(ScalePolicy::parse("at"), Some(ScalePolicy::Attainment));
+        assert!(ScalePolicy::parse("elastic").is_none());
+        // NAMES is the single source of truth: round-trips, and build()
+        // yields a controller for everything but Off
+        let cfg = AutoscaleConfig::off();
+        for (i, name) in ScalePolicy::NAMES.iter().enumerate() {
+            let p = ScalePolicy::parse(name).expect("every listed name must parse");
+            assert_eq!(p, ScalePolicy::ALL[i]);
+            assert_eq!(p.name(), *name);
+            assert_eq!(p.build(&cfg).is_some(), p != ScalePolicy::Off);
+        }
+    }
+
+    #[test]
+    fn off_config_is_inert() {
+        let cfg = AutoscaleConfig::off();
+        assert!(!cfg.enabled());
+        assert!(cfg.policy.build(&cfg).is_none());
+        let on = AutoscaleConfig { policy: ScalePolicy::QueueDepth, ..AutoscaleConfig::off() };
+        assert!(on.enabled());
+        assert_eq!(on.policy.build(&on).unwrap().name(), "queue-depth");
+    }
+}

@@ -29,8 +29,14 @@ use std::collections::VecDeque;
 /// One queued request.
 #[derive(Clone, Copy, Debug)]
 pub struct QueuedReq {
+    /// Index of the request in the arrival trace (a stable identity
+    /// across drains and requeues).
     pub id: usize,
+    /// When the request was generated, virtual ms (FIFO/merge key; the
+    /// latency and SLO clocks both start here).
     pub arrival_ms: f64,
+    /// `arrival_ms + slo_ms`: queued past this is expiry, completed past
+    /// this is an SLO miss.
     pub deadline_ms: f64,
 }
 
@@ -49,14 +55,19 @@ pub enum EnqueueAction {
 /// A dispatched batch plus the requests that expired while queued.
 #[derive(Clone, Debug, Default)]
 pub struct TakenBatch {
+    /// The requests actually dispatched (≤ `max_batch`, deadlines live).
     pub reqs: Vec<QueuedReq>,
+    /// Requests popped with it whose deadline had already lapsed — the
+    /// caller counts these expired; they are never served.
     pub expired: Vec<QueuedReq>,
 }
 
 /// Per-variant admission queues + batching policy for one server.
 #[derive(Clone, Debug)]
 pub struct Batcher {
+    /// Largest batch a single dispatch may form (≥ 1).
     pub max_batch: usize,
+    /// How long an idle device waits for a partial batch to fill, ms.
     pub timeout_ms: f64,
     queues: Vec<VecDeque<QueuedReq>>,
     flush_tokens: Vec<u64>,

@@ -151,9 +151,19 @@ impl Server {
 }
 
 /// The fleet the simulator routes over.
+///
+/// A fleet is just its servers; *how many of them are awake* is decided
+/// at simulation time: with autoscaling off every server is permanently
+/// active, with an [`crate::serve::AutoscaleConfig`] policy enabled the
+/// controller keeps between `min_active` and `max_active` servers awake
+/// (the bounds live in the config — the fleet itself stays a passive
+/// description). [`Fleet::replicate_to`] grows a fleet to the peak size
+/// an elastic run may scale up to.
 #[derive(Clone, Debug)]
 pub struct Fleet {
+    /// Model every variant was compressed from (display only).
     pub model: String,
+    /// The devices (with their deployable variants) the router sees.
     pub servers: Vec<Server>,
 }
 
@@ -184,6 +194,29 @@ impl Fleet {
     /// Whether any server runs with a finite engine-memory capacity.
     pub fn residency_limited(&self) -> bool {
         self.servers.iter().any(|s| s.mem_capacity_bytes.is_some())
+    }
+
+    /// Grow the fleet to `n` servers by cloning the existing ones
+    /// cyclically (server `i` is a copy of original `i % len`) — the
+    /// CLI's `--max-servers` entry point, sizing the peak capacity an
+    /// autoscaled run may wake up to. Shrinking is refused: dropping
+    /// servers a caller explicitly constructed would silently change the
+    /// experiment.
+    pub fn replicate_to(mut self, n: usize) -> Result<Fleet> {
+        if self.servers.is_empty() {
+            return Err(Error::hqp("serve: cannot replicate an empty fleet"));
+        }
+        if n < self.servers.len() {
+            return Err(Error::hqp(format!(
+                "serve: replicate_to({n}) would shrink a {}-server fleet",
+                self.servers.len()
+            )));
+        }
+        let base = self.servers.len();
+        for i in base..n {
+            self.servers.push(self.servers[i % base].clone());
+        }
+        Ok(self)
     }
 
     /// Request input payload, bytes ([`INPUT_BYTES`]).
@@ -612,6 +645,28 @@ mod tests {
         // swap cost delegates to the device model
         let want = s.device.swap_in_ms(10_000_000, 3.0);
         assert_eq!(s.swap_in_ms(1, 3.0), want);
+    }
+
+    #[test]
+    fn replicate_to_clones_cyclically_and_refuses_to_shrink() {
+        let f = reference_fleet(
+            "resnet18",
+            &[Device::xavier_nx(), Device::jetson_nano()],
+            &["hqp"],
+            2,
+        )
+        .unwrap();
+        let g = f.clone().replicate_to(5).unwrap();
+        assert_eq!(g.servers.len(), 5);
+        for (i, s) in g.servers.iter().enumerate() {
+            assert_eq!(s.device.name, g.servers[i % 2].device.name, "cyclic clone order");
+            assert_eq!(s.variants[0].batch_ms, g.servers[i % 2].variants[0].batch_ms);
+        }
+        // same size is a no-op, smaller is an error
+        assert_eq!(f.clone().replicate_to(2).unwrap().servers.len(), 2);
+        assert!(f.replicate_to(1).is_err());
+        let empty = Fleet { model: "m".into(), servers: vec![] };
+        assert!(empty.replicate_to(3).is_err());
     }
 
     #[test]

@@ -52,16 +52,40 @@
 //! ever scheduled, and the simulation is byte-identical to the
 //! pre-residency simulator.
 //!
-//! See `rust/DESIGN.md` §Serving for the model's limits (open-loop
-//! arrivals, serial devices, linear activation scaling; the optional
-//! [`ServeConfig::link_mbps`] uplink model charges a per-request
+//! ## Elastic fleet autoscaling
+//!
+//! With an [`AutoscaleConfig`] policy enabled ([`ServeConfig::autoscale`],
+//! CLI `--autoscale`), servers gain a lifecycle
+//! ([`autoscale::Lifecycle`]: `Active` / `Draining` / `Asleep`) and a
+//! deterministic controller runs at a fixed control interval: every tick
+//! folds the window's outcomes into EWMA queue-depth / SLO-attainment
+//! signals ([`autoscale::SignalTracker`]) and asks the configured
+//! [`autoscale::AutoscalePolicy`] for a scale decision, executed as
+//! `ScaleUp`/`WakeDone`/`DrainStart`/`ScaleDown` events. Waking a server
+//! is priced like a cold swap (initial-residency weight bytes over DRAM
+//! bandwidth + init overhead) and charged energy E = P·L; a draining
+//! server finishes its queue, then sleeps. Routing to an asleep or
+//! draining server is structurally impossible (they are `unavailable` in
+//! the router's [`FleetView`], and the event loop hard-errors on any
+//! scale event that finds its server in the wrong state). With the
+//! policy `off` (the default) no control event is ever scheduled and the
+//! simulation is byte-identical to the fixed-fleet simulator.
+//!
+//! See `rust/DESIGN.md` §Serving and §Autoscaling for the model's limits
+//! (open-loop arrivals, serial devices, linear activation scaling; the
+//! optional [`ServeConfig::link_mbps`] uplink model charges a per-request
 //! transfer delay).
 
+pub mod autoscale;
 pub mod batcher;
 pub mod fleet;
 pub mod router;
 pub mod trace;
 
+pub use autoscale::{
+    AutoscaleConfig, AutoscalePolicy, Lifecycle, ScaleDecision, ScalePolicy, ScaleSignals,
+    SignalTracker,
+};
 pub use fleet::{fleet_for, reference_fleet, workspace_fleet, Fleet, Server, VariantProfile};
 pub use router::{Candidate, FleetView, Policy, RouteCtx, RoutePolicy, Router, SwapPlan};
 pub use trace::ArrivalProcess;
@@ -96,6 +120,10 @@ pub struct ServeConfig {
     /// delay eats into its SLO budget). `f64::INFINITY` (the default)
     /// disables the network model and preserves byte-identical summaries.
     pub link_mbps: f64,
+    /// Elastic autoscaling controller ([`AutoscaleConfig::off`] by
+    /// default — the fixed-fleet behavior, byte-identical to the
+    /// pre-autoscaling simulator).
+    pub autoscale: AutoscaleConfig,
 }
 
 impl Default for ServeConfig {
@@ -109,6 +137,7 @@ impl Default for ServeConfig {
             queue_cap: 256,
             swap_init_ms: 5.0,
             link_mbps: f64::INFINITY,
+            autoscale: AutoscaleConfig::off(),
         }
     }
 }
@@ -116,28 +145,44 @@ impl Default for ServeConfig {
 /// Per-(server, variant) serving statistics.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VariantUsage {
+    /// Index into [`Fleet::servers`].
     pub server: usize,
+    /// The server's device name (display).
     pub device: String,
+    /// The variant's method name (display).
     pub variant: String,
+    /// The variant's measured accuracy drop.
     pub acc_drop: f64,
+    /// Requests this (server, variant) pair completed.
     pub completed: u64,
+    /// Batches it dispatched.
     pub batches: u64,
+    /// Mean dispatched batch size (0 when it never served).
     pub mean_batch: f64,
+    /// Virtual time it spent executing batches, ms.
     pub busy_ms: f64,
     /// busy_ms / makespan.
     pub utilization: f64,
+    /// Whole-batch energy it consumed, mJ.
     pub energy_mj: f64,
 }
 
 /// One simulation's results.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Model the fleet serves.
     pub model: String,
+    /// Routing policy name ([`Policy::name`]).
     pub policy: &'static str,
+    /// The per-request latency SLO the run was scored against, ms.
     pub slo_ms: f64,
+    /// The accuracy-drop budget the router enforced.
     pub delta_max: f64,
+    /// Requests in the offered trace (= completed + rejected + expired).
     pub generated: u64,
+    /// Requests served to completion (SLO-attaining or not).
     pub completed: u64,
+    /// Requests refused at admission (all causes).
     pub rejected: u64,
     /// Of the rejections: requests with no Δ_max-compliant variant.
     pub rejected_noncompliant: u64,
@@ -152,16 +197,24 @@ pub struct Summary {
     pub expired_during_swap: u64,
     /// Completed within their SLO deadline.
     pub slo_attained: u64,
+    /// Mean completion latency (arrival → batch completion), ms.
     pub mean_ms: f64,
+    /// Median completion latency, ms.
     pub p50_ms: f64,
+    /// 95th-percentile completion latency, ms.
     pub p95_ms: f64,
+    /// 99th-percentile completion latency, ms.
     pub p99_ms: f64,
     /// Virtual time of the last event.
     pub makespan_ms: f64,
+    /// Goodput: completions per second of makespan.
     pub throughput_rps: f64,
+    /// Mean dispatched batch size across the fleet.
     pub mean_batch: f64,
     /// Completion-weighted mean accuracy drop across served variants.
     pub acc_mix: f64,
+    /// Total energy: whole-batch serving energy plus any wake windows'
+    /// E = P·L, mJ.
     pub energy_mj: f64,
     /// Engine hot-swaps performed.
     pub swaps: u64,
@@ -171,6 +224,25 @@ pub struct Summary {
     /// the swap line in [`Summary::render`], keeping unlimited-memory
     /// output byte-identical to the pre-residency simulator).
     pub residency_limited: bool,
+    /// Whether the autoscaling control plane was enabled (gates the scale
+    /// line in [`Summary::render`], keeping fixed-fleet output
+    /// byte-identical to the pre-autoscaling simulator).
+    pub autoscaled: bool,
+    /// Scale-up decisions executed (each one wakes a server).
+    pub scale_ups: u64,
+    /// Scale-down decisions executed (each one drains a server, which
+    /// then sleeps).
+    pub scale_downs: u64,
+    /// Total virtual time servers spent waking (initial-residency weight
+    /// streaming + init), ms.
+    pub wake_ms: f64,
+    /// Energy charged for the wake windows, E = P·L (mJ; included in
+    /// [`Summary::energy_mj`]).
+    pub wake_energy_mj: f64,
+    /// Mean time from the first control tick of a pressure episode to the
+    /// woken server coming online — detection hysteresis plus the wake
+    /// itself. 0 when no scale-up happened.
+    pub mean_reaction_ms: f64,
     pub per_variant: Vec<VariantUsage>,
 }
 
@@ -221,6 +293,17 @@ impl Summary {
                 self.swaps, self.swap_ms, self.expired_during_swap, self.rejected_unavailable
             ));
         }
+        if self.autoscaled {
+            s.push_str(&format!(
+                "  scale    : {} up / {} down   wake {:.1} ms ({:.1} mJ)   \
+                 mean reaction {:.1} ms\n",
+                self.scale_ups,
+                self.scale_downs,
+                self.wake_ms,
+                self.wake_energy_mj,
+                self.mean_reaction_ms
+            ));
+        }
         let mut t = Table::new(vec![
             "Device",
             "Variant",
@@ -264,6 +347,21 @@ enum EventKind {
     /// dispatch. `started_ms` is when the swap began, so expiry during
     /// the swap window can be attributed precisely.
     SwapDone { server: usize, load: usize, started_ms: f64 },
+    /// Autoscaling control tick (scheduled every
+    /// [`AutoscaleConfig::interval_ms`] for the duration of the trace;
+    /// never scheduled with autoscaling off).
+    Control,
+    /// Controller decision: wake this asleep server. `since_ms` is when
+    /// the triggering pressure episode began (reaction-time accounting).
+    ScaleUp { server: usize, since_ms: f64 },
+    /// The woken server's initial-residency engines are streamed in:
+    /// mark it active and routable.
+    WakeDone { server: usize },
+    /// Controller decision: stop routing to this server; it finishes its
+    /// queue, then sleeps.
+    DrainStart { server: usize },
+    /// A draining server's queue has fully drained: it goes to sleep.
+    ScaleDown { server: usize },
 }
 
 /// Heap key: virtual time, ties broken by insertion sequence — a total
@@ -333,9 +431,87 @@ struct Acc {
     expired_during_swap: u64,
     swaps: u64,
     swap_ms: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+    wake_ms: f64,
+    wake_energy_mj: f64,
+    /// Sum over scale-ups of (wake-done time − pressure-episode start).
+    reaction_sum_ms: f64,
     slo_attained: u64,
     latencies: Vec<f64>,
     usage: Vec<Vec<UsageAcc>>,
+}
+
+impl Acc {
+    /// Cumulative outcome count (completed + every rejection kind +
+    /// expired) — the control plane's window-attainment denominator.
+    fn outcomes(&self) -> u64 {
+        self.completed
+            + self.rejected_full
+            + self.rejected_noncompliant
+            + self.rejected_unavailable
+            + self.expired
+    }
+}
+
+/// Is this server fully quiescent (no batch, no swap, nothing queued)?
+/// The condition a draining server must reach before it may sleep.
+fn quiesced(st: &ServerState) -> bool {
+    !st.busy && !st.swapping && st.pending_swap.is_none() && st.batcher.is_empty()
+}
+
+/// Single place drain completion is decided: if `server` is draining and
+/// fully quiescent, schedule its `ScaleDown` now. Called from every
+/// handler after which a draining server may have gone quiet
+/// (`DrainStart` itself, `BatchDone`, `SwapDone`).
+fn sleep_if_drained(
+    lifecycle: &[Lifecycle],
+    state: &[ServerState],
+    server: usize,
+    now: f64,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+) {
+    if lifecycle[server] == Lifecycle::Draining && quiesced(&state[server]) {
+        *seq += 1;
+        heap.push(Reverse(Event {
+            time_ms: now,
+            seq: *seq,
+            kind: EventKind::ScaleDown { server },
+        }));
+    }
+}
+
+/// Rebuild the router/controller snapshot arrays: remaining busy/swap/wake
+/// time plus queued work per server, and the availability mask (mid-swap,
+/// swap-pending, or — under autoscaling — not `Active`). With autoscaling
+/// off every lifecycle is `Active` and `wake_until` is never armed, so
+/// the snapshot is exactly the pre-autoscaling one.
+fn fill_snapshot(
+    fleet: &Fleet,
+    state: &[ServerState],
+    lifecycle: &[Lifecycle],
+    now: f64,
+    backlog: &mut [f64],
+    queued: &mut [usize],
+    unavail: &mut [bool],
+) {
+    for (s, st) in state.iter().enumerate() {
+        let mut est = if st.busy {
+            (st.busy_until - now).max(0.0)
+        } else if st.swapping {
+            (st.swap_until - now).max(0.0)
+        } else {
+            0.0
+        };
+        for (v, prof) in fleet.servers[s].variants.iter().enumerate() {
+            est += st.batcher.backlog(v) as f64 * prof.batch1_ms();
+        }
+        backlog[s] = est;
+        queued[s] = st.batcher.total();
+        unavail[s] =
+            st.swapping || st.pending_swap.is_some() || lifecycle[s] != Lifecycle::Active;
+    }
 }
 
 /// Form and launch a batch on server `s` starting from variant `v`,
@@ -434,6 +610,32 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
             cfg.max_batch
         )));
     }
+    // autoscaling bounds: validated only when the control plane is on
+    // (an off config's knobs are documented as inert)
+    let auto = cfg.autoscale.enabled();
+    let max_active = cfg.autoscale.max_active.min(fleet.servers.len());
+    if auto {
+        let a = &cfg.autoscale;
+        if a.interval_ms <= 0.0 || !a.interval_ms.is_finite() {
+            return Err(Error::hqp("serve: scale-interval-ms must be positive and finite"));
+        }
+        if a.min_active == 0 {
+            return Err(Error::hqp("serve: min-servers must be >= 1"));
+        }
+        if a.min_active > max_active {
+            return Err(Error::hqp(format!(
+                "serve: min-servers {} exceeds max active {} (fleet has {} servers)",
+                a.min_active,
+                max_active,
+                fleet.servers.len()
+            )));
+        }
+        if !(a.queue_high > a.queue_low && a.queue_low >= 0.0) || a.queue_high.is_nan() {
+            return Err(Error::hqp(
+                "serve: scale watermarks need high-water > low-water >= 0",
+            ));
+        }
+    }
 
     let residency_limited = fleet.residency_limited();
     // per-request uplink transfer delay (0 with an infinite link, keeping
@@ -468,6 +670,19 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
         ..Default::default()
     };
 
+    // lifecycle: with autoscaling, the first min_active servers start
+    // awake and the rest asleep; without it, everyone is permanently
+    // Active and no scale machinery ever runs
+    let mut lifecycle = vec![Lifecycle::Active; fleet.servers.len()];
+    let mut waking = vec![false; fleet.servers.len()];
+    if auto {
+        for lc in lifecycle.iter_mut().skip(cfg.autoscale.min_active) {
+            *lc = Lifecycle::Asleep;
+        }
+    }
+    let mut scaler = cfg.autoscale.policy.build(&cfg.autoscale);
+    let mut tracker = SignalTracker::new();
+
     let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(arrivals.len() + 16);
     let mut seq: u64 = 0;
     for (i, &t) in arrivals.iter().enumerate() {
@@ -477,6 +692,26 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
             seq,
             kind: EventKind::Arrival { req: i },
         }));
+    }
+    // the control plane runs for the duration of the offered trace: one
+    // Control tick is in flight at a time (each handler re-arms the next
+    // while `now + interval <= control_end`), so a tiny interval over a
+    // long trace costs O(1) heap space, and the heap still drains once
+    // the last tick and all work complete
+    let control_end = if auto {
+        arrivals.last().map(|&last| last + transfer_ms)
+    } else {
+        None
+    };
+    if let Some(end) = control_end {
+        if cfg.autoscale.interval_ms <= end {
+            seq += 1;
+            heap.push(Reverse(Event {
+                time_ms: cfg.autoscale.interval_ms,
+                seq,
+                kind: EventKind::Control,
+            }));
+        }
     }
 
     let mut backlog = vec![0.0f64; fleet.servers.len()];
@@ -499,21 +734,9 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
             EventKind::Arrival { req } => {
                 // router input: remaining busy/swap time + queued work
                 // estimate, plus the residency/availability snapshot
-                for (s, st) in state.iter().enumerate() {
-                    let mut est = if st.busy {
-                        (st.busy_until - now).max(0.0)
-                    } else if st.swapping {
-                        (st.swap_until - now).max(0.0)
-                    } else {
-                        0.0
-                    };
-                    for (v, prof) in fleet.servers[s].variants.iter().enumerate() {
-                        est += st.batcher.backlog(v) as f64 * prof.batch1_ms();
-                    }
-                    backlog[s] = est;
-                    queued[s] = st.batcher.total();
-                    unavail[s] = st.swapping || st.pending_swap.is_some();
-                }
+                fill_snapshot(
+                    fleet, &state, &lifecycle, now, &mut backlog, &mut queued, &mut unavail,
+                );
                 let view = FleetView {
                     now_ms: now,
                     backlog_ms: &backlog,
@@ -530,6 +753,14 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
                         }
                     }
                     Some(c) => {
+                        // routing to an asleep or draining server is
+                        // structurally impossible (they are unavailable in
+                        // the view); reaching one here is an internal bug
+                        if lifecycle[c.server] != Lifecycle::Active {
+                            return Err(Error::hqp(
+                                "serve: routed to a non-active server (lifecycle bug)",
+                            ));
+                        }
                         let st = &mut state[c.server];
                         if st.batcher.total() >= cfg.queue_cap {
                             acc.rejected_full += 1;
@@ -648,6 +879,8 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
                         );
                     }
                 }
+                // a draining server whose queue just emptied goes to sleep
+                sleep_if_drained(&lifecycle, &state, server, now, &mut heap, &mut seq);
             }
             EventKind::SwapStart { server } => {
                 let st = &mut state[server];
@@ -761,6 +994,196 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
                         );
                     }
                 }
+                // a drain that was waiting on this swap can now complete
+                sleep_if_drained(&lifecycle, &state, server, now, &mut heap, &mut seq);
+            }
+            EventKind::Control => {
+                let Some(ctrl) = scaler.as_mut() else {
+                    return Err(Error::hqp("serve: control tick without a scale policy"));
+                };
+                // re-arm the next tick while the trace is still offering
+                // load (one Control event in flight at a time)
+                if let Some(end) = control_end {
+                    let next = now + cfg.autoscale.interval_ms;
+                    if next <= end {
+                        seq += 1;
+                        heap.push(Reverse(Event {
+                            time_ms: next,
+                            seq,
+                            kind: EventKind::Control,
+                        }));
+                    }
+                }
+                fill_snapshot(
+                    fleet, &state, &lifecycle, now, &mut backlog, &mut queued, &mut unavail,
+                );
+                let view = FleetView {
+                    now_ms: now,
+                    backlog_ms: &backlog,
+                    queued: &queued,
+                    resident: &resident,
+                    unavailable: &unavail,
+                };
+                let n_active = lifecycle.iter().filter(|&&l| l == Lifecycle::Active).count();
+                let n_waking = waking.iter().filter(|&&w| w).count();
+                let n_draining =
+                    lifecycle.iter().filter(|&&l| l == Lifecycle::Draining).count();
+                let n_asleep = lifecycle
+                    .iter()
+                    .zip(&waking)
+                    .filter(|(&l, &w)| l == Lifecycle::Asleep && !w)
+                    .count();
+                let queued_active: usize = (0..fleet.servers.len())
+                    .filter(|&s| lifecycle[s] == Lifecycle::Active)
+                    .map(|s| state[s].batcher.total())
+                    .sum();
+                let sig = tracker.tick(
+                    now,
+                    acc.outcomes(),
+                    acc.slo_attained,
+                    queued_active,
+                    n_active,
+                    n_waking,
+                    n_draining,
+                    n_asleep,
+                );
+                match ctrl.decide(&view, &sig) {
+                    ScaleDecision::Hold => {}
+                    ScaleDecision::Up { since_ms } => {
+                        // committed capacity = active + waking + draining
+                        // (a draining server still consumes its slot until
+                        // it sleeps); wake the lowest-index sleeping server
+                        // if the bound allows
+                        if n_active + n_waking + n_draining < max_active {
+                            if let Some(sv) = (0..fleet.servers.len()).find(|&s| {
+                                lifecycle[s] == Lifecycle::Asleep && !waking[s]
+                            }) {
+                                seq += 1;
+                                heap.push(Reverse(Event {
+                                    time_ms: now,
+                                    seq,
+                                    kind: EventKind::ScaleUp { server: sv, since_ms },
+                                }));
+                            }
+                        }
+                    }
+                    ScaleDecision::Down => {
+                        // drain the idlest active server (lowest backlog,
+                        // ties to the higher index so server 0 drains last)
+                        if n_active > cfg.autoscale.min_active {
+                            let mut pick = None::<(f64, usize)>;
+                            for s in 0..fleet.servers.len() {
+                                if lifecycle[s] != Lifecycle::Active {
+                                    continue;
+                                }
+                                let better = match pick {
+                                    None => true,
+                                    Some((b, ps)) => {
+                                        backlog[s] < b || (backlog[s] == b && s > ps)
+                                    }
+                                };
+                                if better {
+                                    pick = Some((backlog[s], s));
+                                }
+                            }
+                            if let Some((_, sv)) = pick {
+                                seq += 1;
+                                heap.push(Reverse(Event {
+                                    time_ms: now,
+                                    seq,
+                                    kind: EventKind::DrainStart { server: sv },
+                                }));
+                            }
+                        }
+                    }
+                }
+            }
+            EventKind::ScaleUp { server, since_ms } => {
+                if lifecycle[server] != Lifecycle::Asleep || waking[server] {
+                    return Err(Error::hqp(
+                        "serve: scale-up targets a server that is not asleep",
+                    ));
+                }
+                if !state[server].batcher.is_empty() {
+                    return Err(Error::hqp("serve: asleep server has queued work"));
+                }
+                waking[server] = true;
+                // wake cost priced like a cold swap: the initial resident
+                // set's weight bytes streamed over DRAM bandwidth + init,
+                // with E = P·L charged for the window
+                let srv = &fleet.servers[server];
+                let bytes: u64 = srv
+                    .variants
+                    .iter()
+                    .zip(srv.initial_residency())
+                    .filter(|(_, r)| *r)
+                    .map(|(v, _)| v.weight_bytes)
+                    .sum();
+                let wake = srv.device.swap_in_ms(bytes, cfg.swap_init_ms);
+                acc.scale_ups += 1;
+                acc.wake_ms += wake;
+                acc.wake_energy_mj += srv.device.power_w * wake;
+                acc.reaction_sum_ms += now + wake - since_ms;
+                seq += 1;
+                heap.push(Reverse(Event {
+                    time_ms: now + wake,
+                    seq,
+                    kind: EventKind::WakeDone { server },
+                }));
+            }
+            EventKind::WakeDone { server } => {
+                if lifecycle[server] != Lifecycle::Asleep || !waking[server] {
+                    return Err(Error::hqp(
+                        "serve: wake completion for a server that was not waking",
+                    ));
+                }
+                waking[server] = false;
+                lifecycle[server] = Lifecycle::Active;
+                // the wake streamed exactly the initial resident set — any
+                // residency the server had accumulated before sleeping is
+                // gone (its queue was empty, so nothing can strand)
+                resident[server] = fleet.servers[server].initial_residency();
+            }
+            EventKind::DrainStart { server } => {
+                if lifecycle[server] != Lifecycle::Active {
+                    return Err(Error::hqp(
+                        "serve: drain targets a non-active server",
+                    ));
+                }
+                lifecycle[server] = Lifecycle::Draining;
+                acc.scale_downs += 1;
+                // finish the queue as fast as the device allows: batch
+                // timeouts are bypassed from here on
+                let st = &mut state[server];
+                if st.can_dispatch() {
+                    if let Some(next) = st.batcher.oldest_allowed(&resident[server]) {
+                        try_dispatch(
+                            server,
+                            next,
+                            now,
+                            st,
+                            &fleet.servers[server],
+                            &resident[server],
+                            &mut heap,
+                            &mut seq,
+                            &mut acc,
+                        );
+                    }
+                }
+                sleep_if_drained(&lifecycle, &state, server, now, &mut heap, &mut seq);
+            }
+            EventKind::ScaleDown { server } => {
+                if lifecycle[server] != Lifecycle::Draining {
+                    return Err(Error::hqp(
+                        "serve: scale-down for a server that is not draining",
+                    ));
+                }
+                if !quiesced(&state[server]) {
+                    return Err(Error::hqp(
+                        "serve: scale-down on a non-quiescent server",
+                    ));
+                }
+                lifecycle[server] = Lifecycle::Asleep;
             }
         }
     }
@@ -774,7 +1197,7 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
         ));
     }
 
-    Ok(build_summary(fleet, cfg, acc, makespan, residency_limited))
+    Ok(build_summary(fleet, cfg, acc, makespan, residency_limited, auto))
 }
 
 fn build_summary(
@@ -783,6 +1206,7 @@ fn build_summary(
     mut acc: Acc,
     makespan_ms: f64,
     residency_limited: bool,
+    autoscaled: bool,
 ) -> Summary {
     acc.latencies.sort_by(f64::total_cmp);
     let n = acc.latencies.len();
@@ -847,6 +1271,16 @@ fn build_summary(
         swaps: acc.swaps,
         swap_ms: acc.swap_ms,
         residency_limited,
+        autoscaled,
+        scale_ups: acc.scale_ups,
+        scale_downs: acc.scale_downs,
+        wake_ms: acc.wake_ms,
+        wake_energy_mj: acc.wake_energy_mj,
+        mean_reaction_ms: if acc.scale_ups == 0 {
+            0.0
+        } else {
+            acc.reaction_sum_ms / acc.scale_ups as f64
+        },
         slo_attained: acc.slo_attained,
         mean_ms,
         p50_ms: pct(0.50),
@@ -868,7 +1302,9 @@ fn build_summary(
         } else {
             acc_weighted / acc.completed as f64
         },
-        energy_mj: energy,
+        // serving energy plus the wake windows' E = P·L (zero when the
+        // control plane is off, keeping fixed-fleet totals bit-exact)
+        energy_mj: energy + acc.wake_energy_mj,
         per_variant,
     }
 }
@@ -902,6 +1338,7 @@ mod tests {
             queue_cap: 64,
             swap_init_ms: 5.0,
             link_mbps: f64::INFINITY,
+            autoscale: AutoscaleConfig::off(),
         }
     }
 
@@ -1145,6 +1582,146 @@ mod tests {
                 stat.slo_attainment()
             );
         }
+    }
+
+    /// A two-NX fleet of one fast variant each, for autoscaling tests.
+    fn two_server_fleet(b1: f64) -> Fleet {
+        Fleet {
+            model: "toy".into(),
+            servers: vec![
+                Server::new(Device::xavier_nx(), vec![var("hqp", 0.012, b1, b1 * 1.6)]),
+                Server::new(Device::xavier_nx(), vec![var("hqp", 0.012, b1, b1 * 1.6)]),
+            ],
+        }
+    }
+
+    fn auto_cfg(policy: ScalePolicy, interval_ms: f64, min: usize, max: usize) -> ServeConfig {
+        let mut c = cfg();
+        c.autoscale = AutoscaleConfig {
+            policy,
+            interval_ms,
+            min_active: min,
+            max_active: max,
+            ..AutoscaleConfig::off()
+        };
+        c
+    }
+
+    #[test]
+    fn autoscale_off_is_byte_identical_whatever_the_knobs_say() {
+        let fleet = two_server_fleet(10.0);
+        let arrivals: Vec<f64> = (0..60).map(|i| i as f64 * 3.0).collect();
+        let base = simulate_fleet(&fleet, &arrivals, &cfg()).unwrap();
+        // off-but-weird knobs must be inert
+        let mut weird = cfg();
+        weird.autoscale =
+            AutoscaleConfig { interval_ms: 7.0, min_active: 9, max_active: 1, queue_high: 0.0, ..AutoscaleConfig::off() };
+        let same = simulate_fleet(&fleet, &arrivals, &weird).unwrap();
+        assert_eq!(base, same, "an Off autoscale config must not perturb the simulation");
+        assert_eq!(base.render(), same.render());
+        assert!(!base.autoscaled);
+        assert_eq!((base.scale_ups, base.scale_downs), (0, 0));
+        assert_eq!(base.wake_ms, 0.0);
+        assert_eq!(base.wake_energy_mj, 0.0);
+        assert!(!base.render().contains("scale    :"), "no scale line on fixed fleets");
+    }
+
+    #[test]
+    fn overload_wakes_the_second_server_and_charges_the_wake() {
+        // one active server at 10 ms/req against 1 req/ms: queue-depth
+        // pressure must wake server 1, which then carries load
+        let fleet = two_server_fleet(10.0);
+        let arrivals: Vec<f64> = (0..600).map(|i| i as f64).collect();
+        let c = auto_cfg(ScalePolicy::QueueDepth, 20.0, 1, 2);
+        let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(s.autoscaled);
+        assert!(s.scale_ups >= 1, "sustained overload must scale up");
+        assert!(s.wake_ms > 0.0);
+        assert!(s.wake_energy_mj > 0.0, "wake windows are charged E = P·L");
+        // reaction covers at least the wake itself plus one interval of
+        // detection hysteresis
+        assert!(s.mean_reaction_ms >= s.wake_ms / s.scale_ups as f64);
+        let s1: u64 = s.per_variant.iter().filter(|u| u.server == 1).map(|u| u.completed).sum();
+        assert!(s1 > 0, "the woken server must serve traffic");
+        assert_eq!(s.completed + s.rejected + s.expired, s.generated, "conservation");
+        assert!(s.render().contains("scale    :"));
+        // wake energy is part of the summary total
+        let usage: f64 = s.per_variant.iter().map(|u| u.energy_mj).sum();
+        assert!((s.energy_mj - (usage + s.wake_energy_mj)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_fleet_drains_down_to_min_and_sleeping_servers_take_no_work() {
+        // two active servers, trickle load one could serve alone: the
+        // queue-depth controller must drain one (and only one: min = 1)
+        let fleet = two_server_fleet(1.0);
+        let arrivals: Vec<f64> = (0..100).map(|i| i as f64 * 20.0).collect();
+        let c = auto_cfg(ScalePolicy::QueueDepth, 25.0, 1, 2);
+        let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(s.scale_downs >= 1, "idleness must drain a server");
+        assert_eq!(s.completed, s.generated, "the drain must not lose requests");
+        assert_eq!(s.expired, 0);
+        assert_eq!(s.rejected, 0);
+        // min bound: with only two servers and min 1, at most one drain
+        // can be outstanding at a time; traffic keeps flowing throughout
+        assert!(s.slo_attainment() > 0.9);
+    }
+
+    #[test]
+    fn attainment_policy_scales_too() {
+        let fleet = two_server_fleet(10.0);
+        let arrivals: Vec<f64> = (0..600).map(|i| i as f64).collect();
+        let mut c = auto_cfg(ScalePolicy::Attainment, 20.0, 1, 2);
+        c.slo_ms = 25.0; // tight enough that a single saturated server misses
+        let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(s.scale_ups >= 1, "attainment collapse must wake capacity");
+        assert_eq!(s.completed + s.rejected + s.expired, s.generated);
+    }
+
+    #[test]
+    fn autoscaled_runs_are_deterministic() {
+        let fleet = two_server_fleet(5.0);
+        let arrivals = trace::generate(
+            &ArrivalProcess::parse("mmpp", 400.0).unwrap(),
+            2_000.0,
+            9,
+        );
+        for policy in [ScalePolicy::QueueDepth, ScalePolicy::Attainment] {
+            let c = auto_cfg(policy, 50.0, 1, 2);
+            let a = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+            let b = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+            assert_eq!(a, b, "{policy:?}");
+            assert_eq!(a.render(), b.render(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn autoscale_config_validation() {
+        let fleet = two_server_fleet(5.0);
+        let bad = |f: &dyn Fn(&mut ServeConfig)| {
+            let mut c = auto_cfg(ScalePolicy::QueueDepth, 50.0, 1, 2);
+            f(&mut c);
+            simulate_fleet(&fleet, &[0.0], &c)
+        };
+        assert!(bad(&|c| c.autoscale.interval_ms = 0.0).is_err());
+        assert!(bad(&|c| c.autoscale.interval_ms = f64::NAN).is_err());
+        assert!(
+            bad(&|c| c.autoscale.interval_ms = f64::INFINITY).is_err(),
+            "an infinite interval would mean an 'enabled' controller that never ticks"
+        );
+        assert!(bad(&|c| c.autoscale.min_active = 0).is_err());
+        assert!(bad(&|c| c.autoscale.min_active = 3).is_err(), "min above the fleet size");
+        assert!(bad(&|c| {
+            c.autoscale.min_active = 2;
+            c.autoscale.max_active = 1;
+        })
+        .is_err());
+        assert!(bad(&|c| {
+            c.autoscale.queue_high = 1.0;
+            c.autoscale.queue_low = 2.0;
+        })
+        .is_err());
+        assert!(bad(&|_| {}).is_ok(), "the base autoscale config is valid");
     }
 
     #[test]

@@ -15,13 +15,19 @@
 //! ## The `RoutePolicy` trait
 //!
 //! Policies are open-ended implementations of [`RoutePolicy`] over a
-//! [`FleetView`] snapshot (backlogs, queue depths, residency, in-flight
-//! swaps) plus the static [`RouteCtx`] tables derived from the fleet at
-//! build time. The CLI-facing [`Policy`] enum is just a name registry
-//! ([`Policy::NAMES`]) that builds the trait object. Besides routing, a
-//! policy may propose an engine hot-swap ([`RoutePolicy::plan_swap`]);
-//! the event loop executes the plan, charging the HALP-style swap cost
-//! ([`crate::hwsim::Device::swap_in_ms`]).
+//! [`FleetView`] snapshot (backlogs, queue depths, residency, and
+//! availability — a server is unavailable while a swap is pending or in
+//! flight, and, under autoscaling, whenever it is not
+//! [`crate::serve::Lifecycle::Active`]) plus the static [`RouteCtx`]
+//! tables derived from the fleet at build time. The CLI-facing
+//! [`Policy`] enum is just a name registry ([`Policy::NAMES`]) that
+//! builds the trait object. Besides routing, a policy may propose an
+//! engine hot-swap ([`RoutePolicy::plan_swap`]); the event loop executes
+//! the plan, charging the HALP-style swap cost
+//! ([`crate::hwsim::Device::swap_in_ms`]). Fleet *sizing* is not routed
+//! here: scale decisions belong to the separate
+//! [`crate::serve::AutoscalePolicy`] control plane, which reuses this
+//! module's [`FleetView`] as its input snapshot.
 
 use super::fleet::Fleet;
 
@@ -91,7 +97,9 @@ impl Policy {
 /// A routable (server, variant) pair.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Candidate {
+    /// Index into [`super::fleet::Fleet::servers`].
     pub server: usize,
+    /// Index into that server's [`super::fleet::Server::variants`].
     pub variant: usize,
 }
 
@@ -109,7 +117,9 @@ pub struct FleetView<'a> {
     /// `resident[s][v]`: is variant `v` loaded in server `s`'s engine
     /// memory right now?
     pub resident: &'a [Vec<bool>],
-    /// Server cannot take new work (a swap is pending or in flight).
+    /// Server cannot take new work: a swap is pending or in flight, or —
+    /// under autoscaling — the server is asleep, waking or draining
+    /// (anything but [`crate::serve::Lifecycle::Active`]).
     pub unavailable: &'a [bool],
 }
 
@@ -123,7 +133,9 @@ pub struct RouteCtx {
     pub candidates: Vec<Candidate>,
     /// Batch-1 ms per candidate (est. completion = backlog + this).
     pub batch1_ms: Vec<f64>,
+    /// Measured accuracy drop per candidate (the acc-fastest tie-break).
     pub acc_drop: Vec<f64>,
+    /// Fleet size (all lifecycle states included).
     pub num_servers: usize,
     /// Engine-memory capacity per server (`None` = unlimited).
     pub capacity_bytes: Vec<Option<u64>>,
@@ -145,8 +157,11 @@ pub struct RouteCtx {
 /// the swap cost.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SwapPlan {
+    /// The server performing the swap.
     pub server: usize,
+    /// Variant indices to evict, in eviction order.
     pub evict: Vec<usize>,
+    /// Variant index to stream in once the evictions freed the memory.
     pub load: usize,
 }
 

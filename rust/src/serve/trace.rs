@@ -19,12 +19,18 @@ use crate::testkit::prng::Prng;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ArrivalProcess {
     /// Constant-rate Poisson arrivals.
-    Poisson { rps: f64 },
+    Poisson {
+        /// Mean arrival rate, requests per second.
+        rps: f64,
+    },
     /// Two-state MMPP: exponential dwell in each state, Poisson arrivals
     /// at the state's rate.
     Mmpp {
+        /// Arrival rate in the low (trough) state, requests per second.
         rps_low: f64,
+        /// Arrival rate in the high (burst) state, requests per second.
         rps_high: f64,
+        /// Mean exponential dwell time in each state, ms.
         mean_dwell_ms: f64,
     },
 }

@@ -3,25 +3,33 @@
 //!
 //! These run WITHOUT artifacts: fleets come from the paper-anchored
 //! reference profiles. Over randomized (fleet, trace, config) triples —
-//! including capped engine memory, the swap-aware policy and finite
-//! uplinks:
+//! including capped engine memory, the swap-aware policy, finite
+//! uplinks, replicated multi-server fleets and the elastic autoscaling
+//! controllers:
 //!
 //! * **conservation** — every generated request is exactly one of
-//!   {completed, rejected, expired}, swaps included;
+//!   {completed, rejected, expired}, swaps and scale events included;
 //! * **determinism** — the same seed reproduces a byte-identical summary,
-//!   swap counters included;
+//!   swap and scale counters included;
 //! * **admission** — the router never serves a variant whose accuracy
-//!   drop exceeds Δ_max, and never serves a non-resident variant
-//!   (`simulate_fleet` errors out on a residency violation — a stranded
-//!   queue or an invalid swap plan — so `Ok` is the proof; static
-//!   policies are additionally pinned to the initial resident set);
+//!   drop exceeds Δ_max, never serves a non-resident variant, and never
+//!   routes to an asleep or draining server (`simulate_fleet` errors out
+//!   on a residency or lifecycle violation — a stranded queue, an invalid
+//!   swap plan or a misdirected scale event — so `Ok` is the proof;
+//!   static policies are additionally pinned to the initial resident set);
 //! * **monotone virtual time** — the event loop never travels backwards;
+//! * **fixed-fleet identity** — with autoscaling off the other autoscale
+//!   knobs are inert: the summary is bit-identical whatever they say, and
+//!   no scale machinery is ever reported;
 //! * **sanity** — percentiles are ordered, attainment ⊆ completions,
-//!   swap counters are internally consistent.
+//!   swap and scale counters are internally consistent.
 
 use hqp::gopt::{FusedKind, FusedOp, OptimizedGraph};
 use hqp::hwsim::{simulate, simulate_batch, Device, Precision};
-use hqp::serve::{reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig};
+use hqp::serve::{
+    reference_fleet, simulate_fleet, trace, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy,
+    ServeConfig,
+};
 use hqp::testkit::prng::Prng;
 
 const CASES: usize = 50;
@@ -31,6 +39,9 @@ struct Case {
     model: &'static str,
     methods: Vec<&'static str>,
     two_servers: bool,
+    /// Replicate the device servers cyclically up to this fleet size
+    /// (equal to the device count = no replication).
+    n_servers: usize,
     /// Per-server engine-memory cap as a fraction of that server's total
     /// variant bytes (None = unlimited — the pre-residency behavior).
     mem_frac: Option<f64>,
@@ -52,10 +63,28 @@ fn gen_case(rng: &mut Prng) -> Case {
     } else {
         ArrivalProcess::parse("mmpp", rps).unwrap()
     };
+    let two_servers = rng.next_f64() < 0.4;
+    let base_servers = if two_servers { 2 } else { 1 };
+    let n_servers = base_servers + rng.below(3);
+    // elastic control plane on ~40% of cases, exercising both
+    // controllers against every routing policy / memory-cap combination
+    let autoscale = if rng.next_f64() < 0.4 {
+        let min_active = rng.below(n_servers) + 1;
+        AutoscaleConfig {
+            policy: [ScalePolicy::QueueDepth, ScalePolicy::Attainment][rng.below(2)],
+            interval_ms: 20.0 + rng.next_f64() * 200.0,
+            min_active,
+            max_active: min_active + rng.below(n_servers - min_active + 1),
+            ..AutoscaleConfig::off()
+        }
+    } else {
+        AutoscaleConfig::off()
+    };
     Case {
         model: if rng.next_f64() < 0.5 { "resnet18" } else { "mobilenetv3" },
         methods,
-        two_servers: rng.next_f64() < 0.4,
+        two_servers,
+        n_servers,
         mem_frac: if rng.next_f64() < 0.5 {
             Some(0.15 + rng.next_f64() * 0.95)
         } else {
@@ -74,6 +103,7 @@ fn gen_case(rng: &mut Prng) -> Case {
             } else {
                 f64::INFINITY
             },
+            autoscale,
         },
         process,
         duration_ms: 300.0 + rng.next_f64() * 1200.0,
@@ -87,8 +117,10 @@ fn build_fleet(case: &Case) -> hqp::serve::Fleet {
     } else {
         vec![Device::xavier_nx()]
     };
-    let mut fleet =
-        reference_fleet(case.model, &devices, &case.methods, case.cfg.max_batch).unwrap();
+    let mut fleet = reference_fleet(case.model, &devices, &case.methods, case.cfg.max_batch)
+        .unwrap()
+        .replicate_to(case.n_servers)
+        .unwrap();
     if let Some(frac) = case.mem_frac {
         for s in &mut fleet.servers {
             s.mem_capacity_bytes = Some((s.total_variant_bytes() as f64 * frac) as u64);
@@ -146,11 +178,63 @@ fn prop_conservation_every_request_accounted_once() {
             assert_eq!(s.swap_ms, 0.0, "case {case_no}");
             assert_eq!(s.expired_during_swap, 0, "case {case_no}");
         }
-        if case.mem_frac.is_none() {
+        if case.mem_frac.is_none() && !case.cfg.autoscale.enabled() {
             assert!(!s.residency_limited, "case {case_no}");
             assert_eq!(s.rejected_unavailable, 0, "case {case_no}");
             assert_eq!(s.swaps, 0, "case {case_no}: unlimited memory never swaps");
         }
+        // scale counters are internally consistent
+        if case.cfg.autoscale.enabled() {
+            assert!(s.autoscaled, "case {case_no}");
+            if s.scale_ups > 0 {
+                assert!(
+                    s.wake_ms >= s.scale_ups as f64 * case.cfg.swap_init_ms - 1e-9,
+                    "case {case_no}: each wake pays at least the init overhead"
+                );
+                assert!(s.wake_energy_mj > 0.0, "case {case_no}: wakes charge E = P·L");
+                assert!(
+                    s.mean_reaction_ms + 1e-9 >= s.wake_ms / s.scale_ups as f64,
+                    "case {case_no}: reaction time includes the wake itself"
+                );
+            } else {
+                assert_eq!(s.wake_ms, 0.0, "case {case_no}");
+                assert_eq!(s.wake_energy_mj, 0.0, "case {case_no}");
+                assert_eq!(s.mean_reaction_ms, 0.0, "case {case_no}");
+            }
+        } else {
+            assert!(!s.autoscaled, "case {case_no}");
+            assert_eq!((s.scale_ups, s.scale_downs), (0, 0), "case {case_no}");
+            assert_eq!(s.wake_ms, 0.0, "case {case_no}");
+            assert_eq!(s.wake_energy_mj, 0.0, "case {case_no}");
+            assert!(
+                !s.render().contains("scale    :"),
+                "case {case_no}: fixed fleets must not grow a scale line"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_autoscale_off_knobs_are_inert() {
+    // fixed-fleet identity: with the controller off, the other autoscale
+    // knobs must not perturb the simulation in any way — the summary is
+    // bit-identical to the default-config run (the PR 3 behavior)
+    let mut rng = Prng::new(0x0FF5CA1E);
+    for case_no in 0..CASES / 2 {
+        let mut case = gen_case(&mut rng);
+        case.cfg.autoscale = AutoscaleConfig::off();
+        let (base, _) = run_case(&case);
+        case.cfg.autoscale = AutoscaleConfig {
+            policy: ScalePolicy::Off,
+            interval_ms: rng.next_f64() * 500.0,
+            min_active: rng.below(9),
+            max_active: rng.below(3),
+            queue_high: rng.next_f64(),
+            queue_low: rng.next_f64() + 2.0,
+        };
+        let (knobs, _) = run_case(&case);
+        assert_eq!(base, knobs, "case {case_no}: Off knobs must be inert");
+        assert_eq!(base.render(), knobs.render(), "case {case_no}");
     }
 }
 
@@ -413,4 +497,66 @@ fn swap_aware_beats_static_policies_under_capped_memory() {
     );
     let hqp_row = s.per_variant.iter().find(|u| u.variant == "hqp").unwrap();
     assert!(hqp_row.completed > 0, "the swapped-in engine must carry load");
+}
+
+/// The autoscaling acceptance scenario, pinned (the bench_serve analogue):
+/// a 4-server hqp fleet under an MMPP burst whose mean load needs ~2.4
+/// servers and whose high state needs ~3.84. The fixed fleet of equal
+/// *mean* capacity (2 servers) sheds through every burst; the elastic
+/// fleet (2..4 active, queue-depth controller) must wake capacity into
+/// the burst — paying the priced wake cost and energy — and reach at
+/// least the fixed-mean fleet's attainment.
+#[test]
+fn autoscaled_fleet_beats_fixed_fleet_of_equal_mean_capacity() {
+    let dev = Device::xavier_nx();
+    let one = reference_fleet("resnet18", &[dev], &["hqp"], 8).unwrap();
+    let cap_one = one.servers[0].variants[0].capacity_rps();
+    let slo = one.servers[0].variants[0].batch1_ms() * 8.0;
+    let peak = one.clone().replicate_to(4).unwrap();
+    let mean = one.replicate_to(2).unwrap();
+    let burst =
+        trace::generate(&ArrivalProcess::parse("mmpp", cap_one * 2.4).unwrap(), 4_000.0, 17);
+
+    let fixed_cfg = ServeConfig { slo_ms: slo, ..Default::default() };
+    let auto_cfg = ServeConfig {
+        slo_ms: slo,
+        autoscale: AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth,
+            interval_ms: 50.0,
+            min_active: 2,
+            max_active: 4,
+            ..AutoscaleConfig::off()
+        },
+        ..Default::default()
+    };
+    let s_mean = simulate_fleet(&mean, &burst, &fixed_cfg).unwrap();
+    let s_auto = simulate_fleet(&peak, &burst, &auto_cfg).unwrap();
+
+    assert!(!s_mean.autoscaled && s_mean.scale_ups == 0);
+    assert!(s_auto.autoscaled);
+    assert!(s_auto.scale_ups >= 1, "the burst must wake capacity at least once");
+    assert!(s_auto.wake_ms > 0.0 && s_auto.wake_energy_mj > 0.0, "wakes are priced");
+    assert!(
+        s_auto.mean_reaction_ms > 0.0,
+        "reaction time must cover detection + wake"
+    );
+    assert_eq!(
+        s_auto.completed + s_auto.rejected + s_auto.expired,
+        s_auto.generated,
+        "conservation holds across scale events"
+    );
+    assert!(
+        s_auto.slo_attainment() >= s_mean.slo_attainment(),
+        "autoscaled {:.3} must reach at least the equal-mean-capacity fixed {:.3}",
+        s_auto.slo_attainment(),
+        s_mean.slo_attainment()
+    );
+    // the woken servers (indices >= min_active) must actually carry load
+    let woken: u64 = s_auto
+        .per_variant
+        .iter()
+        .filter(|u| u.server >= 2)
+        .map(|u| u.completed)
+        .sum();
+    assert!(woken > 0, "scale-ups must translate into served traffic");
 }
