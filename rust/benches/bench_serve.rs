@@ -14,6 +14,7 @@
 //! * `throughput_rps_baseline|hqp`   — goodput under that load
 //! * `capacity_rps_*`                — open-loop roofline capacities
 //! * `slo_attain_static_best|swap_aware`, `swap_count`, `swap_ms`,
+//!   `swap_energy_mj`,
 //!   `swap_expired_mid`              — stateful residency: a 48 MB NX that
 //!                                     can't hold baseline + hqp at once,
 //!                                     under an MMPP burst (acceptance:
@@ -129,8 +130,13 @@ fn main() {
     report.metric("slo_attain_swap_aware", s_swap.slo_attainment());
     report.metric("swap_count", s_swap.swaps as f64);
     report.metric("swap_ms", s_swap.swap_ms);
+    report.metric("swap_energy_mj", s_swap.swap_energy_mj);
     report.metric("swap_expired_mid", s_swap.expired_during_swap as f64);
     assert!(s_swap.swaps >= 1, "queue pressure through the burst must trigger a hot-swap");
+    assert!(
+        s_swap.swap_energy_mj > 0.0,
+        "each hot-swap window must be charged E = P·L"
+    );
     assert!(
         s_swap.slo_attainment() >= best_static,
         "acceptance: swap-aware {:.3} must reach at least the best static {:.3}",

@@ -11,8 +11,8 @@
 //! printed alongside (this doubles as the coordinator-level macro bench).
 
 use hqp::benchkit::{section, time_once};
-use hqp::coordinator::{experiments, run_method, MethodSpec};
-use hqp::hqp::HqpConfig;
+use hqp::coordinator::{experiments, run_method, run_schedule, MethodSpec};
+use hqp::hqp::{HqpConfig, Schedule};
 use hqp::hwsim::Device;
 use hqp::report;
 use hqp::runtime::Workspace;
@@ -81,5 +81,26 @@ fn main() {
                 &nano
             )
         );
+    }
+
+    // §V-B ordering ablation — the schedule API's payoff experiment:
+    // quantize-first (inexpressible under the closed MethodSpec enum)
+    // against the paper's prune-first, same config, same model.
+    section("§V-B ordering ablation — resnet18, prune>>ptq vs ptq>>prune");
+    for spec in ["prune >> ptq", "ptq >> prune"] {
+        let sched = Schedule::parse(spec).expect("ablation schedule");
+        let (r, ms) =
+            time_once(|| run_schedule(&ws, "resnet18", &sched, &cfg, &devices, force));
+        let rows = r.expect("schedule run");
+        for rep in experiments::reports_for_device(&rows, "xavier-nx") {
+            println!(
+                "[{ms:>9.1} ms] {:<14} drop {:>5.2}%  θ {:>4.1}%  speedup {:>5.2}x  Δmax ok: {}",
+                rep.method,
+                rep.acc_drop * 100.0,
+                rep.sparsity * 100.0,
+                rep.speedup,
+                rep.compliant
+            );
+        }
     }
 }

@@ -1,23 +1,37 @@
-//! The experiment runner: method suite × devices, with on-disk caching.
+//! The experiment runner: compression schedules × devices, with on-disk
+//! caching.
 //!
-//! Running one method on one model costs seconds (Q8) to minutes (HQP's
-//! conditional loop), so results are cached under `artifacts/results/` and
-//! keyed by `(model, method, config-signature)`; the table/figure benches
-//! re-render from cache unless `force` is set.
+//! Running one schedule on one model costs seconds (Q8) to minutes (HQP's
+//! conditional loop), so results are cached under `artifacts/results/`.
+//! Cache keys are *schedule-canonical-string* keyed (v2:
+//! `<model>_<schedule cache slug>`, e.g.
+//! `resnet18_measure-baseline+prune+ptq`); rows written by the
+//! pre-schedule coordinator under the legacy v1 method keys
+//! (`<model>_hqp`, …) still load through a read-only fallback — see
+//! DESIGN.md §Schedules. The table/figure benches re-render from cache
+//! unless `force` is set.
 
 use crate::error::Result;
 use crate::gopt::{optimize, OptimizeOptions};
 use crate::graph::Graph;
 use crate::hqp::sensitivity::per_group_mean;
 use crate::hqp::{
-    deploy, pipeline, prune::per_group_sparsity, HqpConfig, MethodReport, RankingMethod,
+    deploy, prune::per_group_sparsity, HqpConfig, MethodReport, RankingMethod, Schedule,
+    StageSpec,
 };
 use crate::hwsim::{simulate, Device};
 use crate::runtime::{Session, Workspace};
 
 use super::results::{load_results, save_results, ResultRow};
 
-/// A method to run (the rows of Tables I/II + ablations).
+/// A legacy method to run (the rows of Tables I/II + ablations).
+///
+/// **Deprecated alias**: the closed enum survives only as a spelling of
+/// the schedule presets — [`MethodSpec::to_schedule`] lowers each variant
+/// to its [`Schedule`], and [`run_method`] is now a thin wrapper over
+/// [`run_schedule`]. New orderings (e.g. the §V-B quantize-first
+/// ablation, `ptq >> prune`) are only expressible as schedules; prefer
+/// [`Schedule::parse`] / [`Schedule::preset`] in new code.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MethodSpec {
     Baseline,
@@ -32,6 +46,7 @@ pub enum MethodSpec {
 }
 
 impl MethodSpec {
+    /// The legacy (v1) result-cache key — kept so existing caches load.
     pub fn cache_key(&self, model: &str) -> String {
         match self {
             MethodSpec::Baseline => format!("{model}_baseline"),
@@ -42,6 +57,28 @@ impl MethodSpec {
             MethodSpec::HqpPruneOnly => format!("{model}_hqp_prune"),
         }
     }
+
+    /// Lower to the equivalent schedule preset (same label, same
+    /// computation, same `ResultRow`s — property-tested in
+    /// `tests/integration_pipeline.rs`).
+    pub fn to_schedule(&self, cfg: &HqpConfig) -> Schedule {
+        match self {
+            MethodSpec::Baseline => Schedule::preset("baseline", cfg).unwrap(),
+            MethodSpec::Q8Only => Schedule::preset("q8-only", cfg).unwrap(),
+            MethodSpec::PruneOnly(pct) => Schedule::prune_only_at(*pct as f64 / 100.0),
+            MethodSpec::Hqp => Schedule::preset("hqp", cfg).unwrap(),
+            MethodSpec::HqpWithRanking(r) => Schedule {
+                stages: vec![
+                    StageSpec::MeasureBaseline,
+                    StageSpec::Prune { ranking: Some(*r), step_frac: None, delta_max: None },
+                    StageSpec::Ptq { calib: None },
+                ],
+                label: Some(format!("hqp[{}]", r.name())),
+                legacy_key: Some(format!("hqp_{}", r.name())),
+            },
+            MethodSpec::HqpPruneOnly => Schedule::preset("hqp-prune", cfg).unwrap(),
+        }
+    }
 }
 
 /// Everything one suite run produces for one model.
@@ -50,38 +87,45 @@ pub struct SuiteResult {
     pub rows: Vec<ResultRow>,
 }
 
-/// Run one method on one model; produce per-device rows + analyses.
-pub fn run_method(
+/// Load cached rows for a schedule: the v2 schedule-slug key first, then
+/// the legacy v1 method key (pre-schedule caches). Shared with
+/// [`crate::serve::fleet::workspace_fleet`], so serving picks up measured
+/// accuracy from either cache generation.
+pub fn load_schedule_results(
+    results_dir: &std::path::Path,
+    model: &str,
+    sched: &Schedule,
+) -> Result<Option<Vec<ResultRow>>> {
+    let key = format!("{model}_{}", sched.cache_slug());
+    if let Some(rows) = load_results(results_dir, &key)? {
+        return Ok(Some(rows));
+    }
+    if let Some(suffix) = &sched.legacy_key {
+        if let Some(rows) = load_results(results_dir, &format!("{model}_{suffix}"))? {
+            return Ok(Some(rows));
+        }
+    }
+    Ok(None)
+}
+
+/// Run one schedule on one model; produce per-device rows + analyses.
+pub fn run_schedule(
     ws: &Workspace,
     model: &str,
-    spec: MethodSpec,
+    sched: &Schedule,
     cfg: &HqpConfig,
     devices: &[Device],
     force: bool,
 ) -> Result<Vec<ResultRow>> {
     let results_dir = ws.root.join("results");
-    let key = spec.cache_key(model);
     if !force {
-        if let Some(rows) = load_results(&results_dir, &key)? {
+        if let Some(rows) = load_schedule_results(&results_dir, model, sched)? {
             return Ok(rows);
         }
     }
 
     let mut sess = Session::new(ws, model)?;
-    let outcome = match spec {
-        MethodSpec::Baseline => pipeline::run_baseline(&mut sess)?,
-        MethodSpec::Q8Only => pipeline::run_q8(&mut sess, cfg)?,
-        MethodSpec::PruneOnly(pct) => pipeline::run_p50(&mut sess, pct as f64 / 100.0)?,
-        MethodSpec::Hqp => pipeline::run_hqp(&mut sess, cfg)?,
-        MethodSpec::HqpWithRanking(r) => {
-            let mut c = cfg.clone();
-            c.ranking = r;
-            let mut o = pipeline::run_hqp(&mut sess, &c)?;
-            o.method = format!("hqp[{}]", r.name());
-            o
-        }
-        MethodSpec::HqpPruneOnly => pipeline::run_hqp_prune_only(&mut sess, cfg)?,
-    };
+    let outcome = sched.run(&mut sess, cfg)?;
 
     let graph = Graph::from_manifest(&sess.mm)?;
     let group_sparsity = per_group_sparsity(&outcome.masks);
@@ -97,9 +141,10 @@ pub fn run_method(
         .map(|s| (s.sparsity, s.accuracy, s.accepted))
         .collect();
 
-    // Counters describe the (device-independent) method run; every device
-    // row carries the same snapshot so consumers of a single row see the
-    // measured C_HQP terms and cache effectiveness alongside the report.
+    // Counters describe the (device-independent) schedule run; every
+    // device row carries the same snapshot so consumers of a single row
+    // see the measured C_HQP terms and cache effectiveness alongside the
+    // report.
     let counters = sess.counters;
     let rows: Vec<ResultRow> = devices
         .iter()
@@ -114,8 +159,21 @@ pub fn run_method(
         })
         .collect::<Result<Vec<_>>>()?;
 
-    save_results(&results_dir, &key, &rows)?;
+    save_results(&results_dir, &format!("{model}_{}", sched.cache_slug()), &rows)?;
     Ok(rows)
+}
+
+/// Run one legacy method on one model (deprecated alias — lowers to the
+/// method's schedule preset and delegates to [`run_schedule`]).
+pub fn run_method(
+    ws: &Workspace,
+    model: &str,
+    spec: MethodSpec,
+    cfg: &HqpConfig,
+    devices: &[Device],
+    force: bool,
+) -> Result<Vec<ResultRow>> {
+    run_schedule(ws, model, &spec.to_schedule(cfg), cfg, devices, force)
 }
 
 /// The paper's full method suite for one model.
@@ -165,23 +223,84 @@ pub fn baseline_latency(ws: &Workspace, model: &str, dev: &Device) -> Result<f64
 mod tests {
     use super::*;
 
+    const SPECS: [MethodSpec; 7] = [
+        MethodSpec::Baseline,
+        MethodSpec::Q8Only,
+        MethodSpec::PruneOnly(50),
+        MethodSpec::PruneOnly(30),
+        MethodSpec::Hqp,
+        MethodSpec::HqpWithRanking(RankingMethod::MagnitudeL2),
+        MethodSpec::HqpPruneOnly,
+    ];
+
     #[test]
     fn cache_keys_distinct() {
-        let keys: Vec<String> = [
-            MethodSpec::Baseline,
-            MethodSpec::Q8Only,
-            MethodSpec::PruneOnly(50),
-            MethodSpec::PruneOnly(30),
-            MethodSpec::Hqp,
-            MethodSpec::HqpWithRanking(RankingMethod::MagnitudeL2),
-            MethodSpec::HqpPruneOnly,
-        ]
-        .iter()
-        .map(|s| s.cache_key("m"))
-        .collect();
+        let keys: Vec<String> = SPECS.iter().map(|s| s.cache_key("m")).collect();
         let mut dedup = keys.clone();
         dedup.sort();
         dedup.dedup();
         assert_eq!(dedup.len(), keys.len());
+    }
+
+    #[test]
+    fn schedule_keys_distinct_and_carry_legacy_fallback() {
+        let cfg = HqpConfig::default();
+        let keys: Vec<String> = SPECS
+            .iter()
+            .map(|s| format!("m_{}", s.to_schedule(&cfg).cache_slug()))
+            .collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len(), "v2 keys must not collide: {keys:?}");
+        // every legacy spec's schedule falls back to exactly its v1 key
+        for spec in SPECS {
+            let sched = spec.to_schedule(&cfg);
+            let legacy = sched
+                .legacy_key
+                .as_ref()
+                .map(|suffix| format!("m_{suffix}"))
+                .expect("every MethodSpec preset carries a legacy key");
+            assert_eq!(legacy, spec.cache_key("m"), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn legacy_cache_fallback_loads_v1_files() {
+        use crate::runtime::Counters;
+        let dir = std::env::temp_dir().join("hqp_sched_cache_fallback");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = HqpConfig::default();
+        let sched = MethodSpec::Hqp.to_schedule(&cfg);
+        // nothing cached yet
+        assert!(load_schedule_results(&dir, "m", &sched).unwrap().is_none());
+        let row = ResultRow {
+            report: MethodReport {
+                method: "hqp".into(),
+                model: "m".into(),
+                device: "nx".into(),
+                latency_ms: 0.5,
+                speedup: 2.5,
+                size_reduction: 0.8,
+                acc_drop: 0.013,
+                sparsity: 0.45,
+                compliant: true,
+                energy_mj: 7.5,
+                energy_ratio: 2.5,
+                flops: 1,
+            },
+            trace: vec![],
+            group_sparsity: vec![],
+            group_saliency: vec![],
+            counters: Counters::default(),
+        };
+        // a pre-schedule cache file under the legacy v1 key still loads
+        save_results(&dir, "m_hqp", &[row]).unwrap();
+        let got = load_schedule_results(&dir, "m", &sched).unwrap().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].report.method, "hqp");
+        // ad-hoc schedules have no legacy fallback
+        let adhoc = Schedule::parse("ptq >> prune").unwrap();
+        assert!(load_schedule_results(&dir, "m", &adhoc).unwrap().is_none());
     }
 }

@@ -1,7 +1,11 @@
-//! Experiment coordinator: orchestrates the method suite across models and
-//! devices, caches outcomes (the pruning loop is minutes of PJRT work — the
-//! table/figure benches must not re-run it per rendering), and serializes
-//! results for EXPERIMENTS.md.
+//! Experiment coordinator: orchestrates compression schedules across
+//! models and devices, caches outcomes (the pruning loop is minutes of
+//! PJRT work — the table/figure benches must not re-run it per
+//! rendering), and serializes results for EXPERIMENTS.md.
+//!
+//! [`run_schedule`] is the core entry point; [`run_method`] /
+//! [`MethodSpec`] survive as deprecated aliases that lower each legacy
+//! method to its schedule preset.
 //!
 //! The coordinator is deliberately synchronous: the execution budget of
 //! this environment is one CPU core and PJRT executions fully occupy it, so
@@ -12,5 +16,7 @@
 pub mod experiments;
 pub mod results;
 
-pub use experiments::{run_method, run_suite, MethodSpec, SuiteResult};
+pub use experiments::{
+    load_schedule_results, run_method, run_schedule, run_suite, MethodSpec, SuiteResult,
+};
 pub use results::{load_results, save_results, ResultRow};

@@ -45,7 +45,9 @@ pub fn engine(graph: &Graph, outcome: &Outcome, mixed: Option<PrecisionPlan>) ->
 }
 
 /// Produce the table row for `outcome` on `dev`, normalizing against the
-/// FP32 dense baseline engine on the same device.
+/// FP32 dense baseline engine on the same device. An outcome carrying a
+/// `mixed` stage's precision plan is lowered with it (None for every
+/// legacy method — their rows are byte-identical to the pre-schedule API).
 pub fn report(
     graph: &Graph,
     outcome: &Outcome,
@@ -55,7 +57,7 @@ pub fn report(
     let base_engine = optimize(graph, &crate::graph::full_masks(graph), &OptimizeOptions::fp32())?;
     let base_sim = simulate(&base_engine, dev);
 
-    let eng = engine(graph, outcome, None)?;
+    let eng = engine(graph, outcome, outcome.mixed_plan.clone())?;
     let sim = simulate(&eng, dev);
 
     Ok(MethodReport {

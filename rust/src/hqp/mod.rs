@@ -16,8 +16,14 @@
 //! * [`ptq`] — Phase 2: KL-divergence activation calibration + symmetric
 //!   INT8 weight projection, numerically verified through the
 //!   `quant_eval` artifact (Pallas qmatmul hot spots).
+//! * [`schedule`] — the compression pipeline as a *value*: the [`Stage`]
+//!   trait, the built-in stage specs and the [`Schedule`] type with its
+//!   canonical string form (`prune(fisher) >> ptq(kl)`), so orderings the
+//!   paper only argues about (§V-B: quantize-first vs prune-first) are
+//!   runnable schedules.
 //! * [`pipeline`] — the method suite the paper's tables compare: Baseline,
-//!   Q8-only, P50-only, HQP (+ ablations), each returning an [`Outcome`].
+//!   Q8-only, P50-only, HQP (+ ablations) as named schedule presets, each
+//!   returning an [`Outcome`].
 //! * [`deploy`] — lowers an outcome through [`crate::gopt`] (fusion, dead
 //!   channel elimination, autotune) onto a [`crate::hwsim`] device,
 //!   producing the paper's table rows ([`MethodReport`]).
@@ -31,11 +37,13 @@ pub mod mixed;
 pub mod pipeline;
 pub mod prune;
 pub mod ptq;
+pub mod schedule;
 pub mod sensitivity;
 
 pub use deploy::MethodReport;
 pub use pipeline::{run_baseline, run_hqp, run_p50, run_q8, Outcome};
 pub use prune::{PruneStep, PruneTrace};
+pub use schedule::{Schedule, Stage, StageSpec, StageState};
 pub use sensitivity::RankingMethod;
 
 use crate::quant::CalibMethod;

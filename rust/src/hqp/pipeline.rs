@@ -1,20 +1,27 @@
-//! The method suite of the paper's evaluation: Baseline (FP32), Q8-only,
-//! P50-only, and HQP — each producing an [`Outcome`] with *measured*
-//! accuracy (through the PJRT artifacts) and the filter masks + scales
-//! that define the deployable engine.
+//! The method suite of the paper's evaluation — Baseline (FP32), Q8-only,
+//! P50-only, and HQP — expressed as named [`Schedule`] presets
+//! (see [`super::schedule`]), each producing an [`Outcome`] with
+//! *measured* accuracy (through the PJRT artifacts) and the filter masks
+//! + scales that define the deployable engine.
+//!
+//! The free functions below are thin compatibility wrappers: each lowers
+//! to its preset schedule and runs it, so `run_hqp` and
+//! `Schedule::preset("hqp", ..)` are the same computation by construction
+//! (property-tested in `tests/integration_pipeline.rs`).
 //!
 //! Every method here shares one [`Session`], so the incremental parameter
-//! buffer cache carries across phases: the baseline-accuracy pass warms the
-//! device copy of M_train, the conditional loop re-uploads only each
-//! candidate's δ-masked tensors, and its validation sweeps early-exit via
-//! `Session::accuracy_bounded` (see `runtime::session` §Perf).
+//! buffer cache carries across phases: the (memoized) baseline-accuracy
+//! pass warms the device copy of M_train, the conditional loop re-uploads
+//! only each candidate's δ-masked tensors, and its validation sweeps
+//! early-exit via `Session::accuracy_bounded` (see `runtime::session`
+//! §Perf).
 
 use crate::error::Result;
+use crate::gopt::PrecisionPlan;
 use crate::runtime::{ParamStore, Session};
 
-use super::prune::{conditional_prune, prune_to_sparsity, PruneTrace};
-use super::ptq::quantize;
-use super::sensitivity::{self, RankingMethod};
+use super::prune::PruneTrace;
+use super::schedule::Schedule;
 use super::HqpConfig;
 
 /// Numeric regime of the deployed engine an outcome describes.
@@ -24,7 +31,7 @@ pub enum Regime {
     Int8,
 }
 
-/// The outcome of one compression method on one model.
+/// The outcome of one compression schedule on one model.
 pub struct Outcome {
     pub method: String,
     pub model: String,
@@ -45,6 +52,9 @@ pub struct Outcome {
     pub trace: PruneTrace,
     /// Fisher scores (kept for the layer-wise analysis / mixed precision).
     pub saliency_scores: Option<Vec<f32>>,
+    /// §VI-A per-group precision plan, when a `mixed` stage ran
+    /// ([`crate::hqp::deploy`] lowers it into the engine).
+    pub mixed_plan: Option<PrecisionPlan>,
 }
 
 impl Outcome {
@@ -57,122 +67,41 @@ impl Outcome {
     pub fn compliant(&self, delta_max: f64) -> bool {
         self.acc_drop() <= delta_max + 1e-9
     }
-
-    fn full_masks(sess: &Session) -> Vec<Vec<bool>> {
-        sess.mm.groups.iter().map(|g| vec![true; g.size]).collect()
-    }
 }
 
 /// Baseline (FP32): measure A_baseline, no compression.
 pub fn run_baseline(sess: &mut Session) -> Result<Outcome> {
-    let params = sess.baseline.clone();
-    let acc = sess.accuracy(&params, "val")?;
-    Ok(Outcome {
-        method: "baseline".into(),
-        model: sess.mm.name.clone(),
-        baseline_acc: acc,
-        accuracy: acc,
-        masks: Outcome::full_masks(sess),
-        sparsity: 0.0,
-        scales: None,
-        params,
-        regime: Regime::Fp32,
-        trace: PruneTrace::default(),
-        saliency_scores: None,
-    })
+    let cfg = HqpConfig::default();
+    Schedule::preset("baseline", &cfg).unwrap().run(sess, &cfg)
 }
 
 /// Q8-only: direct PTQ of M_train — the paper's quantization baseline
 /// (the one that fails on ResNet-18 without pruning pre-conditioning).
 pub fn run_q8(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
-    let baseline = sess.baseline.clone(); // O(slots) copy-on-write
-    let baseline_acc = sess.accuracy(&baseline, "val")?;
-    let ptq = quantize(sess, &baseline, cfg)?;
-    Ok(Outcome {
-        method: "q8-only".into(),
-        model: sess.mm.name.clone(),
-        baseline_acc,
-        accuracy: ptq.accuracy,
-        masks: Outcome::full_masks(sess),
-        sparsity: 0.0,
-        scales: Some(ptq.scales),
-        params: ptq.params,
-        regime: Regime::Int8,
-        trace: PruneTrace::default(),
-        saliency_scores: None,
-    })
+    Schedule::preset("q8-only", cfg).unwrap().run(sess, cfg)
 }
 
-/// P50-only: magnitude (L1) pruning straight to 50 % sparsity, FP32, no
+/// P50-only: magnitude (L1) pruning straight to sparsity θ, FP32, no
 /// quality guarantee — the paper's pruning baseline (violates Δ_max).
 pub fn run_p50(sess: &mut Session, theta: f64) -> Result<Outcome> {
-    let baseline = sess.baseline.clone();
-    let baseline_acc = sess.accuracy(&baseline, "val")?;
-    let sal = sensitivity::compute(sess, &baseline, RankingMethod::MagnitudeL1, 0)?;
-    let res = prune_to_sparsity(sess, &baseline, &sal, theta)?;
-    Ok(Outcome {
-        method: format!("p{:02.0}-only", theta * 100.0),
-        model: sess.mm.name.clone(),
-        baseline_acc,
-        accuracy: res.accuracy,
-        masks: res.masks,
-        sparsity: res.sparsity,
-        scales: None,
-        params: res.params,
-        regime: Regime::Fp32,
-        trace: res.trace,
-        saliency_scores: Some(sal.scores),
-    })
+    let cfg = HqpConfig::default();
+    Schedule::prune_only_at(theta).run(sess, &cfg)
 }
 
-/// HQP: M_o = Q(P(M_train, τ, Δ_max), b) — the paper's framework.
+/// HQP: M_o = Q(P(M_train, τ, Δ_max), b) — the paper's framework, i.e.
+/// the `measure-baseline >> prune >> ptq` schedule:
 ///
 /// Phase 1-A: Fisher saliency (one backward pass over D_calib).
 /// Phase 1-B: Algorithm 1 conditional loop under Δ_max.
 /// Phase 2:   robust PTQ (KL calibration) of M_sparse.
 pub fn run_hqp(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
-    let baseline = sess.baseline.clone();
-    let baseline_acc = sess.accuracy(&baseline, "val")?;
-
-    let sal = sensitivity::compute(sess, &baseline, cfg.ranking, cfg.calib_samples)?;
-    let pruned = conditional_prune(sess, &baseline, baseline_acc, &sal, cfg)?;
-    let ptq = quantize(sess, &pruned.params, cfg)?;
-
-    Ok(Outcome {
-        method: "hqp".into(),
-        model: sess.mm.name.clone(),
-        baseline_acc,
-        accuracy: ptq.accuracy,
-        masks: pruned.masks,
-        sparsity: pruned.sparsity,
-        scales: Some(ptq.scales),
-        params: ptq.params,
-        regime: Regime::Int8,
-        trace: pruned.trace,
-        saliency_scores: Some(sal.scores),
-    })
+    Schedule::preset("hqp", cfg).unwrap().run(sess, cfg)
 }
 
 /// Pruning-only variant of HQP (ablation: isolates Phase 1 from Phase 2;
 /// also the "M_sparse" row of the sparsity–accuracy analysis).
 pub fn run_hqp_prune_only(sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
-    let baseline = sess.baseline.clone();
-    let baseline_acc = sess.accuracy(&baseline, "val")?;
-    let sal = sensitivity::compute(sess, &baseline, cfg.ranking, cfg.calib_samples)?;
-    let pruned = conditional_prune(sess, &baseline, baseline_acc, &sal, cfg)?;
-    Ok(Outcome {
-        method: format!("prune-only[{}]", cfg.ranking.name()),
-        model: sess.mm.name.clone(),
-        baseline_acc,
-        accuracy: pruned.accuracy,
-        masks: pruned.masks,
-        sparsity: pruned.sparsity,
-        scales: None,
-        params: pruned.params,
-        regime: Regime::Fp32,
-        trace: pruned.trace,
-        saliency_scores: Some(sal.scores),
-    })
+    Schedule::preset("hqp-prune", cfg).unwrap().run(sess, cfg)
 }
 
 #[cfg(test)]
@@ -195,6 +124,7 @@ mod tests {
             regime: Regime::Fp32,
             trace: PruneTrace::default(),
             saliency_scores: None,
+            mixed_plan: None,
         };
         assert!((o.acc_drop() - 0.011).abs() < 1e-12);
         assert!(o.compliant(0.015));

@@ -1,0 +1,938 @@
+//! Composable compression schedules — the pipeline as a *value*.
+//!
+//! The paper's central claim (§III, §V-B) is that *ordering matters*:
+//! pruning pre-conditions the model so PTQ survives, while Q8-only on
+//! ResNet-18 does not. The original API hard-coded exactly five orderings
+//! as free functions behind a closed method enum, so that ablation axis
+//! could not be explored. This module makes the schedule itself first
+//! class:
+//!
+//! * [`Stage`] — one pipeline step: `StageState in → StageState out`
+//!   against a shared [`Session`]. Open trait: downstream code can add
+//!   stages without touching this crate.
+//! * [`StageSpec`] — the built-in stages as parseable, canonicalizable
+//!   data: `measure-baseline`, `prune` (the Δ_max-gated conditional loop,
+//!   Algorithm 1), `prune-to` (unconditional θ target), `ptq` (Phase 2),
+//!   and `mixed` (§VI-A S-guided precision planning, folded in from
+//!   [`super::mixed`]).
+//! * [`Schedule`] — an ordered `Vec<StageSpec>` with a canonical string
+//!   form (`prune(fisher,step=1%,dmax=1.5%) >> ptq(kl)`), named presets
+//!   for every legacy method, and a filesystem-safe cache slug.
+//! * [`StageState`] — the state threaded through the stages: parameters,
+//!   keep-masks, activation scales, numeric regime, baseline accuracy and
+//!   the accumulated pruning [`PruneTrace`].
+//!
+//! ## Canonical string grammar
+//!
+//! ```text
+//! schedule := stage (">>" stage)*
+//! stage    := name [ "(" arg ("," arg)* ")" ]
+//! arg      := key "=" value          (e.g. step=1%, dmax=1.5%, theta=50%)
+//!           | value                  (positional: a ranking or calib name)
+//! ```
+//!
+//! Fractions accept `1.5%` or `0.015`; the canonical form always prints
+//! percent. Omitted arguments inherit from [`HqpConfig`] (so canonical
+//! strings stay stable cache keys while `--ranking`/`--calib` still
+//! work), and `parse(canonical(s)) == s` exactly — property-tested in
+//! `tests/prop_schedule.rs`.
+//!
+//! ## Semantics worth knowing (see DESIGN.md §Schedules)
+//!
+//! * `prune`/`prune-to` rank and mask only *currently alive* filters, so
+//!   schedules may prune repeatedly (interleaved prune/quantize à la
+//!   "Ps and Qs"); their per-stage traces concatenate.
+//! * `prune` validates through the FP32 eval artifact. When it runs
+//!   *after* `ptq` (the quantize-first ablation) the final accuracy is
+//!   re-measured through the INT8 artifact with the pre-prune activation
+//!   scales — exactly the calibration staleness the paper's ordering
+//!   argument is about.
+//! * `measure-baseline` is memoized per (model, split) in the
+//!   [`Session`], so schedules sharing a session pay for one sweep.
+
+use crate::error::{Error, Result};
+use crate::gopt::PrecisionPlan;
+use crate::quant::CalibMethod;
+use crate::runtime::{ParamStore, Session};
+
+use super::mixed::{self, MixedPolicy};
+use super::pipeline::{Outcome, Regime};
+use super::prune::{conditional_prune, prune_to_sparsity, PruneTrace};
+use super::ptq::quantize;
+use super::sensitivity::{self, RankingMethod, Saliency};
+use super::HqpConfig;
+
+/// The state a [`Stage`] transforms. Starts as the pristine M_train
+/// ([`StageState::fresh`]) and accumulates masks, scales and measurements
+/// as stages run.
+pub struct StageState {
+    /// Current parameters (masked and/or projected onto the INT8 grid).
+    pub params: ParamStore,
+    /// Per-group keep-masks (all-true until a prune stage runs).
+    pub masks: Vec<Vec<bool>>,
+    /// Filter sparsity θ implied by `masks`.
+    pub sparsity: f64,
+    /// Numeric regime the params currently deploy under.
+    pub regime: Regime,
+    /// Per-tap activation scales once a `ptq` stage ran.
+    pub scales: Option<Vec<f32>>,
+    /// A_baseline, once measured (memoized in the session).
+    pub baseline_acc: Option<f64>,
+    /// Most recent measured validation accuracy (NaN until any stage
+    /// measures one — [`finish`] falls back to A_baseline).
+    pub accuracy: f64,
+    /// Concatenated pruning trajectory across every prune stage.
+    pub trace: PruneTrace,
+    /// Most recent saliency (scores + ranking) a stage computed.
+    pub saliency: Option<Saliency>,
+    /// §VI-A per-group precision plan once a `mixed` stage ran.
+    pub mixed_plan: Option<PrecisionPlan>,
+    /// Set when a stage mutated `params` after `ptq` measured the INT8
+    /// accuracy: [`finish`] re-measures through the INT8 artifact (with
+    /// the now-stale scales — deliberately: that staleness IS the
+    /// quantize-first failure mode).
+    pub requant: bool,
+}
+
+impl StageState {
+    /// Fresh state over the session's pristine M_train (O(slots)
+    /// copy-on-write clone — version stamps shared with the baseline, so
+    /// the device-buffer cache carries over).
+    pub fn fresh(sess: &Session) -> StageState {
+        StageState {
+            params: sess.baseline.clone(),
+            masks: sess.mm.groups.iter().map(|g| vec![true; g.size]).collect(),
+            sparsity: 0.0,
+            regime: Regime::Fp32,
+            scales: None,
+            baseline_acc: None,
+            accuracy: f64::NAN,
+            trace: PruneTrace::default(),
+            saliency: None,
+            mixed_plan: None,
+            requant: false,
+        }
+    }
+
+    /// A_baseline, measuring (memoized) on first use.
+    fn baseline(&mut self, sess: &mut Session, cfg: &HqpConfig) -> Result<f64> {
+        match self.baseline_acc {
+            Some(a) => Ok(a),
+            None => {
+                let a = sess.baseline_accuracy(&cfg.val_split)?;
+                self.baseline_acc = Some(a);
+                Ok(a)
+            }
+        }
+    }
+
+    /// Fold a prune result's fresh-full-relative masks into the threaded
+    /// masks and recount θ.
+    fn absorb_masks(&mut self, new_masks: &[Vec<bool>]) {
+        let mut masked = 0usize;
+        let mut total = 0usize;
+        for (acc, new) in self.masks.iter_mut().zip(new_masks) {
+            for (a, &n) in acc.iter_mut().zip(new) {
+                *a &= n;
+                total += 1;
+                if !*a {
+                    masked += 1;
+                }
+            }
+        }
+        self.sparsity = if total == 0 { 0.0 } else { masked as f64 / total as f64 };
+    }
+}
+
+/// One compression-pipeline step. Implementations receive the state by
+/// value and return the transformed state; the [`Session`] provides the
+/// measurement primitives (and its caches persist across stages).
+pub trait Stage {
+    fn apply(&self, sess: &mut Session, state: StageState, cfg: &HqpConfig) -> Result<StageState>;
+}
+
+/// The built-in stages as data: parseable from (and canonicalizable to)
+/// the schedule-string grammar. Every `Option` argument inherits its
+/// value from [`HqpConfig`] at run time and is omitted from the
+/// canonical string — only explicit overrides are part of the schedule's
+/// identity (and therefore its cache key).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StageSpec {
+    /// Measure A_baseline on the validation split (memoized per session).
+    MeasureBaseline,
+    /// Algorithm 1: the Δ_max-gated conditional pruning loop.
+    Prune {
+        /// Filter ranking override (default: [`HqpConfig::ranking`]).
+        ranking: Option<RankingMethod>,
+        /// δ step fraction override (default [`HqpConfig::delta_step_frac`]).
+        step_frac: Option<f64>,
+        /// Δ_max override (default [`HqpConfig::delta_max`]).
+        delta_max: Option<f64>,
+    },
+    /// Unconditional pruning of a fixed fraction θ of the (still-alive)
+    /// filters — no quality guarantee (the paper's P50 strawman).
+    PruneTo {
+        /// Ranking override (default: magnitude L1, matching P50).
+        ranking: Option<RankingMethod>,
+        /// Fraction of filters this stage masks.
+        theta: f64,
+    },
+    /// Phase 2: robust INT8 PTQ (calibration + weight projection +
+    /// measured INT8 accuracy).
+    Ptq {
+        /// Calibration override (default: [`HqpConfig::calib_method`]).
+        calib: Option<CalibMethod>,
+    },
+    /// §VI-A S-guided mixed precision: plan per-group INT4/INT8/FP16 from
+    /// the saliency scores (computing Fisher scores if no prior stage
+    /// left any).
+    Mixed {
+        /// Low-S quantile dropped to INT4 (default 0.25).
+        int4_quantile: Option<f64>,
+        /// High-S quantile preserved at FP16 (default 0.90).
+        fp16_quantile: Option<f64>,
+    },
+}
+
+/// Valid stage names, in grammar order (error messages list these).
+pub const STAGE_NAMES: &[&str] = &["measure-baseline", "prune", "prune-to", "ptq", "mixed"];
+
+/// Format a fraction as the canonical percent token (`0.015` → `1.5%`).
+///
+/// Naively printing `v * 100.0` corrupts common inputs (`7%` parses to
+/// `fl(0.07)`, whose ×100 rounds to `7.000000000000001`), so this
+/// searches for the shortest decimal whose `/100` re-parse recovers `v`
+/// *exactly* — the canonical token round-trips by construction, and
+/// what the user typed is what the cache slug says.
+fn fmt_pct(v: f64) -> String {
+    let pct = v * 100.0;
+    for prec in 0..=12 {
+        let s = format!("{pct:.prec$}");
+        if s.parse::<f64>().map(|p| p / 100.0) == Ok(v) {
+            return format!("{s}%");
+        }
+    }
+    format!("{pct}%")
+}
+
+/// Parse a fraction argument: `1.5%` (percent) or `0.015` (plain).
+fn parse_frac(stage: &str, key: &str, raw: &str) -> Result<f64> {
+    let (num, pct) = match raw.strip_suffix('%') {
+        Some(n) => (n, true),
+        None => (raw, false),
+    };
+    let v: f64 = num.trim().parse().map_err(|_| {
+        Error::hqp(format!("stage `{stage}`: {key}={raw} is not a number or percent"))
+    })?;
+    let v = if pct { v / 100.0 } else { v };
+    if !(0.0..=1.0).contains(&v) {
+        return Err(Error::hqp(format!(
+            "stage `{stage}`: {key}={raw} must be in [0%, 100%]"
+        )));
+    }
+    Ok(v)
+}
+
+fn parse_ranking(stage: &str, raw: &str) -> Result<RankingMethod> {
+    RankingMethod::parse(raw).ok_or_else(|| {
+        Error::hqp(format!(
+            "stage `{stage}`: unknown ranking `{raw}` \
+             (valid: fisher, mag-l1, mag-l2, bn-gamma, random)"
+        ))
+    })
+}
+
+impl StageSpec {
+    /// Parse one stage token (`name` or `name(args)`).
+    pub fn parse(tok: &str) -> Result<StageSpec> {
+        let tok = tok.trim();
+        let (name, args) = match tok.find('(') {
+            Some(i) => {
+                let inner = tok[i + 1..].strip_suffix(')').ok_or_else(|| {
+                    Error::hqp(format!("stage `{tok}`: missing closing `)`"))
+                })?;
+                (tok[..i].trim(), inner)
+            }
+            None => (tok, ""),
+        };
+        let args: Vec<&str> = args
+            .split(',')
+            .map(str::trim)
+            .filter(|a| !a.is_empty())
+            .collect();
+        match name {
+            "measure-baseline" => {
+                if !args.is_empty() {
+                    return Err(Error::hqp("stage `measure-baseline` takes no arguments"));
+                }
+                Ok(StageSpec::MeasureBaseline)
+            }
+            "prune" => {
+                let mut ranking = None;
+                let mut step_frac = None;
+                let mut delta_max = None;
+                for a in args {
+                    match a.split_once('=') {
+                        Some(("step", v)) => step_frac = Some(parse_frac(name, "step", v)?),
+                        Some(("dmax", v)) => delta_max = Some(parse_frac(name, "dmax", v)?),
+                        Some((k, _)) => {
+                            return Err(Error::hqp(format!(
+                                "stage `prune`: unknown argument `{k}` (valid: a ranking \
+                                 name, step=<pct>, dmax=<pct>)"
+                            )))
+                        }
+                        None => {
+                            if ranking.is_some() {
+                                return Err(Error::hqp(
+                                    "stage `prune`: more than one ranking given",
+                                ));
+                            }
+                            ranking = Some(parse_ranking(name, a)?);
+                        }
+                    }
+                }
+                Ok(StageSpec::Prune { ranking, step_frac, delta_max })
+            }
+            "prune-to" => {
+                let mut ranking = None;
+                let mut theta = None;
+                for a in args {
+                    match a.split_once('=') {
+                        Some(("theta", v)) => theta = Some(parse_frac(name, "theta", v)?),
+                        Some((k, _)) => {
+                            return Err(Error::hqp(format!(
+                                "stage `prune-to`: unknown argument `{k}` (valid: a \
+                                 ranking name, theta=<pct>)"
+                            )))
+                        }
+                        None => {
+                            if ranking.is_some() {
+                                return Err(Error::hqp(
+                                    "stage `prune-to`: more than one ranking given",
+                                ));
+                            }
+                            ranking = Some(parse_ranking(name, a)?);
+                        }
+                    }
+                }
+                let theta = theta.ok_or_else(|| {
+                    Error::hqp("stage `prune-to` needs theta=<pct>, e.g. prune-to(theta=50%)")
+                })?;
+                if theta <= 0.0 {
+                    return Err(Error::hqp("stage `prune-to`: theta must be > 0%"));
+                }
+                Ok(StageSpec::PruneTo { ranking, theta })
+            }
+            "ptq" => {
+                let mut calib = None;
+                for a in args {
+                    if a.contains('=') {
+                        return Err(Error::hqp(format!(
+                            "stage `ptq`: unknown argument `{a}` \
+                             (valid: a calibration name — kl, minmax, percentile)"
+                        )));
+                    }
+                    if calib.is_some() {
+                        return Err(Error::hqp("stage `ptq`: more than one calibration given"));
+                    }
+                    calib = Some(CalibMethod::parse(a).ok_or_else(|| {
+                        Error::hqp(format!(
+                            "stage `ptq`: unknown calibration `{a}` \
+                             (valid: kl, minmax, percentile)"
+                        ))
+                    })?);
+                }
+                Ok(StageSpec::Ptq { calib })
+            }
+            "mixed" => {
+                let mut int4_quantile = None;
+                let mut fp16_quantile = None;
+                for a in args {
+                    match a.split_once('=') {
+                        Some(("int4", v)) => {
+                            int4_quantile = Some(parse_frac(name, "int4", v)?)
+                        }
+                        Some(("fp16", v)) => {
+                            fp16_quantile = Some(parse_frac(name, "fp16", v)?)
+                        }
+                        _ => {
+                            return Err(Error::hqp(format!(
+                                "stage `mixed`: unknown argument `{a}` \
+                                 (valid: int4=<pct>, fp16=<pct>)"
+                            )))
+                        }
+                    }
+                }
+                Ok(StageSpec::Mixed { int4_quantile, fp16_quantile })
+            }
+            other => Err(Error::hqp(format!(
+                "unknown stage `{other}` (valid stages: {})",
+                STAGE_NAMES.join(", ")
+            ))),
+        }
+    }
+
+    /// Canonical token — `parse(canonical()) == self`, and only explicit
+    /// overrides appear (inherited config values are not part of the
+    /// schedule's identity).
+    pub fn canonical(&self) -> String {
+        let with_args = |name: &str, parts: Vec<String>| -> String {
+            if parts.is_empty() {
+                name.to_string()
+            } else {
+                format!("{name}({})", parts.join(","))
+            }
+        };
+        match self {
+            StageSpec::MeasureBaseline => "measure-baseline".to_string(),
+            StageSpec::Prune { ranking, step_frac, delta_max } => {
+                let mut parts = Vec::new();
+                if let Some(r) = ranking {
+                    parts.push(r.name().to_string());
+                }
+                if let Some(s) = step_frac {
+                    parts.push(format!("step={}", fmt_pct(*s)));
+                }
+                if let Some(d) = delta_max {
+                    parts.push(format!("dmax={}", fmt_pct(*d)));
+                }
+                with_args("prune", parts)
+            }
+            StageSpec::PruneTo { ranking, theta } => {
+                let mut parts = Vec::new();
+                if let Some(r) = ranking {
+                    parts.push(r.name().to_string());
+                }
+                parts.push(format!("theta={}", fmt_pct(*theta)));
+                with_args("prune-to", parts)
+            }
+            StageSpec::Ptq { calib } => {
+                with_args("ptq", calib.iter().map(|c| c.name().to_string()).collect())
+            }
+            StageSpec::Mixed { int4_quantile, fp16_quantile } => {
+                let mut parts = Vec::new();
+                if let Some(q) = int4_quantile {
+                    parts.push(format!("int4={}", fmt_pct(*q)));
+                }
+                if let Some(q) = fp16_quantile {
+                    parts.push(format!("fp16={}", fmt_pct(*q)));
+                }
+                with_args("mixed", parts)
+            }
+        }
+    }
+}
+
+/// Global-filter-index aliveness under the threaded masks (group offsets
+/// from the manifest group specs, exactly the layout `Saliency` ranks in).
+fn alive_filters(sess: &Session, masks: &[Vec<bool>]) -> Vec<bool> {
+    let total = sess.mm.total_filters();
+    let mut alive = vec![true; total];
+    for g in &sess.mm.groups {
+        for j in 0..g.size {
+            alive[g.offset + j] = masks[g.id][j];
+        }
+    }
+    alive
+}
+
+/// Drop already-masked filters from a ranking so repeated prune stages
+/// spend their δ-budget on live filters (a no-op on an unpruned state —
+/// preset schedules are byte-identical to the legacy free functions).
+fn retain_alive(mut sal: Saliency, alive: &[bool]) -> Saliency {
+    sal.ranking.retain(|&f| alive[f]);
+    sal
+}
+
+impl Stage for StageSpec {
+    fn apply(
+        &self,
+        sess: &mut Session,
+        mut state: StageState,
+        cfg: &HqpConfig,
+    ) -> Result<StageState> {
+        match self {
+            StageSpec::MeasureBaseline => {
+                let acc = state.baseline(sess, cfg)?;
+                if state.accuracy.is_nan() {
+                    state.accuracy = acc;
+                }
+            }
+            StageSpec::Prune { ranking, step_frac, delta_max } => {
+                let base_acc = state.baseline(sess, cfg)?;
+                let mut c = cfg.clone();
+                if let Some(r) = ranking {
+                    c.ranking = *r;
+                }
+                if let Some(s) = step_frac {
+                    c.delta_step_frac = *s;
+                }
+                if let Some(d) = delta_max {
+                    c.delta_max = *d;
+                }
+                let sal =
+                    sensitivity::compute(sess, &state.params, c.ranking, c.calib_samples)?;
+                let sal = retain_alive(sal, &alive_filters(sess, &state.masks));
+                let res = conditional_prune(sess, &state.params, base_acc, &sal, &c)?;
+                state.params = res.params;
+                state.absorb_masks(&res.masks);
+                state.trace.steps.extend(res.trace.steps);
+                state.accuracy = res.accuracy;
+                state.saliency = Some(sal);
+                if state.regime == Regime::Int8 {
+                    state.requant = true;
+                }
+            }
+            StageSpec::PruneTo { ranking, theta } => {
+                let r = ranking.unwrap_or(RankingMethod::MagnitudeL1);
+                let sal = sensitivity::compute(sess, &state.params, r, cfg.calib_samples)?;
+                let sal = retain_alive(sal, &alive_filters(sess, &state.masks));
+                let res = prune_to_sparsity(sess, &state.params, &sal, *theta)?;
+                state.params = res.params;
+                state.absorb_masks(&res.masks);
+                state.trace.steps.extend(res.trace.steps);
+                state.accuracy = res.accuracy;
+                state.saliency = Some(sal);
+                if state.regime == Regime::Int8 {
+                    state.requant = true;
+                }
+            }
+            StageSpec::Ptq { calib } => {
+                let mut c = cfg.clone();
+                if let Some(m) = calib {
+                    c.calib_method = *m;
+                }
+                let ptq = quantize(sess, &state.params, &c)?;
+                state.params = ptq.params;
+                state.scales = Some(ptq.scales);
+                state.regime = Regime::Int8;
+                state.accuracy = ptq.accuracy;
+                state.requant = false;
+            }
+            StageSpec::Mixed { int4_quantile, fp16_quantile } => {
+                if state.saliency.is_none() {
+                    let sal = sensitivity::compute(
+                        sess,
+                        &state.params,
+                        RankingMethod::Fisher,
+                        cfg.calib_samples,
+                    )?;
+                    state.saliency = Some(sal);
+                }
+                let default = MixedPolicy::default();
+                let policy = MixedPolicy {
+                    int4_quantile: int4_quantile.unwrap_or(default.int4_quantile),
+                    fp16_quantile: fp16_quantile.unwrap_or(default.fp16_quantile),
+                };
+                let scores = &state.saliency.as_ref().unwrap().scores;
+                state.mixed_plan = Some(mixed::plan(scores, &sess.mm.groups, policy));
+            }
+        }
+        Ok(state)
+    }
+}
+
+/// An ordered compression pipeline with a canonical string identity.
+///
+/// Presets carry the legacy method label (so reports and result rows are
+/// byte-identical to the pre-schedule API) and the legacy cache-key
+/// suffix (so pre-existing `artifacts/results/` files still load — see
+/// [`crate::coordinator::run_schedule`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    pub stages: Vec<StageSpec>,
+    /// Method label for [`Outcome`]/reports; the canonical string when
+    /// `None` (ad-hoc schedules).
+    pub label: Option<String>,
+    /// Legacy result-cache key *suffix* (`baseline`, `q8`, `p50`,
+    /// `hqp`, `hqp_<ranking>`, `hqp_prune`) for pre-schedule caches.
+    pub legacy_key: Option<String>,
+}
+
+/// Canonical preset names (the legacy method suite).
+pub const PRESET_NAMES: &[&str] = &["baseline", "q8-only", "p50-only", "hqp", "hqp-prune", "mixed"];
+
+impl Schedule {
+    /// An ad-hoc schedule (canonical-string label, no legacy cache key).
+    pub fn new(stages: Vec<StageSpec>) -> Schedule {
+        Schedule { stages, label: None, legacy_key: None }
+    }
+
+    /// Parse a schedule string (`stage >> stage >> ...`). Errors are loud
+    /// and list the valid stage names / arguments.
+    pub fn parse(s: &str) -> Result<Schedule> {
+        if s.trim().is_empty() {
+            return Err(Error::hqp(format!(
+                "empty schedule (valid stages: {})",
+                STAGE_NAMES.join(", ")
+            )));
+        }
+        let stages = s
+            .split(">>")
+            .map(StageSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Schedule::new(stages))
+    }
+
+    /// Resolve a `--schedule` argument: the stage grammar first, then
+    /// preset names. Grammar-first keeps stage spellings unambiguous —
+    /// `--schedule prune` / `--schedule mixed` mean the *single stage*
+    /// (exactly what HELP documents), never the multi-stage preset that
+    /// happens to share the name; preset names that are not stages
+    /// (`hqp`, `q8-only`, `p50`, …) resolve as presets. On a miss the
+    /// grammar's loud error (valid stage list included) is reported.
+    pub fn resolve(s: &str, cfg: &HqpConfig) -> Result<Schedule> {
+        match Schedule::parse(s) {
+            Ok(sched) => Ok(sched),
+            Err(parse_err) => Schedule::preset(s.trim(), cfg).ok_or(parse_err),
+        }
+    }
+
+    /// Named preset lowering of the legacy method suite. Accepts the
+    /// legacy `--method` spellings too (`q8`, `p50`, `prune`), plus any
+    /// `p<N>`/`p<N>-only` sparsity target.
+    pub fn preset(name: &str, cfg: &HqpConfig) -> Option<Schedule> {
+        match name {
+            "baseline" => Some(Schedule {
+                stages: vec![StageSpec::MeasureBaseline],
+                label: Some("baseline".into()),
+                legacy_key: Some("baseline".into()),
+            }),
+            "q8" | "q8-only" => Some(Schedule {
+                stages: vec![StageSpec::MeasureBaseline, StageSpec::Ptq { calib: None }],
+                label: Some("q8-only".into()),
+                legacy_key: Some("q8".into()),
+            }),
+            "hqp" => Some(Schedule {
+                stages: vec![
+                    StageSpec::MeasureBaseline,
+                    StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
+                    StageSpec::Ptq { calib: None },
+                ],
+                label: Some("hqp".into()),
+                legacy_key: Some("hqp".into()),
+            }),
+            "prune" | "hqp-prune" => Some(Schedule {
+                stages: vec![
+                    StageSpec::MeasureBaseline,
+                    StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
+                ],
+                label: Some(format!("prune-only[{}]", cfg.ranking.name())),
+                legacy_key: Some("hqp_prune".into()),
+            }),
+            "mixed" => Some(Schedule {
+                stages: vec![
+                    StageSpec::MeasureBaseline,
+                    StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
+                    StageSpec::Ptq { calib: None },
+                    StageSpec::Mixed { int4_quantile: None, fp16_quantile: None },
+                ],
+                label: Some("mixed".into()),
+                legacy_key: None,
+            }),
+            other => {
+                let core = other.strip_suffix("-only").unwrap_or(other);
+                let pct: u32 = core.strip_prefix('p')?.parse().ok()?;
+                if pct == 0 || pct > 100 {
+                    return None;
+                }
+                Some(Schedule::prune_only_at(pct as f64 / 100.0))
+            }
+        }
+    }
+
+    /// The `p<θ>-only` preset (unconditional magnitude pruning — the
+    /// paper's P50 baseline at an arbitrary θ).
+    pub fn prune_only_at(theta: f64) -> Schedule {
+        Schedule {
+            stages: vec![
+                StageSpec::MeasureBaseline,
+                StageSpec::PruneTo { ranking: Some(RankingMethod::MagnitudeL1), theta },
+            ],
+            label: Some(format!("p{:02.0}-only", theta * 100.0)),
+            legacy_key: Some(format!("p{:.0}", theta * 100.0)),
+        }
+    }
+
+    /// Canonical string (` >> `-joined canonical stage tokens).
+    pub fn canonical(&self) -> String {
+        self.stages
+            .iter()
+            .map(StageSpec::canonical)
+            .collect::<Vec<_>>()
+            .join(" >> ")
+    }
+
+    /// Method label for reports: the preset's legacy name, else the
+    /// canonical string.
+    pub fn method_label(&self) -> String {
+        self.label.clone().unwrap_or_else(|| self.canonical())
+    }
+
+    /// Filesystem-safe, injective-over-the-grammar encoding of the
+    /// canonical string — the v2 result-cache key suffix
+    /// (`prune(fisher,step=1%) >> ptq(kl)` →
+    /// `prune.fisher.step-1pct+ptq.kl`). See DESIGN.md §Schedules for
+    /// the cache-key versioning story.
+    pub fn cache_slug(&self) -> String {
+        let mut out = String::new();
+        for c in self.canonical().chars() {
+            match c {
+                ' ' => {}
+                '>' => {
+                    if !out.ends_with('+') {
+                        out.push('+');
+                    }
+                }
+                '(' | ',' => out.push('.'),
+                ')' => {}
+                '=' => out.push('-'),
+                '%' => out.push_str("pct"),
+                other => out.push(other),
+            }
+        }
+        out
+    }
+
+    /// Run the schedule against a session. Stages execute in order over a
+    /// fresh [`StageState`]; see [`finish`] for the final accounting.
+    pub fn run(&self, sess: &mut Session, cfg: &HqpConfig) -> Result<Outcome> {
+        if self.stages.is_empty() {
+            return Err(Error::hqp("empty schedule"));
+        }
+        let mut state = StageState::fresh(sess);
+        for spec in &self.stages {
+            state = spec.apply(sess, state, cfg)?;
+        }
+        finish(sess, state, cfg, self.method_label())
+    }
+}
+
+/// Finalize a stage pipeline into an [`Outcome`]: re-measure through the
+/// INT8 artifact if a post-`ptq` stage left the accuracy stale, ensure
+/// A_baseline exists (memoized), and default the accuracy to A_baseline
+/// when no stage measured one. Public so custom [`Stage`] pipelines can
+/// share the accounting.
+pub fn finish(
+    sess: &mut Session,
+    mut state: StageState,
+    cfg: &HqpConfig,
+    method: String,
+) -> Result<Outcome> {
+    if state.requant {
+        if let Some(scales) = &state.scales {
+            state.accuracy = sess.quant_accuracy(&state.params, scales, &cfg.val_split)?;
+        }
+        state.requant = false;
+    }
+    let baseline_acc = match state.baseline_acc {
+        Some(a) => a,
+        None => sess.baseline_accuracy(&cfg.val_split)?,
+    };
+    let accuracy = if state.accuracy.is_nan() { baseline_acc } else { state.accuracy };
+    Ok(Outcome {
+        method,
+        model: sess.mm.name.clone(),
+        baseline_acc,
+        accuracy,
+        masks: state.masks,
+        sparsity: state.sparsity,
+        scales: state.scales,
+        params: state.params,
+        regime: state.regime,
+        trace: state.trace,
+        saliency_scores: state.saliency.map(|s| s.scores),
+        mixed_plan: state.mixed_plan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(s: &str) -> Schedule {
+        let a = Schedule::parse(s).unwrap();
+        let b = Schedule::parse(&a.canonical()).unwrap();
+        assert_eq!(a, b, "parse -> canonical -> parse must be identity for {s}");
+        assert_eq!(a.canonical(), b.canonical());
+        b
+    }
+
+    #[test]
+    fn parse_canonical_roundtrip() {
+        let s = roundtrip("prune(fisher,step=1%,dmax=1.5%) >> ptq(kl)");
+        assert_eq!(s.canonical(), "prune(fisher,step=1%,dmax=1.5%) >> ptq(kl)");
+        roundtrip("measure-baseline >> prune >> ptq");
+        roundtrip("ptq >> prune");
+        roundtrip("prune-to(mag-l1,theta=50%)");
+        roundtrip("mixed(int4=25%,fp16=90%)");
+        // whitespace + plain-fraction spellings normalize
+        let a = Schedule::parse("  prune( fisher , dmax=0.015 )>>ptq ").unwrap();
+        assert_eq!(a.canonical(), "prune(fisher,dmax=1.5%) >> ptq");
+    }
+
+    #[test]
+    fn quantize_first_is_expressible() {
+        // the ordering the closed enum could not express — the paper's
+        // §V-B ablation axis
+        let s = Schedule::parse("ptq >> prune").unwrap();
+        assert_eq!(
+            s.stages,
+            vec![
+                StageSpec::Ptq { calib: None },
+                StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
+            ]
+        );
+    }
+
+    #[test]
+    fn unknown_stage_is_loud() {
+        let e = Schedule::parse("sprune(fisher)").unwrap_err().to_string();
+        assert!(e.contains("unknown stage"), "{e}");
+        assert!(e.contains("valid stages"), "{e}");
+        for name in STAGE_NAMES {
+            assert!(e.contains(name), "error must list `{name}`: {e}");
+        }
+    }
+
+    #[test]
+    fn bad_arguments_are_loud() {
+        assert!(Schedule::parse("").is_err());
+        assert!(Schedule::parse("prune >>").is_err());
+        assert!(Schedule::parse("prune(step=banana)").is_err());
+        assert!(Schedule::parse("prune(steep=1%)").is_err());
+        assert!(Schedule::parse("prune(fisher,mag-l1)").is_err());
+        assert!(Schedule::parse("prune(ranking)").is_err());
+        assert!(Schedule::parse("prune(step=150%)").is_err());
+        assert!(Schedule::parse("prune-to").is_err(), "theta is required");
+        assert!(Schedule::parse("prune-to(theta=0%)").is_err());
+        assert!(Schedule::parse("ptq(kl,minmax)").is_err());
+        assert!(Schedule::parse("ptq(qat)").is_err());
+        assert!(Schedule::parse("mixed(int8=50%)").is_err());
+        assert!(Schedule::parse("measure-baseline(x)").is_err());
+        assert!(Schedule::parse("prune(fisher").is_err(), "unbalanced paren");
+    }
+
+    #[test]
+    fn presets_lower_to_legacy_labels_and_keys() {
+        let cfg = HqpConfig::default();
+        let cases: &[(&str, &str, &str, Option<&str>)] = &[
+            ("baseline", "baseline", "measure-baseline", Some("baseline")),
+            ("q8", "q8-only", "measure-baseline >> ptq", Some("q8")),
+            ("q8-only", "q8-only", "measure-baseline >> ptq", Some("q8")),
+            (
+                "p50",
+                "p50-only",
+                "measure-baseline >> prune-to(mag-l1,theta=50%)",
+                Some("p50"),
+            ),
+            ("hqp", "hqp", "measure-baseline >> prune >> ptq", Some("hqp")),
+            (
+                "hqp-prune",
+                "prune-only[fisher]",
+                "measure-baseline >> prune",
+                Some("hqp_prune"),
+            ),
+            (
+                "mixed",
+                "mixed",
+                "measure-baseline >> prune >> ptq >> mixed",
+                None,
+            ),
+        ];
+        for (name, label, canonical, legacy) in cases {
+            let s = Schedule::preset(name, &cfg)
+                .unwrap_or_else(|| panic!("preset {name} must exist"));
+            assert_eq!(s.method_label(), *label, "{name}");
+            assert_eq!(s.canonical(), *canonical, "{name}");
+            assert_eq!(s.legacy_key.as_deref(), *legacy, "{name}");
+            // a preset's canonical string re-parses to the same stages
+            assert_eq!(Schedule::parse(&s.canonical()).unwrap().stages, s.stages);
+        }
+        assert!(Schedule::preset("p0", &cfg).is_none());
+        assert!(Schedule::preset("p101", &cfg).is_none());
+        assert!(Schedule::preset("qat", &cfg).is_none());
+        // the ranking-sensitive label follows the config
+        let mut c = cfg.clone();
+        c.ranking = RankingMethod::MagnitudeL2;
+        assert_eq!(
+            Schedule::preset("prune", &c).unwrap().method_label(),
+            "prune-only[mag-l2]"
+        );
+    }
+
+    #[test]
+    fn cache_slugs_are_distinct_and_filesystem_safe() {
+        let cfg = HqpConfig::default();
+        let mut slugs: Vec<String> = PRESET_NAMES
+            .iter()
+            .map(|n| Schedule::preset(n, &cfg).unwrap().cache_slug())
+            .collect();
+        slugs.push(Schedule::parse("prune >> ptq").unwrap().cache_slug());
+        slugs.push(Schedule::parse("ptq >> prune").unwrap().cache_slug());
+        slugs.push(
+            Schedule::parse("prune(fisher,step=1%,dmax=1.5%) >> ptq(kl)")
+                .unwrap()
+                .cache_slug(),
+        );
+        for s in &slugs {
+            assert!(
+                s.chars().all(|c| c.is_ascii_alphanumeric() || "+-._".contains(c)),
+                "slug `{s}` must be filesystem-safe"
+            );
+        }
+        let mut dedup = slugs.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), slugs.len(), "slugs must not collide: {slugs:?}");
+        assert_eq!(
+            Schedule::parse("prune(fisher,step=1%,dmax=1.5%) >> ptq(kl)")
+                .unwrap()
+                .cache_slug(),
+            "prune.fisher.step-1pct.dmax-1.5pct+ptq.kl"
+        );
+    }
+
+    #[test]
+    fn resolve_grammar_first_then_presets() {
+        let cfg = HqpConfig::default();
+        // preset names that are not stages resolve as presets
+        assert_eq!(Schedule::resolve("hqp", &cfg).unwrap().method_label(), "hqp");
+        assert_eq!(
+            Schedule::resolve("p50", &cfg).unwrap().method_label(),
+            "p50-only"
+        );
+        assert_eq!(
+            Schedule::resolve("hqp-prune", &cfg).unwrap().method_label(),
+            "prune-only[fisher]"
+        );
+        // stage spellings always mean the single stage, never the
+        // same-named preset (HELP documents them as stages)
+        assert_eq!(
+            Schedule::resolve("prune", &cfg).unwrap().stages,
+            vec![StageSpec::Prune { ranking: None, step_frac: None, delta_max: None }]
+        );
+        assert_eq!(
+            Schedule::resolve("mixed", &cfg).unwrap().stages,
+            vec![StageSpec::Mixed { int4_quantile: None, fp16_quantile: None }]
+        );
+        let adhoc = Schedule::resolve("ptq >> prune", &cfg).unwrap();
+        assert_eq!(adhoc.method_label(), "ptq >> prune");
+        assert!(adhoc.legacy_key.is_none());
+        // a miss reports the grammar's loud error
+        let e = Schedule::resolve("sprune", &cfg).unwrap_err().to_string();
+        assert!(e.contains("valid stages"), "{e}");
+    }
+
+    #[test]
+    fn percent_tokens_round_trip_verbatim() {
+        // fmt_pct must print what the user typed, not the f64 rounding
+        // artifact of v*100 (7% used to canonicalize — and cache-key —
+        // as 7.000000000000001%)
+        for s in ["7%", "29%", "1.5%", "0.5%", "3.25%", "100%"] {
+            let src = format!("prune(dmax={s})");
+            let sched = Schedule::parse(&src).unwrap();
+            assert_eq!(sched.canonical(), src, "typed percent must survive verbatim");
+        }
+    }
+}

@@ -48,7 +48,8 @@ pub mod prelude {
     pub use crate::gopt::{optimize, OptimizedGraph};
     pub use crate::graph::Graph;
     pub use crate::hqp::{
-        run_baseline, run_hqp, run_p50, run_q8, HqpConfig, MethodReport, Outcome,
+        run_baseline, run_hqp, run_p50, run_q8, HqpConfig, MethodReport, Outcome, Schedule,
+        Stage, StageSpec, StageState,
     };
     pub use crate::hwsim::{Device, DeviceKind};
     pub use crate::quant::CalibMethod;

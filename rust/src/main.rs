@@ -13,6 +13,7 @@
 //! hqp overhead                §III-C / §V-F C_HQP vs C_QAT
 //! hqp devices                 §IV-A heterogeneity sweep (Nano vs NX)
 //! hqp run --model M --method hqp|q8|p50|prune|baseline
+//! hqp run --model M --schedule "prune(fisher) >> ptq(kl)"
 //! hqp mixed --model M         §VI-A mixed-precision extension
 //! hqp serve                   trace-driven serving simulator (SLO routing)
 //! hqp info                    workspace/platform diagnostics
@@ -23,7 +24,7 @@ use hqp::coordinator::{self, run_method, MethodSpec};
 use hqp::error::Result;
 use hqp::gopt::{optimize, OptimizeOptions};
 use hqp::graph::Graph;
-use hqp::hqp::{cost, mixed, pipeline, HqpConfig, RankingMethod};
+use hqp::hqp::{cost, mixed, pipeline, HqpConfig, RankingMethod, Schedule};
 use hqp::hwsim::{simulate, Device, Precision};
 use hqp::quant::CalibMethod;
 use hqp::report::{self, bar_chart, scatter, BarRow};
@@ -34,6 +35,10 @@ const COMMON_FLAGS: &[&str] = &[
     "artifacts", "device", "model", "force", "delta-max", "delta-step", "ranking",
     "calib", "per-channel", "id", "method", "theta",
 ];
+
+/// Flags only `hqp run` accepts (other commands reject them, the same
+/// typo-hardening `--device` gets).
+const RUN_FLAGS: &[&str] = &["schedule", "smoke"];
 
 /// Flags only `hqp serve` accepts (other commands reject them, the same
 /// typo-hardening `--device` gets).
@@ -56,7 +61,8 @@ commands:
   energy                \u{a7}V-E energy analysis (E = P\u{b7}L)
   overhead              \u{a7}III-C / \u{a7}V-F C_HQP vs C_QAT
   devices               \u{a7}IV-A heterogeneity sweep (Nano vs NX vs ideal)
-  run                   one method: --model M --method hqp|q8|p50|prune|baseline
+  run                   one method (--method hqp|q8|p50|prune|baseline) or any
+                        composable pipeline (--schedule \"prune >> ptq\")
   mixed                 \u{a7}VI-A S-guided mixed precision
   serve                 trace-driven serving simulator over deployed variants
   info                  workspace diagnostics
@@ -70,6 +76,21 @@ options:
   --calib C         kl | minmax | percentile
   --per-channel     per-channel weight scales (ablation)
   --force           ignore cached results
+run options:
+  --schedule S      composable compression schedule: stages joined with >>,
+                    each `name` or `name(args)` — measure-baseline,
+                    prune[(ranking,step=P%,dmax=P%)] (\u{394}_max-gated Algorithm 1),
+                    prune-to([ranking,]theta=P%) (unconditional),
+                    ptq[(kl|minmax|percentile)], mixed[(int4=P%,fp16=P%)] —
+                    or a preset name (baseline|q8-only|p50-only|hqp|hqp-prune|
+                    mixed; stage spellings win, so `prune`/`mixed` alone mean
+                    the single stage). Omitted stage args inherit --ranking/--calib/
+                    --delta-max/--delta-step. Ordering is free: --schedule
+                    \"ptq >> prune\" runs the \u{a7}V-B quantize-first ablation
+                    the closed --method set cannot express.
+  --smoke           with --schedule: parse, validate and print the lowered
+                    plan (canonical form, label, cache keys), then exit
+                    without touching artifacts (CI smoke)
 serve options:
   --rps X               offered load, requests/s (default 100; 50 w/ --smoke)
   --slo-ms X            per-request latency SLO (default 50)
@@ -146,6 +167,10 @@ fn run(argv: &[String]) -> Result<()> {
     if args.command == "serve" {
         let mut known = COMMON_FLAGS.to_vec();
         known.extend_from_slice(SERVE_FLAGS);
+        args.expect_known(&known)?;
+    } else if args.command == "run" {
+        let mut known = COMMON_FLAGS.to_vec();
+        known.extend_from_slice(RUN_FLAGS);
         args.expect_known(&known)?;
     } else {
         args.expect_known(COMMON_FLAGS)?;
@@ -408,15 +433,45 @@ fn cmd_devices(artifacts: &str, args: &Args) -> Result<()> {
 
 fn cmd_run(artifacts: &str, args: &Args) -> Result<()> {
     let model = args.flag_or("model", "mobilenetv3");
-    let spec = match args.flag_or("method", "hqp") {
-        "baseline" => MethodSpec::Baseline,
-        "q8" => MethodSpec::Q8Only,
-        "p50" => MethodSpec::PruneOnly(args.flag_usize("theta", 50)? as u32),
-        "prune" => MethodSpec::HqpPruneOnly,
-        "hqp" => MethodSpec::Hqp,
-        other => return Err(hqp::Error::Cli(format!("unknown method {other}"))),
+    let rows = if let Some(spec_str) = args.flag("schedule") {
+        if args.flag("method").is_some() {
+            return Err(hqp::Error::Cli(
+                "--schedule and --method are mutually exclusive (a preset name \
+                 like --schedule hqp covers every --method)"
+                    .into(),
+            ));
+        }
+        let cfg = config_from(args)?;
+        let sched = Schedule::resolve(spec_str, &cfg)?;
+        if args.switch("smoke") {
+            // dry-run: parse + canonicalize + show the lowering without
+            // touching artifacts (the CI schedule-grammar smoke)
+            println!("schedule : {}", sched.canonical());
+            println!("label    : {}", sched.method_label());
+            println!("cache key: {model}_{}", sched.cache_slug());
+            if let Some(suffix) = &sched.legacy_key {
+                println!("legacy   : {model}_{suffix} (v1 read-only fallback)");
+            }
+            return Ok(());
+        }
+        let ws = Workspace::open(artifacts)?;
+        coordinator::run_schedule(&ws, model, &sched, &cfg, &Device::all(), args.switch("force"))?
+    } else {
+        if args.switch("smoke") {
+            return Err(hqp::Error::Cli(
+                "run --smoke is the --schedule dry-run; give it a schedule".into(),
+            ));
+        }
+        let spec = match args.flag_or("method", "hqp") {
+            "baseline" => MethodSpec::Baseline,
+            "q8" => MethodSpec::Q8Only,
+            "p50" => MethodSpec::PruneOnly(args.flag_usize("theta", 50)? as u32),
+            "prune" => MethodSpec::HqpPruneOnly,
+            "hqp" => MethodSpec::Hqp,
+            other => return Err(hqp::Error::Cli(format!("unknown method {other}"))),
+        };
+        suite_rows(artifacts, model, args, &[spec])?
     };
-    let rows = suite_rows(artifacts, model, args, &[spec])?;
     let dev = device_from(args)?;
     let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
     println!("{}", report::method_table(&format!("{model} / {}", dev.name), &reports));
@@ -629,7 +684,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         for (vi, v) in srv.variants.iter().enumerate() {
             println!(
                 "  s{si} {:<10} {:<9} acc_drop {:>5.2}%  batch-1 {:>8.3} ms  \
-                 capacity {:>7.0} rps  weights {:>6.1} MB  {}{}",
+                 capacity {:>7.0} rps  weights {:>6.1} MB  {}{}  [{}]",
                 srv.device.name,
                 v.name,
                 v.acc_drop * 100.0,
@@ -637,7 +692,8 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
                 v.capacity_rps(),
                 v.weight_bytes as f64 / 1e6,
                 if res[vi] { "resident" } else { "deployable" },
-                if v.compliant(cfg.delta_max) { "" } else { "   << excluded (Δmax)" }
+                if v.compliant(cfg.delta_max) { "" } else { "   << excluded (Δmax)" },
+                v.schedule
             );
         }
     }

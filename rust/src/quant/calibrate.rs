@@ -23,6 +23,16 @@ pub enum CalibMethod {
 }
 
 impl CalibMethod {
+    /// Canonical name ([`CalibMethod::parse`]'s inverse — also the
+    /// schedule-grammar token, e.g. `ptq(kl)`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CalibMethod::MinMax => "minmax",
+            CalibMethod::Percentile => "percentile",
+            CalibMethod::Kl => "kl",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<CalibMethod> {
         match s {
             "minmax" => Some(CalibMethod::MinMax),

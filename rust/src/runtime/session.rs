@@ -15,6 +15,10 @@
 //!   model. Version stamps are process-globally unique (see
 //!   [`crate::runtime::ParamStore`]), so serving a cached buffer for an
 //!   equal stamp is always byte-exact, across candidate clones.
+//! * **A_baseline is memoized** per split ([`Session::baseline_accuracy`]):
+//!   M_train never mutates within a session, so the first schedule's
+//!   baseline sweep serves every later schedule (and every stage) sharing
+//!   the session for free.
 //! * **Validation** can stop early: [`Session::accuracy_bounded`] walks the
 //!   batches and exits as soon as the remaining samples cannot change the
 //!   accept/reject decision against `(baseline_acc, delta_max)` — an exact
@@ -188,6 +192,10 @@ pub struct Session<'w> {
     pub baseline: ParamStore,
     data: HashMap<String, DataSet>,
     pcache: ParamBufferCache,
+    /// Memoized A_baseline per split — M_train never mutates within a
+    /// session, so every compression schedule sharing this session pays
+    /// for exactly one baseline sweep per split.
+    baseline_acc: HashMap<String, f64>,
     pub counters: Counters,
 }
 
@@ -201,8 +209,25 @@ impl<'w> Session<'w> {
             baseline,
             data: HashMap::new(),
             pcache: ParamBufferCache::default(),
+            baseline_acc: HashMap::new(),
             counters: Counters::default(),
         })
+    }
+
+    /// A_baseline on `split`, measured once per session and memoized
+    /// (sound because [`Session::baseline`] is pristine for the session's
+    /// lifetime — schedules clone it copy-on-write and never mutate it).
+    /// The first call costs one full [`Session::accuracy`] sweep; repeats
+    /// are free, so a method suite sharing one session no longer pays a
+    /// validation sweep per method.
+    pub fn baseline_accuracy(&mut self, split: &str) -> Result<f64> {
+        if let Some(&a) = self.baseline_acc.get(split) {
+            return Ok(a);
+        }
+        let params = self.baseline.clone(); // O(slots) copy-on-write
+        let a = self.accuracy(&params, split)?;
+        self.baseline_acc.insert(split.to_string(), a);
+        Ok(a)
     }
 
     /// Ensure `split` is loaded (host-side); returns its dataset entry.

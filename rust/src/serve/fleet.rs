@@ -26,14 +26,30 @@
 use crate::error::{Error, Result};
 use crate::gopt::{optimize, weight_elems, FusedKind, FusedOp, OptimizeOptions, OptimizedGraph};
 use crate::graph::{full_masks, Graph};
+use crate::hqp::{HqpConfig, Schedule};
 use crate::hwsim::{simulate_batch, Device, Precision};
 use crate::runtime::manifest::Manifest;
+
+/// Canonical schedule string for a serving method name (the preset's
+/// canonical form; the raw name for non-preset methods).
+fn schedule_label(method: &str) -> String {
+    match Schedule::preset(method, &HqpConfig::default()) {
+        Some(s) => s.canonical(),
+        None => method.to_string(),
+    }
+}
 
 /// One deployed variant as the serving layer sees it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VariantProfile {
     /// Method name (baseline / q8 / p50 / hqp / mixed).
     pub name: String,
+    /// Canonical compression-schedule string that produced this variant
+    /// ([`crate::hqp::Schedule::canonical`] of the method's preset, e.g.
+    /// `measure-baseline >> prune >> ptq` for `hqp`; the raw method name
+    /// when no preset matches). Labels fleets by *what was run*, not just
+    /// what it was called.
+    pub schedule: String,
     /// Measured (or paper-anchored) absolute Top-1 accuracy drop.
     pub acc_drop: f64,
     /// Deployed engine weight storage ([`crate::gopt::OptimizedGraph`]'s
@@ -65,6 +81,7 @@ impl VariantProfile {
         }
         VariantProfile {
             name: name.to_string(),
+            schedule: schedule_label(name),
             acc_drop,
             weight_bytes: engine.weight_bytes,
             batch_ms,
@@ -473,9 +490,21 @@ pub fn workspace_fleet(
         let mut variants = Vec::with_capacity(methods.len());
         for m in methods {
             let (ref_theta, ref_drop) = reference_stats(model, m)?;
-            // cached coordinator row → measured acc_drop + per-group masks
-            let key = format!("{model}_{m}");
-            let cached = crate::coordinator::load_results(&results_dir, &key)?;
+            // cached coordinator row → measured acc_drop + per-group
+            // masks. v2 schedule-slug keys first, legacy v1 method keys
+            // as fallback (load_schedule_results); methods without a
+            // schedule preset only ever had v1 keys.
+            let cached = match Schedule::preset(m, &HqpConfig::default()) {
+                Some(sched) => crate::coordinator::load_schedule_results(
+                    &results_dir,
+                    model,
+                    &sched,
+                )?,
+                None => crate::coordinator::load_results(
+                    &results_dir,
+                    &format!("{model}_{m}"),
+                )?,
+            };
             let (group_sparsity, acc_drop) = match cached.as_ref().and_then(|r| r.first()) {
                 Some(row) => (Some(row.group_sparsity.clone()), row.report.acc_drop),
                 None => (None, ref_drop),
@@ -626,6 +655,7 @@ mod tests {
         fn var(name: &str, bytes: u64) -> VariantProfile {
             VariantProfile {
                 name: name.into(),
+                schedule: String::new(),
                 acc_drop: 0.0,
                 weight_bytes: bytes,
                 batch_ms: vec![1.0],
@@ -667,6 +697,23 @@ mod tests {
         assert!(f.replicate_to(1).is_err());
         let empty = Fleet { model: "m".into(), servers: vec![] };
         assert!(empty.replicate_to(3).is_err());
+    }
+
+    #[test]
+    fn variant_profiles_carry_schedule_labels() {
+        let f = reference_fleet(
+            "resnet18",
+            &[Device::xavier_nx()],
+            &["baseline", "q8", "p50", "hqp", "mixed"],
+            1,
+        )
+        .unwrap();
+        let v = &f.servers[0].variants;
+        assert_eq!(v[0].schedule, "measure-baseline");
+        assert_eq!(v[1].schedule, "measure-baseline >> ptq");
+        assert_eq!(v[2].schedule, "measure-baseline >> prune-to(mag-l1,theta=50%)");
+        assert_eq!(v[3].schedule, "measure-baseline >> prune >> ptq");
+        assert_eq!(v[4].schedule, "measure-baseline >> prune >> ptq >> mixed");
     }
 
     #[test]

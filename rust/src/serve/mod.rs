@@ -47,9 +47,11 @@
 //! eviction semantics), the device serves nothing mid-swap (queued
 //! requests wait or expire), and the swap is charged the hardware-aware
 //! cost [`crate::hwsim::Device::swap_in_ms`] (weight streaming over DRAM
-//! bandwidth + a fixed init overhead, [`ServeConfig::swap_init_ms`]).
-//! With capacities unset, every variant is resident, no swap event is
-//! ever scheduled, and the simulation is byte-identical to the
+//! bandwidth + a fixed init overhead, [`ServeConfig::swap_init_ms`])
+//! plus energy E = P·L for the swap window — the same pricing wake
+//! windows get ([`Summary::swap_energy_mj`], folded into the energy
+//! total). With capacities unset, every variant is resident, no swap
+//! event is ever scheduled, and the simulation is byte-identical to the
 //! pre-residency simulator.
 //!
 //! ## Elastic fleet autoscaling
@@ -213,13 +215,18 @@ pub struct Summary {
     pub mean_batch: f64,
     /// Completion-weighted mean accuracy drop across served variants.
     pub acc_mix: f64,
-    /// Total energy: whole-batch serving energy plus any wake windows'
-    /// E = P·L, mJ.
+    /// Total energy: whole-batch serving energy plus any wake and
+    /// hot-swap windows' E = P·L, mJ.
     pub energy_mj: f64,
     /// Engine hot-swaps performed.
     pub swaps: u64,
     /// Total virtual time spent swapping (weight streaming + init), ms.
     pub swap_ms: f64,
+    /// Energy charged for the hot-swap windows, E = P·L (mJ; included in
+    /// [`Summary::energy_mj`]). Zero whenever no swap happened, so
+    /// fixed-fleet / no-swap summaries are byte-identical to the
+    /// pre-swap-energy simulator.
+    pub swap_energy_mj: f64,
     /// Whether any server ran with a finite engine-memory capacity (gates
     /// the swap line in [`Summary::render`], keeping unlimited-memory
     /// output byte-identical to the pre-residency simulator).
@@ -287,10 +294,18 @@ impl Summary {
             self.energy_mj
         ));
         if self.residency_limited || self.policy == Policy::SwapAware.name() {
+            // the E = P·L term appears only once a swap was charged, so
+            // no-swap output stays byte-identical to the pre-swap-energy
+            // renderer
+            let swapping = if self.swap_energy_mj > 0.0 {
+                format!("{:.1} ms swapping, {:.1} mJ", self.swap_ms, self.swap_energy_mj)
+            } else {
+                format!("{:.1} ms swapping", self.swap_ms)
+            };
             s.push_str(&format!(
-                "  swaps    : {} ({:.1} ms swapping)   {} expired mid-swap   \
+                "  swaps    : {} ({swapping})   {} expired mid-swap   \
                  {} rejected unavailable\n",
-                self.swaps, self.swap_ms, self.expired_during_swap, self.rejected_unavailable
+                self.swaps, self.expired_during_swap, self.rejected_unavailable
             ));
         }
         if self.autoscaled {
@@ -431,6 +446,7 @@ struct Acc {
     expired_during_swap: u64,
     swaps: u64,
     swap_ms: f64,
+    swap_energy_mj: f64,
     scale_ups: u64,
     scale_downs: u64,
     wake_ms: f64,
@@ -956,6 +972,10 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
                     st.swap_until = now + swap_ms;
                     acc.swaps += 1;
                     acc.swap_ms += swap_ms;
+                    // the swap window is charged energy E = P·L exactly
+                    // like a wake window (W × ms = mJ); zero when no swap
+                    // happens, so no-swap summaries stay byte-identical
+                    acc.swap_energy_mj += srv.device.power_w * swap_ms;
                     seq += 1;
                     heap.push(Reverse(Event {
                         time_ms: st.swap_until,
@@ -1270,6 +1290,7 @@ fn build_summary(
         expired_during_swap: acc.expired_during_swap,
         swaps: acc.swaps,
         swap_ms: acc.swap_ms,
+        swap_energy_mj: acc.swap_energy_mj,
         residency_limited,
         autoscaled,
         scale_ups: acc.scale_ups,
@@ -1302,9 +1323,10 @@ fn build_summary(
         } else {
             acc_weighted / acc.completed as f64
         },
-        // serving energy plus the wake windows' E = P·L (zero when the
-        // control plane is off, keeping fixed-fleet totals bit-exact)
-        energy_mj: energy + acc.wake_energy_mj,
+        // serving energy plus the wake and hot-swap windows' E = P·L
+        // (both zero when no wake/swap happened, keeping fixed-fleet and
+        // no-swap totals bit-exact)
+        energy_mj: energy + acc.wake_energy_mj + acc.swap_energy_mj,
         per_variant,
     }
 }
@@ -1317,6 +1339,7 @@ mod tests {
     fn var(name: &str, acc_drop: f64, b1: f64, b2: f64) -> VariantProfile {
         VariantProfile {
             name: name.into(),
+            schedule: String::new(),
             acc_drop,
             weight_bytes: 10_000_000,
             batch_ms: vec![b1, b2],
@@ -1485,6 +1508,8 @@ mod tests {
             let s = simulate_fleet(&fleet, &[0.0, 1.0, 2.0], &c).unwrap();
             assert_eq!(s.swaps, 0);
             assert_eq!(s.swap_ms, 0.0);
+            assert_eq!(s.swap_energy_mj, 0.0, "no swap, no E = P·L charge");
+            assert!(!s.render().contains("ms swapping, "), "no-swap render unchanged");
             assert_eq!(s.expired_during_swap, 0);
             assert_eq!(s.rejected_unavailable, 0);
             assert!(!s.residency_limited);
@@ -1560,6 +1585,15 @@ mod tests {
         assert_eq!(s.swaps, 1, "one swap to hqp, then stable");
         let expected_swap = Device::xavier_nx().swap_in_ms(4_000_000, c.swap_init_ms);
         assert!((s.swap_ms - expected_swap).abs() < 1e-9);
+        // the swap window is charged E = P·L, folded into the total
+        let expected_energy = Device::xavier_nx().power_w * expected_swap;
+        assert!((s.swap_energy_mj - expected_energy).abs() < 1e-9);
+        let usage: f64 = s.per_variant.iter().map(|u| u.energy_mj).sum();
+        assert!((s.energy_mj - (usage + s.swap_energy_mj)).abs() < 1e-9);
+        assert!(
+            s.render().contains("ms swapping, "),
+            "a charged swap must surface its energy in the render"
+        );
         let fp32 = s.per_variant.iter().find(|u| u.variant == "fp32").unwrap();
         let hqp = s.per_variant.iter().find(|u| u.variant == "hqp").unwrap();
         assert!(fp32.completed > 0, "the resident engine serves before the swap");
@@ -1645,9 +1679,11 @@ mod tests {
         assert!(s1 > 0, "the woken server must serve traffic");
         assert_eq!(s.completed + s.rejected + s.expired, s.generated, "conservation");
         assert!(s.render().contains("scale    :"));
-        // wake energy is part of the summary total
+        // wake (and any swap) energy is part of the summary total
         let usage: f64 = s.per_variant.iter().map(|u| u.energy_mj).sum();
-        assert!((s.energy_mj - (usage + s.wake_energy_mj)).abs() < 1e-9);
+        assert!(
+            (s.energy_mj - (usage + s.wake_energy_mj + s.swap_energy_mj)).abs() < 1e-9
+        );
     }
 
     #[test]

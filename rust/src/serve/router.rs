@@ -523,6 +523,7 @@ mod tests {
     fn var_sized(name: &str, acc_drop: f64, ms: f64, bytes: u64) -> VariantProfile {
         VariantProfile {
             name: name.into(),
+            schedule: String::new(),
             acc_drop,
             weight_bytes: bytes,
             batch_ms: vec![ms, ms * 1.6],

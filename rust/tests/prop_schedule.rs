@@ -1,0 +1,239 @@
+//! Property tests for the schedule grammar (testkit harness — the
+//! offline proptest substitute, DESIGN.md §Substitutions).
+//!
+//! These run WITHOUT artifacts: they exercise parsing, canonicalization,
+//! preset lowering and cache-key construction over randomized schedules:
+//!
+//! * **round-trip** — `parse → canonical → parse` is the identity
+//!   (spec-level equality AND canonical-string fixed point);
+//! * **loud errors** — unknown stage names list the valid stage set,
+//!   unknown arguments list the stage's valid arguments;
+//! * **lowering** — every legacy `MethodSpec` lowers to a schedule whose
+//!   label matches the legacy method name and whose legacy cache key is
+//!   exactly the pre-schedule key (the on-disk fallback contract);
+//! * **keys** — distinct schedules get distinct, filesystem-safe slugs.
+
+use hqp::coordinator::MethodSpec;
+use hqp::hqp::{HqpConfig, RankingMethod, Schedule, StageSpec};
+use hqp::quant::CalibMethod;
+use hqp::testkit::prng::Prng;
+
+const CASES: usize = 300;
+
+const RANKINGS: [RankingMethod; 4] = [
+    RankingMethod::Fisher,
+    RankingMethod::MagnitudeL1,
+    RankingMethod::MagnitudeL2,
+    RankingMethod::BnGamma,
+];
+const CALIBS: [CalibMethod; 3] = [CalibMethod::Kl, CalibMethod::MinMax, CalibMethod::Percentile];
+
+/// A random fraction over (0, 1] with a power-of-two denominator, so the
+/// percent round-trip (`v*100` → shortest decimal → `/100`) is exact and
+/// spec-level equality is testable with `==`. (Grammar users type decimal
+/// percents, which are themselves fixed points after one parse — the
+/// string-level identity below covers that path.)
+fn frac(rng: &mut Prng) -> f64 {
+    (rng.below(1024) + 1) as f64 / 1024.0
+}
+
+fn gen_stage(rng: &mut Prng) -> StageSpec {
+    match rng.below(5) {
+        0 => StageSpec::MeasureBaseline,
+        1 => StageSpec::Prune {
+            ranking: if rng.next_f64() < 0.5 {
+                Some(RANKINGS[rng.below(RANKINGS.len())])
+            } else {
+                None
+            },
+            step_frac: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
+            delta_max: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
+        },
+        2 => StageSpec::PruneTo {
+            ranking: if rng.next_f64() < 0.5 {
+                Some(RANKINGS[rng.below(RANKINGS.len())])
+            } else {
+                None
+            },
+            theta: frac(rng),
+        },
+        3 => StageSpec::Ptq {
+            calib: if rng.next_f64() < 0.5 {
+                Some(CALIBS[rng.below(CALIBS.len())])
+            } else {
+                None
+            },
+        },
+        _ => StageSpec::Mixed {
+            int4_quantile: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
+            fp16_quantile: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
+        },
+    }
+}
+
+fn gen_schedule(rng: &mut Prng) -> Schedule {
+    let n = rng.below(5) + 1;
+    Schedule::new((0..n).map(|_| gen_stage(rng)).collect())
+}
+
+#[test]
+fn prop_parse_canonical_parse_is_identity() {
+    let mut rng = Prng::new(0x5C4ED);
+    for case_no in 0..CASES {
+        let sched = gen_schedule(&mut rng);
+        let canonical = sched.canonical();
+        let parsed = Schedule::parse(&canonical)
+            .unwrap_or_else(|e| panic!("case {case_no}: `{canonical}` must parse: {e}"));
+        assert_eq!(
+            parsed.stages, sched.stages,
+            "case {case_no}: parse(canonical) must reproduce the stages of `{canonical}`"
+        );
+        assert_eq!(
+            parsed.canonical(),
+            canonical,
+            "case {case_no}: canonical must be a fixed point"
+        );
+        // the cache slug is a function of the canonical string alone
+        assert_eq!(parsed.cache_slug(), sched.cache_slug(), "case {case_no}");
+    }
+}
+
+#[test]
+fn prop_spacing_is_normalized_away() {
+    // the same schedule spelled with arbitrary whitespace parses to the
+    // same canonical form
+    let mut rng = Prng::new(0x51ACE);
+    for case_no in 0..CASES / 3 {
+        let sched = gen_schedule(&mut rng);
+        let canonical = sched.canonical();
+        let pad = |rng: &mut Prng| " ".repeat(rng.below(3));
+        let mut sloppy = String::new();
+        for (i, st) in sched.stages.iter().enumerate() {
+            if i > 0 {
+                sloppy.push_str(&format!("{}>>{}", pad(&mut rng), pad(&mut rng)));
+            }
+            sloppy.push_str(&st.canonical());
+        }
+        let parsed = Schedule::parse(&sloppy)
+            .unwrap_or_else(|e| panic!("case {case_no}: `{sloppy}` must parse: {e}"));
+        assert_eq!(parsed.canonical(), canonical, "case {case_no}");
+    }
+}
+
+#[test]
+fn prop_typed_decimal_percents_are_canonical_fixed_points() {
+    // what the user types is what canonical (and the cache slug) says:
+    // every quarter-percent from 0.25% to 100% survives verbatim —
+    // fmt_pct searches for the shortest decimal that re-parses exactly,
+    // instead of printing the v*100 rounding artifact
+    for k in 1..=400u32 {
+        let pct = k as f64 / 4.0;
+        let src = format!("prune-to(theta={pct}%)");
+        let sched = Schedule::parse(&src).unwrap();
+        assert_eq!(
+            sched.canonical(),
+            src,
+            "typed percent {pct}% must round-trip verbatim"
+        );
+        assert_eq!(Schedule::parse(&sched.canonical()).unwrap().stages, sched.stages);
+    }
+}
+
+#[test]
+fn prop_unknown_stages_and_args_are_loud() {
+    let mut rng = Prng::new(0xBAD5);
+    let valid: Vec<&str> = vec!["measure-baseline", "prune", "prune-to", "ptq", "mixed"];
+    for _ in 0..CASES / 3 {
+        // a name that is not a valid stage
+        let junk: String = (0..rng.below(6) + 1)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect();
+        if valid.contains(&junk.as_str())
+            || ["step", "dmax", "theta", "int4", "fp16"].contains(&junk.as_str())
+        {
+            continue;
+        }
+        let e = Schedule::parse(&junk).unwrap_err().to_string();
+        assert!(e.contains("unknown stage"), "`{junk}`: {e}");
+        for name in &valid {
+            assert!(e.contains(name), "`{junk}` error must list `{name}`: {e}");
+        }
+        // a valid stage with a junk keyword argument
+        let e = Schedule::parse(&format!("prune({junk}=1%)"))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("unknown argument") || e.contains("valid"),
+            "`prune({junk}=1%)`: {e}"
+        );
+    }
+}
+
+#[test]
+fn prop_method_specs_lower_to_matching_presets() {
+    let cfg = HqpConfig::default();
+    let cases: Vec<(MethodSpec, &str)> = vec![
+        (MethodSpec::Baseline, "baseline"),
+        (MethodSpec::Q8Only, "q8-only"),
+        (MethodSpec::PruneOnly(50), "p50-only"),
+        (MethodSpec::PruneOnly(30), "p30-only"),
+        (MethodSpec::Hqp, "hqp"),
+        (
+            MethodSpec::HqpWithRanking(RankingMethod::MagnitudeL2),
+            "hqp[mag-l2]",
+        ),
+        (MethodSpec::HqpPruneOnly, "prune-only[fisher]"),
+    ];
+    for (spec, label) in cases {
+        let sched = spec.to_schedule(&cfg);
+        assert_eq!(sched.method_label(), label, "{spec:?}");
+        // the fallback key is exactly the legacy on-disk key
+        let legacy = sched.legacy_key.as_ref().expect("legacy key");
+        assert_eq!(format!("m_{legacy}"), spec.cache_key("m"), "{spec:?}");
+        // a preset's canonical form re-parses to the same stages (so the
+        // deprecated alias and the grammar agree on what runs)
+        let reparsed = Schedule::parse(&sched.canonical()).unwrap();
+        assert_eq!(reparsed.stages, sched.stages, "{spec:?}");
+    }
+    // every legacy --method spelling resolves as a preset
+    for name in ["baseline", "q8", "p50", "prune", "hqp"] {
+        assert!(
+            Schedule::preset(name, &cfg).is_some(),
+            "legacy --method {name} must resolve"
+        );
+    }
+}
+
+#[test]
+fn prop_distinct_schedules_get_distinct_slugs() {
+    let mut rng = Prng::new(0x51CC5);
+    let mut by_slug: std::collections::HashMap<String, String> = std::collections::HashMap::new();
+    for case_no in 0..CASES {
+        let sched = gen_schedule(&mut rng);
+        let canonical = sched.canonical();
+        let slug = sched.cache_slug();
+        assert!(
+            slug.chars().all(|c| c.is_ascii_alphanumeric() || "+-._".contains(c)),
+            "case {case_no}: slug `{slug}` must be filesystem-safe"
+        );
+        if let Some(prev) = by_slug.insert(slug.clone(), canonical.clone()) {
+            assert_eq!(
+                prev, canonical,
+                "case {case_no}: slug `{slug}` collides across distinct schedules"
+            );
+        }
+    }
+}
+
+#[test]
+fn ordering_ablation_is_expressible_and_distinct() {
+    // the acceptance-criterion ordering: quantize-first, inexpressible
+    // under the closed enum, must parse and must key differently from
+    // prune-first
+    let qf = Schedule::parse("ptq >> prune").unwrap();
+    let pf = Schedule::parse("prune >> ptq").unwrap();
+    assert_ne!(qf.stages, pf.stages);
+    assert_ne!(qf.cache_slug(), pf.cache_slug());
+    assert_eq!(qf.method_label(), "ptq >> prune");
+    assert!(qf.legacy_key.is_none(), "ad-hoc schedules have no v1 fallback");
+}

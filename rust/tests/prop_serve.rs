@@ -174,10 +174,22 @@ fn prop_conservation_every_request_accounted_once() {
                 s.swap_ms >= s.swaps as f64 * case.cfg.swap_init_ms - 1e-9,
                 "case {case_no}: each swap pays at least the init overhead"
             );
+            assert!(
+                s.swap_energy_mj > 0.0,
+                "case {case_no}: swap windows charge E = P·L"
+            );
         } else {
             assert_eq!(s.swap_ms, 0.0, "case {case_no}");
+            assert_eq!(s.swap_energy_mj, 0.0, "case {case_no}: no swap, no charge");
             assert_eq!(s.expired_during_swap, 0, "case {case_no}");
         }
+        // the energy total is exactly serving + wake + swap windows
+        let usage_energy: f64 = s.per_variant.iter().map(|u| u.energy_mj).sum();
+        assert!(
+            (s.energy_mj - (usage_energy + s.wake_energy_mj + s.swap_energy_mj)).abs()
+                < 1e-6,
+            "case {case_no}: energy accounting must close"
+        );
         if case.mem_frac.is_none() && !case.cfg.autoscale.enabled() {
             assert!(!s.residency_limited, "case {case_no}");
             assert_eq!(s.rejected_unavailable, 0, "case {case_no}");
@@ -235,6 +247,16 @@ fn prop_autoscale_off_knobs_are_inert() {
         let (knobs, _) = run_case(&case);
         assert_eq!(base, knobs, "case {case_no}: Off knobs must be inert");
         assert_eq!(base.render(), knobs.render(), "case {case_no}");
+        // swap-energy pricing is gated on a swap actually happening: a
+        // no-swap run charges nothing and renders the pre-swap-energy
+        // swaps line (fixed-fleet/no-swap output stays byte-identical)
+        if base.swaps == 0 {
+            assert_eq!(base.swap_energy_mj, 0.0, "case {case_no}");
+            assert!(
+                !base.render().contains("ms swapping, "),
+                "case {case_no}: no-swap render must not grow an energy term"
+            );
+        }
     }
 }
 
