@@ -1,0 +1,95 @@
+//! `cargo bench --bench bench_exec [-- --smoke]` — worker-pool speedup
+//! on a multi-candidate evaluation suite, and the determinism contract
+//! under load.
+//!
+//! Runs without artifacts: the candidates are full fleet simulations
+//! (policy × seed grid over the paper-anchored reference profiles), each
+//! a CPU-bound task of the same shape `hqp run --method suite` fans out.
+//! Emits `BENCH_exec.json` (benchkit [`Report`]):
+//!
+//! * `exec_tasks` / `exec_jobs`     — suite size and worker count used
+//! * `wall_ms_jobs1` / `wall_ms_jobsN` — pool wall-clock, sequential vs
+//!                                    parallel, from the pool's own
+//!                                    counters ([`PoolReport`])
+//! * `exec_speedup`                 — jobs1 / jobsN wall-clock ratio
+//!                                    (acceptance: > 1x whenever the host
+//!                                    has more than one core)
+//! * `exec_busy_over_wall`          — total busy time / wall time at
+//!                                    jobs=N (how well workers overlap)
+//!
+//! The parallel run's results are asserted identical to the sequential
+//! run's, candidate by candidate — the speedup may never cost
+//! determinism.
+
+use hqp::benchkit::{section, Report};
+use hqp::exec::{parallel_map, Jobs};
+use hqp::hwsim::Device;
+use hqp::serve::{
+    reference_fleet, simulate_fleet, trace, ArrivalProcess, Policy, ServeConfig,
+};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = Report::new();
+
+    section("exec — worker pool on a multi-candidate serve suite");
+    let dev = Device::xavier_nx();
+    let fleet = reference_fleet(
+        "resnet18",
+        &[dev.clone()],
+        &["baseline", "q8", "p50", "hqp", "mixed"],
+        8,
+    )
+    .expect("fleet");
+    let slo_ms = fleet.servers[0].variants[0].batch1_ms() * 4.0;
+    let duration_ms = if smoke { 1_500.0 } else { 4_000.0 };
+
+    // the candidate grid: every routing policy under several independent
+    // traces — 12 CPU-bound tasks, no shared state between them
+    let policies = [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest];
+    let seeds: &[u64] = &[3, 7, 11, 19];
+    let candidates: Vec<(Policy, u64)> = policies
+        .iter()
+        .flat_map(|p| seeds.iter().map(move |s| (*p, *s)))
+        .collect();
+    let run_candidate = |(policy, seed): (Policy, u64), _i: usize| {
+        let arrivals =
+            trace::generate(&ArrivalProcess::Poisson { rps: 400.0 }, duration_ms, seed);
+        let cfg = ServeConfig { slo_ms, policy, ..Default::default() };
+        simulate_fleet(&fleet, &arrivals, &cfg)
+    };
+
+    let (seq, seq_pool) =
+        parallel_map(Jobs::one(), candidates.clone(), run_candidate).expect("sequential pool");
+    let jobs = Jobs::available();
+    let (par, par_pool) = parallel_map(jobs, candidates, run_candidate).expect("parallel pool");
+
+    // determinism contract: same candidates, same results, any worker count
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(par.iter()).enumerate() {
+        assert_eq!(a, b, "candidate {i} diverged between jobs=1 and jobs={}", jobs.get());
+    }
+
+    print!("{}", par_pool.render());
+    report.metric("exec_tasks", par_pool.tasks as f64);
+    report.metric("exec_jobs", jobs.get() as f64);
+    report.metric("wall_ms_jobs1", seq_pool.wall_ms);
+    report.metric("wall_ms_jobsN", par_pool.wall_ms);
+    let speedup = seq_pool.wall_ms / par_pool.wall_ms.max(1e-9);
+    report.metric("exec_speedup", speedup);
+    report.metric("exec_busy_over_wall", par_pool.busy_ms_total() / par_pool.wall_ms.max(1e-9));
+    if jobs.get() > 1 {
+        assert!(
+            speedup > 1.0,
+            "acceptance: jobs={} must beat jobs=1 on {} candidates \
+             ({:.1} ms vs {:.1} ms)",
+            jobs.get(),
+            par_pool.tasks,
+            par_pool.wall_ms,
+            seq_pool.wall_ms,
+        );
+    }
+
+    report.write_json("BENCH_exec.json").expect("write BENCH_exec.json");
+    println!("\nwrote BENCH_exec.json");
+}

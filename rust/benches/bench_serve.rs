@@ -28,19 +28,42 @@
 //!                                     the fixed fleet of equal *mean*
 //!                                     capacity, with at least one scale-up
 //!                                     and its wake cost + E = P·L charged)
-//! * `sim_events_per_sec`            — events/s the virtual-time heap
-//!                                     sustains (host-side, no artifacts)
+//! * `wall_ms_*` / `events_per_sec_*`— per-scenario host cost: wall-clock
+//!                                     and simulated events per wall-second
+//!                                     ([`Summary::events`] counts arrivals,
+//!                                     control ticks and every shard-local
+//!                                     pop)
+//! * `sim_events_per_sec`            — events/s the sharded virtual-time
+//!                                     engine sustains (host-side, no
+//!                                     artifacts; a hard floor is asserted)
 //!
 //! Runs without artifacts: fleets come from the paper-anchored reference
 //! profiles, so this bench (like `bench_session --smoke`) always produces
 //! a report in CI.
 
-use hqp::benchkit::{bench, section, Report};
+use hqp::benchkit::{bench, section, time_once, Report};
 use hqp::hwsim::Device;
 use hqp::serve::{
     reference_fleet, simulate_fleet, trace, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy,
     ServeConfig,
 };
+
+/// Every simulation must sustain at least this many simulated events per
+/// wall-clock second — conservative enough for a loaded CI runner, loud
+/// enough to catch an accidentally quadratic event loop.
+const EVENTS_PER_SEC_FLOOR: f64 = 10_000.0;
+
+/// Per-scenario host cost: wall-clock plus virtual-event throughput, with
+/// the floor asserted at the point of measurement.
+fn scenario_cost(report: &mut Report, name: &str, events: u64, wall_ms: f64) {
+    let eps = events as f64 / (wall_ms / 1e3).max(1e-9);
+    report.metric(&format!("wall_ms_{name}"), wall_ms);
+    report.metric(&format!("events_per_sec_{name}"), eps);
+    assert!(
+        eps >= EVENTS_PER_SEC_FLOOR,
+        "scenario {name}: {eps:.0} events/s is below the {EVENTS_PER_SEC_FLOOR:.0} floor"
+    );
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -60,8 +83,10 @@ fn main() {
     let cfg = ServeConfig { slo_ms, policy: Policy::AccFastest, ..Default::default() };
     let arrivals = trace::generate(&ArrivalProcess::Poisson { rps: offered }, duration_ms, 7);
 
-    let s_base = simulate_fleet(&base_fleet, &arrivals, &cfg).expect("baseline sim");
-    let s_hqp = simulate_fleet(&hqp_fleet, &arrivals, &cfg).expect("hqp sim");
+    let (s_base, ms_base) = time_once(|| simulate_fleet(&base_fleet, &arrivals, &cfg));
+    let s_base = s_base.expect("baseline sim");
+    let (s_hqp, ms_hqp) = time_once(|| simulate_fleet(&hqp_fleet, &arrivals, &cfg));
+    let s_hqp = s_hqp.expect("hqp sim");
 
     report.metric("offered_rps", offered);
     report.metric("slo_ms", slo_ms);
@@ -80,6 +105,7 @@ fn main() {
         s_hqp.slo_attainment(),
         s_base.slo_attainment()
     );
+    scenario_cost(&mut report, "matched_load", s_base.events + s_hqp.events, ms_base + ms_hqp);
 
     // ---- full fleet under the accuracy-constrained router -----------------
     section("serve — full variant fleet, acc-fastest router");
@@ -90,7 +116,9 @@ fn main() {
         8,
     )
     .expect("fleet");
-    let s_fleet = simulate_fleet(&fleet, &arrivals, &cfg).expect("fleet sim");
+    let (s_fleet, ms_fleet) = time_once(|| simulate_fleet(&fleet, &arrivals, &cfg));
+    let s_fleet = s_fleet.expect("fleet sim");
+    scenario_cost(&mut report, "full_fleet", s_fleet.events, ms_fleet);
     report.metric("fleet_slo_attain", s_fleet.slo_attainment());
     report.metric("fleet_acc_mix", s_fleet.acc_mix);
     report.metric("fleet_mean_batch", s_fleet.mean_batch);
@@ -118,14 +146,20 @@ fn main() {
     let burst =
         trace::generate(&ArrivalProcess::parse("mmpp", offered).unwrap(), 4_000.0, 13);
     let mut best_static = 0.0f64;
+    let (mut swap_events, mut swap_wall_ms) = (0u64, 0.0f64);
     for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest] {
         let cfg = ServeConfig { slo_ms, policy, ..Default::default() };
-        let s = simulate_fleet(&capped, &burst, &cfg).expect("static sim");
+        let (s, ms) = time_once(|| simulate_fleet(&capped, &burst, &cfg));
+        let s = s.expect("static sim");
         assert_eq!(s.swaps, 0, "static policies never swap");
         best_static = best_static.max(s.slo_attainment());
+        swap_events += s.events;
+        swap_wall_ms += ms;
     }
     let swap_cfg = ServeConfig { slo_ms, policy: Policy::SwapAware, ..Default::default() };
-    let s_swap = simulate_fleet(&capped, &burst, &swap_cfg).expect("swap-aware sim");
+    let (s_swap, ms_swap) = time_once(|| simulate_fleet(&capped, &burst, &swap_cfg));
+    let s_swap = s_swap.expect("swap-aware sim");
+    scenario_cost(&mut report, "swap_aware", swap_events + s_swap.events, swap_wall_ms + ms_swap);
     report.metric("slo_attain_static_best", best_static);
     report.metric("slo_attain_swap_aware", s_swap.slo_attainment());
     report.metric("swap_count", s_swap.swaps as f64);
@@ -171,9 +205,18 @@ fn main() {
         },
         ..Default::default()
     };
-    let s_mean = simulate_fleet(&mean_fleet, &auto_burst, &fixed_cfg).expect("fixed-mean sim");
-    let s_peak = simulate_fleet(&peak_fleet, &auto_burst, &fixed_cfg).expect("fixed-peak sim");
-    let s_auto = simulate_fleet(&peak_fleet, &auto_burst, &auto_cfg).expect("autoscaled sim");
+    let (s_mean, ms_mean) = time_once(|| simulate_fleet(&mean_fleet, &auto_burst, &fixed_cfg));
+    let s_mean = s_mean.expect("fixed-mean sim");
+    let (s_peak, ms_peak) = time_once(|| simulate_fleet(&peak_fleet, &auto_burst, &fixed_cfg));
+    let s_peak = s_peak.expect("fixed-peak sim");
+    let (s_auto, ms_auto) = time_once(|| simulate_fleet(&peak_fleet, &auto_burst, &auto_cfg));
+    let s_auto = s_auto.expect("autoscaled sim");
+    scenario_cost(
+        &mut report,
+        "autoscale",
+        s_mean.events + s_peak.events + s_auto.events,
+        ms_mean + ms_peak + ms_auto,
+    );
     assert!(!s_mean.autoscaled && s_mean.scale_ups == 0, "fixed fleets never scale");
     report.metric("autoscale_offered_rps", cap_one * 2.4);
     report.metric("slo_attain_fixed_mean", s_mean.slo_attainment());
@@ -198,12 +241,20 @@ fn main() {
     let iters = if smoke { 5 } else { 30 };
     let bench_arrivals =
         trace::generate(&ArrivalProcess::Poisson { rps: 400.0 }, 2_000.0, 11);
-    let n_events = bench_arrivals.len() as f64;
+    // the engine's own event census (arrivals + ticks + every shard-local
+    // pop), not just the arrival count — deterministic per seed, so every
+    // iteration processes exactly this many
+    let n_events = simulate_fleet(&fleet, &bench_arrivals, &cfg).unwrap().events as f64;
+    assert!(n_events >= bench_arrivals.len() as f64, "every arrival is an event");
     let stats = bench("simulate_fleet (5 variants, 2s @ 400rps)", 2, iters, || {
         simulate_fleet(&fleet, &bench_arrivals, &cfg).unwrap()
     });
-    // >= 1 event per request (arrival) plus flush/batch-done traffic
-    report.metric("sim_events_per_sec", n_events / (stats.mean_ms / 1e3));
+    let eps = n_events / (stats.mean_ms / 1e3);
+    report.metric("sim_events_per_sec", eps);
+    assert!(
+        eps >= EVENTS_PER_SEC_FLOOR,
+        "hot path: {eps:.0} events/s is below the {EVENTS_PER_SEC_FLOOR:.0} floor"
+    );
     report.push(stats);
 
     report.write_json("BENCH_serve.json").expect("write BENCH_serve.json");

@@ -12,6 +12,7 @@
 //! unless `force` is set.
 
 use crate::error::Result;
+use crate::exec::{parallel_map_init, Jobs, PoolReport};
 use crate::gopt::{optimize, OptimizeOptions};
 use crate::graph::Graph;
 use crate::hqp::sensitivity::per_group_mean;
@@ -176,7 +177,17 @@ pub fn run_method(
     run_schedule(ws, model, &spec.to_schedule(cfg), cfg, devices, force)
 }
 
-/// The paper's full method suite for one model.
+/// The candidates one suite run evaluates, in row order (Tables I/II).
+pub const SUITE_SPECS: [MethodSpec; 4] = [
+    MethodSpec::Baseline,
+    MethodSpec::Q8Only,
+    MethodSpec::PruneOnly(50),
+    MethodSpec::Hqp,
+];
+
+/// The paper's full method suite for one model, evaluated sequentially
+/// on the caller's `Workspace`. Byte-identical to [`run_suite_jobs`] at
+/// any worker count (rows merge in [`SUITE_SPECS`] order either way).
 pub fn run_suite(
     ws: &Workspace,
     model: &str,
@@ -185,15 +196,39 @@ pub fn run_suite(
     force: bool,
 ) -> Result<SuiteResult> {
     let mut rows = Vec::new();
-    for spec in [
-        MethodSpec::Baseline,
-        MethodSpec::Q8Only,
-        MethodSpec::PruneOnly(50),
-        MethodSpec::Hqp,
-    ] {
+    for spec in SUITE_SPECS {
         rows.extend(run_method(ws, model, spec, cfg, devices, force)?);
     }
     Ok(SuiteResult { model: model.to_string(), rows })
+}
+
+/// The paper's full method suite for one model, with schedule candidates
+/// fanned out to up to `jobs` workers ([`crate::exec::parallel_map_init`]).
+///
+/// Each worker opens its own [`Workspace`] on its own thread (PJRT
+/// clients are not `Send`) and keeps its own `Session` device-buffer
+/// cache; CoW `ParamStore` clones make the per-candidate state cheap.
+/// Rows merge in submission ([`SUITE_SPECS`]) order and
+/// [`save_results`] writes atomically, so both the returned
+/// `ResultRow`s and the cache files are byte-identical to [`run_suite`].
+/// The returned [`PoolReport`] carries the per-worker counters
+/// (`hqp run --jobs N` prints it; `bench_exec` asserts the speedup).
+pub fn run_suite_jobs(
+    root: &std::path::Path,
+    model: &str,
+    cfg: &HqpConfig,
+    devices: &[Device],
+    force: bool,
+    jobs: Jobs,
+) -> Result<(SuiteResult, PoolReport)> {
+    let (per_spec, report) = parallel_map_init(
+        jobs,
+        SUITE_SPECS.to_vec(),
+        |_worker| Workspace::open(root),
+        |ws, spec, _i| run_method(ws, model, spec, cfg, devices, force),
+    )?;
+    let rows = per_spec.into_iter().flatten().collect();
+    Ok((SuiteResult { model: model.to_string(), rows }, report))
 }
 
 /// Filter suite rows by device (table rendering helper).

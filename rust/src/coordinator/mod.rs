@@ -7,16 +7,24 @@
 //! [`MethodSpec`] survive as deprecated aliases that lower each legacy
 //! method to its schedule preset.
 //!
-//! The coordinator is deliberately synchronous: the execution budget of
-//! this environment is one CPU core and PJRT executions fully occupy it, so
-//! a thread pool would only add scheduling noise (tokio is additionally
-//! unavailable offline — see Cargo.toml). The design keeps the runner
-//! single-threaded with explicit result caching instead.
+//! Suite candidates are embarrassingly parallel, and [`run_suite_jobs`]
+//! fans them out to a [`crate::exec`] worker pool (`hqp run --jobs N`).
+//! Each worker opens its own [`crate::runtime::Workspace`] on its own
+//! thread — PJRT clients are not `Send`, so per-worker state is *born*
+//! where it runs — and keeps its own `Session` cache over CoW
+//! `ParamStore` clones. Determinism contract (see DESIGN.md
+//! §Parallelism): rows merge in submission order and result-cache files
+//! are written atomically, so `ResultRow` JSON and the cache directory
+//! are byte-identical to the sequential [`run_suite`] at any `--jobs`
+//! (property-tested in `tests/prop_exec.rs`). Result caching stays the
+//! first-line optimization either way: a cached candidate costs one
+//! JSON read no matter how many workers are idle.
 
 pub mod experiments;
 pub mod results;
 
 pub use experiments::{
-    load_schedule_results, run_method, run_schedule, run_suite, MethodSpec, SuiteResult,
+    load_schedule_results, run_method, run_schedule, run_suite, run_suite_jobs, MethodSpec,
+    SuiteResult, SUITE_SPECS,
 };
 pub use results::{load_results, save_results, ResultRow};

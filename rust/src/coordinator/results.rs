@@ -86,7 +86,10 @@ fn report_from_json(v: &Json) -> Result<MethodReport> {
     })
 }
 
-/// Serialize rows to `<dir>/<name>.json`.
+/// Serialize rows to `<dir>/<name>.json`. The write is atomic (unique
+/// temp file + rename), so concurrent suite workers saving different
+/// keys — or even the same key with the same bytes — never leave a
+/// torn file for a reader to trip over.
 pub fn save_results(dir: impl AsRef<Path>, name: &str, rows: &[ResultRow]) -> Result<()> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
@@ -111,9 +114,19 @@ pub fn save_results(dir: impl AsRef<Path>, name: &str, rows: &[ResultRow]) -> Re
             })
             .collect(),
     );
-    std::fs::write(dir.join(format!("{name}.json")), arr.to_string_pretty())?;
+    let tmp = dir.join(format!(
+        ".{name}.{}.{}.tmp",
+        std::process::id(),
+        SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, arr.to_string_pretty())?;
+    std::fs::rename(&tmp, dir.join(format!("{name}.json")))?;
     Ok(())
 }
+
+/// Per-process temp-file disambiguator for [`save_results`] (two workers
+/// saving the same key must not share a temp path).
+static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// Load rows back (None if the file doesn't exist).
 pub fn load_results(dir: impl AsRef<Path>, name: &str) -> Result<Option<Vec<ResultRow>>> {

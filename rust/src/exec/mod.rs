@@ -1,0 +1,368 @@
+//! Deterministic parallel execution core: a message-passing worker pool
+//! over `std::thread` (the crate is offline — no rayon/tokio; see
+//! DESIGN.md §Substitutions and §Parallelism).
+//!
+//! The pool fans a `Vec` of tasks out to N workers over a shared atomic
+//! claim counter (each `fetch_add` is one "message"; an idle worker steals
+//! the next unclaimed index, so the schedule is work-stealing in effect
+//! even though no deques change hands). Determinism contract:
+//!
+//! * **Results merge in submission order.** Slot `i` of the output is
+//!   task `i`'s result regardless of which worker ran it or when it
+//!   finished, so callers observe byte-identical output for any `--jobs`.
+//! * **Errors are deterministic.** Every task runs to completion even if
+//!   an earlier one failed; the pool then reports the error of the
+//!   *lowest-indexed* failing task, so jobs=1 and jobs=N surface the same
+//!   failure.
+//! * **Panics are hard errors, not hangs.** A panicking task is caught at
+//!   the worker boundary (`catch_unwind`) and converted to
+//!   [`Error::Hqp`]; the pool always joins and returns.
+//!
+//! Workers build their state lazily via the `init` closure on the first
+//! task they claim — this is how `coordinator` gives each worker its own
+//! `Workspace` (PJRT clients are not `Send`, so they must be *born* on
+//! the worker thread) and its own CoW `ParamStore`/`Session` cache.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+/// Validated parallelism level (`--jobs N`). Zero is rejected loudly at
+/// construction, so every downstream consumer can rely on `get() >= 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Jobs(usize);
+
+impl Jobs {
+    /// `N >= 1` workers. `N == 0` is a configuration error, not "auto".
+    pub fn new(n: usize) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::Cli(
+                "--jobs 0 is invalid: pass --jobs N with N >= 1, or omit the flag \
+                 to use all available cores"
+                    .into(),
+            ));
+        }
+        Ok(Jobs(n))
+    }
+
+    /// The sequential fast path.
+    pub fn one() -> Self {
+        Jobs(1)
+    }
+
+    /// Available parallelism of the host (>= 1; falls back to 1 when the
+    /// OS refuses to say).
+    pub fn available() -> Self {
+        Jobs(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    pub fn get(self) -> usize {
+        self.0
+    }
+}
+
+/// Per-worker counters, reported so speedups are measured, not asserted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    /// Worker index (0 = the calling thread).
+    pub worker: usize,
+    /// Tasks this worker executed.
+    pub tasks: u64,
+    /// Claim messages sent (successful claims + the final empty probe).
+    pub messages: u64,
+    /// Wall-clock spent inside task bodies.
+    pub busy_ms: f64,
+}
+
+/// What one pool run looked like: shape, wall-clock, per-worker load and
+/// per-task latency (submission order). Threaded into benchkit reports by
+/// the benches and printed by `hqp run --jobs N`.
+#[derive(Clone, Debug, Default)]
+pub struct PoolReport {
+    pub jobs: usize,
+    pub tasks: usize,
+    pub wall_ms: f64,
+    pub workers: Vec<WorkerStats>,
+    /// Wall-clock per task, in submission order.
+    pub task_ms: Vec<f64>,
+}
+
+impl PoolReport {
+    /// Sum of per-task wall-clock — the sequential-equivalent cost. The
+    /// measured speedup is `busy_ms_total / wall_ms`.
+    pub fn busy_ms_total(&self) -> f64 {
+        self.workers.iter().map(|w| w.busy_ms).sum()
+    }
+
+    /// One human line per worker (for `--jobs` verbose output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "pool: {} task(s) on {} worker(s) in {:.1} ms (busy {:.1} ms, {:.2}x)\n",
+            self.tasks,
+            self.jobs,
+            self.wall_ms,
+            self.busy_ms_total(),
+            if self.wall_ms > 0.0 { self.busy_ms_total() / self.wall_ms } else { 1.0 },
+        );
+        for w in &self.workers {
+            out.push_str(&format!(
+                "  worker {}: {} task(s), {} message(s), busy {:.1} ms\n",
+                w.worker, w.tasks, w.messages, w.busy_ms
+            ));
+        }
+        out
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // A poisoned mutex means another task panicked; panics are already
+    // converted to errors, so the data is still well-defined for us.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Run `tasks` through `work` on up to `jobs` workers; results come back
+/// in submission order. `init(worker)` builds per-worker state lazily on
+/// the worker's own thread (first claimed task).
+///
+/// See the module docs for the determinism contract.
+pub fn parallel_map_init<T, R, W, I, F>(
+    jobs: Jobs,
+    tasks: Vec<T>,
+    init: I,
+    work: F,
+) -> Result<(Vec<R>, PoolReport)>
+where
+    T: Send,
+    R: Send,
+    I: Fn(usize) -> Result<W> + Sync,
+    F: Fn(&mut W, T, usize) -> Result<R> + Sync,
+{
+    let n = tasks.len();
+    let workers = jobs.get().min(n).max(1);
+    let started = Instant::now();
+
+    let slots: Vec<Mutex<Option<T>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let task_ms: Vec<Mutex<f64>> = (0..n).map(|_| Mutex::new(0.0)).collect();
+    let stats: Vec<Mutex<WorkerStats>> = (0..workers)
+        .map(|w| Mutex::new(WorkerStats { worker: w, ..WorkerStats::default() }))
+        .collect();
+    let next = AtomicUsize::new(0);
+
+    let run_worker = |w: usize| {
+        let mut state: Option<W> = None;
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            {
+                let mut st = lock_ignore_poison(&stats[w]);
+                st.messages += 1;
+            }
+            if i >= n {
+                break;
+            }
+            let task = lock_ignore_poison(&slots[i])
+                .take()
+                .expect("exec: task slot claimed twice");
+            let t0 = Instant::now();
+            let out: Result<R> = catch_unwind(AssertUnwindSafe(|| {
+                if state.is_none() {
+                    state = Some(init(w)?);
+                }
+                let st = state.as_mut().expect("exec: worker state just initialized");
+                work(st, task, i)
+            }))
+            .unwrap_or_else(|payload| {
+                // The worker state may be torn mid-panic; drop it so the
+                // next task re-initializes from scratch.
+                state = None;
+                Err(Error::hqp(format!(
+                    "exec: task {i} panicked: {}",
+                    panic_message(payload)
+                )))
+            });
+            let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+            *lock_ignore_poison(&task_ms[i]) = elapsed;
+            {
+                let mut st = lock_ignore_poison(&stats[w]);
+                st.tasks += 1;
+                st.busy_ms += elapsed;
+            }
+            *lock_ignore_poison(&results[i]) = Some(out);
+        }
+    };
+
+    if workers == 1 {
+        run_worker(0);
+    } else {
+        std::thread::scope(|scope| {
+            for w in 1..workers {
+                scope.spawn(|| run_worker(w));
+            }
+            run_worker(0);
+        });
+    }
+
+    let report = PoolReport {
+        jobs: workers,
+        tasks: n,
+        wall_ms: started.elapsed().as_secs_f64() * 1e3,
+        workers: stats.into_iter().map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner())).collect(),
+        task_ms: task_ms
+            .into_iter()
+            .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+            .collect(),
+    };
+
+    // Deterministic merge: all tasks ran; report the lowest-indexed error.
+    let mut out = Vec::with_capacity(n);
+    let mut first_err: Option<Error> = None;
+    for (i, slot) in results.into_iter().enumerate() {
+        let r = slot
+            .into_inner()
+            .unwrap_or_else(|p| p.into_inner())
+            .unwrap_or_else(|| panic!("exec: task {i} never produced a result"));
+        match r {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok((out, report)),
+    }
+}
+
+/// Stateless convenience wrapper over [`parallel_map_init`].
+pub fn parallel_map<T, R, F>(jobs: Jobs, tasks: Vec<T>, work: F) -> Result<(Vec<R>, PoolReport)>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T, usize) -> Result<R> + Sync,
+{
+    parallel_map_init(jobs, tasks, |_| Ok(()), |_, t, i| work(t, i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn jobs_zero_is_rejected_loudly() {
+        let err = Jobs::new(0).unwrap_err().to_string();
+        assert!(err.contains("--jobs 0"), "unhelpful error: {err}");
+        assert!(Jobs::new(1).is_ok());
+        assert!(Jobs::available().get() >= 1);
+        assert_eq!(Jobs::one().get(), 1);
+    }
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        for jobs in [1, 2, 4, 8] {
+            let tasks: Vec<u64> = (0..100).collect();
+            let (out, report) =
+                parallel_map(Jobs::new(jobs).unwrap(), tasks, |t, i| {
+                    assert_eq!(t as usize, i);
+                    Ok(t * t)
+                })
+                .unwrap();
+            let want: Vec<u64> = (0..100).map(|t| t * t).collect();
+            assert_eq!(out, want, "jobs={jobs}");
+            assert_eq!(report.tasks, 100);
+            assert_eq!(report.task_ms.len(), 100);
+            let ran: u64 = report.workers.iter().map(|w| w.tasks).sum();
+            assert_eq!(ran, 100, "worker counters must account for every task");
+        }
+    }
+
+    #[test]
+    fn panics_surface_as_hard_errors_not_hangs() {
+        let tasks: Vec<usize> = (0..16).collect();
+        let err = parallel_map(Jobs::new(4).unwrap(), tasks, |t, _| {
+            if t == 7 {
+                panic!("boom {t}");
+            }
+            Ok(t)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("task 7 panicked"), "got: {err}");
+        assert!(err.contains("boom 7"), "panic payload lost: {err}");
+    }
+
+    #[test]
+    fn lowest_indexed_error_wins_whatever_the_schedule() {
+        for jobs in [1, 3, 8] {
+            let tasks: Vec<usize> = (0..32).collect();
+            let err = parallel_map(Jobs::new(jobs).unwrap(), tasks, |t, _| {
+                if t % 10 == 3 {
+                    return Err(Error::hqp(format!("fail {t}")));
+                }
+                Ok(t)
+            })
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("fail 3"), "jobs={jobs}: got {err}");
+        }
+    }
+
+    #[test]
+    fn init_runs_at_most_once_per_worker_and_on_demand() {
+        let inits = AtomicU64::new(0);
+        let tasks: Vec<usize> = (0..64).collect();
+        let (out, report) = parallel_map_init(
+            Jobs::new(4).unwrap(),
+            tasks,
+            |w| {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Ok(w)
+            },
+            |state, t, _| Ok(*state * 1000 + t),
+        )
+        .unwrap();
+        assert_eq!(out.len(), 64);
+        let n_inits = inits.load(Ordering::Relaxed);
+        assert!(n_inits >= 1 && n_inits <= 4, "lazy init ran {n_inits} times");
+        assert!(report.jobs <= 4);
+        // every result is consistent with *some* worker's state
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v % 1000, i);
+        }
+    }
+
+    #[test]
+    fn empty_task_list_is_fine() {
+        let (out, report) = parallel_map(Jobs::new(4).unwrap(), Vec::<u32>::new(), |t, _| Ok(t))
+            .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(report.tasks, 0);
+        assert_eq!(report.jobs, 1, "no tasks -> no extra workers");
+    }
+
+    #[test]
+    fn pool_report_renders_per_worker_lines() {
+        let (_, report) =
+            parallel_map(Jobs::new(2).unwrap(), vec![1u32, 2, 3, 4], |t, _| Ok(t)).unwrap();
+        let s = report.render();
+        assert!(s.contains("worker 0:"), "{s}");
+        assert!(s.contains("4 task(s) on 2 worker(s)"), "{s}");
+        assert!(report.busy_ms_total() >= 0.0);
+    }
+}

@@ -23,6 +23,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod error;
+pub mod exec;
 pub mod formats;
 pub mod gopt;
 pub mod graph;
@@ -45,6 +46,7 @@ pub fn version() -> &'static str {
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
     pub use crate::error::{Error, Result};
+    pub use crate::exec::Jobs;
     pub use crate::gopt::{optimize, OptimizedGraph};
     pub use crate::graph::Graph;
     pub use crate::hqp::{

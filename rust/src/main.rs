@@ -22,6 +22,7 @@
 use hqp::cli::Args;
 use hqp::coordinator::{self, run_method, MethodSpec};
 use hqp::error::Result;
+use hqp::exec::Jobs;
 use hqp::gopt::{optimize, OptimizeOptions};
 use hqp::graph::Graph;
 use hqp::hqp::{cost, mixed, pipeline, HqpConfig, RankingMethod, Schedule};
@@ -38,7 +39,7 @@ const COMMON_FLAGS: &[&str] = &[
 
 /// Flags only `hqp run` accepts (other commands reject them, the same
 /// typo-hardening `--device` gets).
-const RUN_FLAGS: &[&str] = &["schedule", "smoke"];
+const RUN_FLAGS: &[&str] = &["schedule", "smoke", "jobs"];
 
 /// Flags only `hqp serve` accepts (other commands reject them, the same
 /// typo-hardening `--device` gets).
@@ -47,6 +48,7 @@ const SERVE_FLAGS: &[&str] = &[
     "batch-timeout-ms", "queue-cap", "arrivals", "smoke", "mem-mb",
     "swap-init-ms", "link-mbps", "autoscale", "scale-interval-ms",
     "min-servers", "max-servers", "scale-high-water", "scale-low-water",
+    "jobs",
 ];
 
 /// Valid `--device` names (aliases included), shown when the flag is bad.
@@ -61,8 +63,10 @@ commands:
   energy                \u{a7}V-E energy analysis (E = P\u{b7}L)
   overhead              \u{a7}III-C / \u{a7}V-F C_HQP vs C_QAT
   devices               \u{a7}IV-A heterogeneity sweep (Nano vs NX vs ideal)
-  run                   one method (--method hqp|q8|p50|prune|baseline) or any
-                        composable pipeline (--schedule \"prune >> ptq\")
+  run                   one method (--method hqp|q8|p50|prune|baseline), the
+                        full candidate suite (--method suite, parallel with
+                        --jobs), or any composable pipeline
+                        (--schedule \"prune >> ptq\")
   mixed                 \u{a7}VI-A S-guided mixed precision
   serve                 trace-driven serving simulator over deployed variants
   info                  workspace diagnostics
@@ -91,6 +95,11 @@ run options:
   --smoke           with --schedule: parse, validate and print the lowered
                     plan (canonical form, label, cache keys), then exit
                     without touching artifacts (CI smoke)
+  --jobs N          worker threads for --method suite candidate evaluation
+                    (default: all available cores). Results and cache files
+                    are byte-identical at any N; --jobs 0 is rejected. The
+                    pool report (per-worker tasks/messages/busy time) goes
+                    to stderr so stdout diffs clean across worker counts.
 serve options:
   --rps X               offered load, requests/s (default 100; 50 w/ --smoke)
   --slo-ms X            per-request latency SLO (default 50)
@@ -119,6 +128,10 @@ serve options:
                         which the fleet is pressured (default 8)
   --scale-low-water X   queue-depth policy: mark below which the idlest server
                         drains (default 1)
+  --jobs N              worker threads advancing server shards between global
+                        events (default: all available cores; capped at the
+                        fleet size). Summaries are byte-identical at any N;
+                        --jobs 0 is rejected
   --smoke               tiny 1 s trace (CI smoke)";
 
 fn main() {
@@ -160,6 +173,15 @@ fn device_from(args: &Args) -> Result<Device> {
     let name = args.flag_or("device", "xavier-nx");
     Device::by_name(name)
         .ok_or_else(|| hqp::Error::Cli(format!("unknown device {name} (valid: {DEVICE_NAMES})")))
+}
+
+/// `--jobs N` (worker threads). Absent → all available cores; `--jobs 0`
+/// is rejected loudly rather than silently degraded to one worker.
+fn jobs_from(args: &Args) -> Result<Jobs> {
+    match args.flag("jobs") {
+        Some(_) => Jobs::new(args.flag_usize("jobs", 1)?),
+        None => Ok(Jobs::available()),
+    }
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -433,6 +455,9 @@ fn cmd_devices(artifacts: &str, args: &Args) -> Result<()> {
 
 fn cmd_run(artifacts: &str, args: &Args) -> Result<()> {
     let model = args.flag_or("model", "mobilenetv3");
+    // validated up front so `--jobs 0` errors loudly on every run path,
+    // including the --smoke dry-run
+    let jobs = jobs_from(args)?;
     let rows = if let Some(spec_str) = args.flag("schedule") {
         if args.flag("method").is_some() {
             return Err(hqp::Error::Cli(
@@ -462,15 +487,36 @@ fn cmd_run(artifacts: &str, args: &Args) -> Result<()> {
                 "run --smoke is the --schedule dry-run; give it a schedule".into(),
             ));
         }
-        let spec = match args.flag_or("method", "hqp") {
-            "baseline" => MethodSpec::Baseline,
-            "q8" => MethodSpec::Q8Only,
-            "p50" => MethodSpec::PruneOnly(args.flag_usize("theta", 50)? as u32),
-            "prune" => MethodSpec::HqpPruneOnly,
-            "hqp" => MethodSpec::Hqp,
-            other => return Err(hqp::Error::Cli(format!("unknown method {other}"))),
-        };
-        suite_rows(artifacts, model, args, &[spec])?
+        match args.flag_or("method", "hqp") {
+            "suite" => {
+                // the multi-candidate path: all four suite methods, fanned
+                // out across --jobs workers (each with its own Workspace).
+                // The pool report goes to stderr so stdout stays byte-
+                // identical across worker counts.
+                let cfg = config_from(args)?;
+                let (suite, pool) = coordinator::run_suite_jobs(
+                    std::path::Path::new(artifacts),
+                    model,
+                    &cfg,
+                    &Device::all(),
+                    args.switch("force"),
+                    jobs,
+                )?;
+                eprint!("{}", pool.render());
+                suite.rows
+            }
+            other => {
+                let spec = match other {
+                    "baseline" => MethodSpec::Baseline,
+                    "q8" => MethodSpec::Q8Only,
+                    "p50" => MethodSpec::PruneOnly(args.flag_usize("theta", 50)? as u32),
+                    "prune" => MethodSpec::HqpPruneOnly,
+                    "hqp" => MethodSpec::Hqp,
+                    other => return Err(hqp::Error::Cli(format!("unknown method {other}"))),
+                };
+                suite_rows(artifacts, model, args, &[spec])?
+            }
+        }
     };
     let dev = device_from(args)?;
     let reports = coordinator::experiments::reports_for_device(&rows, &dev.name);
@@ -551,6 +597,8 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let smoke = args.switch("smoke");
     let model = args.flag_or("model", "resnet18");
     let dev = device_from(args)?;
+    // validated up front so `--jobs 0` errors before any header is printed
+    let jobs = jobs_from(args)?;
     let policy_name = args.flag_or("policy", "acc-fastest");
     let policy = Policy::parse(policy_name).ok_or_else(|| {
         hqp::Error::Cli(format!(
@@ -697,7 +745,9 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
             );
         }
     }
-    let summary = serve::simulate_fleet(&fleet, &arrivals, &cfg)?;
+    // worker count changes wall-clock only: summaries are byte-identical
+    // at any --jobs (see DESIGN.md §Parallelism)
+    let summary = serve::simulate_fleet_jobs(&fleet, &arrivals, &cfg, jobs)?;
     println!("{}", summary.render());
     Ok(())
 }

@@ -1,0 +1,1242 @@
+//! The sharded discrete-event engine behind [`super::simulate_fleet`].
+//!
+//! ## One event heap per server, barriers at the coupling points
+//!
+//! Every event in the simulator except arrivals and control ticks touches
+//! exactly one server's state (its batcher, residency, lifecycle and
+//! usage accumulators), so the global event heap of the original
+//! single-threaded engine is sharded: each server owns a [`Shard`] with
+//! its own min-heap of [`LocalEvent`]s and its own accumulator. The only
+//! cross-shard coupling is at *global* events — an `Arrival` routes over
+//! a whole-fleet snapshot, a `Control` tick reads whole-fleet signals —
+//! so the coordinator walks the globally-ordered timeline of arrivals and
+//! control ticks and, between consecutive global events, lets every shard
+//! advance independently (in parallel when `jobs > 1`).
+//!
+//! ## The canonical order at a virtual time `T`
+//!
+//! 1. all shard-local events with `time < T` (the inter-barrier window —
+//!    this is the parallel part);
+//! 2. arrivals at `T`, in trace order (routing/admission/inline dispatch);
+//! 3. shard-local events with `time == T`, in (shard index, local
+//!    sequence) order;
+//! 4. the control tick at `T`, with any `ScaleUp`/`DrainStart` decision
+//!    executed inline;
+//! 5. re-drain shard-local events at `T` (zero-duration wake chains,
+//!    `DrainStart → ScaleDown`, swap starts planned at `T`).
+//!
+//! This order is *fixed*: the same algorithm runs for every `jobs` value,
+//! and `jobs` only chooses how many OS threads advance shards in step 1.
+//! Per-shard accumulators merge in shard-index order, latency percentiles
+//! sort first — so the [`super::Summary`] is byte-identical for jobs=1
+//! and jobs=N (property-tested in `tests/prop_serve.rs`).
+//!
+//! Relative to the old single-heap engine, only two tie-break orders
+//! changed, both without observable effect on fixed-fleet runs: (a)
+//! same-time local events on *different* servers now process in shard
+//! order instead of creation order (their state is disjoint and their
+//! accumulator updates commute), and (b) *all* same-time local events now
+//! precede the control tick instead of splitting around it by creation
+//! sequence (the controller is deliberately insensitive to sub-tick
+//! ordering; autoscaling tests assert robust inequalities, not
+//! tick-exact traces).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::error::{Error, Result};
+
+use super::autoscale::{AutoscalePolicy, Lifecycle, ScaleDecision, SignalTracker};
+use super::batcher::{Batcher, EnqueueAction, QueuedReq};
+use super::fleet::{Fleet, Server};
+use super::router::{FleetView, Router, SwapPlan};
+use super::ServeConfig;
+
+/// Per-(server, variant) usage accumulator (merged into
+/// [`super::VariantUsage`] by `build_summary`).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct UsageAcc {
+    pub(crate) completed: u64,
+    pub(crate) batches: u64,
+    pub(crate) occupancy: u64,
+    pub(crate) busy_ms: f64,
+    pub(crate) energy_mj: f64,
+}
+
+/// The merged run result `build_summary` consumes: per-shard accumulators
+/// folded in shard-index order plus the coordinator's global counters.
+#[derive(Default)]
+pub(crate) struct Totals {
+    pub(crate) completed: u64,
+    pub(crate) rejected_full: u64,
+    pub(crate) rejected_noncompliant: u64,
+    pub(crate) rejected_unavailable: u64,
+    pub(crate) expired: u64,
+    pub(crate) expired_during_swap: u64,
+    pub(crate) swaps: u64,
+    pub(crate) swap_ms: f64,
+    pub(crate) swap_energy_mj: f64,
+    pub(crate) scale_ups: u64,
+    pub(crate) scale_downs: u64,
+    pub(crate) wake_ms: f64,
+    pub(crate) wake_energy_mj: f64,
+    /// Sum over scale-ups of (wake-done time − pressure-episode start).
+    pub(crate) reaction_sum_ms: f64,
+    pub(crate) slo_attained: u64,
+    pub(crate) latencies: Vec<f64>,
+    pub(crate) usage: Vec<Vec<UsageAcc>>,
+    pub(crate) makespan_ms: f64,
+    /// Events processed (arrivals + control ticks + scale decisions +
+    /// every shard-local event) — the numerator of events/sec.
+    pub(crate) events: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Shard-local events
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum LocalKind {
+    Flush { variant: usize, token: u64 },
+    BatchDone { variant: usize, reqs: Vec<QueuedReq> },
+    /// Begin the server's pending hot-swap (re-arms itself while a batch
+    /// is still running).
+    SwapStart,
+    /// The swapped-in engine is ready: mark it resident and resume
+    /// dispatch. `started_ms` is when the swap began, so expiry during
+    /// the swap window can be attributed precisely.
+    SwapDone { load: usize, started_ms: f64 },
+    /// The woken server's initial-residency engines are streamed in:
+    /// mark it active and routable.
+    WakeDone,
+    /// A draining server's queue has fully drained: it goes to sleep.
+    ScaleDown,
+}
+
+/// Heap key: virtual time, ties broken by per-shard insertion sequence —
+/// a total order per shard, so each shard's pop order is deterministic
+/// regardless of which worker thread advances it.
+#[derive(Clone, Debug)]
+struct LocalEvent {
+    time_ms: f64,
+    seq: u64,
+    kind: LocalKind,
+}
+
+impl PartialEq for LocalEvent {
+    fn eq(&self, other: &LocalEvent) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for LocalEvent {}
+impl PartialOrd for LocalEvent {
+    fn partial_cmp(&self, other: &LocalEvent) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for LocalEvent {
+    fn cmp(&self, other: &LocalEvent) -> std::cmp::Ordering {
+        self.time_ms
+            .total_cmp(&other.time_ms)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Per-shard accumulator: every count a shard-local handler can touch.
+/// Merged into [`Totals`] in shard-index order.
+#[derive(Default)]
+struct ShardAcc {
+    completed: u64,
+    expired: u64,
+    expired_during_swap: u64,
+    swaps: u64,
+    swap_ms: f64,
+    swap_energy_mj: f64,
+    slo_attained: u64,
+    latencies: Vec<f64>,
+    usage: Vec<UsageAcc>,
+}
+
+/// One server's complete simulation state: batcher, swap/lifecycle flags,
+/// residency, its own event heap and its own accumulator. Everything a
+/// shard-local event touches lives here — the structural guarantee that
+/// inter-barrier windows are data-race-free and order-independent across
+/// shards.
+struct Shard {
+    batcher: Batcher,
+    busy: bool,
+    busy_until: f64,
+    /// A hot-swap is in flight: the device serves nothing until
+    /// `swap_until`.
+    swapping: bool,
+    swap_until: f64,
+    /// A policy-approved swap waiting for the running batch to finish.
+    pending_swap: Option<SwapPlan>,
+    resident: Vec<bool>,
+    lifecycle: Lifecycle,
+    waking: bool,
+    heap: BinaryHeap<Reverse<LocalEvent>>,
+    seq: u64,
+    /// Monotonicity floor: max of processed-event times and barrier times.
+    last_time: f64,
+    /// Max processed-event time (the shard's makespan contribution).
+    max_time: f64,
+    events: u64,
+    acc: ShardAcc,
+}
+
+impl Shard {
+    fn new(srv: &Server, cfg: &ServeConfig, asleep: bool) -> Shard {
+        Shard {
+            batcher: Batcher::new(srv.variants.len(), cfg.max_batch, cfg.batch_timeout_ms),
+            busy: false,
+            busy_until: 0.0,
+            swapping: false,
+            swap_until: 0.0,
+            pending_swap: None,
+            resident: srv.initial_residency(),
+            lifecycle: if asleep { Lifecycle::Asleep } else { Lifecycle::Active },
+            waking: false,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            last_time: f64::NEG_INFINITY,
+            max_time: 0.0,
+            events: 0,
+            acc: ShardAcc {
+                usage: vec![UsageAcc::default(); srv.variants.len()],
+                ..ShardAcc::default()
+            },
+        }
+    }
+
+    fn push(&mut self, time_ms: f64, kind: LocalKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(LocalEvent { time_ms, seq: self.seq, kind }));
+    }
+
+    /// Can this server start a batch right now?
+    fn can_dispatch(&self) -> bool {
+        !self.busy && !self.swapping && self.pending_swap.is_none()
+    }
+
+    /// Is this server fully quiescent (no batch, no swap, nothing
+    /// queued)? The condition a draining server must reach before it may
+    /// sleep.
+    fn quiesced(&self) -> bool {
+        !self.busy && !self.swapping && self.pending_swap.is_none() && self.batcher.is_empty()
+    }
+
+    /// Single place drain completion is decided: if this server is
+    /// draining and fully quiescent, schedule its `ScaleDown` now.
+    fn sleep_if_drained(&mut self, now: f64) {
+        if self.lifecycle == Lifecycle::Draining && self.quiesced() {
+            self.push(now, LocalKind::ScaleDown);
+        }
+    }
+
+    /// Form and launch a batch starting from variant `v`, falling through
+    /// to the resident variant whose head has waited longest when `v`
+    /// turns out empty (or fully expired, or non-resident). Leaves the
+    /// server idle when no servable request remains. Only resident
+    /// variants can form batches — the structural half of the "never
+    /// serve a non-resident engine" invariant (the router enforces the
+    /// other half at admission).
+    fn try_dispatch(&mut self, mut v: usize, now: f64, server: &Server) {
+        loop {
+            if !self.resident[v] {
+                match self.batcher.oldest_allowed(&self.resident) {
+                    Some(next) => {
+                        v = next;
+                        continue;
+                    }
+                    None => {
+                        self.busy = false;
+                        return;
+                    }
+                }
+            }
+            let taken = self.batcher.take_batch(v, now);
+            self.acc.expired += taken.expired.len() as u64;
+            if taken.reqs.is_empty() {
+                match self.batcher.oldest_allowed(&self.resident) {
+                    Some(next) => {
+                        v = next;
+                        continue;
+                    }
+                    None => {
+                        self.busy = false;
+                        return;
+                    }
+                }
+            }
+            let b = taken.reqs.len();
+            let prof = &server.variants[v];
+            let service_ms = prof.batch_ms[b - 1];
+            self.busy = true;
+            self.busy_until = now + service_ms;
+            let u = &mut self.acc.usage[v];
+            u.batches += 1;
+            u.occupancy += b as u64;
+            u.busy_ms += service_ms;
+            u.energy_mj += prof.energy_mj[b - 1];
+            self.push(self.busy_until, LocalKind::BatchDone { variant: v, reqs: taken.reqs });
+            return;
+        }
+    }
+
+    /// Pop and handle every local event with `time < until` (or `<=` when
+    /// `inclusive`), including events scheduled inside the window.
+    /// Virtual-time monotonicity is checked on every pop.
+    fn advance(
+        &mut self,
+        server: &Server,
+        cfg: &ServeConfig,
+        until: f64,
+        inclusive: bool,
+    ) -> Result<()> {
+        loop {
+            let ready = match self.heap.peek() {
+                Some(Reverse(ev)) => {
+                    if inclusive {
+                        ev.time_ms <= until
+                    } else {
+                        ev.time_ms < until
+                    }
+                }
+                None => false,
+            };
+            if !ready {
+                return Ok(());
+            }
+            let Reverse(ev) = self.heap.pop().expect("serve: peeked event vanished");
+            let now = ev.time_ms;
+            if now < self.last_time {
+                return Err(Error::hqp(format!(
+                    "serve: virtual time regressed from {} to {now}",
+                    self.last_time
+                )));
+            }
+            self.last_time = now;
+            self.max_time = self.max_time.max(now);
+            self.events += 1;
+            self.handle(ev.kind, now, server, cfg)?;
+        }
+    }
+
+    fn handle(
+        &mut self,
+        kind: LocalKind,
+        now: f64,
+        server: &Server,
+        cfg: &ServeConfig,
+    ) -> Result<()> {
+        match kind {
+            LocalKind::Flush { variant, token } => {
+                if self.can_dispatch() && self.batcher.flush_live(variant, token) {
+                    self.try_dispatch(variant, now, server);
+                }
+            }
+            LocalKind::BatchDone { variant, reqs } => {
+                for r in &reqs {
+                    self.acc.completed += 1;
+                    self.acc.latencies.push(now - r.arrival_ms);
+                    if now <= r.deadline_ms {
+                        self.acc.slo_attained += 1;
+                    }
+                    self.acc.usage[variant].completed += 1;
+                }
+                self.busy = false;
+                // a pending swap takes the idle slot: SwapStart is queued
+                // at this very timestamp
+                if self.pending_swap.is_none() {
+                    if let Some(next) = self.batcher.oldest_allowed(&self.resident) {
+                        self.try_dispatch(next, now, server);
+                    }
+                }
+                // a draining server whose queue just emptied goes to sleep
+                self.sleep_if_drained(now);
+            }
+            LocalKind::SwapStart => {
+                if self.busy {
+                    // a batch is still running (time tie): retry the
+                    // moment it completes
+                    self.push(self.busy_until, LocalKind::SwapStart);
+                } else if let Some(plan) = self.pending_swap.take() {
+                    if self.resident[plan.load] {
+                        return Err(Error::hqp(
+                            "serve: swap plan loads an already-resident variant",
+                        ));
+                    }
+                    // evict: mark non-resident and drain the queues
+                    let mut displaced: Vec<QueuedReq> = Vec::new();
+                    for &e in &plan.evict {
+                        if !self.resident[e] {
+                            return Err(Error::hqp(
+                                "serve: swap plan evicts a non-resident variant",
+                            ));
+                        }
+                        self.resident[e] = false;
+                        displaced.extend(self.batcher.drain(e));
+                    }
+                    let res_bytes: u64 = server
+                        .variants
+                        .iter()
+                        .enumerate()
+                        .filter(|(v, _)| self.resident[*v])
+                        .map(|(_, p)| p.weight_bytes)
+                        .sum();
+                    if let Some(cap) = server.mem_capacity_bytes {
+                        if res_bytes + server.variants[plan.load].weight_bytes > cap {
+                            return Err(Error::hqp(
+                                "serve: swap plan exceeds device memory capacity",
+                            ));
+                        }
+                    }
+                    // displaced survivors follow the best remaining
+                    // compliant engine, else the incoming one
+                    if !displaced.is_empty() {
+                        let mut target = plan.load;
+                        let mut best = f64::INFINITY;
+                        for (v, p) in server.variants.iter().enumerate() {
+                            if self.resident[v]
+                                && p.compliant(cfg.delta_max)
+                                && p.batch1_ms() < best
+                            {
+                                best = p.batch1_ms();
+                                target = v;
+                            }
+                        }
+                        let mut alive = Vec::with_capacity(displaced.len());
+                        for r in displaced {
+                            if r.deadline_ms < now {
+                                // lapsed before the swap even began: plain
+                                // expiry, the eviction only surfaced it
+                                self.acc.expired += 1;
+                            } else {
+                                alive.push(r);
+                            }
+                        }
+                        self.batcher.requeue(target, alive);
+                    }
+                    let swap_ms = server.swap_in_ms(plan.load, cfg.swap_init_ms);
+                    self.swapping = true;
+                    self.swap_until = now + swap_ms;
+                    self.acc.swaps += 1;
+                    self.acc.swap_ms += swap_ms;
+                    // the swap window is charged energy E = P·L exactly
+                    // like a wake window (W × ms = mJ); zero when no swap
+                    // happens, so no-swap summaries stay byte-identical
+                    self.acc.swap_energy_mj += server.device.power_w * swap_ms;
+                    self.push(
+                        self.swap_until,
+                        LocalKind::SwapDone { load: plan.load, started_ms: now },
+                    );
+                }
+            }
+            LocalKind::SwapDone { load, started_ms } => {
+                self.swapping = false;
+                self.resident[load] = true;
+                // drop lapsed deadlines; only those that lapsed during the
+                // swap window are attributed to the swap (earlier ones
+                // would have expired at the next batch formation anyway)
+                for r in self.batcher.purge_expired(now) {
+                    self.acc.expired += 1;
+                    if r.deadline_ms >= started_ms {
+                        self.acc.expired_during_swap += 1;
+                    }
+                }
+                // the survivors have outwaited any batching timeout:
+                // dispatch immediately
+                if self.can_dispatch() {
+                    if let Some(next) = self.batcher.oldest_allowed(&self.resident) {
+                        self.try_dispatch(next, now, server);
+                    }
+                }
+                // a drain that was waiting on this swap can now complete
+                self.sleep_if_drained(now);
+            }
+            LocalKind::WakeDone => {
+                if self.lifecycle != Lifecycle::Asleep || !self.waking {
+                    return Err(Error::hqp(
+                        "serve: wake completion for a server that was not waking",
+                    ));
+                }
+                self.waking = false;
+                self.lifecycle = Lifecycle::Active;
+                // the wake streamed exactly the initial resident set — any
+                // residency the server had accumulated before sleeping is
+                // gone (its queue was empty, so nothing can strand)
+                self.resident = server.initial_residency();
+            }
+            LocalKind::ScaleDown => {
+                if self.lifecycle != Lifecycle::Draining {
+                    return Err(Error::hqp(
+                        "serve: scale-down for a server that is not draining",
+                    ));
+                }
+                if !self.quiesced() {
+                    return Err(Error::hqp("serve: scale-down on a non-quiescent server"));
+                }
+                self.lifecycle = Lifecycle::Asleep;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The worker gang (jobs > 1)
+// ---------------------------------------------------------------------------
+
+fn lock_shard(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+    // A poisoned mutex means a worker panicked mid-window; the panic is
+    // already recorded as a hard error and the coordinator aborts right
+    // after the window, so the torn state never reaches output.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn record_error(errors: &Mutex<Vec<(usize, Error)>>, shard: usize, e: Error) {
+    errors.lock().unwrap_or_else(|p| p.into_inner()).push((shard, e));
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+#[derive(Clone, Copy)]
+struct GangState {
+    epoch: u64,
+    until: f64,
+    inclusive: bool,
+    /// Spawned workers still running the current epoch.
+    remaining: usize,
+    shutdown: bool,
+}
+
+/// A persistent gang of workers that advances shards through one
+/// inter-barrier window per epoch. The gang lives for the whole
+/// simulation (one `Condvar` round-trip per window instead of a thread
+/// spawn), and the coordinator thread participates in every window.
+struct Gang {
+    state: Mutex<GangState>,
+    go: Condvar,
+    done: Condvar,
+    /// Shard-claim cursor, reset each epoch.
+    next: AtomicUsize,
+}
+
+impl Gang {
+    fn new() -> Gang {
+        Gang {
+            state: Mutex::new(GangState {
+                epoch: 0,
+                until: 0.0,
+                inclusive: false,
+                remaining: 0,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, GangState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Claim shards off the shared cursor and advance each through the
+    /// window. Panics are caught and recorded as hard errors; every
+    /// claimed shard is still visited, so the error set (and therefore
+    /// the lowest-indexed error the coordinator reports) is
+    /// deterministic.
+    fn claim_and_advance(
+        &self,
+        shards: &[Mutex<Shard>],
+        fleet: &Fleet,
+        cfg: &ServeConfig,
+        errors: &Mutex<Vec<(usize, Error)>>,
+        until: f64,
+        inclusive: bool,
+    ) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= shards.len() {
+                return;
+            }
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                lock_shard(&shards[i]).advance(&fleet.servers[i], cfg, until, inclusive)
+            }));
+            match outcome {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => record_error(errors, i, e),
+                Err(payload) => record_error(
+                    errors,
+                    i,
+                    Error::hqp(format!(
+                        "serve: shard {i} worker panicked: {}",
+                        panic_message(payload)
+                    )),
+                ),
+            }
+        }
+    }
+
+    /// Worker thread body: wait for an epoch, run the window, report done.
+    fn worker(
+        &self,
+        shards: &[Mutex<Shard>],
+        fleet: &Fleet,
+        cfg: &ServeConfig,
+        errors: &Mutex<Vec<(usize, Error)>>,
+    ) {
+        let mut seen = 0u64;
+        loop {
+            let (until, inclusive) = {
+                let mut st = self.lock_state();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.epoch != seen {
+                        break;
+                    }
+                    st = self.go.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+                seen = st.epoch;
+                (st.until, st.inclusive)
+            };
+            self.claim_and_advance(shards, fleet, cfg, errors, until, inclusive);
+            let mut st = self.lock_state();
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+
+    /// Run one window across the gang: wake the workers, participate,
+    /// wait for everyone.
+    fn window(
+        &self,
+        shards: &[Mutex<Shard>],
+        fleet: &Fleet,
+        cfg: &ServeConfig,
+        errors: &Mutex<Vec<(usize, Error)>>,
+        spawned: usize,
+        until: f64,
+        inclusive: bool,
+    ) {
+        self.next.store(0, Ordering::Relaxed);
+        {
+            let mut st = self.lock_state();
+            st.until = until;
+            st.inclusive = inclusive;
+            st.remaining = spawned;
+            st.epoch += 1;
+        }
+        self.go.notify_all();
+        self.claim_and_advance(shards, fleet, cfg, errors, until, inclusive);
+        let mut st = self.lock_state();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn shutdown(&self) {
+        self.lock_state().shutdown = true;
+        self.go.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The coordinator: global timeline + barriers
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct GlobalAcc {
+    rejected_full: u64,
+    rejected_noncompliant: u64,
+    rejected_unavailable: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    wake_ms: f64,
+    wake_energy_mj: f64,
+    reaction_sum_ms: f64,
+    /// Global events processed (arrivals, control ticks, scale decisions).
+    events: u64,
+    /// Max barrier time processed (makespan contribution).
+    max_time: f64,
+}
+
+struct Coordinator<'a> {
+    fleet: &'a Fleet,
+    arrivals: &'a [f64],
+    cfg: &'a ServeConfig,
+    shards: &'a [Mutex<Shard>],
+    errors: &'a Mutex<Vec<(usize, Error)>>,
+    gang: Option<&'a Gang>,
+    spawned: usize,
+    gacc: GlobalAcc,
+    // reusable router/controller snapshot buffers
+    backlog: Vec<f64>,
+    queued: Vec<usize>,
+    unavail: Vec<bool>,
+    res_snap: Vec<Vec<bool>>,
+}
+
+impl<'a> Coordinator<'a> {
+    fn new(
+        fleet: &'a Fleet,
+        arrivals: &'a [f64],
+        cfg: &'a ServeConfig,
+        shards: &'a [Mutex<Shard>],
+        errors: &'a Mutex<Vec<(usize, Error)>>,
+        gang: Option<&'a Gang>,
+        spawned: usize,
+    ) -> Coordinator<'a> {
+        let n = fleet.servers.len();
+        Coordinator {
+            fleet,
+            arrivals,
+            cfg,
+            shards,
+            errors,
+            gang,
+            spawned,
+            gacc: GlobalAcc::default(),
+            backlog: vec![0.0; n],
+            queued: vec![0; n],
+            unavail: vec![false; n],
+            res_snap: fleet.servers.iter().map(|srv| vec![false; srv.variants.len()]).collect(),
+        }
+    }
+
+    /// Lowest-shard-index error wins, whatever the thread schedule was.
+    fn check_errors(&self) -> Result<()> {
+        let mut errs = self.errors.lock().unwrap_or_else(|p| p.into_inner());
+        if errs.is_empty() {
+            return Ok(());
+        }
+        errs.sort_by_key(|(i, _)| *i);
+        let (_, e) = errs.remove(0);
+        Err(e)
+    }
+
+    /// Advance every shard through the window — via the gang when one is
+    /// attached, inline in shard order otherwise. Either way every shard
+    /// runs to the window end before errors are reported.
+    fn advance_window(&mut self, until: f64, inclusive: bool) -> Result<()> {
+        let shards = self.shards;
+        match self.gang {
+            Some(g) => g.window(
+                shards, self.fleet, self.cfg, self.errors, self.spawned, until, inclusive,
+            ),
+            None => {
+                for (i, m) in shards.iter().enumerate() {
+                    let mut sh = lock_shard(m);
+                    if let Err(e) = sh.advance(&self.fleet.servers[i], self.cfg, until, inclusive)
+                    {
+                        record_error(self.errors, i, e);
+                    }
+                }
+            }
+        }
+        self.check_errors()
+    }
+
+    /// Serially drain events at exactly `t`, in (shard index, local seq)
+    /// order, raising every shard's monotonicity floor to the barrier
+    /// (any still-queued earlier event is a hard error, same as the old
+    /// global virtual-time check).
+    fn drain_at(&mut self, t: f64) -> Result<()> {
+        let shards = self.shards;
+        for (i, m) in shards.iter().enumerate() {
+            let mut sh = lock_shard(m);
+            sh.last_time = sh.last_time.max(t);
+            if let Err(e) = sh.advance(&self.fleet.servers[i], self.cfg, t, true) {
+                record_error(self.errors, i, e);
+            }
+        }
+        self.check_errors()
+    }
+
+    /// Rebuild the router/controller snapshot arrays: remaining
+    /// busy/swap/wake time plus queued work per server, the availability
+    /// mask (mid-swap, swap-pending, or — under autoscaling — not
+    /// `Active`) and the residency snapshot. With autoscaling off every
+    /// lifecycle is `Active`, so the snapshot is exactly the
+    /// pre-autoscaling one.
+    fn fill_snapshot(&mut self, now: f64) {
+        let shards = self.shards;
+        for (s, m) in shards.iter().enumerate() {
+            let sh = lock_shard(m);
+            let mut est = if sh.busy {
+                (sh.busy_until - now).max(0.0)
+            } else if sh.swapping {
+                (sh.swap_until - now).max(0.0)
+            } else {
+                0.0
+            };
+            for (v, prof) in self.fleet.servers[s].variants.iter().enumerate() {
+                est += sh.batcher.backlog(v) as f64 * prof.batch1_ms();
+            }
+            self.backlog[s] = est;
+            self.queued[s] = sh.batcher.total();
+            self.unavail[s] =
+                sh.swapping || sh.pending_swap.is_some() || sh.lifecycle != Lifecycle::Active;
+            self.res_snap[s].clone_from(&sh.resident);
+        }
+    }
+
+    fn handle_arrival(
+        &mut self,
+        router: &mut Router,
+        req: usize,
+        now: f64,
+        residency_limited: bool,
+    ) -> Result<()> {
+        self.gacc.events += 1;
+        // router input: remaining busy/swap time + queued work estimate,
+        // plus the residency/availability snapshot
+        self.fill_snapshot(now);
+        let decision = {
+            let view = FleetView {
+                now_ms: now,
+                backlog_ms: &self.backlog,
+                queued: &self.queued,
+                resident: &self.res_snap,
+                unavailable: &self.unavail,
+            };
+            router.route(&view)
+        };
+        match decision {
+            None => {
+                if router.num_candidates() == 0 {
+                    self.gacc.rejected_noncompliant += 1;
+                } else {
+                    self.gacc.rejected_unavailable += 1;
+                }
+            }
+            Some(c) => {
+                // routing to an asleep or draining server is structurally
+                // impossible (they are unavailable in the view); reaching
+                // one here is an internal bug
+                let shards = self.shards;
+                let mut sh = lock_shard(&shards[c.server]);
+                if sh.lifecycle != Lifecycle::Active {
+                    return Err(Error::hqp(
+                        "serve: routed to a non-active server (lifecycle bug)",
+                    ));
+                }
+                if sh.batcher.total() >= self.cfg.queue_cap {
+                    self.gacc.rejected_full += 1;
+                } else {
+                    // SLO clock starts at generation: transfer delay eats
+                    // into the budget
+                    let origin = self.arrivals[req];
+                    let qreq = QueuedReq {
+                        id: req,
+                        arrival_ms: origin,
+                        deadline_ms: origin + self.cfg.slo_ms,
+                    };
+                    match sh.batcher.enqueue(c.variant, qreq) {
+                        EnqueueAction::BatchReady => {
+                            if sh.can_dispatch() {
+                                sh.try_dispatch(c.variant, now, &self.fleet.servers[c.server]);
+                            }
+                        }
+                        EnqueueAction::ArmFlush(token) => {
+                            if sh.can_dispatch() {
+                                sh.push(
+                                    now + self.cfg.batch_timeout_ms,
+                                    LocalKind::Flush { variant: c.variant, token },
+                                );
+                            }
+                        }
+                        EnqueueAction::Queued => {}
+                    }
+                }
+            }
+        }
+        // hot-swap planning over the same snapshot: only meaningful under
+        // capped memory (static policies never plan; the guard also keeps
+        // the unlimited path's event stream bit-exact)
+        if residency_limited {
+            let plan = {
+                let view = FleetView {
+                    now_ms: now,
+                    backlog_ms: &self.backlog,
+                    queued: &self.queued,
+                    resident: &self.res_snap,
+                    unavailable: &self.unavail,
+                };
+                router.plan_swap(&view)
+            };
+            if let Some(plan) = plan {
+                let sv = plan.server;
+                let shards = self.shards;
+                let mut sh = lock_shard(&shards[sv]);
+                // one swap per server at a time is part of the
+                // RoutePolicy contract — a plan for a server that is
+                // already swapping is a policy bug
+                if sh.swapping || sh.pending_swap.is_some() {
+                    return Err(Error::hqp(
+                        "serve: swap plan targets a server with a swap in flight",
+                    ));
+                }
+                let at = if sh.busy { sh.busy_until } else { now };
+                sh.pending_swap = Some(plan);
+                sh.push(at, LocalKind::SwapStart);
+            }
+        }
+        Ok(())
+    }
+
+    fn scale_up(&mut self, sv: usize, since_ms: f64, now: f64) -> Result<()> {
+        let shards = self.shards;
+        let mut sh = lock_shard(&shards[sv]);
+        if sh.lifecycle != Lifecycle::Asleep || sh.waking {
+            return Err(Error::hqp("serve: scale-up targets a server that is not asleep"));
+        }
+        if !sh.batcher.is_empty() {
+            return Err(Error::hqp("serve: asleep server has queued work"));
+        }
+        sh.waking = true;
+        // wake cost priced like a cold swap: the initial resident set's
+        // weight bytes streamed over DRAM bandwidth + init, with
+        // E = P·L charged for the window
+        let srv = &self.fleet.servers[sv];
+        let bytes: u64 = srv
+            .variants
+            .iter()
+            .zip(srv.initial_residency())
+            .filter(|(_, r)| *r)
+            .map(|(v, _)| v.weight_bytes)
+            .sum();
+        let wake = srv.device.swap_in_ms(bytes, self.cfg.swap_init_ms);
+        self.gacc.scale_ups += 1;
+        self.gacc.wake_ms += wake;
+        self.gacc.wake_energy_mj += srv.device.power_w * wake;
+        self.gacc.reaction_sum_ms += now + wake - since_ms;
+        self.gacc.events += 1;
+        sh.push(now + wake, LocalKind::WakeDone);
+        Ok(())
+    }
+
+    fn drain_start(&mut self, sv: usize, now: f64) -> Result<()> {
+        let shards = self.shards;
+        let mut sh = lock_shard(&shards[sv]);
+        if sh.lifecycle != Lifecycle::Active {
+            return Err(Error::hqp("serve: drain targets a non-active server"));
+        }
+        sh.lifecycle = Lifecycle::Draining;
+        self.gacc.scale_downs += 1;
+        self.gacc.events += 1;
+        // finish the queue as fast as the device allows: batch timeouts
+        // are bypassed from here on
+        if sh.can_dispatch() {
+            if let Some(next) = sh.batcher.oldest_allowed(&sh.resident) {
+                sh.try_dispatch(next, now, &self.fleet.servers[sv]);
+            }
+        }
+        sh.sleep_if_drained(now);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_control(
+        &mut self,
+        router: &mut Router,
+        scaler: Option<&mut Box<dyn AutoscalePolicy>>,
+        tracker: &mut SignalTracker,
+        now: f64,
+        max_active: usize,
+    ) -> Result<()> {
+        self.gacc.events += 1;
+        let Some(ctrl) = scaler else {
+            return Err(Error::hqp("serve: control tick without a scale policy"));
+        };
+        let _ = router; // the controller sees the same view type the router does
+        self.fill_snapshot(now);
+        // whole-fleet signals: lifecycle census, queued work on active
+        // servers, and the cumulative outcome counters (u64 sums over
+        // shards — order-independent)
+        let n = self.fleet.servers.len();
+        let mut lifecycles = Vec::with_capacity(n);
+        let mut wakings = Vec::with_capacity(n);
+        let mut queued_active = 0usize;
+        let mut completed = 0u64;
+        let mut expired = 0u64;
+        let mut slo_attained = 0u64;
+        {
+            let shards = self.shards;
+            for m in shards.iter() {
+                let sh = lock_shard(m);
+                lifecycles.push(sh.lifecycle);
+                wakings.push(sh.waking);
+                if sh.lifecycle == Lifecycle::Active {
+                    queued_active += sh.batcher.total();
+                }
+                completed += sh.acc.completed;
+                expired += sh.acc.expired;
+                slo_attained += sh.acc.slo_attained;
+            }
+        }
+        let n_active = lifecycles.iter().filter(|&&l| l == Lifecycle::Active).count();
+        let n_waking = wakings.iter().filter(|&&w| w).count();
+        let n_draining = lifecycles.iter().filter(|&&l| l == Lifecycle::Draining).count();
+        let n_asleep = lifecycles
+            .iter()
+            .zip(&wakings)
+            .filter(|(&l, &w)| l == Lifecycle::Asleep && !w)
+            .count();
+        let outcomes = completed
+            + expired
+            + self.gacc.rejected_full
+            + self.gacc.rejected_noncompliant
+            + self.gacc.rejected_unavailable;
+        let sig = tracker.tick(
+            now,
+            outcomes,
+            slo_attained,
+            queued_active,
+            n_active,
+            n_waking,
+            n_draining,
+            n_asleep,
+        );
+        let decision = {
+            let view = FleetView {
+                now_ms: now,
+                backlog_ms: &self.backlog,
+                queued: &self.queued,
+                resident: &self.res_snap,
+                unavailable: &self.unavail,
+            };
+            ctrl.decide(&view, &sig)
+        };
+        match decision {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Up { since_ms } => {
+                // committed capacity = active + waking + draining (a
+                // draining server still consumes its slot until it
+                // sleeps); wake the lowest-index sleeping server if the
+                // bound allows
+                if n_active + n_waking + n_draining < max_active {
+                    if let Some(sv) =
+                        (0..n).find(|&s| lifecycles[s] == Lifecycle::Asleep && !wakings[s])
+                    {
+                        self.scale_up(sv, since_ms, now)?;
+                    }
+                }
+            }
+            ScaleDecision::Down => {
+                // drain the idlest active server (lowest backlog, ties to
+                // the higher index so server 0 drains last)
+                if n_active > self.cfg.autoscale.min_active {
+                    let mut pick = None::<(f64, usize)>;
+                    for s in 0..n {
+                        if lifecycles[s] != Lifecycle::Active {
+                            continue;
+                        }
+                        let better = match pick {
+                            None => true,
+                            Some((b, ps)) => {
+                                self.backlog[s] < b || (self.backlog[s] == b && s > ps)
+                            }
+                        };
+                        if better {
+                            pick = Some((self.backlog[s], s));
+                        }
+                    }
+                    if let Some((_, sv)) = pick {
+                        self.drain_start(sv, now)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Walk the global timeline (arrivals + control ticks), advancing
+    /// shards between barriers and applying the canonical same-time order
+    /// documented in the module docs.
+    fn run(
+        mut self,
+        auto: bool,
+        max_active: usize,
+        residency_limited: bool,
+        transfer_ms: f64,
+    ) -> Result<GlobalAcc> {
+        let cfg = self.cfg;
+        let mut router = Router::new(self.fleet, cfg.delta_max, cfg.policy, cfg.swap_init_ms);
+        let mut scaler = cfg.autoscale.policy.build(&cfg.autoscale);
+        let mut tracker = SignalTracker::new();
+        // the control plane runs for the duration of the offered trace;
+        // tick times come from the same accumulating addition (now +
+        // interval) the old self-re-arming Control event used, so the
+        // tick schedule is bit-exact
+        let control_end = if auto {
+            self.arrivals.last().map(|&last| last + transfer_ms)
+        } else {
+            None
+        };
+        let mut next_tick = match control_end {
+            Some(end) if cfg.autoscale.interval_ms <= end => Some(cfg.autoscale.interval_ms),
+            _ => None,
+        };
+        let mut ai = 0usize;
+
+        loop {
+            let ta = if ai < self.arrivals.len() {
+                Some(self.arrivals[ai] + transfer_ms)
+            } else {
+                None
+            };
+            let t = match (ta, next_tick) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(c)) => c,
+                (Some(a), Some(c)) => a.min(c),
+            };
+            // 1. the inter-barrier window: everything strictly before t
+            self.advance_window(t, false)?;
+            // at least one global event processes at t
+            self.gacc.max_time = self.gacc.max_time.max(t);
+            // 2. arrivals at t, in trace order
+            if ta == Some(t) {
+                while ai < self.arrivals.len() && self.arrivals[ai] + transfer_ms == t {
+                    self.handle_arrival(&mut router, ai, t, residency_limited)?;
+                    ai += 1;
+                }
+            }
+            // 3. local events at exactly t, (shard, local seq) order
+            self.drain_at(t)?;
+            // 4. + 5. the control tick, then its same-time consequences
+            if next_tick == Some(t) {
+                self.handle_control(&mut router, scaler.as_mut(), &mut tracker, t, max_active)?;
+                next_tick = match control_end {
+                    Some(end) if t + cfg.autoscale.interval_ms <= end => {
+                        Some(t + cfg.autoscale.interval_ms)
+                    }
+                    _ => None,
+                };
+                self.drain_at(t)?;
+            }
+        }
+        // drain everything scheduled after the last global event
+        self.advance_window(f64::INFINITY, true)?;
+        Ok(self.gacc)
+    }
+}
+
+/// Run the sharded simulation. `jobs >= 1` is the worker-thread budget
+/// (validated by the caller); the event order and every accumulator merge
+/// are identical for all values — `jobs` only sets how many OS threads
+/// advance shards inside the inter-barrier windows.
+pub(crate) fn run(
+    fleet: &Fleet,
+    arrivals: &[f64],
+    cfg: &ServeConfig,
+    jobs: usize,
+) -> Result<Totals> {
+    let auto = cfg.autoscale.enabled();
+    let max_active = cfg.autoscale.max_active.min(fleet.servers.len());
+    let residency_limited = fleet.residency_limited();
+    // per-request uplink transfer delay (0 with an infinite link, keeping
+    // the arrival schedule bit-exact)
+    let transfer_ms = if cfg.link_mbps.is_finite() {
+        fleet.input_bytes() as f64 * 8.0 / (cfg.link_mbps * 1e6) * 1e3
+    } else {
+        0.0
+    };
+
+    // lifecycle: with autoscaling, the first min_active servers start
+    // awake and the rest asleep; without it, everyone is permanently
+    // Active and no scale machinery ever runs
+    let shards: Vec<Mutex<Shard>> = fleet
+        .servers
+        .iter()
+        .enumerate()
+        .map(|(s, srv)| Mutex::new(Shard::new(srv, cfg, auto && s >= cfg.autoscale.min_active)))
+        .collect();
+    let errors: Mutex<Vec<(usize, Error)>> = Mutex::new(Vec::new());
+
+    // one worker per shard is the useful maximum; below two total workers
+    // the gang is pure overhead and the coordinator advances shards inline
+    let spawned = jobs.min(fleet.servers.len()).saturating_sub(1);
+    let gacc = if spawned == 0 {
+        Coordinator::new(fleet, arrivals, cfg, &shards, &errors, None, 0).run(
+            auto,
+            max_active,
+            residency_limited,
+            transfer_ms,
+        )?
+    } else {
+        let gang = Gang::new();
+        std::thread::scope(|scope| {
+            for _ in 0..spawned {
+                scope.spawn(|| gang.worker(&shards, fleet, cfg, &errors));
+            }
+            let r = Coordinator::new(fleet, arrivals, cfg, &shards, &errors, Some(&gang), spawned)
+                .run(auto, max_active, residency_limited, transfer_ms);
+            gang.shutdown();
+            r
+        })?
+    };
+
+    // every queue must have drained: the timeline only ends once no
+    // flush, batch-done or swap event is pending anywhere, so a leftover
+    // request means something routed to a queue residency could never
+    // serve
+    let shards: Vec<Shard> = shards
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .collect();
+    if shards.iter().any(|sh| !sh.batcher.is_empty()) {
+        return Err(Error::hqp(
+            "serve: requests stranded in a queue at end of trace (residency routing bug)",
+        ));
+    }
+
+    // deterministic merge: per-shard accumulators fold in shard-index
+    // order for every jobs value (latencies are re-sorted downstream)
+    let mut totals = Totals {
+        rejected_full: gacc.rejected_full,
+        rejected_noncompliant: gacc.rejected_noncompliant,
+        rejected_unavailable: gacc.rejected_unavailable,
+        scale_ups: gacc.scale_ups,
+        scale_downs: gacc.scale_downs,
+        wake_ms: gacc.wake_ms,
+        wake_energy_mj: gacc.wake_energy_mj,
+        reaction_sum_ms: gacc.reaction_sum_ms,
+        makespan_ms: gacc.max_time,
+        events: gacc.events,
+        usage: Vec::with_capacity(shards.len()),
+        ..Totals::default()
+    };
+    for sh in shards {
+        totals.completed += sh.acc.completed;
+        totals.expired += sh.acc.expired;
+        totals.expired_during_swap += sh.acc.expired_during_swap;
+        totals.swaps += sh.acc.swaps;
+        totals.swap_ms += sh.acc.swap_ms;
+        totals.swap_energy_mj += sh.acc.swap_energy_mj;
+        totals.slo_attained += sh.acc.slo_attained;
+        totals.latencies.extend(sh.acc.latencies);
+        totals.usage.push(sh.acc.usage);
+        totals.events += sh.events;
+        totals.makespan_ms = totals.makespan_ms.max(sh.max_time);
+    }
+    Ok(totals)
+}

@@ -11,17 +11,25 @@
 //! device × variant per request subject to the paper's Δ_max accuracy
 //! constraint.
 //!
-//! ## Design: a virtual-time event heap, not threads
+//! ## Design: a sharded virtual-time event engine
 //!
-//! The simulator is deliberately single-threaded (the same documented
-//! one-core constraint as [`crate::coordinator`]): a discrete-event loop
-//! over a virtual-time min-heap. Service times come from the batched
-//! roofline ([`crate::hwsim::simulate_batch`]), so no wall-clock time is
-//! spent "serving" — a 10-minute trace simulates in milliseconds — and
-//! every run is exactly reproducible: the same `(fleet, trace, config)`
-//! triple produces a byte-identical [`Summary`]. That determinism is what
-//! makes the event-loop conservation laws property-testable
-//! (`tests/prop_serve.rs`).
+//! The simulator is a discrete-event walk over virtual time with one
+//! event heap *per server* (`engine`, this module's private core):
+//! arrivals and autoscale control ticks form a global timeline, and
+//! between consecutive global events every server advances its own
+//! shard-local events (batch flushes and completions, swaps, wakes)
+//! independently — in parallel when [`simulate_fleet_jobs`] is given
+//! more than one worker (`hqp serve --jobs N`). The event order is fixed
+//! by construction: the *same* canonical order runs at every `jobs`
+//! value, and `jobs` only chooses how many OS threads advance shards
+//! between barriers, so the same `(fleet, trace, config)` triple
+//! produces a byte-identical [`Summary`] at any parallelism. That
+//! determinism is what makes the conservation laws property-testable
+//! (`tests/prop_serve.rs`, including the jobs=1 ≡ jobs=N contract).
+//! Service times come from the batched roofline
+//! ([`crate::hwsim::simulate_batch`]), so no wall-clock time is spent
+//! "serving" — a 10-minute trace simulates in milliseconds. See
+//! `rust/DESIGN.md` §Parallelism for the full determinism contract.
 //!
 //! ## Request lifecycle
 //!
@@ -80,6 +88,7 @@
 
 pub mod autoscale;
 pub mod batcher;
+mod engine;
 pub mod fleet;
 pub mod router;
 pub mod trace;
@@ -92,13 +101,9 @@ pub use fleet::{fleet_for, reference_fleet, workspace_fleet, Fleet, Server, Vari
 pub use router::{Candidate, FleetView, Policy, RouteCtx, RoutePolicy, Router, SwapPlan};
 pub use trace::ArrivalProcess;
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use crate::error::{Error, Result};
+use crate::exec::Jobs;
 use crate::report::Table;
-
-use batcher::{Batcher, EnqueueAction, QueuedReq};
 
 /// Serving-simulation parameters.
 #[derive(Clone, Debug)]
@@ -209,6 +214,11 @@ pub struct Summary {
     pub p99_ms: f64,
     /// Virtual time of the last event.
     pub makespan_ms: f64,
+    /// Simulation events processed (arrivals, control ticks, scale
+    /// decisions and every shard-local event) — the numerator of the
+    /// events/sec figure `bench_serve` reports. Not rendered (so
+    /// [`Summary::render`] stays byte-compatible with earlier releases).
+    pub events: u64,
     /// Goodput: completions per second of makespan.
     pub throughput_rps: f64,
     /// Mean dispatched batch size across the fleet.
@@ -346,264 +356,29 @@ impl Summary {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Event machinery
-// ---------------------------------------------------------------------------
-
-#[derive(Clone, Debug)]
-enum EventKind {
-    Arrival { req: usize },
-    Flush { server: usize, variant: usize, token: u64 },
-    BatchDone { server: usize, variant: usize, reqs: Vec<QueuedReq> },
-    /// Begin the server's pending hot-swap (re-arms itself while a batch
-    /// is still running).
-    SwapStart { server: usize },
-    /// The swapped-in engine is ready: mark it resident and resume
-    /// dispatch. `started_ms` is when the swap began, so expiry during
-    /// the swap window can be attributed precisely.
-    SwapDone { server: usize, load: usize, started_ms: f64 },
-    /// Autoscaling control tick (scheduled every
-    /// [`AutoscaleConfig::interval_ms`] for the duration of the trace;
-    /// never scheduled with autoscaling off).
-    Control,
-    /// Controller decision: wake this asleep server. `since_ms` is when
-    /// the triggering pressure episode began (reaction-time accounting).
-    ScaleUp { server: usize, since_ms: f64 },
-    /// The woken server's initial-residency engines are streamed in:
-    /// mark it active and routable.
-    WakeDone { server: usize },
-    /// Controller decision: stop routing to this server; it finishes its
-    /// queue, then sleeps.
-    DrainStart { server: usize },
-    /// A draining server's queue has fully drained: it goes to sleep.
-    ScaleDown { server: usize },
-}
-
-/// Heap key: virtual time, ties broken by insertion sequence — a total
-/// order, so the pop order (and therefore the whole simulation) is
-/// deterministic.
-#[derive(Clone, Debug)]
-struct Event {
-    time_ms: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Event) -> bool {
-        self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Event) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Event) -> std::cmp::Ordering {
-        self.time_ms
-            .total_cmp(&other.time_ms)
-            .then(self.seq.cmp(&other.seq))
-    }
-}
-
-struct ServerState {
-    batcher: Batcher,
-    busy: bool,
-    busy_until: f64,
-    /// A hot-swap is in flight: the device serves nothing until
-    /// `swap_until`.
-    swapping: bool,
-    swap_until: f64,
-    /// A policy-approved swap waiting for the running batch to finish.
-    pending_swap: Option<SwapPlan>,
-}
-
-impl ServerState {
-    /// Can this server start a batch right now?
-    fn can_dispatch(&self) -> bool {
-        !self.busy && !self.swapping && self.pending_swap.is_none()
-    }
-}
-
-#[derive(Clone, Copy, Debug, Default)]
-struct UsageAcc {
-    completed: u64,
-    batches: u64,
-    occupancy: u64,
-    busy_ms: f64,
-    energy_mj: f64,
-}
-
-#[derive(Default)]
-struct Acc {
-    completed: u64,
-    rejected_full: u64,
-    rejected_noncompliant: u64,
-    rejected_unavailable: u64,
-    expired: u64,
-    expired_during_swap: u64,
-    swaps: u64,
-    swap_ms: f64,
-    swap_energy_mj: f64,
-    scale_ups: u64,
-    scale_downs: u64,
-    wake_ms: f64,
-    wake_energy_mj: f64,
-    /// Sum over scale-ups of (wake-done time − pressure-episode start).
-    reaction_sum_ms: f64,
-    slo_attained: u64,
-    latencies: Vec<f64>,
-    usage: Vec<Vec<UsageAcc>>,
-}
-
-impl Acc {
-    /// Cumulative outcome count (completed + every rejection kind +
-    /// expired) — the control plane's window-attainment denominator.
-    fn outcomes(&self) -> u64 {
-        self.completed
-            + self.rejected_full
-            + self.rejected_noncompliant
-            + self.rejected_unavailable
-            + self.expired
-    }
-}
-
-/// Is this server fully quiescent (no batch, no swap, nothing queued)?
-/// The condition a draining server must reach before it may sleep.
-fn quiesced(st: &ServerState) -> bool {
-    !st.busy && !st.swapping && st.pending_swap.is_none() && st.batcher.is_empty()
-}
-
-/// Single place drain completion is decided: if `server` is draining and
-/// fully quiescent, schedule its `ScaleDown` now. Called from every
-/// handler after which a draining server may have gone quiet
-/// (`DrainStart` itself, `BatchDone`, `SwapDone`).
-fn sleep_if_drained(
-    lifecycle: &[Lifecycle],
-    state: &[ServerState],
-    server: usize,
-    now: f64,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
-) {
-    if lifecycle[server] == Lifecycle::Draining && quiesced(&state[server]) {
-        *seq += 1;
-        heap.push(Reverse(Event {
-            time_ms: now,
-            seq: *seq,
-            kind: EventKind::ScaleDown { server },
-        }));
-    }
-}
-
-/// Rebuild the router/controller snapshot arrays: remaining busy/swap/wake
-/// time plus queued work per server, and the availability mask (mid-swap,
-/// swap-pending, or — under autoscaling — not `Active`). With autoscaling
-/// off every lifecycle is `Active` and `wake_until` is never armed, so
-/// the snapshot is exactly the pre-autoscaling one.
-fn fill_snapshot(
-    fleet: &Fleet,
-    state: &[ServerState],
-    lifecycle: &[Lifecycle],
-    now: f64,
-    backlog: &mut [f64],
-    queued: &mut [usize],
-    unavail: &mut [bool],
-) {
-    for (s, st) in state.iter().enumerate() {
-        let mut est = if st.busy {
-            (st.busy_until - now).max(0.0)
-        } else if st.swapping {
-            (st.swap_until - now).max(0.0)
-        } else {
-            0.0
-        };
-        for (v, prof) in fleet.servers[s].variants.iter().enumerate() {
-            est += st.batcher.backlog(v) as f64 * prof.batch1_ms();
-        }
-        backlog[s] = est;
-        queued[s] = st.batcher.total();
-        unavail[s] =
-            st.swapping || st.pending_swap.is_some() || lifecycle[s] != Lifecycle::Active;
-    }
-}
-
-/// Form and launch a batch on server `s` starting from variant `v`,
-/// falling through to the resident variant whose head has waited longest
-/// when `v` turns out empty (or fully expired, or non-resident). Leaves
-/// the server idle when no servable request remains. Only resident
-/// variants can form batches — the structural half of the "never serve a
-/// non-resident engine" invariant (the router enforces the other half at
-/// admission).
-#[allow(clippy::too_many_arguments)]
-fn try_dispatch(
-    s: usize,
-    mut v: usize,
-    now: f64,
-    st: &mut ServerState,
-    server: &Server,
-    resident: &[bool],
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
-    acc: &mut Acc,
-) {
-    loop {
-        if !resident[v] {
-            match st.batcher.oldest_allowed(resident) {
-                Some(next) => {
-                    v = next;
-                    continue;
-                }
-                None => {
-                    st.busy = false;
-                    return;
-                }
-            }
-        }
-        let taken = st.batcher.take_batch(v, now);
-        acc.expired += taken.expired.len() as u64;
-        if taken.reqs.is_empty() {
-            match st.batcher.oldest_allowed(resident) {
-                Some(next) => {
-                    v = next;
-                    continue;
-                }
-                None => {
-                    st.busy = false;
-                    return;
-                }
-            }
-        }
-        let b = taken.reqs.len();
-        let prof = &server.variants[v];
-        let service_ms = prof.batch_ms[b - 1];
-        st.busy = true;
-        st.busy_until = now + service_ms;
-        let u = &mut acc.usage[s][v];
-        u.batches += 1;
-        u.occupancy += b as u64;
-        u.busy_ms += service_ms;
-        u.energy_mj += prof.energy_mj[b - 1];
-        *seq += 1;
-        heap.push(Reverse(Event {
-            time_ms: st.busy_until,
-            seq: *seq,
-            kind: EventKind::BatchDone { server: s, variant: v, reqs: taken.reqs },
-        }));
-        return;
-    }
-}
-
 /// Replay `arrivals` (sorted ms timestamps from [`trace::generate`])
-/// against `fleet` under `cfg`. Virtual-time monotonicity is checked on
+/// against `fleet` under `cfg`, single-threaded. Equivalent to
+/// [`simulate_fleet_jobs`] with one worker — and, by the determinism
+/// contract, byte-identical to it at any worker count.
+pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Result<Summary> {
+    simulate_fleet_jobs(fleet, arrivals, cfg, Jobs::one())
+}
+
+/// Replay `arrivals` against `fleet` under `cfg` with up to `jobs`
+/// worker threads advancing server shards between global events (see the
+/// module docs; `jobs` caps at the server count, so a single-server
+/// fleet always runs inline). Virtual-time monotonicity is checked on
 /// every event, swap plans are validated against live residency and
 /// capacity, and a stranded queue at the end of the trace is reported —
 /// each is an internal invariant violation that errors out rather than
 /// silently producing garbage (so an `Ok` return is itself the proof the
 /// residency and conservation invariants held).
-pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Result<Summary> {
+pub fn simulate_fleet_jobs(
+    fleet: &Fleet,
+    arrivals: &[f64],
+    cfg: &ServeConfig,
+    jobs: Jobs,
+) -> Result<Summary> {
     if fleet.servers.is_empty() {
         return Err(Error::hqp("serve: empty fleet"));
     }
@@ -654,580 +429,21 @@ pub fn simulate_fleet(fleet: &Fleet, arrivals: &[f64], cfg: &ServeConfig) -> Res
     }
 
     let residency_limited = fleet.residency_limited();
-    // per-request uplink transfer delay (0 with an infinite link, keeping
-    // the arrival schedule bit-exact)
-    let transfer_ms = if cfg.link_mbps.is_finite() {
-        fleet.input_bytes() as f64 * 8.0 / (cfg.link_mbps * 1e6) * 1e3
-    } else {
-        0.0
-    };
-
-    let mut router = Router::new(fleet, cfg.delta_max, cfg.policy, cfg.swap_init_ms);
-    let mut state: Vec<ServerState> = fleet
-        .servers
-        .iter()
-        .map(|srv| ServerState {
-            batcher: Batcher::new(srv.variants.len(), cfg.max_batch, cfg.batch_timeout_ms),
-            busy: false,
-            busy_until: 0.0,
-            swapping: false,
-            swap_until: 0.0,
-            pending_swap: None,
-        })
-        .collect();
-    let mut resident: Vec<Vec<bool>> =
-        fleet.servers.iter().map(|srv| srv.initial_residency()).collect();
-    let mut acc = Acc {
-        usage: fleet
-            .servers
-            .iter()
-            .map(|srv| vec![UsageAcc::default(); srv.variants.len()])
-            .collect(),
-        ..Default::default()
-    };
-
-    // lifecycle: with autoscaling, the first min_active servers start
-    // awake and the rest asleep; without it, everyone is permanently
-    // Active and no scale machinery ever runs
-    let mut lifecycle = vec![Lifecycle::Active; fleet.servers.len()];
-    let mut waking = vec![false; fleet.servers.len()];
-    if auto {
-        for lc in lifecycle.iter_mut().skip(cfg.autoscale.min_active) {
-            *lc = Lifecycle::Asleep;
-        }
-    }
-    let mut scaler = cfg.autoscale.policy.build(&cfg.autoscale);
-    let mut tracker = SignalTracker::new();
-
-    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(arrivals.len() + 16);
-    let mut seq: u64 = 0;
-    for (i, &t) in arrivals.iter().enumerate() {
-        seq += 1;
-        heap.push(Reverse(Event {
-            time_ms: t + transfer_ms,
-            seq,
-            kind: EventKind::Arrival { req: i },
-        }));
-    }
-    // the control plane runs for the duration of the offered trace: one
-    // Control tick is in flight at a time (each handler re-arms the next
-    // while `now + interval <= control_end`), so a tiny interval over a
-    // long trace costs O(1) heap space, and the heap still drains once
-    // the last tick and all work complete
-    let control_end = if auto {
-        arrivals.last().map(|&last| last + transfer_ms)
-    } else {
-        None
-    };
-    if let Some(end) = control_end {
-        if cfg.autoscale.interval_ms <= end {
-            seq += 1;
-            heap.push(Reverse(Event {
-                time_ms: cfg.autoscale.interval_ms,
-                seq,
-                kind: EventKind::Control,
-            }));
-        }
-    }
-
-    let mut backlog = vec![0.0f64; fleet.servers.len()];
-    let mut queued = vec![0usize; fleet.servers.len()];
-    let mut unavail = vec![false; fleet.servers.len()];
-    let mut last_time = f64::NEG_INFINITY;
-    let mut makespan = 0.0f64;
-
-    while let Some(Reverse(ev)) = heap.pop() {
-        let now = ev.time_ms;
-        if now < last_time {
-            return Err(Error::hqp(format!(
-                "serve: virtual time regressed from {last_time} to {now}"
-            )));
-        }
-        last_time = now;
-        makespan = now;
-
-        match ev.kind {
-            EventKind::Arrival { req } => {
-                // router input: remaining busy/swap time + queued work
-                // estimate, plus the residency/availability snapshot
-                fill_snapshot(
-                    fleet, &state, &lifecycle, now, &mut backlog, &mut queued, &mut unavail,
-                );
-                let view = FleetView {
-                    now_ms: now,
-                    backlog_ms: &backlog,
-                    queued: &queued,
-                    resident: &resident,
-                    unavailable: &unavail,
-                };
-                match router.route(&view) {
-                    None => {
-                        if router.num_candidates() == 0 {
-                            acc.rejected_noncompliant += 1;
-                        } else {
-                            acc.rejected_unavailable += 1;
-                        }
-                    }
-                    Some(c) => {
-                        // routing to an asleep or draining server is
-                        // structurally impossible (they are unavailable in
-                        // the view); reaching one here is an internal bug
-                        if lifecycle[c.server] != Lifecycle::Active {
-                            return Err(Error::hqp(
-                                "serve: routed to a non-active server (lifecycle bug)",
-                            ));
-                        }
-                        let st = &mut state[c.server];
-                        if st.batcher.total() >= cfg.queue_cap {
-                            acc.rejected_full += 1;
-                        } else {
-                            // SLO clock starts at generation: transfer
-                            // delay eats into the budget
-                            let origin = arrivals[req];
-                            let qreq = QueuedReq {
-                                id: req,
-                                arrival_ms: origin,
-                                deadline_ms: origin + cfg.slo_ms,
-                            };
-                            match st.batcher.enqueue(c.variant, qreq) {
-                                EnqueueAction::BatchReady => {
-                                    if st.can_dispatch() {
-                                        try_dispatch(
-                                            c.server,
-                                            c.variant,
-                                            now,
-                                            st,
-                                            &fleet.servers[c.server],
-                                            &resident[c.server],
-                                            &mut heap,
-                                            &mut seq,
-                                            &mut acc,
-                                        );
-                                    }
-                                }
-                                EnqueueAction::ArmFlush(token) => {
-                                    if st.can_dispatch() {
-                                        seq += 1;
-                                        heap.push(Reverse(Event {
-                                            time_ms: now + cfg.batch_timeout_ms,
-                                            seq,
-                                            kind: EventKind::Flush {
-                                                server: c.server,
-                                                variant: c.variant,
-                                                token,
-                                            },
-                                        }));
-                                    }
-                                }
-                                EnqueueAction::Queued => {}
-                            }
-                        }
-                    }
-                }
-                // hot-swap planning over the same snapshot: only
-                // meaningful under capped memory (static policies never
-                // plan; the guard also keeps the unlimited path's event
-                // stream bit-exact)
-                if residency_limited {
-                    if let Some(plan) = router.plan_swap(&view) {
-                        let sv = plan.server;
-                        let st = &mut state[sv];
-                        // one swap per server at a time is part of the
-                        // RoutePolicy contract — a plan for a server that
-                        // is already swapping is a policy bug
-                        if st.swapping || st.pending_swap.is_some() {
-                            return Err(Error::hqp(
-                                "serve: swap plan targets a server with a swap in flight",
-                            ));
-                        }
-                        let at = if st.busy { st.busy_until } else { now };
-                        st.pending_swap = Some(plan);
-                        seq += 1;
-                        heap.push(Reverse(Event {
-                            time_ms: at,
-                            seq,
-                            kind: EventKind::SwapStart { server: sv },
-                        }));
-                    }
-                }
-            }
-            EventKind::Flush { server, variant, token } => {
-                let st = &mut state[server];
-                if st.can_dispatch() && st.batcher.flush_live(variant, token) {
-                    try_dispatch(
-                        server,
-                        variant,
-                        now,
-                        st,
-                        &fleet.servers[server],
-                        &resident[server],
-                        &mut heap,
-                        &mut seq,
-                        &mut acc,
-                    );
-                }
-            }
-            EventKind::BatchDone { server, variant, reqs } => {
-                for r in &reqs {
-                    acc.completed += 1;
-                    acc.latencies.push(now - r.arrival_ms);
-                    if now <= r.deadline_ms {
-                        acc.slo_attained += 1;
-                    }
-                    acc.usage[server][variant].completed += 1;
-                }
-                let st = &mut state[server];
-                st.busy = false;
-                // a pending swap takes the idle slot: SwapStart is queued
-                // at this very timestamp
-                if st.pending_swap.is_none() {
-                    if let Some(next) = st.batcher.oldest_allowed(&resident[server]) {
-                        try_dispatch(
-                            server,
-                            next,
-                            now,
-                            st,
-                            &fleet.servers[server],
-                            &resident[server],
-                            &mut heap,
-                            &mut seq,
-                            &mut acc,
-                        );
-                    }
-                }
-                // a draining server whose queue just emptied goes to sleep
-                sleep_if_drained(&lifecycle, &state, server, now, &mut heap, &mut seq);
-            }
-            EventKind::SwapStart { server } => {
-                let st = &mut state[server];
-                if st.busy {
-                    // a batch is still running (time tie): retry the
-                    // moment it completes
-                    seq += 1;
-                    heap.push(Reverse(Event {
-                        time_ms: st.busy_until,
-                        seq,
-                        kind: EventKind::SwapStart { server },
-                    }));
-                } else if let Some(plan) = st.pending_swap.take() {
-                    let srv = &fleet.servers[server];
-                    if resident[server][plan.load] {
-                        return Err(Error::hqp(
-                            "serve: swap plan loads an already-resident variant",
-                        ));
-                    }
-                    // evict: mark non-resident and drain the queues
-                    let mut displaced: Vec<QueuedReq> = Vec::new();
-                    for &e in &plan.evict {
-                        if !resident[server][e] {
-                            return Err(Error::hqp(
-                                "serve: swap plan evicts a non-resident variant",
-                            ));
-                        }
-                        resident[server][e] = false;
-                        displaced.extend(st.batcher.drain(e));
-                    }
-                    let res_bytes: u64 = srv
-                        .variants
-                        .iter()
-                        .enumerate()
-                        .filter(|(v, _)| resident[server][*v])
-                        .map(|(_, p)| p.weight_bytes)
-                        .sum();
-                    if let Some(cap) = srv.mem_capacity_bytes {
-                        if res_bytes + srv.variants[plan.load].weight_bytes > cap {
-                            return Err(Error::hqp(
-                                "serve: swap plan exceeds device memory capacity",
-                            ));
-                        }
-                    }
-                    // displaced survivors follow the best remaining
-                    // compliant engine, else the incoming one
-                    if !displaced.is_empty() {
-                        let mut target = plan.load;
-                        let mut best = f64::INFINITY;
-                        for (v, p) in srv.variants.iter().enumerate() {
-                            if resident[server][v]
-                                && p.compliant(cfg.delta_max)
-                                && p.batch1_ms() < best
-                            {
-                                best = p.batch1_ms();
-                                target = v;
-                            }
-                        }
-                        let mut alive = Vec::with_capacity(displaced.len());
-                        for r in displaced {
-                            if r.deadline_ms < now {
-                                // lapsed before the swap even began: plain
-                                // expiry, the eviction only surfaced it
-                                acc.expired += 1;
-                            } else {
-                                alive.push(r);
-                            }
-                        }
-                        st.batcher.requeue(target, alive);
-                    }
-                    let swap_ms = srv.swap_in_ms(plan.load, cfg.swap_init_ms);
-                    st.swapping = true;
-                    st.swap_until = now + swap_ms;
-                    acc.swaps += 1;
-                    acc.swap_ms += swap_ms;
-                    // the swap window is charged energy E = P·L exactly
-                    // like a wake window (W × ms = mJ); zero when no swap
-                    // happens, so no-swap summaries stay byte-identical
-                    acc.swap_energy_mj += srv.device.power_w * swap_ms;
-                    seq += 1;
-                    heap.push(Reverse(Event {
-                        time_ms: st.swap_until,
-                        seq,
-                        kind: EventKind::SwapDone { server, load: plan.load, started_ms: now },
-                    }));
-                }
-            }
-            EventKind::SwapDone { server, load, started_ms } => {
-                let st = &mut state[server];
-                st.swapping = false;
-                resident[server][load] = true;
-                // drop lapsed deadlines; only those that lapsed during the
-                // swap window are attributed to the swap (earlier ones
-                // would have expired at the next batch formation anyway)
-                for r in st.batcher.purge_expired(now) {
-                    acc.expired += 1;
-                    if r.deadline_ms >= started_ms {
-                        acc.expired_during_swap += 1;
-                    }
-                }
-                // the survivors have outwaited any batching timeout:
-                // dispatch immediately
-                if st.can_dispatch() {
-                    if let Some(next) = st.batcher.oldest_allowed(&resident[server]) {
-                        try_dispatch(
-                            server,
-                            next,
-                            now,
-                            st,
-                            &fleet.servers[server],
-                            &resident[server],
-                            &mut heap,
-                            &mut seq,
-                            &mut acc,
-                        );
-                    }
-                }
-                // a drain that was waiting on this swap can now complete
-                sleep_if_drained(&lifecycle, &state, server, now, &mut heap, &mut seq);
-            }
-            EventKind::Control => {
-                let Some(ctrl) = scaler.as_mut() else {
-                    return Err(Error::hqp("serve: control tick without a scale policy"));
-                };
-                // re-arm the next tick while the trace is still offering
-                // load (one Control event in flight at a time)
-                if let Some(end) = control_end {
-                    let next = now + cfg.autoscale.interval_ms;
-                    if next <= end {
-                        seq += 1;
-                        heap.push(Reverse(Event {
-                            time_ms: next,
-                            seq,
-                            kind: EventKind::Control,
-                        }));
-                    }
-                }
-                fill_snapshot(
-                    fleet, &state, &lifecycle, now, &mut backlog, &mut queued, &mut unavail,
-                );
-                let view = FleetView {
-                    now_ms: now,
-                    backlog_ms: &backlog,
-                    queued: &queued,
-                    resident: &resident,
-                    unavailable: &unavail,
-                };
-                let n_active = lifecycle.iter().filter(|&&l| l == Lifecycle::Active).count();
-                let n_waking = waking.iter().filter(|&&w| w).count();
-                let n_draining =
-                    lifecycle.iter().filter(|&&l| l == Lifecycle::Draining).count();
-                let n_asleep = lifecycle
-                    .iter()
-                    .zip(&waking)
-                    .filter(|(&l, &w)| l == Lifecycle::Asleep && !w)
-                    .count();
-                let queued_active: usize = (0..fleet.servers.len())
-                    .filter(|&s| lifecycle[s] == Lifecycle::Active)
-                    .map(|s| state[s].batcher.total())
-                    .sum();
-                let sig = tracker.tick(
-                    now,
-                    acc.outcomes(),
-                    acc.slo_attained,
-                    queued_active,
-                    n_active,
-                    n_waking,
-                    n_draining,
-                    n_asleep,
-                );
-                match ctrl.decide(&view, &sig) {
-                    ScaleDecision::Hold => {}
-                    ScaleDecision::Up { since_ms } => {
-                        // committed capacity = active + waking + draining
-                        // (a draining server still consumes its slot until
-                        // it sleeps); wake the lowest-index sleeping server
-                        // if the bound allows
-                        if n_active + n_waking + n_draining < max_active {
-                            if let Some(sv) = (0..fleet.servers.len()).find(|&s| {
-                                lifecycle[s] == Lifecycle::Asleep && !waking[s]
-                            }) {
-                                seq += 1;
-                                heap.push(Reverse(Event {
-                                    time_ms: now,
-                                    seq,
-                                    kind: EventKind::ScaleUp { server: sv, since_ms },
-                                }));
-                            }
-                        }
-                    }
-                    ScaleDecision::Down => {
-                        // drain the idlest active server (lowest backlog,
-                        // ties to the higher index so server 0 drains last)
-                        if n_active > cfg.autoscale.min_active {
-                            let mut pick = None::<(f64, usize)>;
-                            for s in 0..fleet.servers.len() {
-                                if lifecycle[s] != Lifecycle::Active {
-                                    continue;
-                                }
-                                let better = match pick {
-                                    None => true,
-                                    Some((b, ps)) => {
-                                        backlog[s] < b || (backlog[s] == b && s > ps)
-                                    }
-                                };
-                                if better {
-                                    pick = Some((backlog[s], s));
-                                }
-                            }
-                            if let Some((_, sv)) = pick {
-                                seq += 1;
-                                heap.push(Reverse(Event {
-                                    time_ms: now,
-                                    seq,
-                                    kind: EventKind::DrainStart { server: sv },
-                                }));
-                            }
-                        }
-                    }
-                }
-            }
-            EventKind::ScaleUp { server, since_ms } => {
-                if lifecycle[server] != Lifecycle::Asleep || waking[server] {
-                    return Err(Error::hqp(
-                        "serve: scale-up targets a server that is not asleep",
-                    ));
-                }
-                if !state[server].batcher.is_empty() {
-                    return Err(Error::hqp("serve: asleep server has queued work"));
-                }
-                waking[server] = true;
-                // wake cost priced like a cold swap: the initial resident
-                // set's weight bytes streamed over DRAM bandwidth + init,
-                // with E = P·L charged for the window
-                let srv = &fleet.servers[server];
-                let bytes: u64 = srv
-                    .variants
-                    .iter()
-                    .zip(srv.initial_residency())
-                    .filter(|(_, r)| *r)
-                    .map(|(v, _)| v.weight_bytes)
-                    .sum();
-                let wake = srv.device.swap_in_ms(bytes, cfg.swap_init_ms);
-                acc.scale_ups += 1;
-                acc.wake_ms += wake;
-                acc.wake_energy_mj += srv.device.power_w * wake;
-                acc.reaction_sum_ms += now + wake - since_ms;
-                seq += 1;
-                heap.push(Reverse(Event {
-                    time_ms: now + wake,
-                    seq,
-                    kind: EventKind::WakeDone { server },
-                }));
-            }
-            EventKind::WakeDone { server } => {
-                if lifecycle[server] != Lifecycle::Asleep || !waking[server] {
-                    return Err(Error::hqp(
-                        "serve: wake completion for a server that was not waking",
-                    ));
-                }
-                waking[server] = false;
-                lifecycle[server] = Lifecycle::Active;
-                // the wake streamed exactly the initial resident set — any
-                // residency the server had accumulated before sleeping is
-                // gone (its queue was empty, so nothing can strand)
-                resident[server] = fleet.servers[server].initial_residency();
-            }
-            EventKind::DrainStart { server } => {
-                if lifecycle[server] != Lifecycle::Active {
-                    return Err(Error::hqp(
-                        "serve: drain targets a non-active server",
-                    ));
-                }
-                lifecycle[server] = Lifecycle::Draining;
-                acc.scale_downs += 1;
-                // finish the queue as fast as the device allows: batch
-                // timeouts are bypassed from here on
-                let st = &mut state[server];
-                if st.can_dispatch() {
-                    if let Some(next) = st.batcher.oldest_allowed(&resident[server]) {
-                        try_dispatch(
-                            server,
-                            next,
-                            now,
-                            st,
-                            &fleet.servers[server],
-                            &resident[server],
-                            &mut heap,
-                            &mut seq,
-                            &mut acc,
-                        );
-                    }
-                }
-                sleep_if_drained(&lifecycle, &state, server, now, &mut heap, &mut seq);
-            }
-            EventKind::ScaleDown { server } => {
-                if lifecycle[server] != Lifecycle::Draining {
-                    return Err(Error::hqp(
-                        "serve: scale-down for a server that is not draining",
-                    ));
-                }
-                if !quiesced(&state[server]) {
-                    return Err(Error::hqp(
-                        "serve: scale-down on a non-quiescent server",
-                    ));
-                }
-                lifecycle[server] = Lifecycle::Asleep;
-            }
-        }
-    }
-
-    // every queue must have drained: the heap only empties once no flush,
-    // batch-done or swap event is pending anywhere, so a leftover request
-    // means something routed to a queue residency could never serve
-    if state.iter().any(|st| !st.batcher.is_empty()) {
-        return Err(Error::hqp(
-            "serve: requests stranded in a queue at end of trace (residency routing bug)",
-        ));
-    }
-
-    Ok(build_summary(fleet, cfg, acc, makespan, residency_limited, auto))
+    let totals = engine::run(fleet, arrivals, cfg, jobs.get())?;
+    Ok(build_summary(fleet, cfg, totals, residency_limited, auto))
 }
 
 fn build_summary(
     fleet: &Fleet,
     cfg: &ServeConfig,
-    mut acc: Acc,
-    makespan_ms: f64,
+    mut acc: engine::Totals,
     residency_limited: bool,
     autoscaled: bool,
 ) -> Summary {
+    let makespan_ms = acc.makespan_ms;
+    // latencies arrive merged in shard order; sorting first makes every
+    // derived statistic depend only on the multiset (and is what the
+    // percentile definition needs anyway)
     acc.latencies.sort_by(f64::total_cmp);
     let n = acc.latencies.len();
     let pct = |p: f64| -> f64 {
@@ -1308,6 +524,7 @@ fn build_summary(
         p95_ms: pct(0.95),
         p99_ms: pct(0.99),
         makespan_ms,
+        events: acc.events,
         throughput_rps: if makespan_ms > 0.0 {
             acc.completed as f64 / (makespan_ms / 1e3)
         } else {
@@ -1728,6 +945,27 @@ mod tests {
             let b = simulate_fleet(&fleet, &arrivals, &c).unwrap();
             assert_eq!(a, b, "{policy:?}");
             assert_eq!(a.render(), b.render(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn worker_count_is_invisible_in_the_summary() {
+        // the determinism contract: jobs only picks the OS thread count,
+        // never the event order — autoscaled multi-server runs included
+        let fleet = two_server_fleet(5.0);
+        let arrivals = trace::generate(
+            &ArrivalProcess::parse("mmpp", 400.0).unwrap(),
+            2_000.0,
+            9,
+        );
+        let c = auto_cfg(ScalePolicy::QueueDepth, 50.0, 1, 2);
+        let seq = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(seq.events > 0, "the event counter must actually count");
+        for jobs in [2usize, 4, 8] {
+            let par =
+                simulate_fleet_jobs(&fleet, &arrivals, &c, Jobs::new(jobs).unwrap()).unwrap();
+            assert_eq!(seq, par, "jobs={jobs} diverged from sequential");
+            assert_eq!(seq.render(), par.render(), "jobs={jobs} render diverged");
         }
     }
 

@@ -1,0 +1,180 @@
+//! Property tests for the `exec` worker pool's determinism contract
+//! (testkit harness — the offline proptest substitute, DESIGN.md
+//! §Substitutions and §Parallelism).
+//!
+//! These run WITHOUT artifacts. The contract under test is the one
+//! `run_suite_jobs` and `hqp run --jobs` rely on:
+//!
+//! * **submission order** — results merge by task index, never by
+//!   completion order, for every worker count;
+//! * **byte-identical persistence** — `ResultRow` JSON written through
+//!   [`save_results`] by concurrent pool workers is byte-for-byte the
+//!   file a sequential run writes (atomic temp-file + rename, one cache
+//!   key per task);
+//! * **failure visibility** — a panicking task surfaces as a hard error
+//!   naming the task, not a hang or a silently dropped result;
+//! * **`--jobs 0`** — rejected loudly at construction.
+
+use hqp::coordinator::{load_results, save_results, ResultRow};
+use hqp::exec::{parallel_map, Jobs};
+use hqp::hqp::MethodReport;
+use hqp::runtime::Counters;
+use hqp::testkit::prng::Prng;
+
+const CASES: usize = 40;
+
+/// A cheap but non-trivial pure task: the pool must not care what runs
+/// inside, only that slot `i` of the output holds task `i`'s result.
+fn churn(seed: u64, rounds: usize) -> u64 {
+    let mut x = seed | 1;
+    for _ in 0..rounds {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        x ^= x >> 29;
+    }
+    x
+}
+
+#[test]
+fn prop_results_merge_in_submission_order_at_any_job_count() {
+    let mut rng = Prng::new(0xE8EC);
+    for case_no in 0..CASES {
+        let n = rng.below(24) + 1;
+        let tasks: Vec<(u64, usize)> =
+            (0..n).map(|_| (rng.next_u64(), rng.below(4000) + 10)).collect();
+        let want: Vec<u64> = tasks.iter().map(|&(s, r)| churn(s, r)).collect();
+        for jobs in [1usize, 2, 4, 8] {
+            let (got, pool) = parallel_map(
+                Jobs::new(jobs).unwrap(),
+                tasks.clone(),
+                |(s, r), _i| Ok(churn(s, r)),
+            )
+            .expect("pure tasks never fail");
+            assert_eq!(got, want, "case {case_no}: jobs={jobs} broke submission order");
+            // the pool's own books must balance: every task ran exactly
+            // once somewhere, and claims cost at least one message each
+            assert_eq!(pool.tasks, n, "case {case_no}");
+            assert_eq!(pool.task_ms.len(), n, "case {case_no}");
+            let ran: u64 = pool.workers.iter().map(|w| w.tasks).sum();
+            assert_eq!(ran, n as u64, "case {case_no}: jobs={jobs} task census");
+            let messages: u64 = pool.workers.iter().map(|w| w.messages).sum();
+            assert!(messages >= ran, "case {case_no}: claims cost messages");
+        }
+    }
+}
+
+fn random_row(rng: &mut Prng, model: &str, method: &str) -> ResultRow {
+    ResultRow {
+        report: MethodReport {
+            method: method.to_string(),
+            model: model.to_string(),
+            device: if rng.next_f64() < 0.5 { "xavier-nx" } else { "jetson-nano" }.into(),
+            latency_ms: rng.next_f64() * 10.0,
+            speedup: 1.0 + rng.next_f64() * 4.0,
+            size_reduction: rng.next_f64(),
+            acc_drop: rng.next_f64() * 0.03,
+            sparsity: rng.next_f64(),
+            compliant: rng.next_f64() < 0.8,
+            energy_mj: rng.next_f64() * 20.0,
+            energy_ratio: 1.0 + rng.next_f64(),
+            flops: rng.next_u64() % 1_000_000_000,
+        },
+        trace: (0..rng.below(6))
+            .map(|_| (rng.next_f64(), rng.next_f64(), rng.next_f64() < 0.5))
+            .collect(),
+        group_sparsity: (0..rng.below(8)).map(|_| rng.next_f64()).collect(),
+        group_saliency: (0..rng.below(8)).map(|_| rng.next_f64() * 2.0).collect(),
+        counters: Counters {
+            inference_samples: rng.next_u64() % 10_000,
+            grad_samples: rng.next_u64() % 1_000,
+            executions: rng.next_u64() % 100,
+            upload_bytes: rng.next_u64() % 1_000_000,
+            upload_tensors: rng.next_u64() % 100,
+            batches_skipped: rng.next_u64() % 20,
+        },
+    }
+}
+
+#[test]
+fn prop_result_cache_bytes_identical_across_jobs() {
+    // the coordinator's cache contract: each suite candidate persists
+    // under its own key, so N workers racing through save_results leave
+    // exactly the files — byte for byte — that a sequential run leaves
+    let mut rng = Prng::new(0xCAC8E);
+    let base = std::env::temp_dir().join(format!("hqp_prop_exec_{}", std::process::id()));
+    for case_no in 0..CASES / 4 {
+        let n_keys = rng.below(6) + 2;
+        let candidates: Vec<(String, Vec<ResultRow>)> = (0..n_keys)
+            .map(|k| {
+                let name = format!("case{case_no}_m{k}");
+                let rows =
+                    (0..rng.below(3) + 1).map(|r| random_row(&mut rng, "m", &format!("s{r}"))).collect();
+                (name, rows)
+            })
+            .collect();
+        let mut bytes_by_jobs: Vec<Vec<Vec<u8>>> = Vec::new();
+        for jobs in [1usize, 4] {
+            let dir = base.join(format!("jobs{jobs}"));
+            let dir_ref = &dir;
+            parallel_map(Jobs::new(jobs).unwrap(), candidates.clone(), |(name, rows), _i| {
+                save_results(dir_ref, &name, &rows)?;
+                Ok(())
+            })
+            .expect("saving distinct keys never fails");
+            bytes_by_jobs.push(
+                candidates
+                    .iter()
+                    .map(|(name, _)| {
+                        std::fs::read(dir.join(format!("{name}.json"))).expect("saved file")
+                    })
+                    .collect(),
+            );
+            // and no temp litter survives the renames
+            for entry in std::fs::read_dir(&dir).unwrap() {
+                let p = entry.unwrap().path();
+                assert_eq!(
+                    p.extension().and_then(|e| e.to_str()),
+                    Some("json"),
+                    "case {case_no}: stray temp file {p:?}"
+                );
+            }
+            // the files round-trip through the loader workers actually use
+            for (name, rows) in &candidates {
+                let back = load_results(&dir, name).unwrap().expect("file exists");
+                assert_eq!(back.len(), rows.len(), "case {case_no} key {name}");
+            }
+        }
+        assert_eq!(
+            bytes_by_jobs[0], bytes_by_jobs[1],
+            "case {case_no}: cache bytes diverged between jobs=1 and jobs=4"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn worker_pool_panics_are_hard_errors_not_hangs() {
+    // a panicking candidate must fail the whole suite with an error that
+    // names the task — and the pool must still join every worker (this
+    // test completing at all is the no-hang proof)
+    let tasks: Vec<usize> = (0..16).collect();
+    let err = parallel_map(Jobs::new(4).unwrap(), tasks, |i, _| {
+        if i == 11 {
+            panic!("candidate 11 exploded");
+        }
+        Ok(i)
+    })
+    .expect_err("a panicking task must fail the pool");
+    let msg = err.to_string();
+    assert!(msg.contains("panicked"), "error must say a panic happened: {msg}");
+    assert!(msg.contains("11"), "error must name the failing task: {msg}");
+    assert!(msg.contains("exploded"), "error must carry the panic payload: {msg}");
+}
+
+#[test]
+fn jobs_zero_is_rejected_loudly() {
+    let err = Jobs::new(0).expect_err("--jobs 0 must not construct");
+    let msg = err.to_string();
+    assert!(msg.contains("--jobs 0"), "the error must name the flag: {msg}");
+    assert!(Jobs::new(1).is_ok() && Jobs::new(64).is_ok());
+    assert!(Jobs::available().get() >= 1, "auto-detection never yields zero workers");
+}

@@ -10,7 +10,9 @@
 //! * **conservation** — every generated request is exactly one of
 //!   {completed, rejected, expired}, swaps and scale events included;
 //! * **determinism** — the same seed reproduces a byte-identical summary,
-//!   swap and scale counters included;
+//!   swap and scale counters included, and the worker count is invisible:
+//!   `--jobs N` produces the same summary bytes as sequential for every
+//!   generated case (DESIGN.md §Parallelism);
 //! * **admission** — the router never serves a variant whose accuracy
 //!   drop exceeds Δ_max, never serves a non-resident variant, and never
 //!   routes to an asleep or draining server (`simulate_fleet` errors out
@@ -24,11 +26,12 @@
 //! * **sanity** — percentiles are ordered, attainment ⊆ completions,
 //!   swap and scale counters are internally consistent.
 
+use hqp::exec::Jobs;
 use hqp::gopt::{FusedKind, FusedOp, OptimizedGraph};
 use hqp::hwsim::{simulate, simulate_batch, Device, Precision};
 use hqp::serve::{
-    reference_fleet, simulate_fleet, trace, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy,
-    ServeConfig,
+    reference_fleet, simulate_fleet, simulate_fleet_jobs, trace, ArrivalProcess, AutoscaleConfig,
+    Policy, ScalePolicy, ServeConfig,
 };
 use hqp::testkit::prng::Prng;
 
@@ -273,6 +276,37 @@ fn prop_same_seed_reproduces_identical_summary() {
             b.render(),
             "case {case_no}: rendered summaries not byte-identical"
         );
+    }
+}
+
+#[test]
+fn prop_worker_count_never_changes_the_summary() {
+    // the sharded-engine determinism contract (DESIGN.md §Parallelism):
+    // --jobs only sets the OS thread count; shards advance between the
+    // same virtual-time barriers in the same canonical order at any N,
+    // so the summary — counters, percentiles, per-variant usage, event
+    // census and rendered bytes — is identical to sequential across
+    // every random (fleet, trace, config) triple, autoscaling, capped
+    // memory, hot-swaps and finite uplinks included
+    let mut rng = Prng::new(0x10B5);
+    for case_no in 0..CASES / 2 {
+        let case = gen_case(&mut rng);
+        let fleet = build_fleet(&case);
+        let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
+        let seq = simulate_fleet(&fleet, &arrivals, &case.cfg)
+            .expect("sequential simulation of a valid case");
+        assert!(seq.events > 0, "case {case_no}: the event census must count");
+        for jobs in [2usize, 4] {
+            let par =
+                simulate_fleet_jobs(&fleet, &arrivals, &case.cfg, Jobs::new(jobs).unwrap())
+                    .expect("parallel simulation of the same case");
+            assert_eq!(seq, par, "case {case_no}: jobs={jobs} diverged from sequential");
+            assert_eq!(
+                seq.render(),
+                par.render(),
+                "case {case_no}: rendered bytes diverged at jobs={jobs}"
+            );
+        }
     }
 }
 
