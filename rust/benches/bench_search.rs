@@ -1,0 +1,119 @@
+//! `cargo bench --bench bench_search [-- --smoke]` — the budgeted
+//! schedule search on the §V-B axis, plus its determinism contract.
+//!
+//! Runs without artifacts against the reference surrogate backend.
+//! Emits `BENCH_search.json` (benchkit [`Report`]):
+//!
+//! * `search_budget` / `search_evals` — configured cap vs evaluations
+//!                                      actually spent (acceptance:
+//!                                      evals ≤ budget)
+//! * `search_front_size`              — points on the ranked Pareto front
+//! * `search_wall_ms_jobs1` / `search_wall_ms_jobsN` / `search_speedup`
+//!                                    — full-rung pool wall-clock,
+//!                                      sequential vs parallel
+//! * `prune_first_acc_drop` / `quantize_first_acc_drop`
+//!                                    — the §V-B ordering ablation as the
+//!                                      search rediscovered it
+//! * `prune_first_speedup` / `prune_first_compliant` /
+//!   `quantize_first_compliant`      — acceptance: at equal Δ_max,
+//!                                      `prune >> ptq` is on the front and
+//!                                      `ptq >> prune` is hard-excluded
+//!
+//! The jobs=N run's rendered front is asserted byte-identical to the
+//! jobs=1 run's — parallel search may never cost determinism.
+
+use hqp::benchkit::{section, Report};
+use hqp::exec::Jobs;
+use hqp::hqp::HqpConfig;
+use hqp::hwsim::Device;
+use hqp::search::{outcome_json, render, run_search, Backend, SearchConfig, SearchSpace};
+
+fn config(budget: usize, jobs: Jobs) -> SearchConfig {
+    SearchConfig {
+        model: "resnet18".into(),
+        device: Device::xavier_nx(),
+        hqp: HqpConfig::default(),
+        budget,
+        seed: 42,
+        space: SearchSpace::all(),
+        jobs,
+        backend: Backend::Reference,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut report = Report::new();
+
+    section("search — budgeted schedule search over the grammar");
+    let budget = if smoke { 8 } else { 64 };
+
+    let sc1 = config(budget, Jobs::one());
+    let out1 = run_search(&sc1).expect("search (jobs=1)");
+    let jobs = Jobs::available();
+    let scn = config(budget, jobs);
+    let outn = run_search(&scn).expect("search (jobs=N)");
+
+    // determinism contract: byte-identical front and JSON at any --jobs
+    assert_eq!(
+        render(&sc1, &out1),
+        render(&scn, &outn),
+        "rendered front diverged between jobs=1 and jobs={}",
+        jobs.get()
+    );
+    assert_eq!(
+        outcome_json(&sc1, &out1).to_string_pretty(),
+        outcome_json(&scn, &outn).to_string_pretty(),
+        "outcome JSON diverged between jobs=1 and jobs={}",
+        jobs.get()
+    );
+
+    // budget contract
+    assert!(
+        out1.evals() <= budget,
+        "spent {} evaluations against --budget {budget}",
+        out1.evals()
+    );
+
+    // §V-B acceptance: the front rediscovers that prune-then-quantize
+    // dominates quantize-then-prune at equal Δ_max
+    let full_of = |s: &str| out1.full.iter().find(|e| e.schedule == s);
+    let pf = full_of("prune >> ptq").expect("prune-first must be promoted to full fidelity");
+    let qf = full_of("ptq >> prune").expect("quantize-first must be promoted to full fidelity");
+    assert!(pf.compliant, "prune-first must meet Δ_max");
+    assert!(!qf.compliant, "quantize-first must violate Δ_max (stale scales)");
+    assert!(pf.acc_drop < qf.acc_drop);
+    assert!(
+        out1.front.iter().any(|e| e.schedule == "prune >> ptq"),
+        "prune-first missing from the front"
+    );
+    assert!(
+        !out1.front.iter().any(|e| e.schedule == "ptq >> prune"),
+        "Δ_max violator on the front"
+    );
+
+    print!("{}", render(&sc1, &out1));
+    for pool in &outn.pools {
+        print!("{}", pool.render());
+    }
+
+    report.metric("search_budget", budget as f64);
+    report.metric("search_evals", out1.evals() as f64);
+    report.metric("search_cheap_evals", out1.cheap_evals as f64);
+    report.metric("search_full_evals", out1.full_evals as f64);
+    report.metric("search_front_size", out1.front.len() as f64);
+    report.metric("search_jobs", jobs.get() as f64);
+    let wall1: f64 = out1.pools.iter().map(|p| p.wall_ms).sum();
+    let walln: f64 = outn.pools.iter().map(|p| p.wall_ms).sum();
+    report.metric("search_wall_ms_jobs1", wall1);
+    report.metric("search_wall_ms_jobsN", walln);
+    report.metric("search_speedup", wall1 / walln.max(1e-9));
+    report.metric("prune_first_acc_drop", pf.acc_drop);
+    report.metric("quantize_first_acc_drop", qf.acc_drop);
+    report.metric("prune_first_speedup", pf.speedup);
+    report.metric("prune_first_compliant", if pf.compliant { 1.0 } else { 0.0 });
+    report.metric("quantize_first_compliant", if qf.compliant { 1.0 } else { 0.0 });
+
+    report.write_json("BENCH_search.json").expect("write BENCH_search.json");
+    println!("\nwrote BENCH_search.json");
+}

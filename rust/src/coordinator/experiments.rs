@@ -71,8 +71,14 @@ impl MethodSpec {
             MethodSpec::HqpWithRanking(r) => Schedule {
                 stages: vec![
                     StageSpec::MeasureBaseline,
-                    StageSpec::Prune { ranking: Some(*r), step_frac: None, delta_max: None },
-                    StageSpec::Ptq { calib: None },
+                    StageSpec::Prune {
+                        ranking: Some(*r),
+                        step_frac: None,
+                        delta_max: None,
+                        max_sparsity: None,
+                        samples: None,
+                    },
+                    StageSpec::Ptq { calib: None, recalib: false, samples: None },
                 ],
                 label: Some(format!("hqp[{}]", r.name())),
                 legacy_key: Some(format!("hqp_{}", r.name())),

@@ -39,11 +39,27 @@ fn quantizable(name: &str) -> bool {
     name.ends_with(".w")
 }
 
-/// Run PTQ on `params` (pristine or pruned — HQP runs it on M_sparse).
-pub fn quantize(sess: &mut Session, params: &ParamStore, cfg: &HqpConfig) -> Result<PtqResult> {
-    // ---- activation calibration (two artifact passes + KL sweep) --------
-    let ranges = sess.act_absmax(params)?;
-    let hist = sess.act_hist(params, &ranges)?;
+/// Activation scales + thresholds after a recalibration-only pass
+/// (`ptq(recalib)` — no weight projection, see [`recalibrate`]).
+pub struct RecalibResult {
+    /// Fresh per-tap activation scales for the *current* parameters.
+    pub scales: Vec<f32>,
+    /// Per-tap saturation thresholds chosen by calibration.
+    pub thresholds: Vec<f32>,
+    /// Accuracy re-measured with the fresh scales.
+    pub accuracy: f64,
+}
+
+/// The two calibration passes + threshold sweep, capped at `max_samples`
+/// calibration images (`usize::MAX` = the full calib split).
+fn calibrate(
+    sess: &mut Session,
+    params: &ParamStore,
+    cfg: &HqpConfig,
+    max_samples: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let ranges = sess.act_absmax_n(params, max_samples)?;
+    let hist = sess.act_hist_n(params, &ranges, max_samples)?;
     let bins = hist.shape()[1];
     let cal = Calibrator::new(cfg.calib_method);
     let mut scales = Vec::with_capacity(ranges.len());
@@ -54,6 +70,25 @@ pub fn quantize(sess: &mut Session, params: &ParamStore, cfg: &HqpConfig) -> Res
         thresholds.push(t);
         scales.push(crate::quant::scale_for(t, 8));
     }
+    Ok((scales, thresholds))
+}
+
+/// Run PTQ on `params` (pristine or pruned — HQP runs it on M_sparse).
+pub fn quantize(sess: &mut Session, params: &ParamStore, cfg: &HqpConfig) -> Result<PtqResult> {
+    quantize_n(sess, params, cfg, usize::MAX)
+}
+
+/// [`quantize`] with a calibration sample cap (the schedule grammar's
+/// `ptq(samples=<n>)` knob; the weight projection and the accuracy
+/// measurement are unaffected — only the two activation passes are capped).
+pub fn quantize_n(
+    sess: &mut Session,
+    params: &ParamStore,
+    cfg: &HqpConfig,
+    max_samples: usize,
+) -> Result<PtqResult> {
+    // ---- activation calibration (two artifact passes + KL sweep) --------
+    let (scales, thresholds) = calibrate(sess, params, cfg, max_samples)?;
 
     // ---- weight projection ----------------------------------------------
     // CoW clone: only the ".w" tensors projected below are un-shared and
@@ -79,6 +114,22 @@ pub fn quantize(sess: &mut Session, params: &ParamStore, cfg: &HqpConfig) -> Res
     // ---- measured INT8 accuracy ------------------------------------------
     let accuracy = sess.quant_accuracy(&q, &scales, &cfg.val_split)?;
     Ok(PtqResult { params: q, scales, thresholds, accuracy })
+}
+
+/// Re-collect activation scales on the *current* (e.g. freshly pruned)
+/// parameters and re-measure, without touching the weights — the §V-B fix
+/// for the quantize-first staleness failure, exposed to schedules as
+/// `ptq(recalib)`. The weights are assumed to already sit on the INT8 grid
+/// (a prior [`quantize`] stage); only the activation scales were stale.
+pub fn recalibrate(
+    sess: &mut Session,
+    params: &ParamStore,
+    cfg: &HqpConfig,
+    max_samples: usize,
+) -> Result<RecalibResult> {
+    let (scales, thresholds) = calibrate(sess, params, cfg, max_samples)?;
+    let accuracy = sess.quant_accuracy(params, &scales, &cfg.val_split)?;
+    Ok(RecalibResult { scales, thresholds, accuracy })
 }
 
 #[cfg(test)]

@@ -27,8 +27,10 @@
 //! ```text
 //! schedule := stage (">>" stage)*
 //! stage    := name [ "(" arg ("," arg)* ")" ]
-//! arg      := key "=" value          (e.g. step=1%, dmax=1.5%, theta=50%)
-//!           | value                  (positional: a ranking or calib name)
+//! arg      := key "=" value          (e.g. step=1%, dmax=1.5%, theta=50%,
+//!                                     max-sparsity=60%, samples=512)
+//!           | value                  (positional: a ranking or calib name,
+//!                                     or ptq's `recalib` flag)
 //! ```
 //!
 //! Fractions accept `1.5%` or `0.015`; the canonical form always prints
@@ -46,7 +48,9 @@
 //!   *after* `ptq` (the quantize-first ablation) the final accuracy is
 //!   re-measured through the INT8 artifact with the pre-prune activation
 //!   scales — exactly the calibration staleness the paper's ordering
-//!   argument is about.
+//!   argument is about. A trailing `ptq(recalib)` stage re-collects the
+//!   scales on the pruned parameters without re-projecting weights — the
+//!   §V-B fix, expressible (and searchable) as a schedule.
 //! * `measure-baseline` is memoized per (model, split) in the
 //!   [`Session`], so schedules sharing a session pay for one sweep.
 
@@ -58,7 +62,7 @@ use crate::runtime::{ParamStore, Session};
 use super::mixed::{self, MixedPolicy};
 use super::pipeline::{Outcome, Regime};
 use super::prune::{conditional_prune, prune_to_sparsity, PruneTrace};
-use super::ptq::quantize;
+use super::ptq;
 use super::sensitivity::{self, RankingMethod, Saliency};
 use super::HqpConfig;
 
@@ -168,6 +172,12 @@ pub enum StageSpec {
         step_frac: Option<f64>,
         /// Δ_max override (default [`HqpConfig::delta_max`]).
         delta_max: Option<f64>,
+        /// Safety-stop override: never mask beyond this filter fraction
+        /// (default [`HqpConfig::max_sparsity`]).
+        max_sparsity: Option<f64>,
+        /// Saliency calibration sample count override (default
+        /// [`HqpConfig::calib_samples`]).
+        samples: Option<usize>,
     },
     /// Unconditional pruning of a fixed fraction θ of the (still-alive)
     /// filters — no quality guarantee (the paper's P50 strawman).
@@ -182,6 +192,15 @@ pub enum StageSpec {
     Ptq {
         /// Calibration override (default: [`HqpConfig::calib_method`]).
         calib: Option<CalibMethod>,
+        /// Recalibration-only mode (`ptq(recalib)`): re-collect the
+        /// activation scales on the *current* (e.g. freshly pruned)
+        /// parameters and re-measure, without re-projecting weights —
+        /// the §V-B fix for the quantize-first staleness failure.
+        /// Requires a prior `ptq` stage; a loud error otherwise.
+        recalib: bool,
+        /// Calibration sample cap for the two activation passes
+        /// (default: the full calib split, the pre-knob behavior).
+        samples: Option<usize>,
     },
     /// §VI-A S-guided mixed precision: plan per-group INT4/INT8/FP16 from
     /// the saliency scores (computing Fisher scores if no prior stage
@@ -233,6 +252,17 @@ fn parse_frac(stage: &str, key: &str, raw: &str) -> Result<f64> {
     Ok(v)
 }
 
+/// Parse a positive-integer argument (`samples=512`).
+fn parse_count(stage: &str, key: &str, raw: &str) -> Result<usize> {
+    let v: usize = raw.trim().parse().map_err(|_| {
+        Error::hqp(format!("stage `{stage}`: {key}={raw} is not a positive integer"))
+    })?;
+    if v == 0 {
+        return Err(Error::hqp(format!("stage `{stage}`: {key} must be >= 1")));
+    }
+    Ok(v)
+}
+
 fn parse_ranking(stage: &str, raw: &str) -> Result<RankingMethod> {
     RankingMethod::parse(raw).ok_or_else(|| {
         Error::hqp(format!(
@@ -271,14 +301,29 @@ impl StageSpec {
                 let mut ranking = None;
                 let mut step_frac = None;
                 let mut delta_max = None;
+                let mut max_sparsity = None;
+                let mut samples = None;
                 for a in args {
                     match a.split_once('=') {
                         Some(("step", v)) => step_frac = Some(parse_frac(name, "step", v)?),
                         Some(("dmax", v)) => delta_max = Some(parse_frac(name, "dmax", v)?),
+                        Some(("max-sparsity", v)) => {
+                            let m = parse_frac(name, "max-sparsity", v)?;
+                            if m <= 0.0 {
+                                return Err(Error::hqp(
+                                    "stage `prune`: max-sparsity must be > 0%",
+                                ));
+                            }
+                            max_sparsity = Some(m);
+                        }
+                        Some(("samples", v)) => {
+                            samples = Some(parse_count(name, "samples", v)?)
+                        }
                         Some((k, _)) => {
                             return Err(Error::hqp(format!(
                                 "stage `prune`: unknown argument `{k}` (valid: a ranking \
-                                 name, step=<pct>, dmax=<pct>)"
+                                 name, step=<pct>, dmax=<pct>, max-sparsity=<pct>, \
+                                 samples=<n>)"
                             )))
                         }
                         None => {
@@ -291,7 +336,7 @@ impl StageSpec {
                         }
                     }
                 }
-                Ok(StageSpec::Prune { ranking, step_frac, delta_max })
+                Ok(StageSpec::Prune { ranking, step_frac, delta_max, max_sparsity, samples })
             }
             "prune-to" => {
                 let mut ranking = None;
@@ -325,24 +370,43 @@ impl StageSpec {
             }
             "ptq" => {
                 let mut calib = None;
+                let mut recalib = false;
+                let mut samples = None;
                 for a in args {
-                    if a.contains('=') {
-                        return Err(Error::hqp(format!(
-                            "stage `ptq`: unknown argument `{a}` \
-                             (valid: a calibration name — kl, minmax, percentile)"
-                        )));
+                    match a.split_once('=') {
+                        Some(("samples", v)) => {
+                            samples = Some(parse_count(name, "samples", v)?)
+                        }
+                        Some((k, _)) => {
+                            return Err(Error::hqp(format!(
+                                "stage `ptq`: unknown argument `{k}` \
+                                 (valid: a calibration name — kl, minmax, percentile — \
+                                 recalib, samples=<n>)"
+                            )))
+                        }
+                        None if a == "recalib" => {
+                            if recalib {
+                                return Err(Error::hqp("stage `ptq`: recalib given twice"));
+                            }
+                            recalib = true;
+                        }
+                        None => {
+                            if calib.is_some() {
+                                return Err(Error::hqp(
+                                    "stage `ptq`: more than one calibration given",
+                                ));
+                            }
+                            calib = Some(CalibMethod::parse(a).ok_or_else(|| {
+                                Error::hqp(format!(
+                                    "stage `ptq`: unknown calibration `{a}` \
+                                     (valid: kl, minmax, percentile — or recalib, \
+                                     samples=<n>)"
+                                ))
+                            })?);
+                        }
                     }
-                    if calib.is_some() {
-                        return Err(Error::hqp("stage `ptq`: more than one calibration given"));
-                    }
-                    calib = Some(CalibMethod::parse(a).ok_or_else(|| {
-                        Error::hqp(format!(
-                            "stage `ptq`: unknown calibration `{a}` \
-                             (valid: kl, minmax, percentile)"
-                        ))
-                    })?);
                 }
-                Ok(StageSpec::Ptq { calib })
+                Ok(StageSpec::Ptq { calib, recalib, samples })
             }
             "mixed" => {
                 let mut int4_quantile = None;
@@ -385,7 +449,7 @@ impl StageSpec {
         };
         match self {
             StageSpec::MeasureBaseline => "measure-baseline".to_string(),
-            StageSpec::Prune { ranking, step_frac, delta_max } => {
+            StageSpec::Prune { ranking, step_frac, delta_max, max_sparsity, samples } => {
                 let mut parts = Vec::new();
                 if let Some(r) = ranking {
                     parts.push(r.name().to_string());
@@ -395,6 +459,12 @@ impl StageSpec {
                 }
                 if let Some(d) = delta_max {
                     parts.push(format!("dmax={}", fmt_pct(*d)));
+                }
+                if let Some(m) = max_sparsity {
+                    parts.push(format!("max-sparsity={}", fmt_pct(*m)));
+                }
+                if let Some(n) = samples {
+                    parts.push(format!("samples={n}"));
                 }
                 with_args("prune", parts)
             }
@@ -406,8 +476,16 @@ impl StageSpec {
                 parts.push(format!("theta={}", fmt_pct(*theta)));
                 with_args("prune-to", parts)
             }
-            StageSpec::Ptq { calib } => {
-                with_args("ptq", calib.iter().map(|c| c.name().to_string()).collect())
+            StageSpec::Ptq { calib, recalib, samples } => {
+                let mut parts: Vec<String> =
+                    calib.iter().map(|c| c.name().to_string()).collect();
+                if *recalib {
+                    parts.push("recalib".to_string());
+                }
+                if let Some(n) = samples {
+                    parts.push(format!("samples={n}"));
+                }
+                with_args("ptq", parts)
             }
             StageSpec::Mixed { int4_quantile, fp16_quantile } => {
                 let mut parts = Vec::new();
@@ -458,7 +536,7 @@ impl Stage for StageSpec {
                     state.accuracy = acc;
                 }
             }
-            StageSpec::Prune { ranking, step_frac, delta_max } => {
+            StageSpec::Prune { ranking, step_frac, delta_max, max_sparsity, samples } => {
                 let base_acc = state.baseline(sess, cfg)?;
                 let mut c = cfg.clone();
                 if let Some(r) = ranking {
@@ -469,6 +547,12 @@ impl Stage for StageSpec {
                 }
                 if let Some(d) = delta_max {
                     c.delta_max = *d;
+                }
+                if let Some(m) = max_sparsity {
+                    c.max_sparsity = *m;
+                }
+                if let Some(n) = samples {
+                    c.calib_samples = *n;
                 }
                 let sal =
                     sensitivity::compute(sess, &state.params, c.ranking, c.calib_samples)?;
@@ -497,17 +581,32 @@ impl Stage for StageSpec {
                     state.requant = true;
                 }
             }
-            StageSpec::Ptq { calib } => {
+            StageSpec::Ptq { calib, recalib, samples } => {
                 let mut c = cfg.clone();
                 if let Some(m) = calib {
                     c.calib_method = *m;
                 }
-                let ptq = quantize(sess, &state.params, &c)?;
-                state.params = ptq.params;
-                state.scales = Some(ptq.scales);
-                state.regime = Regime::Int8;
-                state.accuracy = ptq.accuracy;
-                state.requant = false;
+                let cap = samples.unwrap_or(usize::MAX);
+                if *recalib {
+                    if state.regime != Regime::Int8 || state.scales.is_none() {
+                        return Err(Error::hqp(
+                            "stage `ptq(recalib)`: nothing to recalibrate — no prior \
+                             ptq stage quantized the model (add a plain `ptq` stage \
+                             first)",
+                        ));
+                    }
+                    let r = ptq::recalibrate(sess, &state.params, &c, cap)?;
+                    state.scales = Some(r.scales);
+                    state.accuracy = r.accuracy;
+                    state.requant = false;
+                } else {
+                    let ptq = ptq::quantize_n(sess, &state.params, &c, cap)?;
+                    state.params = ptq.params;
+                    state.scales = Some(ptq.scales);
+                    state.regime = Regime::Int8;
+                    state.accuracy = ptq.accuracy;
+                    state.requant = false;
+                }
             }
             StageSpec::Mixed { int4_quantile, fp16_quantile } => {
                 if state.saliency.is_none() {
@@ -599,15 +698,21 @@ impl Schedule {
                 legacy_key: Some("baseline".into()),
             }),
             "q8" | "q8-only" => Some(Schedule {
-                stages: vec![StageSpec::MeasureBaseline, StageSpec::Ptq { calib: None }],
+                stages: vec![StageSpec::MeasureBaseline, StageSpec::Ptq { calib: None, recalib: false, samples: None }],
                 label: Some("q8-only".into()),
                 legacy_key: Some("q8".into()),
             }),
             "hqp" => Some(Schedule {
                 stages: vec![
                     StageSpec::MeasureBaseline,
-                    StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
-                    StageSpec::Ptq { calib: None },
+                    StageSpec::Prune {
+                        ranking: None,
+                        step_frac: None,
+                        delta_max: None,
+                        max_sparsity: None,
+                        samples: None,
+                    },
+                    StageSpec::Ptq { calib: None, recalib: false, samples: None },
                 ],
                 label: Some("hqp".into()),
                 legacy_key: Some("hqp".into()),
@@ -615,7 +720,13 @@ impl Schedule {
             "prune" | "hqp-prune" => Some(Schedule {
                 stages: vec![
                     StageSpec::MeasureBaseline,
-                    StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
+                    StageSpec::Prune {
+                        ranking: None,
+                        step_frac: None,
+                        delta_max: None,
+                        max_sparsity: None,
+                        samples: None,
+                    },
                 ],
                 label: Some(format!("prune-only[{}]", cfg.ranking.name())),
                 legacy_key: Some("hqp_prune".into()),
@@ -623,8 +734,14 @@ impl Schedule {
             "mixed" => Some(Schedule {
                 stages: vec![
                     StageSpec::MeasureBaseline,
-                    StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
-                    StageSpec::Ptq { calib: None },
+                    StageSpec::Prune {
+                        ranking: None,
+                        step_frac: None,
+                        delta_max: None,
+                        max_sparsity: None,
+                        samples: None,
+                    },
+                    StageSpec::Ptq { calib: None, recalib: false, samples: None },
                     StageSpec::Mixed { int4_quantile: None, fp16_quantile: None },
                 ],
                 label: Some("mixed".into()),
@@ -766,6 +883,9 @@ mod tests {
         roundtrip("ptq >> prune");
         roundtrip("prune-to(mag-l1,theta=50%)");
         roundtrip("mixed(int4=25%,fp16=90%)");
+        roundtrip("prune(max-sparsity=60%,samples=512) >> ptq(samples=256)");
+        roundtrip("ptq >> prune >> ptq(recalib)");
+        roundtrip("ptq(kl,recalib,samples=1024)");
         // whitespace + plain-fraction spellings normalize
         let a = Schedule::parse("  prune( fisher , dmax=0.015 )>>ptq ").unwrap();
         assert_eq!(a.canonical(), "prune(fisher,dmax=1.5%) >> ptq");
@@ -779,8 +899,14 @@ mod tests {
         assert_eq!(
             s.stages,
             vec![
-                StageSpec::Ptq { calib: None },
-                StageSpec::Prune { ranking: None, step_frac: None, delta_max: None },
+                StageSpec::Ptq { calib: None, recalib: false, samples: None },
+                StageSpec::Prune {
+                    ranking: None,
+                    step_frac: None,
+                    delta_max: None,
+                    max_sparsity: None,
+                    samples: None,
+                },
             ]
         );
     }
@@ -808,9 +934,58 @@ mod tests {
         assert!(Schedule::parse("prune-to(theta=0%)").is_err());
         assert!(Schedule::parse("ptq(kl,minmax)").is_err());
         assert!(Schedule::parse("ptq(qat)").is_err());
+        assert!(Schedule::parse("ptq(recalib,recalib)").is_err());
+        assert!(Schedule::parse("ptq(samples=0)").is_err());
+        assert!(Schedule::parse("ptq(samples=many)").is_err());
+        assert!(Schedule::parse("ptq(split=test)").is_err());
+        assert!(Schedule::parse("prune(samples=0)").is_err());
+        assert!(Schedule::parse("prune(max-sparsity=0%)").is_err());
+        assert!(Schedule::parse("prune(max-sparsity=101%)").is_err());
         assert!(Schedule::parse("mixed(int8=50%)").is_err());
         assert!(Schedule::parse("measure-baseline(x)").is_err());
         assert!(Schedule::parse("prune(fisher").is_err(), "unbalanced paren");
+    }
+
+    #[test]
+    fn per_stage_knobs_parse_and_canonicalize() {
+        // argument order in the source is free; canonical order is fixed
+        let s = Schedule::parse("prune(samples=512,max-sparsity=0.6,fisher)").unwrap();
+        assert_eq!(s.canonical(), "prune(fisher,max-sparsity=60%,samples=512)");
+        assert_eq!(
+            s.stages,
+            vec![StageSpec::Prune {
+                ranking: Some(RankingMethod::Fisher),
+                step_frac: None,
+                delta_max: None,
+                max_sparsity: Some(0.6),
+                samples: Some(512),
+            }]
+        );
+        let s = Schedule::parse("ptq(samples=256,recalib,minmax)").unwrap();
+        assert_eq!(s.canonical(), "ptq(minmax,recalib,samples=256)");
+        assert_eq!(
+            s.stages,
+            vec![StageSpec::Ptq {
+                calib: Some(CalibMethod::MinMax),
+                recalib: true,
+                samples: Some(256),
+            }]
+        );
+        // unknown ptq arguments must advertise the new valid set
+        let e = Schedule::parse("ptq(split=test)").unwrap_err().to_string();
+        assert!(e.contains("recalib"), "{e}");
+        assert!(e.contains("samples=<n>"), "{e}");
+        // the new knobs are part of the schedule's cache identity
+        assert_ne!(
+            Schedule::parse("ptq").unwrap().cache_slug(),
+            Schedule::parse("ptq(samples=256)").unwrap().cache_slug()
+        );
+        assert_eq!(
+            Schedule::parse("prune(max-sparsity=60%,samples=512) >> ptq(recalib)")
+                .unwrap()
+                .cache_slug(),
+            "prune.max-sparsity-60pct.samples-512+ptq.recalib"
+        );
     }
 
     #[test]
@@ -910,7 +1085,13 @@ mod tests {
         // same-named preset (HELP documents them as stages)
         assert_eq!(
             Schedule::resolve("prune", &cfg).unwrap().stages,
-            vec![StageSpec::Prune { ranking: None, step_frac: None, delta_max: None }]
+            vec![StageSpec::Prune {
+                ranking: None,
+                step_frac: None,
+                delta_max: None,
+                max_sparsity: None,
+                samples: None,
+            }]
         );
         assert_eq!(
             Schedule::resolve("mixed", &cfg).unwrap().stages,

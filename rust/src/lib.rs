@@ -13,8 +13,8 @@
 //!   ([`hqp`]), the INT8 calibration machinery ([`quant`]), the
 //!   TensorRT-like deployment optimizer ([`gopt`]), the Jetson-class
 //!   hardware model ([`hwsim`]), the experiment coordinator
-//!   ([`coordinator`]) and the trace-driven edge serving simulator
-//!   ([`serve`]).
+//!   ([`coordinator`]), the trace-driven edge serving simulator
+//!   ([`serve`]) and the budgeted schedule-search engine ([`search`]).
 //! * **L2/L1 (build time)** — `python/compile/`: JAX models with Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!   Python is never on the request path.
@@ -32,6 +32,7 @@ pub mod hwsim;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod serve;
 pub mod tensor;
 pub mod testkit;
@@ -56,6 +57,7 @@ pub mod prelude {
     pub use crate::hwsim::{Device, DeviceKind};
     pub use crate::quant::CalibMethod;
     pub use crate::runtime::{Session, Workspace};
+    pub use crate::search::{run_search, SearchConfig, SearchOutcome, SearchSpace};
     pub use crate::serve::{
         simulate_fleet, ArrivalProcess, AutoscaleConfig, Fleet, Policy, ScalePolicy, ServeConfig,
     };

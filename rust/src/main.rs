@@ -15,6 +15,7 @@
 //! hqp run --model M --method hqp|q8|p50|prune|baseline
 //! hqp run --model M --schedule "prune(fisher) >> ptq(kl)"
 //! hqp mixed --model M         §VI-A mixed-precision extension
+//! hqp search --budget N       budgeted schedule search (Pareto front)
 //! hqp serve                   trace-driven serving simulator (SLO routing)
 //! hqp info                    workspace/platform diagnostics
 //! ```
@@ -40,6 +41,10 @@ const COMMON_FLAGS: &[&str] = &[
 /// Flags only `hqp run` accepts (other commands reject them, the same
 /// typo-hardening `--device` gets).
 const RUN_FLAGS: &[&str] = &["schedule", "smoke", "jobs"];
+
+/// Flags only `hqp search` accepts (other commands reject them, the same
+/// typo-hardening `--device` gets).
+const SEARCH_FLAGS: &[&str] = &["budget", "seed", "space", "smoke", "jobs", "out"];
 
 /// Flags only `hqp serve` accepts (other commands reject them, the same
 /// typo-hardening `--device` gets).
@@ -67,6 +72,10 @@ commands:
                         full candidate suite (--method suite, parallel with
                         --jobs), or any composable pipeline
                         (--schedule \"prune >> ptq\")
+  search                budgeted schedule search over the grammar: successive
+                        halving from roofline+surrogate up to full \u{394}_max
+                        validation, ranked Pareto front over (speedup, size,
+                        \u{394}acc) with \u{394}_max violators excluded
   mixed                 \u{a7}VI-A S-guided mixed precision
   serve                 trace-driven serving simulator over deployed variants
   info                  workspace diagnostics
@@ -83,9 +92,12 @@ options:
 run options:
   --schedule S      composable compression schedule: stages joined with >>,
                     each `name` or `name(args)` — measure-baseline,
-                    prune[(ranking,step=P%,dmax=P%)] (\u{394}_max-gated Algorithm 1),
+                    prune[(ranking,step=P%,dmax=P%,max-sparsity=P%,samples=N)]
+                    (\u{394}_max-gated Algorithm 1),
                     prune-to([ranking,]theta=P%) (unconditional),
-                    ptq[(kl|minmax|percentile)], mixed[(int4=P%,fp16=P%)] —
+                    ptq[(kl|minmax|percentile,recalib,samples=N)] (`recalib`
+                    re-collects activation scales on the current params —
+                    the \u{a7}V-B fix), mixed[(int4=P%,fp16=P%)] —
                     or a preset name (baseline|q8-only|p50-only|hqp|hqp-prune|
                     mixed; stage spellings win, so `prune`/`mixed` alone mean
                     the single stage). Omitted stage args inherit --ranking/--calib/
@@ -100,6 +112,21 @@ run options:
                     are byte-identical at any N; --jobs 0 is rejected. The
                     pool report (per-worker tasks/messages/busy time) goes
                     to stderr so stdout diffs clean across worker counts.
+search options:
+  --budget N        hard cap on schedule evaluations across both fidelity
+                    rungs (default 32; 0 is rejected)
+  --seed N          candidate-stream seed (default 42; same seed + budget =>
+                    byte-identical ranked front at any --jobs)
+  --space AXES      `all` (default) or a comma list of mutation axes:
+                    order, dmax-split, step, ranking, calib, recalib,
+                    max-sparsity, samples
+  --jobs N          evaluation worker threads (default: all available cores;
+                    results byte-identical at any N; 0 rejected). Pool
+                    reports go to stderr
+  --out FILE        also write the outcome (front + all full evals) as JSON
+  --smoke           force the no-artifacts surrogate backend (CI smoke);
+                    without it, artifacts/ is used when present (search then
+                    hits the coordinator's schedule result cache)
 serve options:
   --rps X               offered load, requests/s (default 100; 50 w/ --smoke)
   --slo-ms X            per-request latency SLO (default 50)
@@ -194,6 +221,10 @@ fn run(argv: &[String]) -> Result<()> {
         let mut known = COMMON_FLAGS.to_vec();
         known.extend_from_slice(RUN_FLAGS);
         args.expect_known(&known)?;
+    } else if args.command == "search" {
+        let mut known = COMMON_FLAGS.to_vec();
+        known.extend_from_slice(SEARCH_FLAGS);
+        args.expect_known(&known)?;
     } else {
         args.expect_known(COMMON_FLAGS)?;
     }
@@ -221,6 +252,7 @@ fn run(argv: &[String]) -> Result<()> {
         "overhead" => cmd_overhead(&artifacts, &args),
         "devices" => cmd_devices(&artifacts, &args),
         "run" => cmd_run(&artifacts, &args),
+        "search" => cmd_search(&artifacts, &args),
         "mixed" => cmd_mixed(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
         "help" | "-h" | "--help" => {
@@ -533,6 +565,53 @@ fn cmd_run(artifacts: &str, args: &Args) -> Result<()> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+/// `hqp search` — budgeted successive-halving search over the schedule
+/// grammar for the best deployed speedup at equal Δ_max (DESIGN.md
+/// §Search). Uses real pipeline runs when artifacts exist (hitting the
+/// coordinator's schedule-slug result cache, so repeated candidates are
+/// free); the paper-anchored surrogate otherwise, so the command — and
+/// the CI smoke — runs end-to-end on a bare checkout. `--smoke` forces
+/// the surrogate backend.
+fn cmd_search(artifacts: &str, args: &Args) -> Result<()> {
+    let model = args.flag_or("model", "resnet18").to_string();
+    let device = device_from(args)?;
+    let jobs = jobs_from(args)?;
+    let budget = args.flag_usize("budget", 32)?;
+    let seed = args.flag_usize("seed", 42)? as u64;
+    let space = hqp::search::SearchSpace::parse(args.flag_or("space", "all"))?;
+    let cfg = config_from(args)?;
+    let has_artifacts =
+        std::path::Path::new(artifacts).join("manifest.json").exists();
+    let backend = if !args.switch("smoke") && has_artifacts {
+        hqp::search::Backend::Workspace { root: artifacts.into() }
+    } else {
+        hqp::search::Backend::Reference
+    };
+    let sc = hqp::search::SearchConfig {
+        model,
+        device,
+        hqp: cfg,
+        budget,
+        seed,
+        space,
+        jobs,
+        backend,
+    };
+    let out = hqp::search::run_search(&sc)?;
+    // pool reports to stderr so stdout stays byte-identical across --jobs
+    for pool in &out.pools {
+        eprint!("{}", pool.render());
+    }
+    print!("{}", hqp::search::render(&sc, &out));
+    if let Some(path) = args.flag("out") {
+        let json = hqp::search::outcome_json(&sc, &out).to_string_pretty();
+        std::fs::write(path, json + "\n")
+            .map_err(|e| hqp::Error::Cli(format!("cannot write {path}: {e}")))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

@@ -488,13 +488,29 @@ impl<'w> Session<'w> {
 
     /// Per-tap max |activation| over the calib split (calibration pass 1).
     pub fn act_absmax(&mut self, params: &ParamStore) -> Result<Vec<f32>> {
+        self.act_absmax_n(params, usize::MAX)
+    }
+
+    /// [`Session::act_absmax`] capped at `max_samples` calibration images
+    /// (the schedule grammar's `samples=<n>` knob; `usize::MAX` = full
+    /// split). Batches are consumed in order, so any cap is a prefix of
+    /// the full pass — deterministic for a given split.
+    pub fn act_absmax_n(
+        &mut self,
+        params: &ParamStore,
+        max_samples: usize,
+    ) -> Result<Vec<f32>> {
         let hb = self.mm.hist_batch;
         let outputs = self.outputs("absmax")?;
         let exe = self.ws.executable(&self.mm.name, "absmax")?;
         let pbufs = self.upload_params(params)?;
         let nb = self.ensure_batches("calib", hb)?;
         let mut maxes = vec![0f32; self.mm.taps.len()];
+        let mut seen = 0usize;
         for i in 0..nb {
+            if seen >= max_samples {
+                break;
+            }
             let valid = {
                 let b = self.batch("calib", hb, i);
                 let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
@@ -507,6 +523,7 @@ impl<'w> Session<'w> {
                 }
                 b.valid
             };
+            seen += valid;
             self.counters.executions += 1;
             self.counters.inference_samples += valid as u64;
         }
@@ -517,6 +534,17 @@ impl<'w> Session<'w> {
     /// pass 2; `ranges` from [`Session::act_absmax`]). Returns a (taps ×
     /// hist_bins) row-major tensor of counts.
     pub fn act_hist(&mut self, params: &ParamStore, ranges: &[f32]) -> Result<Tensor> {
+        self.act_hist_n(params, ranges, usize::MAX)
+    }
+
+    /// [`Session::act_hist`] capped at `max_samples` calibration images
+    /// (same prefix-of-the-split contract as [`Session::act_absmax_n`]).
+    pub fn act_hist_n(
+        &mut self,
+        params: &ParamStore,
+        ranges: &[f32],
+        max_samples: usize,
+    ) -> Result<Tensor> {
         let hb = self.mm.hist_batch;
         let outputs = self.outputs("hist")?;
         let exe = self.ws.executable(&self.mm.name, "hist")?;
@@ -526,7 +554,11 @@ impl<'w> Session<'w> {
         let taps = self.mm.taps.len();
         let bins = outputs[0].shape[1];
         let mut acc = Tensor::zeros(vec![taps, bins]);
+        let mut seen = 0usize;
         for i in 0..nb {
+            if seen >= max_samples {
+                break;
+            }
             let valid = {
                 let b = self.batch("calib", hb, i);
                 let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().map(|b| &**b).collect();
@@ -538,6 +570,7 @@ impl<'w> Session<'w> {
                 }
                 b.valid
             };
+            seen += valid;
             self.counters.executions += 1;
             self.counters.inference_samples += valid as u64;
         }

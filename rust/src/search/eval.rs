@@ -1,0 +1,205 @@
+//! The fidelity ladder: cheap and full schedule evaluations, against
+//! either the reference surrogate (bare checkout) or a real workspace.
+//!
+//! Both fidelities price the *deployed engine* for real — layer table at
+//! the final θ/precision through [`reference_engine_at`] and the hwsim
+//! roofline — because latency and size are cheap and exact. Fidelity
+//! only changes where the *accuracy* comes from:
+//!
+//! * **Cheap** — the surrogate without the staleness term, or (workspace
+//!   backend) a free probe of the coordinator's schedule-slug result
+//!   cache: previously-run candidates cost one JSON read.
+//! * **Full** — the surrogate with the staleness term, or (workspace
+//!   backend) a real [`crate::coordinator::run_schedule`] through
+//!   `Schedule::run` with full-split Δ_max validation. `run_schedule`
+//!   itself hits the slug cache, so re-searching is cheap.
+//!
+//! Evaluations fan out through [`crate::exec::parallel_map_init`] with
+//! one worker state each (PJRT clients are not `Send`, so workspace
+//! backends open a `Workspace` per worker), and results merge in
+//! submission order — byte-identical at any `--jobs`.
+
+use std::path::PathBuf;
+
+use crate::coordinator::{self, load_schedule_results};
+use crate::error::{Error, Result};
+use crate::exec::{parallel_map_init, Jobs, PoolReport};
+use crate::hwsim::{simulate, Device};
+use crate::runtime::Workspace;
+use crate::serve::fleet::reference_engine_at;
+
+use super::generator::Candidate;
+use super::surrogate;
+use super::SearchConfig;
+
+/// Successive-halving rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Rung 0: roofline latency + surrogate/cached accuracy.
+    Cheap,
+    /// Rung 1: full-split Δ_max validation (or staleness-aware surrogate).
+    Full,
+}
+
+impl Fidelity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fidelity::Cheap => "cheap",
+            Fidelity::Full => "full",
+        }
+    }
+}
+
+/// Where accuracy numbers come from.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Paper-anchored surrogate (no artifacts needed — CI, benches).
+    Reference,
+    /// Real pipeline runs through a PJRT workspace at `root`.
+    Workspace { root: PathBuf },
+}
+
+/// Per-worker evaluation state (a PJRT workspace is not `Send`, so each
+/// worker opens its own).
+pub enum WorkerState {
+    Stateless,
+    Ws(Box<Workspace>),
+}
+
+/// One priced schedule.
+#[derive(Clone, Debug)]
+pub struct Eval {
+    /// Canonical schedule string (the candidate's identity).
+    pub schedule: String,
+    pub fidelity: Fidelity,
+    /// Batch-1 latency on the search device, ms.
+    pub latency_ms: f64,
+    /// vs the dense FP32 engine on the same device.
+    pub speedup: f64,
+    /// 1 − deployed_bytes / dense_fp32_bytes.
+    pub size_reduction: f64,
+    /// Measured (full, workspace) or modeled accuracy drop.
+    pub acc_drop: f64,
+    /// Final filter sparsity θ.
+    pub sparsity: f64,
+    /// Δ_max compliance at the search's budget.
+    pub compliant: bool,
+    /// Accuracy came from the coordinator's result cache for free.
+    pub cached: bool,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Reference => "reference",
+            Backend::Workspace { .. } => "workspace",
+        }
+    }
+
+    fn init_worker(&self) -> Result<WorkerState> {
+        match self {
+            Backend::Reference => Ok(WorkerState::Stateless),
+            Backend::Workspace { root } => Ok(WorkerState::Ws(Box::new(Workspace::open(root)?))),
+        }
+    }
+
+    /// Price one candidate at one fidelity.
+    fn evaluate(
+        &self,
+        st: &mut WorkerState,
+        sc: &SearchConfig,
+        cand: &Candidate,
+        fid: Fidelity,
+    ) -> Result<Eval> {
+        match st {
+            WorkerState::Stateless => surrogate_eval(sc, cand, fid),
+            WorkerState::Ws(ws) => match fid {
+                Fidelity::Cheap => {
+                    let results_dir = ws.root.join("results");
+                    match load_schedule_results(&results_dir, &sc.model, &cand.sched)? {
+                        Some(rows) => rows_eval(sc, cand, fid, &rows, true),
+                        None => surrogate_eval(sc, cand, fid),
+                    }
+                }
+                Fidelity::Full => {
+                    let rows = coordinator::run_schedule(
+                        ws,
+                        &sc.model,
+                        &cand.sched,
+                        &sc.hqp,
+                        &Device::all(),
+                        false,
+                    )?;
+                    rows_eval(sc, cand, fid, &rows, false)
+                }
+            },
+        }
+    }
+}
+
+/// Surrogate accuracy + real engine pricing.
+fn surrogate_eval(sc: &SearchConfig, cand: &Candidate, fid: Fidelity) -> Result<Eval> {
+    let p = surrogate::walk(&sc.model, &cand.sched, &sc.hqp, fid == Fidelity::Full)?;
+    let engine = reference_engine_at(&sc.model, p.theta, p.int8, p.int4_back_frac)?;
+    let baseline = reference_engine_at(&sc.model, 0.0, false, 0.0)?;
+    let lat = simulate(&engine, &sc.device).latency_ms;
+    let base_lat = simulate(&baseline, &sc.device).latency_ms;
+    Ok(Eval {
+        schedule: cand.sched.canonical(),
+        fidelity: fid,
+        latency_ms: lat,
+        speedup: base_lat / lat,
+        size_reduction: engine.size_reduction(),
+        acc_drop: p.acc_drop,
+        sparsity: p.theta,
+        compliant: p.acc_drop <= sc.hqp.delta_max + 1e-9,
+        cached: false,
+    })
+}
+
+/// Map coordinator result rows (measured pipeline runs) onto an [`Eval`].
+fn rows_eval(
+    sc: &SearchConfig,
+    cand: &Candidate,
+    fid: Fidelity,
+    rows: &[coordinator::ResultRow],
+    cached: bool,
+) -> Result<Eval> {
+    let reports = coordinator::experiments::reports_for_device(rows, &sc.device.name);
+    let r = reports.first().ok_or_else(|| {
+        Error::hqp(format!(
+            "schedule `{}` produced no rows for device {}",
+            cand.sched.canonical(),
+            sc.device.name
+        ))
+    })?;
+    Ok(Eval {
+        schedule: cand.sched.canonical(),
+        fidelity: fid,
+        latency_ms: r.latency_ms,
+        speedup: r.speedup,
+        size_reduction: r.size_reduction,
+        acc_drop: r.acc_drop,
+        sparsity: r.sparsity,
+        compliant: r.acc_drop <= sc.hqp.delta_max + 1e-9,
+        cached,
+    })
+}
+
+/// Fan one rung's candidates across the worker pool. Results come back
+/// in submission order (the determinism contract), with the pool report
+/// for diagnostics.
+pub fn eval_rung(
+    sc: &SearchConfig,
+    cands: &[Candidate],
+    fid: Fidelity,
+    jobs: Jobs,
+) -> Result<(Vec<Eval>, PoolReport)> {
+    let backend = &sc.backend;
+    parallel_map_init(
+        jobs,
+        cands.to_vec(),
+        |_wid| backend.init_worker(),
+        |st, cand, _i| backend.evaluate(st, sc, &cand, fid),
+    )
+}

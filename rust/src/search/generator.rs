@@ -1,0 +1,286 @@
+//! Candidate generation over the schedule grammar.
+//!
+//! The generator is a deterministic stream: the same `(space, seed)` pair
+//! yields the same candidate sequence, byte for byte. It opens with a
+//! fixed prefix of load-bearing schedules — the paper's §V-B ordering
+//! ablation (`prune >> ptq` vs `ptq >> prune`), the recalibration fix,
+//! and the single-objective strawmen — so even tiny budgets evaluate the
+//! claims the search exists to test, then mutates knobs over the enabled
+//! axes. Candidates are deduplicated by canonical string, so the budget
+//! is never spent evaluating the same schedule twice.
+
+use crate::error::{Error, Result};
+use crate::hqp::{HqpConfig, RankingMethod, Schedule, StageSpec};
+use crate::quant::CalibMethod;
+use crate::testkit::prng::Prng;
+
+use std::collections::HashSet;
+
+/// The search-space axes `--space` can enable (comma list or `all`).
+pub const AXIS_NAMES: &[&str] = &[
+    "order", "dmax-split", "step", "ranking", "calib", "recalib", "max-sparsity", "samples",
+];
+
+/// Which schedule-grammar axes the generator may vary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchSpace {
+    /// Stage order: quantize-first (`ptq >> prune`) candidates.
+    pub order: bool,
+    /// Split the Δ_max budget across two prune stages.
+    pub dmax_split: bool,
+    /// Per-stage pruning step size.
+    pub step: bool,
+    /// Saliency ranking method.
+    pub ranking: bool,
+    /// PTQ calibration method.
+    pub calib: bool,
+    /// Trailing `ptq(recalib)` stages (the §V-B fix).
+    pub recalib: bool,
+    /// Per-stage `max-sparsity` safety stops.
+    pub max_sparsity: bool,
+    /// Per-stage calibration sample counts.
+    pub samples: bool,
+}
+
+impl SearchSpace {
+    /// Every axis enabled (the `--space all` default).
+    pub fn all() -> SearchSpace {
+        SearchSpace {
+            order: true,
+            dmax_split: true,
+            step: true,
+            ranking: true,
+            calib: true,
+            recalib: true,
+            max_sparsity: true,
+            samples: true,
+        }
+    }
+
+    /// Parse `--space`: `all` or a comma list of axis names. Unknown
+    /// axes are loud and list the valid set.
+    pub fn parse(s: &str) -> Result<SearchSpace> {
+        if s.trim() == "all" {
+            return Ok(SearchSpace::all());
+        }
+        let mut sp = SearchSpace::default();
+        for tok in s.split(',') {
+            match tok.trim() {
+                "order" => sp.order = true,
+                "dmax-split" => sp.dmax_split = true,
+                "step" => sp.step = true,
+                "ranking" => sp.ranking = true,
+                "calib" => sp.calib = true,
+                "recalib" => sp.recalib = true,
+                "max-sparsity" => sp.max_sparsity = true,
+                "samples" => sp.samples = true,
+                other => {
+                    return Err(Error::Cli(format!(
+                        "unknown search axis `{other}` (valid axes: {}, or `all`)",
+                        AXIS_NAMES.join(", ")
+                    )))
+                }
+            }
+        }
+        Ok(sp)
+    }
+}
+
+/// One schedule the evaluator prices.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub sched: Schedule,
+}
+
+impl Candidate {
+    fn new(sched: Schedule) -> Candidate {
+        Candidate { sched }
+    }
+}
+
+/// Knob pools the mutator draws from. Values are exact short decimals so
+/// canonical percent round-trips stay verbatim.
+const STEPS: [f64; 3] = [0.005, 0.01, 0.02];
+const CAPS: [f64; 3] = [0.25, 0.35, 0.5];
+const SAMPLE_COUNTS: [usize; 3] = [256, 512, 2048];
+const SPLIT_FRACS: [f64; 3] = [0.25, 0.5, 0.75];
+const RANKINGS: [RankingMethod; 4] = [
+    RankingMethod::Fisher,
+    RankingMethod::MagnitudeL1,
+    RankingMethod::MagnitudeL2,
+    RankingMethod::BnGamma,
+];
+const CALIBS: [CalibMethod; 3] =
+    [CalibMethod::Kl, CalibMethod::MinMax, CalibMethod::Percentile];
+
+fn prune_stage(space: &SearchSpace, rng: &mut Prng, delta_max: Option<f64>) -> StageSpec {
+    StageSpec::Prune {
+        ranking: if space.ranking && rng.next_f64() < 0.5 {
+            Some(RANKINGS[rng.below(RANKINGS.len())])
+        } else {
+            None
+        },
+        step_frac: if space.step && rng.next_f64() < 0.5 {
+            Some(STEPS[rng.below(STEPS.len())])
+        } else {
+            None
+        },
+        delta_max,
+        max_sparsity: if space.max_sparsity && rng.next_f64() < 0.5 {
+            Some(CAPS[rng.below(CAPS.len())])
+        } else {
+            None
+        },
+        samples: if space.samples && rng.next_f64() < 0.5 {
+            Some(SAMPLE_COUNTS[rng.below(SAMPLE_COUNTS.len())])
+        } else {
+            None
+        },
+    }
+}
+
+fn ptq_stage(space: &SearchSpace, rng: &mut Prng, recalib: bool) -> StageSpec {
+    StageSpec::Ptq {
+        calib: if space.calib && rng.next_f64() < 0.5 {
+            Some(CALIBS[rng.below(CALIBS.len())])
+        } else {
+            None
+        },
+        recalib,
+        samples: if space.samples && rng.next_f64() < 0.5 {
+            Some(SAMPLE_COUNTS[rng.below(SAMPLE_COUNTS.len())])
+        } else {
+            None
+        },
+    }
+}
+
+/// One random schedule over the enabled axes.
+fn mutate(space: &SearchSpace, cfg: &HqpConfig, rng: &mut Prng) -> Schedule {
+    // shape pool: prune>>ptq, prune-only and ptq-only are always
+    // expressible; the rest gate on their axis
+    let mut shapes = vec![0usize, 1, 2];
+    if space.order {
+        shapes.push(3);
+    }
+    if space.recalib {
+        shapes.push(4);
+    }
+    if space.dmax_split {
+        shapes.push(5);
+    }
+    let stages = match shapes[rng.below(shapes.len())] {
+        0 => vec![prune_stage(space, rng, None), ptq_stage(space, rng, false)],
+        1 => vec![prune_stage(space, rng, None)],
+        2 => vec![ptq_stage(space, rng, false)],
+        3 => vec![ptq_stage(space, rng, false), prune_stage(space, rng, None)],
+        // quantize-first *with* the §V-B fix: re-collect scales after
+        // the prune
+        4 => vec![
+            ptq_stage(space, rng, false),
+            prune_stage(space, rng, None),
+            ptq_stage(space, rng, true),
+        ],
+        // two-stage Δ_max split: a conservative first prune, then the
+        // full-budget prune, then ptq
+        _ => {
+            let f = SPLIT_FRACS[rng.below(SPLIT_FRACS.len())];
+            vec![
+                prune_stage(space, rng, Some(f * cfg.delta_max)),
+                prune_stage(space, rng, None),
+                ptq_stage(space, rng, false),
+            ]
+        }
+    };
+    Schedule::new(stages)
+}
+
+/// The fixed seed-independent prefix: the ablation schedules the search
+/// must compare even at tiny budgets.
+fn prefix(space: &SearchSpace) -> Vec<Schedule> {
+    let mut p = vec![Schedule::parse("prune >> ptq").unwrap()];
+    if space.order {
+        p.push(Schedule::parse("ptq >> prune").unwrap());
+    }
+    if space.order && space.recalib {
+        p.push(Schedule::parse("ptq >> prune >> ptq(recalib)").unwrap());
+    }
+    p.push(Schedule::parse("prune").unwrap());
+    p.push(Schedule::parse("ptq").unwrap());
+    p
+}
+
+/// Generate up to `n` distinct candidates. Fewer are returned only when
+/// the enabled axes cannot produce `n` distinct schedules within the
+/// attempt cap (tiny spaces) — callers treat the returned length as the
+/// effective candidate count.
+pub fn generate(space: &SearchSpace, cfg: &HqpConfig, seed: u64, n: usize) -> Vec<Candidate> {
+    let mut rng = Prng::new(seed);
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    for sched in prefix(space) {
+        if out.len() >= n {
+            return out;
+        }
+        if seen.insert(sched.canonical()) {
+            out.push(Candidate::new(sched));
+        }
+    }
+    let mut attempts = 0usize;
+    let cap = n * 64 + 64;
+    while out.len() < n && attempts < cap {
+        attempts += 1;
+        let sched = mutate(space, cfg, &mut rng);
+        if seen.insert(sched.canonical()) {
+            out.push(Candidate::new(sched));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_parses_all_and_lists() {
+        assert_eq!(SearchSpace::parse("all").unwrap(), SearchSpace::all());
+        let sp = SearchSpace::parse("order,recalib").unwrap();
+        assert!(sp.order && sp.recalib);
+        assert!(!sp.ranking && !sp.calib);
+        let e = SearchSpace::parse("order,quantum").unwrap_err().to_string();
+        assert!(e.contains("unknown search axis"), "{e}");
+        for axis in AXIS_NAMES {
+            assert!(e.contains(axis), "error must list `{axis}`: {e}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_distinct() {
+        let cfg = HqpConfig::default();
+        let a = generate(&SearchSpace::all(), &cfg, 7, 40);
+        let b = generate(&SearchSpace::all(), &cfg, 7, 40);
+        assert_eq!(a.len(), 40);
+        let ca: Vec<String> = a.iter().map(|c| c.sched.canonical()).collect();
+        let cb: Vec<String> = b.iter().map(|c| c.sched.canonical()).collect();
+        assert_eq!(ca, cb, "same seed must yield the same stream");
+        let mut dedup = ca.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ca.len(), "candidates must be distinct");
+        // every candidate round-trips through the grammar
+        for c in &ca {
+            assert_eq!(&Schedule::parse(c).unwrap().canonical(), c);
+        }
+    }
+
+    #[test]
+    fn prefix_carries_the_ordering_ablation() {
+        let cfg = HqpConfig::default();
+        let cands = generate(&SearchSpace::all(), &cfg, 0, 3);
+        let c: Vec<String> = cands.iter().map(|c| c.sched.canonical()).collect();
+        assert_eq!(c[0], "prune >> ptq");
+        assert_eq!(c[1], "ptq >> prune");
+        assert_eq!(c[2], "ptq >> prune >> ptq(recalib)");
+    }
+}

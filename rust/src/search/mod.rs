@@ -1,0 +1,279 @@
+//! `hqp search` — a budgeted schedule-search engine over the compression
+//! grammar (DESIGN.md §Search).
+//!
+//! The paper's claim is that *coordinated* prune-then-quantize under a
+//! strict Δ_max beats single-objective compression; PR 5 made that
+//! coordination axis a first-class value (schedule strings). This
+//! subsystem closes the loop: it *searches* the grammar for the schedule
+//! with the best deployed speedup at equal Δ_max — HALP's latency-driven
+//! objective applied to Ps-and-Qs-style interleaved quantization-aware
+//! pruning.
+//!
+//! Three parts, each its own module:
+//!
+//! * [`generator`] — a deterministic candidate stream over the enabled
+//!   `--space` axes, seeded via [`crate::testkit::prng`]; opens with the
+//!   §V-B ablation schedules so tiny budgets still test the paper's
+//!   ordering claim.
+//! * [`eval`] — the two-rung fidelity ladder (cheap roofline+surrogate /
+//!   cached rows, then full Δ_max validation), fanned out across
+//!   `--jobs` workers with submission-order merge.
+//! * [`pareto`] — the front over (deployed speedup, model size, measured
+//!   Δ), Δ_max violators hard-excluded.
+//!
+//! **Budget contract:** `--budget N` is a hard cap on schedule
+//! evaluations. Successive halving spends `N − max(1, N/η)` evaluations
+//! on the cheap rung, promotes the top `max(1, N/η)` survivors (ranked
+//! by compliance, then speedup, then shortest-then-lexicographic
+//! canonical string), and spends the
+//! rest on full fidelity: exactly `n_cheap + n_full ≤ N` evaluations,
+//! never more. η = 4.
+//!
+//! **Determinism contract:** same `(seed, budget, space)` ⇒ the same
+//! candidates, the same promotions, and a byte-identical ranked front at
+//! any `--jobs` (property-tested in `tests/prop_search.rs`).
+
+pub mod eval;
+pub mod generator;
+pub mod pareto;
+pub mod surrogate;
+
+pub use eval::{Backend, Eval, Fidelity};
+pub use generator::{generate, Candidate, SearchSpace, AXIS_NAMES};
+
+use crate::error::{Error, Result};
+use crate::exec::{Jobs, PoolReport};
+use crate::formats::json::Json;
+use crate::hqp::HqpConfig;
+use crate::hwsim::Device;
+use crate::report::Table;
+
+/// Successive-halving promotion ratio.
+pub const ETA: usize = 4;
+
+/// Everything one search needs.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub model: String,
+    /// Device the deployed-speedup objective is priced on.
+    pub device: Device,
+    /// Baseline pipeline config candidates inherit omitted knobs from
+    /// (its `delta_max` is the front's compliance gate).
+    pub hqp: HqpConfig,
+    /// Hard cap on schedule evaluations across both rungs.
+    pub budget: usize,
+    pub seed: u64,
+    pub space: SearchSpace,
+    pub jobs: Jobs,
+    pub backend: Backend,
+}
+
+/// The ranked search result.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    /// Ranked Pareto front (compliant, full-fidelity points only).
+    pub front: Vec<Eval>,
+    /// Every full-fidelity evaluation, ranked (violators included — the
+    /// table shows *why* e.g. quantize-first lost).
+    pub full: Vec<Eval>,
+    /// Evaluations spent on the cheap rung.
+    pub cheap_evals: usize,
+    /// Evaluations spent on the full rung.
+    pub full_evals: usize,
+    /// The configured budget (`cheap_evals + full_evals ≤ budget`).
+    pub budget: usize,
+    /// Worker-pool reports (one per rung that ran), for stderr.
+    pub pools: Vec<PoolReport>,
+}
+
+impl SearchOutcome {
+    /// Total evaluations spent.
+    pub fn evals(&self) -> usize {
+        self.cheap_evals + self.full_evals
+    }
+}
+
+/// Rank order for cheap-rung promotion: compliant first, then speedup,
+/// then shortest canonical string, then lexicographic (full determinism
+/// under ties). Shorter-first matters: when a knob-decorated mutation
+/// ties a bare ablation schedule on the cheap rung, the bare schedule —
+/// the one the §V-B comparison needs at full fidelity — is promoted
+/// first.
+fn promotion_order(a: &Eval, b: &Eval) -> std::cmp::Ordering {
+    b.compliant
+        .cmp(&a.compliant)
+        .then(b.speedup.total_cmp(&a.speedup))
+        .then(a.schedule.len().cmp(&b.schedule.len()))
+        .then(a.schedule.cmp(&b.schedule))
+}
+
+/// Run the search: generate, halve, validate, rank.
+pub fn run_search(sc: &SearchConfig) -> Result<SearchOutcome> {
+    if sc.budget == 0 {
+        return Err(Error::Cli(
+            "--budget must be >= 1 (it caps schedule evaluations; \
+             try --budget 8 for a smoke run)"
+                .into(),
+        ));
+    }
+    let n_full = (sc.budget / ETA).max(1);
+    let n_cheap = sc.budget - n_full;
+    let cands = generate(&sc.space, &sc.hqp, sc.seed, n_cheap.max(n_full));
+    let mut pools = Vec::new();
+
+    // ---- rung 0: cheap fidelity over the wide pool ----------------------
+    let (survivors, cheap_evals) = if n_cheap > 0 {
+        let pool_cands: Vec<Candidate> = cands.iter().take(n_cheap).cloned().collect();
+        let (evals, pool) = eval::eval_rung(sc, &pool_cands, Fidelity::Cheap, sc.jobs)?;
+        pools.push(pool);
+        let mut order: Vec<usize> = (0..evals.len()).collect();
+        order.sort_by(|&i, &j| promotion_order(&evals[i], &evals[j]));
+        let survivors: Vec<Candidate> = order
+            .into_iter()
+            .take(n_full)
+            .map(|i| pool_cands[i].clone())
+            .collect();
+        (survivors, pool_cands.len())
+    } else {
+        // budget too small for a cheap rung: full-evaluate the head of
+        // the candidate stream directly
+        (cands.iter().take(n_full).cloned().collect(), 0)
+    };
+
+    // ---- rung 1: full fidelity over the survivors -----------------------
+    let (mut full, pool) = eval::eval_rung(sc, &survivors, Fidelity::Full, sc.jobs)?;
+    pools.push(pool);
+    let full_evals = full.len();
+    let front = pareto::front(&full);
+    pareto::rank(&mut full);
+    Ok(SearchOutcome { front, full, cheap_evals, full_evals, budget: sc.budget, pools })
+}
+
+fn table_of(evals: &[Eval], delta_max: f64) -> Table {
+    let mut t = Table::new(vec![
+        "#", "schedule", "speedup", "size red", "acc drop", "theta", "fid", "status",
+    ]);
+    for (i, e) in evals.iter().enumerate() {
+        t.row(vec![
+            format!("{}", i + 1),
+            e.schedule.clone(),
+            format!("{:.2}x", e.speedup),
+            format!("{:.1}%", e.size_reduction * 100.0),
+            format!("{:.2}%", e.acc_drop * 100.0),
+            format!("{:.0}%", e.sparsity * 100.0),
+            e.fidelity.name().to_string(),
+            if e.compliant {
+                if e.cached { "ok (cached)".to_string() } else { "ok".to_string() }
+            } else {
+                format!("VIOLATES Δmax={:.2}%", delta_max * 100.0)
+            },
+        ]);
+    }
+    t
+}
+
+/// Human-readable report: the ranked front, then every full evaluation
+/// (so excluded violators stay visible).
+pub fn render(sc: &SearchConfig, out: &SearchOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "search: {} on {} — budget {} ({} cheap + {} full evals), seed {}, backend {}\n",
+        sc.model,
+        sc.device.name,
+        out.budget,
+        out.cheap_evals,
+        out.full_evals,
+        sc.seed,
+        sc.backend.name(),
+    ));
+    s.push_str(&format!(
+        "Pareto front (Δ_max = {:.2}%, {} of {} full candidates):\n",
+        sc.hqp.delta_max * 100.0,
+        out.front.len(),
+        out.full.len()
+    ));
+    s.push_str(&table_of(&out.front, sc.hqp.delta_max).render());
+    if out.full.len() > out.front.len() {
+        s.push_str("all full-fidelity candidates:\n");
+        s.push_str(&table_of(&out.full, sc.hqp.delta_max).render());
+    }
+    s
+}
+
+fn eval_json(e: &Eval) -> Json {
+    Json::obj()
+        .set("schedule", e.schedule.clone())
+        .set("fidelity", e.fidelity.name())
+        .set("latency_ms", e.latency_ms)
+        .set("speedup", e.speedup)
+        .set("size_reduction", e.size_reduction)
+        .set("acc_drop", e.acc_drop)
+        .set("sparsity", e.sparsity)
+        .set("compliant", e.compliant)
+        .set("cached", e.cached)
+}
+
+/// Machine-readable outcome (the `--out` JSON and BENCH_search payload).
+pub fn outcome_json(sc: &SearchConfig, out: &SearchOutcome) -> Json {
+    Json::obj()
+        .set("model", sc.model.clone())
+        .set("device", sc.device.name.clone())
+        .set("backend", sc.backend.name())
+        .set("budget", out.budget)
+        .set("seed", sc.seed as i64)
+        .set("delta_max", sc.hqp.delta_max)
+        .set("cheap_evals", out.cheap_evals)
+        .set("full_evals", out.full_evals)
+        .set("front", Json::Arr(out.front.iter().map(eval_json).collect()))
+        .set("full", Json::Arr(out.full.iter().map(eval_json).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config(budget: usize, seed: u64) -> SearchConfig {
+        SearchConfig {
+            model: "resnet18".into(),
+            device: Device::xavier_nx(),
+            hqp: HqpConfig::default(),
+            budget,
+            seed,
+            space: SearchSpace::all(),
+            jobs: Jobs::one(),
+            backend: Backend::Reference,
+        }
+    }
+
+    #[test]
+    fn budget_zero_is_loud() {
+        let e = run_search(&config(0, 42)).unwrap_err().to_string();
+        assert!(e.contains("--budget"), "{e}");
+    }
+
+    #[test]
+    fn budget_one_spends_exactly_one_full_eval() {
+        let out = run_search(&config(1, 42)).unwrap();
+        assert_eq!(out.cheap_evals, 0);
+        assert_eq!(out.full_evals, 1);
+        // the single eval is the canonical prune-first schedule
+        assert_eq!(out.full[0].schedule, "prune >> ptq");
+        assert_eq!(out.front.len(), 1);
+    }
+
+    #[test]
+    fn front_rediscovers_the_ordering_claim() {
+        // §V-B at budget 8: prune-first survives full fidelity,
+        // quantize-first is promoted on the (optimistic) cheap rung and
+        // then hard-excluded when full fidelity measures the stale scales
+        let out = run_search(&config(8, 42)).unwrap();
+        assert!(out.evals() <= 8);
+        let full_of = |s: &str| out.full.iter().find(|e| e.schedule == s);
+        let pf = full_of("prune >> ptq").expect("prune-first must be promoted");
+        let qf = full_of("ptq >> prune").expect("quantize-first must be promoted");
+        assert!(pf.compliant && !qf.compliant);
+        assert!(pf.acc_drop < qf.acc_drop);
+        assert!(out.front.iter().any(|e| e.schedule == "prune >> ptq"));
+        assert!(!out.front.iter().any(|e| e.schedule == "ptq >> prune"));
+    }
+}

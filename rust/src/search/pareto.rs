@@ -1,0 +1,93 @@
+//! Pareto front over (deployed speedup ↑, size reduction ↑, accuracy
+//! drop ↓), Δ_max violators hard-excluded.
+
+use super::eval::Eval;
+
+/// `a` dominates `b`: no worse on every objective, strictly better on
+/// at least one.
+pub fn dominates(a: &Eval, b: &Eval) -> bool {
+    let no_worse = a.speedup >= b.speedup
+        && a.size_reduction >= b.size_reduction
+        && a.acc_drop <= b.acc_drop;
+    let better = a.speedup > b.speedup
+        || a.size_reduction > b.size_reduction
+        || a.acc_drop < b.acc_drop;
+    no_worse && better
+}
+
+/// Deterministic ranking: primary objective (deployed speedup) first,
+/// then accuracy headroom, then the canonical string so ties never
+/// depend on evaluation order.
+pub fn rank(evals: &mut [Eval]) {
+    evals.sort_by(|a, b| {
+        b.speedup
+            .total_cmp(&a.speedup)
+            .then(a.acc_drop.total_cmp(&b.acc_drop))
+            .then(a.schedule.cmp(&b.schedule))
+    });
+}
+
+/// The ranked Pareto front of the compliant evaluations. Distinct
+/// schedules with identical objectives are mutually non-dominating and
+/// both stay (e.g. `prune >> ptq` and its recalibrated quantize-first
+/// equivalent).
+pub fn front(evals: &[Eval]) -> Vec<Eval> {
+    let compliant: Vec<&Eval> = evals.iter().filter(|e| e.compliant).collect();
+    let mut out: Vec<Eval> = compliant
+        .iter()
+        .filter(|&&e| !compliant.iter().any(|&o| dominates(o, e)))
+        .map(|&e| e.clone())
+        .collect();
+    rank(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::Fidelity;
+
+    fn eval(schedule: &str, speedup: f64, size: f64, drop: f64, compliant: bool) -> Eval {
+        Eval {
+            schedule: schedule.to_string(),
+            fidelity: Fidelity::Full,
+            latency_ms: 1.0,
+            speedup,
+            size_reduction: size,
+            acc_drop: drop,
+            sparsity: 0.0,
+            compliant,
+            cached: false,
+        }
+    }
+
+    #[test]
+    fn violators_never_surface() {
+        let evals = vec![
+            eval("a", 9.0, 0.9, 0.05, false), // dominant but non-compliant
+            eval("b", 2.0, 0.5, 0.010, true),
+        ];
+        let f = front(&evals);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].schedule, "b");
+    }
+
+    #[test]
+    fn dominated_points_are_dropped_and_ranking_is_stable() {
+        let evals = vec![
+            eval("slow-small", 1.5, 0.80, 0.004, true),
+            eval("fast-big", 3.0, 0.60, 0.012, true),
+            eval("strictly-worse", 1.4, 0.60, 0.013, true),
+            eval("tie", 3.0, 0.60, 0.012, true),
+        ];
+        let f = front(&evals);
+        let names: Vec<&str> = f.iter().map(|e| e.schedule.as_str()).collect();
+        // ties are mutually non-dominating and order by canonical string
+        assert_eq!(names, vec!["fast-big", "tie", "slow-small"]);
+        for (i, a) in f.iter().enumerate() {
+            for (j, b) in f.iter().enumerate() {
+                assert!(i == j || !dominates(a, b), "front has a dominated point");
+            }
+        }
+    }
+}

@@ -440,6 +440,35 @@ pub fn reference_engine(model: &str, method: &str) -> Result<(OptimizedGraph, f6
     Ok((engine, acc_drop))
 }
 
+/// Build a reference engine at an arbitrary compression point — the
+/// search subsystem's pricing hook. `theta` is the filter sparsity,
+/// `int8` selects the deployed numeric regime, and `int4_back_frac` is
+/// the fraction of trailing layers dropped to INT4 (0 for non-mixed
+/// engines; only meaningful when `int8`).
+pub fn reference_engine_at(
+    model: &str,
+    theta: f64,
+    int8: bool,
+    int4_back_frac: f64,
+) -> Result<OptimizedGraph> {
+    let layers = match model {
+        "resnet18" => resnet18_layers(),
+        "mobilenetv3" => mobilenetv3_layers(),
+        _ => return Err(Error::hqp(format!("unknown reference model {model}"))),
+    };
+    let n = layers.len();
+    let int4_from = n - ((n as f64) * int4_back_frac.clamp(0.0, 1.0)).round() as usize;
+    Ok(build_engine(model, &layers, theta, move |i| {
+        if !int8 {
+            Precision::Fp32
+        } else if i >= int4_from {
+            Precision::Int4
+        } else {
+            Precision::Int8
+        }
+    }))
+}
+
 /// Reference fleet: one [`Server`] per device, each loaded with the
 /// requested method variants.
 pub fn reference_fleet(

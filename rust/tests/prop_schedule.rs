@@ -37,6 +37,11 @@ fn frac(rng: &mut Prng) -> f64 {
     (rng.below(1024) + 1) as f64 / 1024.0
 }
 
+/// A random calibration-sample count ≥ 1.
+fn sample_count(rng: &mut Prng) -> usize {
+    [1, 64, 256, 512, 1024, 2048, 4096][rng.below(7)]
+}
+
 fn gen_stage(rng: &mut Prng) -> StageSpec {
     match rng.below(5) {
         0 => StageSpec::MeasureBaseline,
@@ -48,6 +53,8 @@ fn gen_stage(rng: &mut Prng) -> StageSpec {
             },
             step_frac: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
             delta_max: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
+            max_sparsity: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
+            samples: if rng.next_f64() < 0.5 { Some(sample_count(rng)) } else { None },
         },
         2 => StageSpec::PruneTo {
             ranking: if rng.next_f64() < 0.5 {
@@ -63,6 +70,8 @@ fn gen_stage(rng: &mut Prng) -> StageSpec {
             } else {
                 None
             },
+            recalib: rng.next_f64() < 0.25,
+            samples: if rng.next_f64() < 0.5 { Some(sample_count(rng)) } else { None },
         },
         _ => StageSpec::Mixed {
             int4_quantile: if rng.next_f64() < 0.5 { Some(frac(rng)) } else { None },
@@ -149,7 +158,8 @@ fn prop_unknown_stages_and_args_are_loud() {
             .map(|_| (b'a' + rng.below(26) as u8) as char)
             .collect();
         if valid.contains(&junk.as_str())
-            || ["step", "dmax", "theta", "int4", "fp16"].contains(&junk.as_str())
+            || ["step", "dmax", "theta", "int4", "fp16", "samples", "recalib"]
+                .contains(&junk.as_str())
         {
             continue;
         }

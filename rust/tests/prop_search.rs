@@ -1,0 +1,181 @@
+//! Property tests for the schedule-search engine (testkit harness — the
+//! offline proptest substitute, DESIGN.md §Substitutions).
+//!
+//! These run WITHOUT artifacts against the reference surrogate backend
+//! and pin the subsystem's four contracts (ISSUE/DESIGN.md §Search):
+//!
+//! * **jobs invariance** — same seed + budget ⇒ a byte-identical ranked
+//!   front (rendered table AND JSON) at any `--jobs`;
+//! * **Pareto soundness** — the returned front contains no dominated
+//!   point;
+//! * **budget** — the evaluation count never exceeds `--budget N`;
+//! * **compliance** — no Δ_max-violating schedule ever appears on the
+//!   front.
+
+use hqp::exec::Jobs;
+use hqp::hqp::HqpConfig;
+use hqp::hwsim::Device;
+use hqp::search::{
+    generate, outcome_json, pareto, render, run_search, Backend, SearchConfig, SearchSpace,
+};
+
+fn config(budget: usize, seed: u64, jobs: Jobs) -> SearchConfig {
+    SearchConfig {
+        model: "resnet18".into(),
+        device: Device::xavier_nx(),
+        hqp: HqpConfig::default(),
+        budget,
+        seed,
+        space: SearchSpace::all(),
+        jobs,
+        backend: Backend::Reference,
+    }
+}
+
+#[test]
+fn prop_front_is_byte_identical_at_any_jobs() {
+    for (budget, seed) in [(8usize, 42u64), (24, 7), (40, 0xBEEF)] {
+        let base = run_search(&config(budget, seed, Jobs::one())).unwrap();
+        let sc1 = config(budget, seed, Jobs::one());
+        let text1 = render(&sc1, &base);
+        let json1 = outcome_json(&sc1, &base).to_string_pretty();
+        for jobs in [2, 3, 8] {
+            let scn = config(budget, seed, Jobs::new(jobs).unwrap());
+            let out = run_search(&scn).unwrap();
+            assert_eq!(
+                render(&scn, &out),
+                text1,
+                "budget {budget} seed {seed}: rendered front must be \
+                 byte-identical at --jobs {jobs}"
+            );
+            assert_eq!(
+                outcome_json(&scn, &out).to_string_pretty(),
+                json1,
+                "budget {budget} seed {seed}: JSON must be byte-identical \
+                 at --jobs {jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_front_has_no_dominated_point() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let out = run_search(&config(32, seed, Jobs::one())).unwrap();
+        for (i, a) in out.front.iter().enumerate() {
+            for (j, b) in out.front.iter().enumerate() {
+                assert!(
+                    i == j || !pareto::dominates(a, b),
+                    "seed {seed}: `{}` dominates `{}` on the front",
+                    a.schedule,
+                    b.schedule
+                );
+            }
+        }
+        // every front point must also be a full-fidelity eval
+        for e in &out.front {
+            assert_eq!(e.fidelity, hqp::search::Fidelity::Full);
+            assert!(out.full.iter().any(|f| f.schedule == e.schedule));
+        }
+    }
+}
+
+#[test]
+fn prop_budget_is_never_exceeded() {
+    for budget in 1..=40usize {
+        let out = run_search(&config(budget, 42, Jobs::one())).unwrap();
+        assert!(
+            out.evals() <= budget,
+            "budget {budget}: spent {} evaluations",
+            out.evals()
+        );
+        assert!(out.full_evals >= 1, "at least one full eval at any budget");
+    }
+}
+
+#[test]
+fn prop_no_violator_ever_reaches_the_front() {
+    // sweep Δ_max from punishing to generous; at every setting the front
+    // respects the budget in force
+    for delta_max in [0.001f64, 0.005, 0.015, 0.05] {
+        for seed in [42u64, 99] {
+            let mut sc = config(24, seed, Jobs::one());
+            sc.hqp.delta_max = delta_max;
+            let out = run_search(&sc).unwrap();
+            for e in &out.front {
+                assert!(
+                    e.compliant && e.acc_drop <= delta_max + 1e-9,
+                    "Δ_max={delta_max} seed {seed}: `{}` (drop {:.4}) on front",
+                    e.schedule,
+                    e.acc_drop
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_candidate_stream_is_deterministic_and_budget_sized() {
+    let cfg = HqpConfig::default();
+    for seed in [0u64, 42, 1234] {
+        for n in [1usize, 5, 17, 40] {
+            let a = generate(&SearchSpace::all(), &cfg, seed, n);
+            let b = generate(&SearchSpace::all(), &cfg, seed, n);
+            let ca: Vec<String> = a.iter().map(|c| c.sched.canonical()).collect();
+            let cb: Vec<String> = b.iter().map(|c| c.sched.canonical()).collect();
+            assert_eq!(ca, cb, "seed {seed} n {n}");
+            assert!(ca.len() <= n);
+            let mut d = ca.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), ca.len(), "seed {seed} n {n}: duplicates");
+        }
+    }
+}
+
+#[test]
+fn prop_bad_inputs_are_loud() {
+    // --budget 0
+    let e = run_search(&config(0, 42, Jobs::one())).unwrap_err().to_string();
+    assert!(e.contains("--budget"), "{e}");
+    // malformed --space lists the valid axes
+    let e = SearchSpace::parse("order,banana").unwrap_err().to_string();
+    assert!(e.contains("unknown search axis"), "{e}");
+    for axis in hqp::search::AXIS_NAMES {
+        assert!(e.contains(axis), "error must list `{axis}`: {e}");
+    }
+}
+
+#[test]
+fn prop_ordering_claim_rediscovered_across_seeds() {
+    // §V-B: prune-first is always promoted (it leads the candidate
+    // stream and wins every cheap-rung tie), survives full fidelity and
+    // lands on the front; quantize-first, *whenever* it reaches full
+    // fidelity, measures the stale-scale penalty and is hard-excluded.
+    for seed in [42u64, 7, 2026] {
+        for budget in [8usize, 16, 32] {
+            let out = run_search(&config(budget, seed, Jobs::one())).unwrap();
+            let pf = out
+                .full
+                .iter()
+                .find(|e| e.schedule == "prune >> ptq")
+                .expect("prune-first must always be promoted");
+            assert!(pf.compliant, "seed {seed} budget {budget}");
+            assert!(
+                out.front.iter().any(|e| e.schedule == "prune >> ptq"),
+                "seed {seed} budget {budget}: prune-first missing from front"
+            );
+            if let Some(qf) = out.full.iter().find(|e| e.schedule == "ptq >> prune") {
+                assert!(!qf.compliant, "seed {seed} budget {budget}");
+                assert!(pf.acc_drop < qf.acc_drop, "seed {seed} budget {budget}");
+                assert!(
+                    !out.front.iter().any(|e| e.schedule == "ptq >> prune"),
+                    "seed {seed} budget {budget}: violator on front"
+                );
+            }
+        }
+    }
+    // the hand-checked point: budget 8, seed 42 promotes BOTH orderings
+    let out = run_search(&config(8, 42, Jobs::one())).unwrap();
+    assert!(out.full.iter().any(|e| e.schedule == "ptq >> prune"));
+}
