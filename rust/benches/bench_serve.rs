@@ -36,16 +36,26 @@
 //! * `sim_events_per_sec`            — events/s the sharded virtual-time
 //!                                     engine sustains (host-side, no
 //!                                     artifacts; a hard floor is asserted)
+//! * `stress_requests`, `stress_hist_bins`, `stress_peak_queue_depth`,
+//!   `wall_ms_stress`, `events_per_sec_stress`
+//!                                   — the streaming stress scenario: 10⁶
+//!                                     requests (10⁴ with --smoke) through
+//!                                     `simulate_fleet_stream` with the
+//!                                     lazy trace generator (acceptance:
+//!                                     the events/s floor holds AND the
+//!                                     occupied-histogram-bin footprint is
+//!                                     independent of the request count)
 //!
 //! Runs without artifacts: fleets come from the paper-anchored reference
 //! profiles, so this bench (like `bench_session --smoke`) always produces
 //! a report in CI.
 
 use hqp::benchkit::{bench, section, time_once, Report};
+use hqp::exec::Jobs;
 use hqp::hwsim::Device;
 use hqp::serve::{
-    reference_fleet, simulate_fleet, trace, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy,
-    ServeConfig,
+    reference_fleet, simulate_fleet, simulate_fleet_stream, trace, ArrivalProcess,
+    AutoscaleConfig, Policy, ScalePolicy, ServeConfig,
 };
 
 /// Every simulation must sustain at least this many simulated events per
@@ -256,6 +266,53 @@ fn main() {
         "hot path: {eps:.0} events/s is below the {EVENTS_PER_SEC_FLOOR:.0} floor"
     );
     report.push(stats);
+
+    // ---- streaming stress: million-request runs at constant memory --------
+    section("serve — streaming stress (10^6 requests, O(1) telemetry)");
+    // stationary Poisson at 0.7x the hqp variant's capacity: the queue
+    // stays bounded, so the latency distribution's *support* — and with
+    // it the histogram's occupied-bin footprint — is set by the workload,
+    // not by how long it runs. The trace itself is never materialized
+    // (ArrivalGen over an unbounded horizon, taken to the budget).
+    let stress_big = if smoke { 10_000usize } else { 1_000_000 };
+    let stress_small = 10_000usize;
+    let stress_rate = cap_hqp * 0.7;
+    let stress_cfg = ServeConfig { slo_ms, ..Default::default() };
+    let stress_proc = ArrivalProcess::Poisson { rps: stress_rate };
+    let run_stress = |n: usize| {
+        simulate_fleet_stream(
+            &hqp_fleet,
+            trace::ArrivalGen::new(&stress_proc, f64::INFINITY, 23).take(n),
+            &stress_cfg,
+            Jobs::one(),
+        )
+        .expect("stress sim")
+    };
+    let s_small = run_stress(stress_small);
+    let (s_big, ms_big) = time_once(|| run_stress(stress_big));
+    assert_eq!(s_small.generated, stress_small as u64, "request budget must be exact");
+    assert_eq!(s_big.generated, stress_big as u64, "request budget must be exact");
+    scenario_cost(&mut report, "stress", s_big.events, ms_big);
+    report.metric("stress_requests", s_big.generated as f64);
+    report.metric("stress_slo_attain", s_big.slo_attainment());
+    report.metric("stress_p99_ms", s_big.p99_ms);
+    report.metric("stress_hist_bins", s_big.latency_hist.occupied_bins() as f64);
+    report.metric("stress_peak_queue_depth", s_big.peak_queue_depth as f64);
+    // the acceptance assertion: peak resident telemetry state must be
+    // independent of the request count. 100x the requests may fill a few
+    // more tail bins of the same distribution, never O(n) state — and the
+    // absolute footprint stays a few KB of u64 counts
+    let (bins_small, bins_big) =
+        (s_small.latency_hist.occupied_bins(), s_big.latency_hist.occupied_bins());
+    assert!(
+        bins_big <= bins_small + 256 && bins_big <= 2048,
+        "telemetry footprint must not scale with request count: \
+         {bins_big} bins at {stress_big} requests vs {bins_small} at {stress_small}"
+    );
+    assert!(
+        s_big.peak_queue_depth <= stress_cfg.queue_cap as u64,
+        "admission control must bound the queue high-water mark"
+    );
 
     report.write_json("BENCH_serve.json").expect("write BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");

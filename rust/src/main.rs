@@ -49,7 +49,7 @@ const SEARCH_FLAGS: &[&str] = &["budget", "seed", "space", "smoke", "jobs", "out
 /// Flags only `hqp serve` accepts (other commands reject them, the same
 /// typo-hardening `--device` gets).
 const SERVE_FLAGS: &[&str] = &[
-    "rps", "slo-ms", "policy", "duration-s", "seed", "max-batch",
+    "rps", "slo-ms", "policy", "duration-s", "requests", "seed", "max-batch",
     "batch-timeout-ms", "queue-cap", "arrivals", "smoke", "mem-mb",
     "swap-init-ms", "link-mbps", "autoscale", "scale-interval-ms",
     "min-servers", "max-servers", "scale-high-water", "scale-low-water",
@@ -132,6 +132,10 @@ serve options:
   --slo-ms X            per-request latency SLO (default 50)
   --policy P            round-robin | least-loaded | acc-fastest (default) | swap-aware
   --duration-s X        trace length (default 10; 1 w/ --smoke)
+  --requests N          stream exactly N requests instead of a timed trace
+                        (lazy arrival generation + constant-memory telemetry:
+                        resident state is independent of N, so million-request
+                        runs are fine; excludes --duration-s; 0 is rejected)
   --arrivals A          poisson | mmpp (default poisson)
   --seed N              trace seed (default 42; identical seed => identical summary)
   --max-batch N         dynamic batcher max batch size (default 8)
@@ -687,6 +691,27 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     })?;
     let rps = args.flag_f64("rps", if smoke { 50.0 } else { 100.0 })?;
     let duration_s = args.flag_f64("duration-s", if smoke { 1.0 } else { 10.0 })?;
+    // --requests N swaps the timed trace for an exact request budget
+    // streamed lazily (ArrivalGen over an unbounded horizon), so trace
+    // length no longer bounds memory
+    let requests = match args.flag("requests") {
+        Some(_) => Some(args.flag_usize("requests", 0)?),
+        None => None,
+    };
+    if let Some(n) = requests {
+        if n == 0 {
+            return Err(hqp::Error::Cli(
+                "--requests must be >= 1 (use --duration-s for a timed trace)".into(),
+            ));
+        }
+        if args.flag("duration-s").is_some() {
+            return Err(hqp::Error::Cli(
+                "--requests and --duration-s are mutually exclusive (a request \
+                 budget streams an unbounded trace)"
+                    .into(),
+            ));
+        }
+    }
     let seed = args.flag_usize("seed", 42)? as u64;
     let arrivals_name = args.flag_or("arrivals", "poisson");
     let process = ArrivalProcess::parse(arrivals_name, rps).ok_or_else(|| {
@@ -763,18 +788,31 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         }
         fleet = fleet.with_mem_cap_mb(mem_mb);
     }
-    let arrivals = serve::trace::generate(&process, duration_s * 1e3, seed);
+    // the timed path materializes as before (byte-identical output); the
+    // --requests path never holds the trace
+    let arrivals = if requests.is_none() {
+        serve::trace::generate(&process, duration_s * 1e3, seed)
+    } else {
+        Vec::new()
+    };
 
     println!(
         "serving {model} on {}: {} variants ({source})",
         dev.name,
         fleet.num_variants()
     );
-    println!(
-        "trace: {} over {duration_s:.1} s at {rps:.0} rps (seed {seed}) -> {} requests",
-        process.name(),
-        arrivals.len()
-    );
+    if let Some(n) = requests {
+        println!(
+            "trace: {} streamed at {rps:.0} rps (seed {seed}) -> {n} requests",
+            process.name()
+        );
+    } else {
+        println!(
+            "trace: {} over {duration_s:.1} s at {rps:.0} rps (seed {seed}) -> {} requests",
+            process.name(),
+            arrivals.len()
+        );
+    }
     // elastic-fleet header, gated so fixed-fleet output stays
     // byte-identical to the pre-autoscaling CLI
     if cfg.autoscale.enabled() {
@@ -825,8 +863,17 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         }
     }
     // worker count changes wall-clock only: summaries are byte-identical
-    // at any --jobs (see DESIGN.md §Parallelism)
-    let summary = serve::simulate_fleet_jobs(&fleet, &arrivals, &cfg, jobs)?;
+    // at any --jobs (see DESIGN.md §Parallelism), and the streamed path
+    // is byte-identical to the materialized one on the same arrivals
+    let summary = match requests {
+        Some(n) => serve::simulate_fleet_stream(
+            &fleet,
+            serve::trace::ArrivalGen::new(&process, f64::INFINITY, seed).take(n),
+            &cfg,
+            jobs,
+        )?,
+        None => serve::simulate_fleet_jobs(&fleet, &arrivals, &cfg, jobs)?,
+    };
     println!("{}", summary.render());
     Ok(())
 }

@@ -72,6 +72,7 @@ pub struct Batcher {
     queues: Vec<VecDeque<QueuedReq>>,
     flush_tokens: Vec<u64>,
     total: usize,
+    peak: usize,
 }
 
 impl Batcher {
@@ -82,12 +83,19 @@ impl Batcher {
             queues: vec![VecDeque::new(); num_variants],
             flush_tokens: vec![0; num_variants],
             total: 0,
+            peak: 0,
         }
     }
 
     /// Requests currently queued across all variants.
     pub fn total(&self) -> usize {
         self.total
+    }
+
+    /// High-water mark of [`Batcher::total`] over the server's lifetime —
+    /// the backpressure telemetry behind `Summary.peak_queue_depth`.
+    pub fn peak(&self) -> usize {
+        self.peak
     }
 
     /// Queue length of one variant.
@@ -104,6 +112,7 @@ impl Batcher {
         let was_empty = self.queues[variant].is_empty();
         self.queues[variant].push_back(req);
         self.total += 1;
+        self.peak = self.peak.max(self.total);
         if self.queues[variant].len() >= self.max_batch {
             EnqueueAction::BatchReady
         } else if was_empty {
@@ -188,6 +197,7 @@ impl Batcher {
             return;
         }
         self.total += reqs.len();
+        self.peak = self.peak.max(self.total);
         let q = &mut self.queues[variant];
         let mut merged: Vec<QueuedReq> = Vec::with_capacity(q.len() + reqs.len());
         merged.extend(q.drain(..));
@@ -357,5 +367,27 @@ mod tests {
         }
         assert_eq!(popped, 100);
         assert_eq!(b.total(), 0);
+    }
+
+    #[test]
+    fn peak_is_the_high_water_mark_of_total() {
+        let mut b = Batcher::new(2, 8, 5.0);
+        assert_eq!(b.peak(), 0);
+        b.enqueue(0, req(0, 0.0, 50.0));
+        b.enqueue(1, req(1, 1.0, 50.0));
+        b.enqueue(0, req(2, 2.0, 50.0));
+        assert_eq!(b.peak(), 3);
+        b.take_batch(0, 3.0);
+        assert_eq!(b.total(), 1);
+        assert_eq!(b.peak(), 3, "peak never decreases");
+        b.enqueue(0, req(3, 4.0, 50.0));
+        assert_eq!(b.peak(), 3, "refilling below the peak leaves it");
+        // drain + requeue moves requests without inflating the peak
+        let survivors = b.drain(0);
+        b.requeue(1, survivors);
+        assert_eq!(b.peak(), 3);
+        b.enqueue(1, req(4, 5.0, 50.0));
+        b.enqueue(1, req(5, 6.0, 50.0));
+        assert_eq!(b.peak(), 4);
     }
 }

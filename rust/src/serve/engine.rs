@@ -27,9 +27,23 @@
 //!
 //! This order is *fixed*: the same algorithm runs for every `jobs` value,
 //! and `jobs` only chooses how many OS threads advance shards in step 1.
-//! Per-shard accumulators merge in shard-index order, latency percentiles
-//! sort first — so the [`super::Summary`] is byte-identical for jobs=1
-//! and jobs=N (property-tested in `tests/prop_serve.rs`).
+//! Per-shard accumulators merge in shard-index order — u64 counts and
+//! [`super::stats::LatencyStats`] histogram bins by integer addition, f64
+//! sums in that same fold order — so the [`super::Summary`] is
+//! byte-identical for jobs=1 and jobs=N (property-tested in
+//! `tests/prop_serve.rs`).
+//!
+//! ## Streaming arrivals
+//!
+//! The coordinator never holds the trace: [`run_stream`] consumes any
+//! `Iterator<Item = f64>` of non-decreasing arrival times through a
+//! bounded [`Lookahead`] buffer ([`LOOKAHEAD_CAP`] slots), so resident
+//! memory is O(fleet) + O(occupied histogram bins) — independent of the
+//! request count. The timeline walk only ever needs the *next* arrival
+//! (to pick the next barrier) and, once the source is exhausted, the
+//! *last* arrival time (to bound the control-tick schedule), both of
+//! which the buffer tracks; a materialized slice is just the
+//! `iter().copied()` special case and produces byte-identical output.
 //!
 //! Relative to the old single-heap engine, only two tie-break orders
 //! changed, both without observable effect on fixed-fleet runs: (a)
@@ -42,7 +56,7 @@
 //! tick-exact traces).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
@@ -53,6 +67,7 @@ use super::autoscale::{AutoscalePolicy, Lifecycle, ScaleDecision, SignalTracker}
 use super::batcher::{Batcher, EnqueueAction, QueuedReq};
 use super::fleet::{Fleet, Server};
 use super::router::{FleetView, Router, SwapPlan};
+use super::stats::LatencyStats;
 use super::ServeConfig;
 
 /// Per-(server, variant) usage accumulator (merged into
@@ -86,12 +101,16 @@ pub(crate) struct Totals {
     /// Sum over scale-ups of (wake-done time − pressure-episode start).
     pub(crate) reaction_sum_ms: f64,
     pub(crate) slo_attained: u64,
-    pub(crate) latencies: Vec<f64>,
+    /// Streamed latency telemetry: shard histograms merged in shard-index
+    /// order (constant-memory replacement for the old `Vec<f64>` + sort).
+    pub(crate) latency_stats: LatencyStats,
     pub(crate) usage: Vec<Vec<UsageAcc>>,
     pub(crate) makespan_ms: f64,
     /// Events processed (arrivals + control ticks + scale decisions +
     /// every shard-local event) — the numerator of events/sec.
     pub(crate) events: u64,
+    /// Max over servers of each batcher's queued-request high-water mark.
+    pub(crate) peak_queue_depth: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -156,7 +175,7 @@ struct ShardAcc {
     swap_ms: f64,
     swap_energy_mj: f64,
     slo_attained: u64,
-    latencies: Vec<f64>,
+    latency_stats: LatencyStats,
     usage: Vec<UsageAcc>,
 }
 
@@ -342,7 +361,7 @@ impl Shard {
             LocalKind::BatchDone { variant, reqs } => {
                 for r in &reqs {
                     self.acc.completed += 1;
-                    self.acc.latencies.push(now - r.arrival_ms);
+                    self.acc.latency_stats.record(now - r.arrival_ms);
                     if now <= r.deadline_ms {
                         self.acc.slo_attained += 1;
                     }
@@ -659,6 +678,84 @@ impl Gang {
 }
 
 // ---------------------------------------------------------------------------
+// The bounded arrival lookahead
+// ---------------------------------------------------------------------------
+
+/// Slots the coordinator buffers ahead of the timeline. Any value ≥ 1 is
+/// correct (the walk only ever *needs* the next arrival); a small batch
+/// amortizes the per-pull bookkeeping without holding the trace.
+const LOOKAHEAD_CAP: usize = 64;
+
+/// Bounded buffer between an arrival iterator and the timeline walk: the
+/// coordinator peeks the next origin time, pops arrivals as it schedules
+/// them (assigning sequential request ids), and — once the source is
+/// exhausted — reads the final arrival time that anchors the control-tick
+/// schedule. Validates on the fly what the slice path validates up front:
+/// every time must be finite, non-negative and non-decreasing.
+struct Lookahead<I> {
+    src: I,
+    buf: VecDeque<f64>,
+    /// Requests popped so far == the id of the next arrival to pop.
+    issued: usize,
+    /// Max origin time pulled from the source (end-of-trace anchor).
+    last_ms: f64,
+    exhausted: bool,
+}
+
+impl<I: Iterator<Item = f64>> Lookahead<I> {
+    fn new(src: I) -> Lookahead<I> {
+        Lookahead { src, buf: VecDeque::with_capacity(LOOKAHEAD_CAP), issued: 0, last_ms: 0.0, exhausted: false }
+    }
+
+    fn refill(&mut self) -> Result<()> {
+        while !self.exhausted && self.buf.len() < LOOKAHEAD_CAP {
+            match self.src.next() {
+                None => self.exhausted = true,
+                Some(t) => {
+                    // `!(t >= floor)` rather than `t < floor`: NaN must
+                    // fail too, and the floor starts at 0.0 so negative
+                    // times are caught (mirrors the slice validation)
+                    if !(t >= self.last_ms) || t == f64::INFINITY {
+                        return Err(Error::hqp(format!(
+                            "serve: arrival times must be finite, non-negative and \
+                             non-decreasing (got {t} after {})",
+                            self.last_ms
+                        )));
+                    }
+                    self.last_ms = t;
+                    self.buf.push_back(t);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Origin time of the next arrival, if any (refills the buffer).
+    fn peek(&mut self) -> Result<Option<f64>> {
+        self.refill()?;
+        Ok(self.buf.front().copied())
+    }
+
+    /// Pop the next arrival as `(request id, origin time)`.
+    fn pop(&mut self) -> Option<(usize, f64)> {
+        let t = self.buf.pop_front()?;
+        let id = self.issued;
+        self.issued += 1;
+        Some((id, t))
+    }
+
+    /// The final arrival's origin time — `None` until the source is
+    /// exhausted and fully popped, or when the trace was empty.
+    fn end(&self) -> Option<f64> {
+        if self.exhausted && self.buf.is_empty() && self.issued > 0 {
+            Some(self.last_ms)
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The coordinator: global timeline + barriers
 // ---------------------------------------------------------------------------
 
@@ -680,7 +777,6 @@ struct GlobalAcc {
 
 struct Coordinator<'a> {
     fleet: &'a Fleet,
-    arrivals: &'a [f64],
     cfg: &'a ServeConfig,
     shards: &'a [Mutex<Shard>],
     errors: &'a Mutex<Vec<(usize, Error)>>,
@@ -697,7 +793,6 @@ struct Coordinator<'a> {
 impl<'a> Coordinator<'a> {
     fn new(
         fleet: &'a Fleet,
-        arrivals: &'a [f64],
         cfg: &'a ServeConfig,
         shards: &'a [Mutex<Shard>],
         errors: &'a Mutex<Vec<(usize, Error)>>,
@@ -707,7 +802,6 @@ impl<'a> Coordinator<'a> {
         let n = fleet.servers.len();
         Coordinator {
             fleet,
-            arrivals,
             cfg,
             shards,
             errors,
@@ -801,7 +895,8 @@ impl<'a> Coordinator<'a> {
     fn handle_arrival(
         &mut self,
         router: &mut Router,
-        req: usize,
+        id: usize,
+        origin: f64,
         now: f64,
         residency_limited: bool,
     ) -> Result<()> {
@@ -843,9 +938,8 @@ impl<'a> Coordinator<'a> {
                 } else {
                     // SLO clock starts at generation: transfer delay eats
                     // into the budget
-                    let origin = self.arrivals[req];
                     let qreq = QueuedReq {
-                        id: req,
+                        id,
                         arrival_ms: origin,
                         deadline_ms: origin + self.cfg.slo_ms,
                     };
@@ -1070,9 +1164,12 @@ impl<'a> Coordinator<'a> {
 
     /// Walk the global timeline (arrivals + control ticks), advancing
     /// shards between barriers and applying the canonical same-time order
-    /// documented in the module docs.
-    fn run(
+    /// documented in the module docs. The trace streams in through a
+    /// bounded [`Lookahead`] — the walk never holds more than
+    /// [`LOOKAHEAD_CAP`] pending arrivals.
+    fn run<I: Iterator<Item = f64>>(
         mut self,
+        mut arrivals: Lookahead<I>,
         auto: bool,
         max_active: usize,
         residency_limited: bool,
@@ -1082,28 +1179,31 @@ impl<'a> Coordinator<'a> {
         let mut router = Router::new(self.fleet, cfg.delta_max, cfg.policy, cfg.swap_init_ms);
         let mut scaler = cfg.autoscale.policy.build(&cfg.autoscale);
         let mut tracker = SignalTracker::new();
-        // the control plane runs for the duration of the offered trace;
-        // tick times come from the same accumulating addition (now +
-        // interval) the old self-re-arming Control event used, so the
-        // tick schedule is bit-exact
-        let control_end = if auto {
-            self.arrivals.last().map(|&last| last + transfer_ms)
-        } else {
-            None
-        };
-        let mut next_tick = match control_end {
-            Some(end) if cfg.autoscale.interval_ms <= end => Some(cfg.autoscale.interval_ms),
-            _ => None,
-        };
-        let mut ai = 0usize;
+        // the control plane runs for the duration of the offered trace
+        // (last arrival + transfer); tick times come from the same
+        // accumulating addition (now + interval) the materialized engine
+        // used, so the tick schedule is bit-exact. Since the trace end is
+        // unknown until the source drains, a tick *candidate* is carried
+        // unconditionally and its validity decided at the top of the
+        // loop: while an arrival at `ta` is buffered, any candidate
+        // `c <= ta` is provably within the trace (`ta <= end`); once the
+        // source is exhausted, `end` is exact.
+        let mut next_tick = if auto { Some(cfg.autoscale.interval_ms) } else { None };
 
         loop {
-            let ta = if ai < self.arrivals.len() {
-                Some(self.arrivals[ai] + transfer_ms)
-            } else {
-                None
+            let ta = arrivals.peek()?.map(|origin| origin + transfer_ms);
+            let tc = match (next_tick, ta) {
+                // a buffered arrival bounds the trace end from below, so
+                // the candidate is valid whenever it can fire first
+                (Some(c), Some(_)) => Some(c),
+                // source drained: the exact end decides (an empty trace
+                // has no end and schedules no ticks, as before)
+                (Some(c), None) => {
+                    arrivals.end().filter(|&last| c <= last + transfer_ms).map(|_| c)
+                }
+                (None, _) => None,
             };
-            let t = match (ta, next_tick) {
+            let t = match (ta, tc) {
                 (None, None) => break,
                 (Some(a), None) => a,
                 (None, Some(c)) => c,
@@ -1115,22 +1215,20 @@ impl<'a> Coordinator<'a> {
             self.gacc.max_time = self.gacc.max_time.max(t);
             // 2. arrivals at t, in trace order
             if ta == Some(t) {
-                while ai < self.arrivals.len() && self.arrivals[ai] + transfer_ms == t {
-                    self.handle_arrival(&mut router, ai, t, residency_limited)?;
-                    ai += 1;
+                while let Some(origin) = arrivals.peek()? {
+                    if origin + transfer_ms != t {
+                        break;
+                    }
+                    let (id, origin) = arrivals.pop().expect("serve: peeked arrival vanished");
+                    self.handle_arrival(&mut router, id, origin, t, residency_limited)?;
                 }
             }
             // 3. local events at exactly t, (shard, local seq) order
             self.drain_at(t)?;
             // 4. + 5. the control tick, then its same-time consequences
-            if next_tick == Some(t) {
+            if tc == Some(t) {
                 self.handle_control(&mut router, scaler.as_mut(), &mut tracker, t, max_active)?;
-                next_tick = match control_end {
-                    Some(end) if t + cfg.autoscale.interval_ms <= end => {
-                        Some(t + cfg.autoscale.interval_ms)
-                    }
-                    _ => None,
-                };
+                next_tick = Some(t + cfg.autoscale.interval_ms);
                 self.drain_at(t)?;
             }
         }
@@ -1140,13 +1238,28 @@ impl<'a> Coordinator<'a> {
     }
 }
 
-/// Run the sharded simulation. `jobs >= 1` is the worker-thread budget
-/// (validated by the caller); the event order and every accumulator merge
-/// are identical for all values — `jobs` only sets how many OS threads
-/// advance shards inside the inter-barrier windows.
+/// Run the sharded simulation over a materialized trace — the
+/// `iter().copied()` special case of [`run_stream`], kept as the
+/// slice-path entry so existing callers are untouched.
 pub(crate) fn run(
     fleet: &Fleet,
     arrivals: &[f64],
+    cfg: &ServeConfig,
+    jobs: usize,
+) -> Result<Totals> {
+    run_stream(fleet, arrivals.iter().copied(), cfg, jobs)
+}
+
+/// Run the sharded simulation over a streaming arrival source. `jobs >=
+/// 1` is the worker-thread budget (validated by the caller); the event
+/// order and every accumulator merge are identical for all values —
+/// `jobs` only sets how many OS threads advance shards inside the
+/// inter-barrier windows — and identical to the slice path, byte for
+/// byte. Resident memory is independent of how many arrivals the
+/// iterator yields.
+pub(crate) fn run_stream<I: Iterator<Item = f64>>(
+    fleet: &Fleet,
+    arrivals: I,
     cfg: &ServeConfig,
     jobs: usize,
 ) -> Result<Totals> {
@@ -1175,8 +1288,10 @@ pub(crate) fn run(
     // one worker per shard is the useful maximum; below two total workers
     // the gang is pure overhead and the coordinator advances shards inline
     let spawned = jobs.min(fleet.servers.len()).saturating_sub(1);
+    let lookahead = Lookahead::new(arrivals);
     let gacc = if spawned == 0 {
-        Coordinator::new(fleet, arrivals, cfg, &shards, &errors, None, 0).run(
+        Coordinator::new(fleet, cfg, &shards, &errors, None, 0).run(
+            lookahead,
             auto,
             max_active,
             residency_limited,
@@ -1188,8 +1303,8 @@ pub(crate) fn run(
             for _ in 0..spawned {
                 scope.spawn(|| gang.worker(&shards, fleet, cfg, &errors));
             }
-            let r = Coordinator::new(fleet, arrivals, cfg, &shards, &errors, Some(&gang), spawned)
-                .run(auto, max_active, residency_limited, transfer_ms);
+            let r = Coordinator::new(fleet, cfg, &shards, &errors, Some(&gang), spawned)
+                .run(lookahead, auto, max_active, residency_limited, transfer_ms);
             gang.shutdown();
             r
         })?
@@ -1210,7 +1325,8 @@ pub(crate) fn run(
     }
 
     // deterministic merge: per-shard accumulators fold in shard-index
-    // order for every jobs value (latencies are re-sorted downstream)
+    // order for every jobs value (histogram bins add as u64s, the latency
+    // sum as f64 in this same fixed order)
     let mut totals = Totals {
         rejected_full: gacc.rejected_full,
         rejected_noncompliant: gacc.rejected_noncompliant,
@@ -1233,7 +1349,8 @@ pub(crate) fn run(
         totals.swap_ms += sh.acc.swap_ms;
         totals.swap_energy_mj += sh.acc.swap_energy_mj;
         totals.slo_attained += sh.acc.slo_attained;
-        totals.latencies.extend(sh.acc.latencies);
+        totals.latency_stats.merge(&sh.acc.latency_stats);
+        totals.peak_queue_depth = totals.peak_queue_depth.max(sh.batcher.peak() as u64);
         totals.usage.push(sh.acc.usage);
         totals.events += sh.events;
         totals.makespan_ms = totals.makespan_ms.max(sh.max_time);

@@ -81,6 +81,22 @@
 //! policy `off` (the default) no control event is ever scheduled and the
 //! simulation is byte-identical to the fixed-fleet simulator.
 //!
+//! ## Streaming at constant memory
+//!
+//! The hot path never holds the trace or the latencies:
+//! [`simulate_fleet_stream`] consumes any iterator of arrival times
+//! (e.g. [`trace::ArrivalGen`], the lazy form of [`trace::generate`])
+//! through a bounded lookahead, and per-request latencies fold into a
+//! fixed-edge log-binned histogram ([`stats::LatencyStats`]) instead of
+//! a `Vec<f64>` — so a 10⁶-request run and a 10³-request run hold the
+//! same telemetry state. p50/p95/p99 keep their nearest-rank definition
+//! with a documented ≤ 1 % relative error
+//! ([`stats::LatencyStats::QUANTILE_REL_ERROR`]); mean/max/count stay
+//! exact. The slice entry points ([`simulate_fleet`],
+//! [`simulate_fleet_jobs`]) are the materialized special case and
+//! produce byte-identical summaries. See `rust/DESIGN.md` §Serving,
+//! "Memory & streaming".
+//!
 //! See `rust/DESIGN.md` §Serving and §Autoscaling for the model's limits
 //! (open-loop arrivals, serial devices, linear activation scaling; the
 //! optional [`ServeConfig::link_mbps`] uplink model charges a per-request
@@ -91,6 +107,7 @@ pub mod batcher;
 mod engine;
 pub mod fleet;
 pub mod router;
+pub mod stats;
 pub mod trace;
 
 pub use autoscale::{
@@ -204,14 +221,28 @@ pub struct Summary {
     pub expired_during_swap: u64,
     /// Completed within their SLO deadline.
     pub slo_attained: u64,
-    /// Mean completion latency (arrival → batch completion), ms.
+    /// Mean completion latency (arrival → batch completion), ms. Exact
+    /// (streamed sum / count, folded in shard-index order).
     pub mean_ms: f64,
-    /// Median completion latency, ms.
+    /// Median completion latency, ms. Nearest-rank from
+    /// [`Summary::latency_hist`], within
+    /// [`stats::LatencyStats::QUANTILE_REL_ERROR`] of the exact sample.
     pub p50_ms: f64,
-    /// 95th-percentile completion latency, ms.
+    /// 95th-percentile completion latency, ms (same definition as p50).
     pub p95_ms: f64,
-    /// 99th-percentile completion latency, ms.
+    /// 99th-percentile completion latency, ms (same definition as p50).
     pub p99_ms: f64,
+    /// The streamed latency histogram the percentiles come from — it
+    /// records the bin configuration
+    /// ([`stats::LatencyStats::BINS_PER_OCTAVE`] fixed log-binned edges)
+    /// along with exact count/mean/max. Not rendered (so
+    /// [`Summary::render`] stays byte-compatible with earlier releases).
+    pub latency_hist: stats::LatencyStats,
+    /// Max over servers of the queued-request high-water mark — the
+    /// backpressure a run actually hit (bounded by
+    /// [`ServeConfig::queue_cap`]). Not rendered, same gating as
+    /// [`Summary::events`].
+    pub peak_queue_depth: u64,
     /// Virtual time of the last event.
     pub makespan_ms: f64,
     /// Simulation events processed (arrivals, control ticks, scale
@@ -379,6 +410,36 @@ pub fn simulate_fleet_jobs(
     cfg: &ServeConfig,
     jobs: Jobs,
 ) -> Result<Summary> {
+    let auto = validate(fleet, cfg)?;
+    let residency_limited = fleet.residency_limited();
+    let totals = engine::run(fleet, arrivals, cfg, jobs.get())?;
+    Ok(build_summary(fleet, cfg, totals, residency_limited, auto))
+}
+
+/// Replay a *streaming* arrival source against `fleet` — the
+/// constant-memory form of [`simulate_fleet_jobs`]. The iterator's times
+/// must be finite, non-negative and non-decreasing (validated on the
+/// fly; the materialized entry points go through this same engine).
+/// Pair it with [`trace::ArrivalGen`] to simulate arbitrarily long
+/// traces — e.g. `ArrivalGen::new(&p, f64::INFINITY, seed).take(n)` for
+/// an exact request budget (`hqp serve --requests N`) — with resident
+/// memory independent of the request count. Byte-identical to the slice
+/// path on the same arrivals, at any `jobs`.
+pub fn simulate_fleet_stream<I: Iterator<Item = f64>>(
+    fleet: &Fleet,
+    arrivals: I,
+    cfg: &ServeConfig,
+    jobs: Jobs,
+) -> Result<Summary> {
+    let auto = validate(fleet, cfg)?;
+    let residency_limited = fleet.residency_limited();
+    let totals = engine::run_stream(fleet, arrivals, cfg, jobs.get())?;
+    Ok(build_summary(fleet, cfg, totals, residency_limited, auto))
+}
+
+/// Shared config/fleet validation for the slice and streaming entry
+/// points. Returns whether the autoscaling control plane is enabled.
+fn validate(fleet: &Fleet, cfg: &ServeConfig) -> Result<bool> {
     if fleet.servers.is_empty() {
         return Err(Error::hqp("serve: empty fleet"));
     }
@@ -427,37 +488,26 @@ pub fn simulate_fleet_jobs(
             ));
         }
     }
-
-    let residency_limited = fleet.residency_limited();
-    let totals = engine::run(fleet, arrivals, cfg, jobs.get())?;
-    Ok(build_summary(fleet, cfg, totals, residency_limited, auto))
+    Ok(auto)
 }
 
 fn build_summary(
     fleet: &Fleet,
     cfg: &ServeConfig,
-    mut acc: engine::Totals,
+    acc: engine::Totals,
     residency_limited: bool,
     autoscaled: bool,
 ) -> Summary {
     let makespan_ms = acc.makespan_ms;
-    // latencies arrive merged in shard order; sorting first makes every
-    // derived statistic depend only on the multiset (and is what the
-    // percentile definition needs anyway)
-    acc.latencies.sort_by(f64::total_cmp);
-    let n = acc.latencies.len();
-    let pct = |p: f64| -> f64 {
-        if n == 0 {
-            0.0
-        } else {
-            acc.latencies[((n - 1) as f64 * p).round() as usize]
-        }
-    };
-    let mean_ms = if n == 0 {
-        0.0
-    } else {
-        acc.latencies.iter().sum::<f64>() / n as f64
-    };
+    // percentiles come from the streamed histogram — same nearest-rank
+    // definition as the old sort-the-Vec path, within the histogram's
+    // documented relative error; the mean is exact (streamed sum/count,
+    // folded in shard-index order, so it depends only on the shard merge
+    // order — fixed — never on `jobs`)
+    let mean_ms = acc.latency_stats.mean_ms();
+    let p50_ms = acc.latency_stats.quantile(0.50);
+    let p95_ms = acc.latency_stats.quantile(0.95);
+    let p99_ms = acc.latency_stats.quantile(0.99);
 
     let mut per_variant = Vec::new();
     let mut total_batches = 0u64;
@@ -520,9 +570,11 @@ fn build_summary(
         },
         slo_attained: acc.slo_attained,
         mean_ms,
-        p50_ms: pct(0.50),
-        p95_ms: pct(0.95),
-        p99_ms: pct(0.99),
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        latency_hist: acc.latency_stats,
+        peak_queue_depth: acc.peak_queue_depth,
         makespan_ms,
         events: acc.events,
         throughput_rps: if makespan_ms > 0.0 {
@@ -595,9 +647,18 @@ mod tests {
         assert_eq!(s.makespan_ms, 33.0);
         assert_eq!(s.mean_batch, 2.0);
         assert_eq!(s.per_variant[0].batches, 2);
-        // latencies: 17, 16, 31, 30
-        assert_eq!(s.p50_ms, 30.0);
+        // latencies: 17, 16, 31, 30 — the exact nearest-rank p50 is 30.0
+        // (pinned in stats::tests); the reported value is the histogram
+        // bin midpoint, within the documented relative error of it
+        assert!(
+            (s.p50_ms - 30.0).abs() <= 30.0 * stats::LatencyStats::QUANTILE_REL_ERROR,
+            "p50 {} strayed beyond the histogram error bound",
+            s.p50_ms
+        );
+        // mean/max/count stay exact on the streamed path
         assert!((s.mean_ms - 23.5).abs() < 1e-12);
+        assert_eq!(s.latency_hist.count(), 4);
+        assert_eq!(s.latency_hist.max_ms(), 31.0);
     }
 
     #[test]
@@ -641,6 +702,8 @@ mod tests {
         assert!(s.rejected > 0);
         assert_eq!(s.generated, 5);
         assert_eq!(s.completed + s.rejected + s.expired, 5);
+        // admission control bounds the backpressure telemetry
+        assert_eq!(s.peak_queue_depth, 2, "peak queue depth must sit at the cap");
     }
 
     #[test]
@@ -670,6 +733,63 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.render(), b.render(), "rendered summary must be byte-identical");
         assert_eq!(a.generated, arrivals.len() as u64);
+    }
+
+    #[test]
+    fn streamed_run_is_byte_identical_to_the_slice_run() {
+        let fleet = reference_fleet(
+            "resnet18",
+            &[Device::xavier_nx()],
+            &["baseline", "q8", "p50", "hqp"],
+            8,
+        )
+        .unwrap();
+        let p = ArrivalProcess::Poisson { rps: 300.0 };
+        let arrivals = trace::generate(&p, 2_000.0, 42);
+        let mut c = cfg();
+        c.max_batch = 8;
+        let sliced = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        let streamed = simulate_fleet_stream(
+            &fleet,
+            trace::ArrivalGen::new(&p, 2_000.0, 42),
+            &c,
+            Jobs::one(),
+        )
+        .unwrap();
+        assert_eq!(sliced, streamed, "streaming must not change a single byte");
+        assert_eq!(sliced.render(), streamed.render());
+        // the --requests form: an unbounded generator taken to the same
+        // count reproduces the same run
+        let n = arrivals.len();
+        let taken = simulate_fleet_stream(
+            &fleet,
+            trace::ArrivalGen::new(&p, f64::INFINITY, 42).take(n),
+            &c,
+            Jobs::one(),
+        )
+        .unwrap();
+        assert_eq!(sliced, taken);
+        assert_eq!(taken.generated, n as u64);
+    }
+
+    #[test]
+    fn streamed_arrivals_are_validated_on_the_fly() {
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        // a regressing trace must hard-error, not silently misorder
+        let bad = [0.0, 5.0, 3.0];
+        assert!(
+            simulate_fleet_stream(&fleet, bad.iter().copied(), &cfg(), Jobs::one()).is_err(),
+            "non-monotone stream must be rejected"
+        );
+        assert!(
+            simulate_fleet_stream(&fleet, [-1.0].iter().copied(), &cfg(), Jobs::one()).is_err(),
+            "negative arrival time must be rejected"
+        );
+        assert!(
+            simulate_fleet_stream(&fleet, [f64::NAN].iter().copied(), &cfg(), Jobs::one())
+                .is_err(),
+            "NaN arrival time must be rejected"
+        );
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Constant-memory latency telemetry: a deterministic, mergeable,
+//! fixed-edge log-binned histogram plus exact streaming mean/max/count.
+//!
+//! The pre-streaming simulator kept every completion latency in a
+//! `Vec<f64>` and sorted it once at the end — O(n) resident memory and an
+//! O(n log n) finish, which caps `hqp serve` far below the 10⁶–10⁷
+//! request traces ROADMAP item 3 asks for. [`LatencyStats`] replaces it
+//! with state whose size depends only on the *range* of observed
+//! latencies, never on how many there were:
+//!
+//! * **Fixed log-binned edges.** Each power of two of latency (an
+//!   *octave*) is split into [`LatencyStats::BINS_PER_OCTAVE`] equal
+//!   sub-bins, keyed directly off the IEEE-754 bit pattern (exponent +
+//!   top mantissa bits) — pure integer arithmetic, no `ln()`, so the
+//!   value→bin map is exact and platform-deterministic. Edges are fixed
+//!   up front (never rescaled), so two histograms built from different
+//!   shards — or different runs — always share the same bins.
+//! * **Mergeable u64 counts.** Merging shard histograms is integer
+//!   addition bin-by-bin; counts commute, and the accompanying f64 sum is
+//!   folded in shard-index order like every other f64 total, so the
+//!   jobs-invariance byte-identity contract (DESIGN.md §Parallelism)
+//!   holds exactly: `--jobs N` changes thread count, never bytes.
+//! * **Bounded quantile error.** A quantile query returns the midpoint of
+//!   the bin holding the nearest-rank sample. The bin width is
+//!   `2^-BINS_PER_OCTAVE_BITS` of the bin's lower edge, so the midpoint
+//!   is within [`LatencyStats::QUANTILE_REL_ERROR`] (= 2⁻⁸ ≈ 0.39 %,
+//!   documented bound ≤ 1 %) of the exact sample, relative. Mean, max and
+//!   count stay *exact* (streamed alongside).
+//!
+//! The rank definition is unchanged from the pre-histogram simulator —
+//! nearest rank, `((n-1)·p).round()` — pinned here by unit tests on
+//! hand-built latency sets (see [`exact_quantile`], kept as the reference
+//! implementation), together with an exact-vs-histogram error-bound test.
+
+use std::collections::BTreeMap;
+
+/// Nearest-rank quantile over an already-sorted slice — the exact
+/// percentile definition the simulator has always used
+/// (`latencies[((n-1)·p).round()]`), kept as the reference the histogram
+/// is tested against. Returns 0.0 for an empty slice.
+pub fn exact_quantile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Streaming latency telemetry for one run (or one shard of one run):
+/// a sparse fixed-edge log-binned histogram with exact mean/max/count.
+/// Memory is O(occupied bins) — bounded by the latency *range* (octaves ×
+/// [`LatencyStats::BINS_PER_OCTAVE`]), independent of the request count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyStats {
+    /// Sparse bin counts, keyed by [`bin_of`]. `BTreeMap` iterates in
+    /// ascending bin (= ascending latency) order, which is what the
+    /// cumulative quantile scan needs.
+    bins: BTreeMap<u32, u64>,
+    count: u64,
+    sum_ms: f64,
+    max_ms: f64,
+}
+
+impl LatencyStats {
+    /// Top mantissa bits used for sub-bins: each octave splits into
+    /// 2⁷ = 128 fixed bins.
+    pub const SUBBUCKET_BITS: u32 = 7;
+
+    /// Bins per power of two of latency — the recorded bin config
+    /// ([`super::Summary::latency_hist`] carries it into every summary).
+    pub const BINS_PER_OCTAVE: u32 = 1 << Self::SUBBUCKET_BITS;
+
+    /// Upper bound on the relative error of any histogram-derived
+    /// quantile: half a bin width over the bin's lower edge,
+    /// `2^-(SUBBUCKET_BITS+1)` = 1/256 ≈ 0.39 % — comfortably inside the
+    /// documented ≤ 1 % contract (DESIGN.md §Serving, Memory & streaming).
+    pub const QUANTILE_REL_ERROR: f64 = 1.0 / 256.0;
+
+    pub fn new() -> LatencyStats {
+        LatencyStats { bins: BTreeMap::new(), count: 0, sum_ms: 0.0, max_ms: 0.0 }
+    }
+
+    /// Record one latency sample (ms). Non-positive values land in the
+    /// underflow bin 0 (latency 0 is impossible for a served request, but
+    /// the histogram must not lose counts whatever it is fed).
+    pub fn record(&mut self, ms: f64) {
+        *self.bins.entry(bin_of(ms)).or_insert(0) += 1;
+        self.count += 1;
+        self.sum_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+    }
+
+    /// Fold another histogram into this one: u64 bin counts add
+    /// bin-by-bin, the f64 sum adds in call order — callers merge shards
+    /// in shard-index order, the same deterministic fold every other
+    /// accumulator uses (so summaries stay byte-identical at any
+    /// `--jobs`).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        for (&bin, &n) in &other.bins {
+            *self.bins.entry(bin).or_insert(0) += n;
+        }
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        if other.max_ms > self.max_ms {
+            self.max_ms = other.max_ms;
+        }
+    }
+
+    /// Samples recorded (exact).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact streaming mean, ms (0.0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    /// Exact maximum recorded sample, ms (0.0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Occupied (non-zero) bins — the resident telemetry footprint the
+    /// stress bench asserts is independent of request count.
+    pub fn occupied_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Nearest-rank quantile from the histogram: the midpoint of the bin
+    /// holding sample rank `((count-1)·p).round()` — within
+    /// [`LatencyStats::QUANTILE_REL_ERROR`] of [`exact_quantile`] on the
+    /// same multiset, relative. Returns 0.0 when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count - 1) as f64 * p).round() as u64;
+        let mut seen = 0u64;
+        for (&bin, &n) in &self.bins {
+            seen += n;
+            if seen > rank {
+                return bin_mid(bin);
+            }
+        }
+        // unreachable: rank < count and the bins sum to count
+        bin_mid(self.bins.keys().next_back().copied().unwrap_or(0))
+    }
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats::new()
+    }
+}
+
+/// Map a latency to its fixed bin: the value's IEEE-754 exponent plus its
+/// top [`LatencyStats::SUBBUCKET_BITS`] mantissa bits, which is monotone
+/// in the value. Bin 0 is the underflow bin (non-positive input and the
+/// bottom of the subnormal range).
+fn bin_of(ms: f64) -> u32 {
+    if ms <= 0.0 {
+        return 0;
+    }
+    (ms.to_bits() >> (52 - LatencyStats::SUBBUCKET_BITS)) as u32
+}
+
+/// The midpoint of a bin — the representative a quantile query returns.
+/// Reconstructed exactly from the bin index (the bin's edges are the two
+/// adjacent `(exponent, top-mantissa)` bit patterns).
+fn bin_mid(bin: u32) -> f64 {
+    let shift = 52 - LatencyStats::SUBBUCKET_BITS;
+    let lo = f64::from_bits((bin as u64) << shift);
+    let hi = f64::from_bits(((bin as u64) + 1) << shift);
+    lo / 2.0 + hi / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prng::Prng;
+
+    // ---- the pinned exact-percentile semantics -------------------------
+    // The simulator's percentile definition is nearest rank with
+    // ((n-1)·p).round() — these hand-built sets pin it exactly (the
+    // behavior `build_summary` had when it sorted a Vec<f64>).
+
+    #[test]
+    fn exact_quantile_is_nearest_rank() {
+        assert_eq!(exact_quantile(&[], 0.5), 0.0);
+        assert_eq!(exact_quantile(&[10.0], 0.0), 10.0);
+        assert_eq!(exact_quantile(&[10.0], 0.5), 10.0);
+        assert_eq!(exact_quantile(&[10.0], 1.0), 10.0);
+        // n=2: rank = (1·0.5).round() = 1 (f64::round is half-away-from-zero)
+        assert_eq!(exact_quantile(&[1.0, 2.0], 0.5), 2.0);
+        // n=4 (the mod.rs full-batch scenario's multiset): p50 rank =
+        // (3·0.5).round() = 2 → the third-smallest
+        assert_eq!(exact_quantile(&[16.0, 17.0, 30.0, 31.0], 0.50), 30.0);
+        assert_eq!(exact_quantile(&[16.0, 17.0, 30.0, 31.0], 0.95), 31.0);
+        assert_eq!(exact_quantile(&[16.0, 17.0, 30.0, 31.0], 0.99), 31.0);
+        // n=5: p50 rank = 2 → the true median
+        assert_eq!(exact_quantile(&[1.0, 2.0, 3.0, 4.0, 5.0], 0.50), 3.0);
+        // n=11: p95 rank = (10·0.95).round() = 10 → the max
+        let v: Vec<f64> = (1..=11).map(|i| i as f64).collect();
+        assert_eq!(exact_quantile(&v, 0.95), 11.0);
+        assert_eq!(exact_quantile(&v, 0.90), 9.0);
+    }
+
+    #[test]
+    fn histogram_tracks_exact_count_mean_max() {
+        let mut h = LatencyStats::new();
+        for ms in [17.0, 16.0, 31.0, 30.0] {
+            h.record(ms);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max_ms(), 31.0);
+        assert!((h.mean_ms() - 23.5).abs() < 1e-12, "mean stays exact");
+        let empty = LatencyStats::new();
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.mean_ms(), 0.0);
+        assert_eq!(empty.max_ms(), 0.0);
+        assert_eq!(empty.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_matches_exact_within_the_documented_bound() {
+        // exact-vs-histogram error bound, property-style: random latency
+        // multisets over several orders of magnitude, every percentile the
+        // summary reports — the histogram must sit within
+        // QUANTILE_REL_ERROR of the exact nearest-rank value
+        let mut rng = Prng::new(0xB1245);
+        for case_no in 0..200 {
+            let n = rng.below(400) + 1;
+            let mut vals: Vec<f64> =
+                (0..n).map(|_| 0.05 + rng.next_f64() * 5_000.0).collect();
+            let mut h = LatencyStats::new();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_by(f64::total_cmp);
+            for p in [0.0, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+                let exact = exact_quantile(&vals, p);
+                let got = h.quantile(p);
+                assert!(
+                    (got - exact).abs() <= exact * LatencyStats::QUANTILE_REL_ERROR,
+                    "case {case_no} p{p}: hist {got} vs exact {exact} \
+                     (rel err {:.5} > {:.5})",
+                    ((got - exact) / exact).abs(),
+                    LatencyStats::QUANTILE_REL_ERROR,
+                );
+            }
+            assert_eq!(h.count(), vals.len() as u64);
+            assert_eq!(h.max_ms(), *vals.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_p() {
+        let mut rng = Prng::new(0x0514D);
+        let mut h = LatencyStats::new();
+        for _ in 0..1000 {
+            h.record(0.1 + rng.next_f64() * 300.0);
+        }
+        let ps = [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0];
+        for w in ps.windows(2) {
+            assert!(h.quantile(w[0]) <= h.quantile(w[1]), "p{} > p{}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn merge_is_bin_exact_and_shard_order_deterministic() {
+        // split one sample stream into "shards", merge in shard order:
+        // bins/count/max must equal the unsharded histogram exactly, and
+        // the merge must be reproducible (same shards, same bytes)
+        let mut rng = Prng::new(0x3E26E);
+        let vals: Vec<f64> = (0..512).map(|_| 0.2 + rng.next_f64() * 900.0).collect();
+        let mut whole = LatencyStats::new();
+        for &v in &vals {
+            whole.record(v);
+        }
+        let mut shards: Vec<LatencyStats> = (0..4).map(|_| LatencyStats::new()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            shards[i % 4].record(v);
+        }
+        let fold = |shards: &[LatencyStats]| {
+            let mut m = LatencyStats::new();
+            for sh in shards {
+                m.merge(sh);
+            }
+            m
+        };
+        let merged = fold(&shards);
+        assert_eq!(merged, fold(&shards), "same shard order must give the same bytes");
+        assert_eq!(merged.bins, whole.bins, "u64 bin counts add exactly");
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.max_ms(), whole.max_ms());
+        // the f64 sum is order-dependent in the last ulp (why merges fold
+        // in shard-index order); the value itself is the same mean
+        assert!((merged.mean_ms() - whole.mean_ms()).abs() < 1e-9);
+        for p in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(p), whole.quantile(p), "same bins, same quantile");
+        }
+    }
+
+    #[test]
+    fn footprint_is_bounded_by_range_not_count() {
+        // 100x more samples from the same distribution may refine the
+        // tail, but the occupied-bin footprint is capped by the value
+        // range: octaves(range) × BINS_PER_OCTAVE, never O(n)
+        let range_octaves = (1.0f64..1024.0).end.log2() - (1.0f64..1024.0).start.log2();
+        let cap = (range_octaves as usize + 2) * LatencyStats::BINS_PER_OCTAVE as usize;
+        for n in [1_000usize, 100_000] {
+            let mut rng = Prng::new(0xF007);
+            let mut h = LatencyStats::new();
+            for _ in 0..n {
+                h.record(1.0 + rng.next_f64() * 1023.0);
+            }
+            assert!(
+                h.occupied_bins() <= cap,
+                "{n} samples occupy {} bins, cap {cap}",
+                h.occupied_bins()
+            );
+        }
+    }
+
+    #[test]
+    fn bin_edges_are_fixed_and_monotone() {
+        // the value→bin map is monotone, and bin midpoints reconstruct to
+        // within the bin (sanity on the bit-pattern arithmetic)
+        let mut rng = Prng::new(0xED6E5);
+        let mut prev = (0.0f64, 0u32);
+        let mut vals: Vec<f64> = (0..2000).map(|_| rng.next_f64() * 1e4).collect();
+        vals.sort_by(f64::total_cmp);
+        for v in vals {
+            let b = bin_of(v);
+            assert!(b >= prev.1, "bin_of must be monotone: {v} < {} but bin went back", prev.0);
+            prev = (v, b);
+            if v > 0.0 {
+                let mid = bin_mid(b);
+                assert!(
+                    (mid - v).abs() <= v * LatencyStats::QUANTILE_REL_ERROR,
+                    "midpoint {mid} not within bound of {v}"
+                );
+            }
+        }
+        assert_eq!(bin_of(0.0), 0);
+        assert_eq!(bin_of(-3.0), 0, "non-positive input lands in the underflow bin");
+    }
+}

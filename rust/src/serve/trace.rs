@@ -72,7 +72,12 @@ fn exp_ms(rng: &mut Prng, rate_per_ms: f64) -> f64 {
 }
 
 /// Generate the sorted arrival times (ms, in `[0, duration_ms)`) of one
-/// trace. Deterministic per `(process, duration_ms, seed)`.
+/// trace, fully materialized. Deterministic per
+/// `(process, duration_ms, seed)`.
+///
+/// This is the eager *reference* form: [`ArrivalGen`] is a separately
+/// implemented lazy state machine that must consume the PRNG in the
+/// identical order, and the property tests hold the two bitwise equal.
 pub fn generate(process: &ArrivalProcess, duration_ms: f64, seed: u64) -> Vec<f64> {
     let mut rng = Prng::new(seed);
     let mut out = Vec::new();
@@ -117,9 +122,159 @@ pub fn generate(process: &ArrivalProcess, duration_ms: f64, seed: u64) -> Vec<f6
     out
 }
 
+/// Lazy iterator form of [`generate`]: emits the same arrival times, in
+/// the same order, off the same [`Prng`] draw sequence, without ever
+/// materializing the trace — O(1) state regardless of trace length.
+///
+/// `ArrivalGen::new(process, duration_ms, seed).collect::<Vec<_>>()` is
+/// byte-identical to `generate(process, duration_ms, seed)` (property
+/// tested in `tests/prop_serve.rs`), and with `duration_ms =
+/// f64::INFINITY` the stream is unbounded, so `.take(n)` yields exactly
+/// the first `n` arrivals of the process — the `hqp serve --requests N`
+/// long-run knob.
+pub struct ArrivalGen {
+    rng: Prng,
+    duration_ms: f64,
+    state: GenState,
+}
+
+enum GenState {
+    /// Exhausted (or a degenerate zero-rate process).
+    Done,
+    /// Poisson: `next_t` is the already-drawn candidate arrival.
+    Poisson { rate: f64, next_t: f64 },
+    /// MMPP(2): clock `t`, current state, and the pending switch time.
+    Mmpp { rate_low: f64, rate_high: f64, dwell_rate: f64, high: bool, t: f64, switch_at: f64 },
+}
+
+impl ArrivalGen {
+    pub fn new(process: &ArrivalProcess, duration_ms: f64, seed: u64) -> ArrivalGen {
+        let mut rng = Prng::new(seed);
+        let state = match *process {
+            ArrivalProcess::Poisson { rps } => {
+                if rps <= 0.0 {
+                    GenState::Done
+                } else {
+                    let rate = rps / 1e3;
+                    let next_t = exp_ms(&mut rng, rate);
+                    GenState::Poisson { rate, next_t }
+                }
+            }
+            ArrivalProcess::Mmpp { rps_low, rps_high, mean_dwell_ms } => {
+                if rps_low <= 0.0 || rps_high <= 0.0 || mean_dwell_ms <= 0.0 {
+                    GenState::Done
+                } else {
+                    let dwell_rate = 1.0 / mean_dwell_ms;
+                    let switch_at = exp_ms(&mut rng, dwell_rate);
+                    GenState::Mmpp {
+                        rate_low: rps_low / 1e3,
+                        rate_high: rps_high / 1e3,
+                        dwell_rate,
+                        high: false,
+                        t: 0.0,
+                        switch_at,
+                    }
+                }
+            }
+        };
+        ArrivalGen { rng, duration_ms, state }
+    }
+}
+
+impl Iterator for ArrivalGen {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        match &mut self.state {
+            GenState::Done => None,
+            GenState::Poisson { rate, next_t } => {
+                if *next_t < self.duration_ms {
+                    let out = *next_t;
+                    *next_t += exp_ms(&mut self.rng, *rate);
+                    Some(out)
+                } else {
+                    self.state = GenState::Done;
+                    None
+                }
+            }
+            GenState::Mmpp { rate_low, rate_high, dwell_rate, high, t, switch_at } => {
+                // mirror of the eager loop body: spin through state
+                // switches (which emit nothing) until an arrival lands
+                // inside the horizon, drawing the PRNG in the exact same
+                // order as `generate`
+                loop {
+                    if !(*t < self.duration_ms) {
+                        self.state = GenState::Done;
+                        return None;
+                    }
+                    let rate = if *high { *rate_high } else { *rate_low };
+                    let next = *t + exp_ms(&mut self.rng, rate);
+                    if next < *switch_at {
+                        *t = next;
+                        if *t < self.duration_ms {
+                            return Some(*t);
+                        }
+                        // past the horizon: the eager loop also stops
+                        // here without drawing again
+                    } else {
+                        *t = *switch_at;
+                        *high = !*high;
+                        *switch_at = *t + exp_ms(&mut self.rng, *dwell_rate);
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn arrival_gen_matches_generate_bitwise() {
+        for p in [
+            ArrivalProcess::Poisson { rps: 120.0 },
+            ArrivalProcess::parse("mmpp", 120.0).unwrap(),
+        ] {
+            for seed in [1u64, 42, 0xDEAD] {
+                let eager = generate(&p, 4_000.0, seed);
+                let lazy: Vec<f64> = ArrivalGen::new(&p, 4_000.0, seed).collect();
+                assert!(
+                    eager.len() == lazy.len()
+                        && eager.iter().zip(&lazy).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{} seed {seed}: lazy trace must be byte-identical to eager",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_gen_unbounded_take_is_the_eager_prefix() {
+        // duration = INFINITY + take(n) is how `--requests N` streams: the
+        // first n arrivals must equal any eager horizon that covers them
+        for p in [
+            ArrivalProcess::Poisson { rps: 80.0 },
+            ArrivalProcess::parse("mmpp", 80.0).unwrap(),
+        ] {
+            let eager = generate(&p, 10_000.0, 9);
+            let n = eager.len() / 2;
+            let lazy: Vec<f64> = ArrivalGen::new(&p, f64::INFINITY, 9).take(n).collect();
+            assert_eq!(lazy.len(), n);
+            assert!(lazy.iter().zip(&eager).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn arrival_gen_zero_rate_is_empty_and_fused() {
+        let mut g = ArrivalGen::new(&ArrivalProcess::Poisson { rps: 0.0 }, 1000.0, 1);
+        assert_eq!(g.next(), None);
+        assert_eq!(g.next(), None, "stays exhausted");
+        let mut g = ArrivalGen::new(&ArrivalProcess::Poisson { rps: 50.0 }, 100.0, 1);
+        while g.next().is_some() {}
+        assert_eq!(g.next(), None, "stays exhausted after the horizon");
+    }
 
     #[test]
     fn poisson_rate_roughly_matches() {

@@ -23,15 +23,21 @@
 //! * **fixed-fleet identity** — with autoscaling off the other autoscale
 //!   knobs are inert: the summary is bit-identical whatever they say, and
 //!   no scale machinery is ever reported;
-//! * **sanity** — percentiles are ordered, attainment ⊆ completions,
-//!   swap and scale counters are internally consistent.
+//! * **streaming identity** — the lazy `ArrivalGen` iterator reproduces
+//!   the eager `trace::generate` vector bit-for-bit (bounded horizon and
+//!   unbounded-`take(n)` prefix alike), and a streamed run's `Summary` is
+//!   byte-identical to the materialized-trace run at jobs 1 and 4
+//!   (DESIGN.md §Serving, "Memory & streaming");
+//! * **sanity** — percentiles are ordered, attainment ⊆ completions, the
+//!   latency histogram's census matches the completion counter, and swap
+//!   and scale counters are internally consistent.
 
 use hqp::exec::Jobs;
 use hqp::gopt::{FusedKind, FusedOp, OptimizedGraph};
 use hqp::hwsim::{simulate, simulate_batch, Device, Precision};
 use hqp::serve::{
-    reference_fleet, simulate_fleet, simulate_fleet_jobs, trace, ArrivalProcess, AutoscaleConfig,
-    Policy, ScalePolicy, ServeConfig,
+    reference_fleet, simulate_fleet, simulate_fleet_jobs, simulate_fleet_stream, trace,
+    ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy, ServeConfig,
 };
 use hqp::testkit::prng::Prng;
 
@@ -311,6 +317,72 @@ fn prop_worker_count_never_changes_the_summary() {
 }
 
 #[test]
+fn prop_streamed_run_matches_materialized_run_at_any_jobs() {
+    // the O(1)-memory serving contract (DESIGN.md §Serving, "Memory &
+    // streaming"): feeding the coordinator a lazy ArrivalGen through the
+    // bounded lookahead buffer must reproduce the materialized &[f64]
+    // run byte-for-byte — same Summary, same rendered bytes — and the
+    // jobs-invariance contract must hold on the streaming path too
+    let mut rng = Prng::new(0x57EA3);
+    for case_no in 0..CASES / 2 {
+        let case = gen_case(&mut rng);
+        let fleet = build_fleet(&case);
+        let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
+
+        // (a) the lazy generator IS the eager trace, bit for bit — both
+        // the bounded-horizon form and the unbounded .take(n) prefix
+        let lazy: Vec<f64> =
+            trace::ArrivalGen::new(&case.process, case.duration_ms, case.trace_seed).collect();
+        assert_eq!(
+            lazy.len(),
+            arrivals.len(),
+            "case {case_no}: lazy/eager trace length mismatch"
+        );
+        for (i, (l, e)) in lazy.iter().zip(arrivals.iter()).enumerate() {
+            assert_eq!(
+                l.to_bits(),
+                e.to_bits(),
+                "case {case_no}: arrival {i} diverged ({l} vs {e})"
+            );
+        }
+        let prefix: Vec<f64> =
+            trace::ArrivalGen::new(&case.process, f64::INFINITY, case.trace_seed)
+                .take(arrivals.len())
+                .collect();
+        for (i, (l, e)) in prefix.iter().zip(arrivals.iter()).enumerate() {
+            assert_eq!(
+                l.to_bits(),
+                e.to_bits(),
+                "case {case_no}: unbounded take(n) arrival {i} diverged"
+            );
+        }
+
+        // (b) the streamed Summary is byte-identical to the slice run,
+        // sequentially and sharded
+        let eager = simulate_fleet(&fleet, &arrivals, &case.cfg)
+            .expect("materialized simulation of a valid case");
+        for jobs in [1usize, 4] {
+            let streamed = simulate_fleet_stream(
+                &fleet,
+                trace::ArrivalGen::new(&case.process, case.duration_ms, case.trace_seed),
+                &case.cfg,
+                Jobs::new(jobs).unwrap(),
+            )
+            .expect("streamed simulation of the same case");
+            assert_eq!(
+                eager, streamed,
+                "case {case_no}: streamed summary diverged at jobs={jobs}"
+            );
+            assert_eq!(
+                eager.render(),
+                streamed.render(),
+                "case {case_no}: streamed render not byte-identical at jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_router_respects_delta_max() {
     let mut rng = Prng::new(0xACCE55);
     for case_no in 0..CASES {
@@ -384,6 +456,37 @@ fn prop_summary_stats_are_sane() {
         assert!(s.slo_attained <= s.completed, "case {case_no}");
         assert!(s.throughput_rps >= 0.0 && s.mean_ms >= 0.0, "case {case_no}");
         assert!(s.acc_mix <= 0.03 + 1e-12, "case {case_no}: acc mix above any budget");
+        // the constant-memory telemetry is consistent with the counters:
+        // every completion is exactly one histogram sample, the reported
+        // stats come straight off the histogram, and the occupied-bin
+        // footprint is bounded by the fixed-edge bin space, not by the
+        // request count
+        assert_eq!(
+            s.latency_hist.count(),
+            s.completed,
+            "case {case_no}: histogram census != completions"
+        );
+        assert_eq!(s.latency_hist.mean_ms(), s.mean_ms, "case {case_no}");
+        assert!(
+            s.latency_hist.occupied_bins() as u64 <= s.completed.max(1),
+            "case {case_no}: more occupied bins than samples"
+        );
+        // p99 is a bin midpoint, so it may sit up to the documented
+        // relative error above the exact streamed max — never more
+        assert!(
+            s.p99_ms
+                <= s.latency_hist.max_ms()
+                    * (1.0 + hqp::serve::stats::LatencyStats::QUANTILE_REL_ERROR),
+            "case {case_no}: p99 {} beyond the error bound of the exact max {}",
+            s.p99_ms,
+            s.latency_hist.max_ms()
+        );
+        assert!(
+            s.peak_queue_depth <= case.cfg.queue_cap as u64,
+            "case {case_no}: peak queue depth {} above cap {}",
+            s.peak_queue_depth,
+            case.cfg.queue_cap
+        );
         if s.completed > 0 {
             assert!(s.p50_ms > 0.0, "case {case_no}: zero latency is impossible");
             assert!(
