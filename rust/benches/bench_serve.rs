@@ -54,8 +54,8 @@ use hqp::benchkit::{bench, section, time_once, Report};
 use hqp::exec::Jobs;
 use hqp::hwsim::Device;
 use hqp::serve::{
-    reference_fleet, simulate_fleet, simulate_fleet_stream, trace, ArrivalProcess,
-    AutoscaleConfig, Policy, ScalePolicy, ServeConfig,
+    parse_tenants, reference_fleet, simulate_fleet, simulate_fleet_stream, trace,
+    AdmitPolicy, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy, ServeConfig,
 };
 
 /// Every simulation must sustain at least this many simulated events per
@@ -312,6 +312,54 @@ fn main() {
     assert!(
         s_big.peak_queue_depth <= stress_cfg.queue_cap as u64,
         "admission control must bound the queue high-water mark"
+    );
+
+    // ---- multi-tenant admission: weighted-fair vs fifo under a flash crowd -
+    section("serve — weighted-fair vs fifo tenant admission (flash crowd, hqp on nx)");
+    // two classes on one hqp server: `gold` (weight 8, tight SLO) and
+    // `free` (weight 1, loose SLO). tenant_of hands gold 8/9 of the
+    // traffic; the flash crowd spikes to 5x capacity, so during every
+    // spike the queue backs up and admission *order* decides who meets
+    // its deadline. FIFO drains the backlog in arrival order — tight-SLO
+    // gold requests expire behind loose-SLO free ones that arrived
+    // first — while weighted-fair hands gold its 8/9 share of every
+    // dequeue, so gold rides through the spike at the cost of free
+    // requests that could afford to wait anyway.
+    let b1 = hqp_fleet.servers[0].variants[0].batch1_ms();
+    let tenant_spec = format!("gold:0.015:{:.3}:8,free:0.015:{:.3}:1", b1 * 3.0, b1 * 40.0);
+    // fixed 4 s window even under --smoke: the asserted separation needs
+    // the spikes (mean gap 700 ms) to actually arrive
+    let crowd =
+        trace::generate(&ArrivalProcess::parse("flash-crowd", cap_hqp).unwrap(), 4_000.0, 29);
+    let tenant_cfg = |admit: AdmitPolicy| ServeConfig {
+        slo_ms,
+        tenants: parse_tenants(&tenant_spec).expect("tenant spec"),
+        admit,
+        ..Default::default()
+    };
+    let (s_fifo, ms_fifo) =
+        time_once(|| simulate_fleet(&hqp_fleet, &crowd, &tenant_cfg(AdmitPolicy::Fifo)));
+    let s_fifo = s_fifo.expect("fifo sim");
+    let (s_wfq, ms_wfq) =
+        time_once(|| simulate_fleet(&hqp_fleet, &crowd, &tenant_cfg(AdmitPolicy::WeightedFair)));
+    let s_wfq = s_wfq.expect("weighted-fair sim");
+    scenario_cost(&mut report, "multi_tenant", s_fifo.events + s_wfq.events, ms_fifo + ms_wfq);
+    let gold_fifo = s_fifo.tenants[0].attainment();
+    let gold_wfq = s_wfq.tenants[0].attainment();
+    report.metric("tenant_offered_rps", cap_hqp);
+    report.metric("slo_attain_gold_fifo", gold_fifo);
+    report.metric("slo_attain_gold_wfq", gold_wfq);
+    report.metric("slo_attain_free_fifo", s_fifo.tenants[1].attainment());
+    report.metric("slo_attain_free_wfq", s_wfq.tenants[1].attainment());
+    assert_eq!(s_fifo.tenants.len(), 2, "both classes must be censused");
+    assert!(
+        s_fifo.tenants[0].generated > s_fifo.tenants[1].generated,
+        "weight-proportional assignment must hand gold the traffic majority"
+    );
+    assert!(
+        gold_wfq >= gold_fifo,
+        "acceptance: weighted-fair gold attainment {gold_wfq:.3} must reach at \
+         least fifo's {gold_fifo:.3} under the flash crowd"
     );
 
     report.write_json("BENCH_serve.json").expect("write BENCH_serve.json");

@@ -53,7 +53,7 @@ const SERVE_FLAGS: &[&str] = &[
     "batch-timeout-ms", "queue-cap", "arrivals", "smoke", "mem-mb",
     "swap-init-ms", "link-mbps", "autoscale", "scale-interval-ms",
     "min-servers", "max-servers", "scale-high-water", "scale-low-water",
-    "jobs",
+    "retries", "retry-base-ms", "tenants", "admit", "jobs",
 ];
 
 /// Valid `--device` names (aliases included), shown when the flag is bad.
@@ -136,8 +136,23 @@ serve options:
                         (lazy arrival generation + constant-memory telemetry:
                         resident state is independent of N, so million-request
                         runs are fine; excludes --duration-s; 0 is rejected)
-  --arrivals A          poisson | mmpp (default poisson)
-  --seed N              trace seed (default 42; identical seed => identical summary)
+  --arrivals A          poisson | mmpp | diurnal | flash-crowd (default poisson)
+  --seed N              trace seed (default 42; identical seed => identical summary;
+                        also seeds retry backoff draws)
+  --retries N           closed-loop clients: rejected/expired requests re-enter
+                        the arrival stream after seeded exponential backoff, up
+                        to N re-entries per request (default 0 = open loop;
+                        conservation then reads generated = completed +
+                        dropped + expired *final*, with retries censused apart)
+  --retry-base-ms X     mean backoff before the first re-entry, ms; doubles per
+                        attempt (default 5; requires --retries)
+  --tenants SPEC        multi-tenant classes \"name:dmax:slo_ms:weight,...\" —
+                        each request is assigned a class (weight-proportional,
+                        deterministic in the request id) and admitted against
+                        that class's \u{394}_max budget and SLO deadline; the
+                        summary gains a per-tenant census + attainment table
+  --admit P             fifo (default) | weighted-fair — batch admission order
+                        across tenant classes (requires --tenants)
   --max-batch N         dynamic batcher max batch size (default 8)
   --batch-timeout-ms X  batching timeout (default 2)
   --queue-cap N         per-server admission queue cap (default 256)
@@ -720,6 +735,50 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
             ArrivalProcess::NAMES.join(", ")
         ))
     })?;
+    // closed-loop clients: --retries N lets refused requests re-enter the
+    // arrival stream after seeded exponential backoff. A bare --retries
+    // parses as a switch, so reject it loudly instead of silently running
+    // the open loop the user asked to close.
+    if args.switch("retries") {
+        return Err(hqp::Error::Cli(
+            "--retries needs a value (max re-entries per request; 0 = open loop)".into(),
+        ));
+    }
+    let retries = args.flag_usize("retries", 0)?;
+    if retries == 0 && args.flag("retry-base-ms").is_some() {
+        return Err(hqp::Error::Cli("--retry-base-ms requires --retries".into()));
+    }
+    let retry_base_ms = args.flag_f64("retry-base-ms", 5.0)?;
+    // multi-tenant classes: parse_tenants errors already quote the
+    // expected "name:dmax:slo_ms:weight,..." grammar
+    if args.switch("tenants") {
+        return Err(hqp::Error::Cli(format!(
+            "--tenants needs a value: {}",
+            serve::TENANT_SPEC_FORMAT
+        )));
+    }
+    let tenants = match args.flag("tenants") {
+        Some(spec) => serve::parse_tenants(spec)?,
+        None => Vec::new(),
+    };
+    if args.switch("admit") {
+        return Err(hqp::Error::Cli(format!(
+            "--admit needs a value (valid: {})",
+            serve::AdmitPolicy::NAMES.join(", ")
+        )));
+    }
+    let admit_name = args.flag_or("admit", "fifo");
+    let admit = serve::AdmitPolicy::parse(admit_name).ok_or_else(|| {
+        hqp::Error::Cli(format!(
+            "unknown admission policy {admit_name} (valid: {})",
+            serve::AdmitPolicy::NAMES.join(", ")
+        ))
+    })?;
+    if args.flag("admit").is_some() && tenants.is_empty() {
+        return Err(hqp::Error::Cli(
+            "--admit requires --tenants (admission order is across tenant classes)".into(),
+        ));
+    }
     // elastic autoscaling: --autoscale names the controller; the knobs
     // below are rejected without one (the same typo-hardening --device
     // gets), and the watermark overrides only exist for queue-depth
@@ -771,6 +830,11 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         swap_init_ms: args.flag_f64("swap-init-ms", 5.0)?,
         link_mbps: args.flag_f64("link-mbps", f64::INFINITY)?,
         autoscale,
+        retries,
+        retry_base_ms,
+        retry_seed: seed,
+        tenants,
+        admit,
     };
 
     let methods = ["baseline", "q8", "p50", "hqp", "mixed"];

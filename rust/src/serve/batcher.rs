@@ -30,14 +30,19 @@ use std::collections::VecDeque;
 #[derive(Clone, Copy, Debug)]
 pub struct QueuedReq {
     /// Index of the request in the arrival trace (a stable identity
-    /// across drains and requeues).
+    /// across drains, requeues and retries).
     pub id: usize,
-    /// When the request was generated, virtual ms (FIFO/merge key; the
-    /// latency and SLO clocks both start here).
+    /// When this *attempt* was generated (or re-entered after backoff),
+    /// virtual ms (FIFO/merge key; the latency and SLO clocks both start
+    /// here).
     pub arrival_ms: f64,
-    /// `arrival_ms + slo_ms`: queued past this is expiry, completed past
-    /// this is an SLO miss.
+    /// `arrival_ms + slo_ms` (the tenant's SLO): queued past this is
+    /// expiry, completed past this is an SLO miss.
     pub deadline_ms: f64,
+    /// Tenant-class index (0 when no `--tenants` table is configured).
+    pub tenant: u32,
+    /// 0 for the fresh arrival, k for the k-th backoff re-entry.
+    pub attempt: u32,
 }
 
 /// What the caller must do after an enqueue.
@@ -62,6 +67,19 @@ pub struct TakenBatch {
     pub expired: Vec<QueuedReq>,
 }
 
+/// Weighted-fair dequeue state: per-tenant admission weights and how
+/// many requests each tenant has had admitted into batches so far. The
+/// virtual finish time of a tenant's next request is
+/// `(admitted + 1) / weight`; each dequeue picks the queued request
+/// whose tenant's finish time is smallest (ties to queue order), so over
+/// an overload each tenant's admission share converges to its weight
+/// share instead of pure arrival order.
+#[derive(Clone, Debug)]
+struct Wfq {
+    weights: Vec<f64>,
+    admitted: Vec<u64>,
+}
+
 /// Per-variant admission queues + batching policy for one server.
 #[derive(Clone, Debug)]
 pub struct Batcher {
@@ -73,6 +91,10 @@ pub struct Batcher {
     flush_tokens: Vec<u64>,
     total: usize,
     peak: usize,
+    /// `Some` switches [`Batcher::take_batch`] from FIFO to weighted-fair
+    /// dequeue; `None` (the default) is byte-identical to the pre-tenant
+    /// batcher.
+    wfq: Option<Wfq>,
 }
 
 impl Batcher {
@@ -84,7 +106,15 @@ impl Batcher {
             flush_tokens: vec![0; num_variants],
             total: 0,
             peak: 0,
+            wfq: None,
         }
+    }
+
+    /// Switch dequeue order to weighted-fair over tenant classes with
+    /// these admission weights (indexed by `QueuedReq::tenant`).
+    pub fn set_weighted_fair(&mut self, weights: Vec<f64>) {
+        let n = weights.len();
+        self.wfq = Some(Wfq { weights, admitted: vec![0; n] });
     }
 
     /// Requests currently queued across all variants.
@@ -134,6 +164,25 @@ impl Batcher {
     pub fn take_batch(&mut self, variant: usize, now_ms: f64) -> TakenBatch {
         self.flush_tokens[variant] += 1;
         let mut out = TakenBatch::default();
+        if self.wfq.is_some() {
+            while out.reqs.len() < self.max_batch {
+                let Some(idx) = self.wfq_pick(variant) else { break };
+                let req = self.queues[variant]
+                    .remove(idx)
+                    .expect("batcher: wfq pick out of range");
+                self.total -= 1;
+                if req.deadline_ms < now_ms {
+                    // an expired pick is censused, not admitted: it does
+                    // not consume batch space or advance the tenant clock
+                    out.expired.push(req);
+                } else {
+                    let w = self.wfq.as_mut().expect("batcher: wfq vanished");
+                    w.admitted[req.tenant as usize] += 1;
+                    out.reqs.push(req);
+                }
+            }
+            return out;
+        }
         while out.reqs.len() < self.max_batch {
             let Some(req) = self.queues[variant].pop_front() else { break };
             self.total -= 1;
@@ -144,6 +193,25 @@ impl Batcher {
             }
         }
         out
+    }
+
+    /// Queue index of the weighted-fair pick for one variant: the request
+    /// whose tenant has the smallest virtual finish time, ties broken by
+    /// queue (FIFO) position — a total order, so dequeue is deterministic.
+    fn wfq_pick(&self, variant: usize) -> Option<usize> {
+        let w = self.wfq.as_ref().expect("batcher: wfq_pick without wfq state");
+        let mut best: Option<(f64, usize)> = None;
+        for (i, r) in self.queues[variant].iter().enumerate() {
+            let t = r.tenant as usize;
+            let finish = (w.admitted[t] as f64 + 1.0) / w.weights[t];
+            if match best {
+                None => true,
+                Some((f, _)) => finish < f,
+            } {
+                best = Some((finish, i));
+            }
+        }
+        best.map(|(_, i)| i)
     }
 
     /// The non-empty variant queue whose head request has waited longest
@@ -237,7 +305,11 @@ mod tests {
     use super::*;
 
     fn req(id: usize, arrival: f64, deadline: f64) -> QueuedReq {
-        QueuedReq { id, arrival_ms: arrival, deadline_ms: deadline }
+        QueuedReq { id, arrival_ms: arrival, deadline_ms: deadline, tenant: 0, attempt: 0 }
+    }
+
+    fn treq(id: usize, arrival: f64, tenant: u32) -> QueuedReq {
+        QueuedReq { id, arrival_ms: arrival, deadline_ms: arrival + 1e6, tenant, attempt: 0 }
     }
 
     #[test]
@@ -367,6 +439,60 @@ mod tests {
         }
         assert_eq!(popped, 100);
         assert_eq!(b.total(), 0);
+    }
+
+    #[test]
+    fn wfq_dequeue_tracks_weight_shares_not_arrival_order() {
+        // tenant 0 weight 3, tenant 1 weight 1; tenant 1 arrived first
+        let mut b = Batcher::new(1, 1, 5.0);
+        b.set_weighted_fair(vec![3.0, 1.0]);
+        for i in 0..4 {
+            b.enqueue(0, treq(i, i as f64, 1));
+        }
+        for i in 4..12 {
+            b.enqueue(0, treq(i, i as f64, 0));
+        }
+        let mut order = Vec::new();
+        while b.total() > 0 {
+            let t = b.take_batch(0, 0.0);
+            order.extend(t.reqs.iter().map(|r| r.tenant));
+        }
+        // first 8 dequeues: tenant 0 gets ~3/4 despite arriving later
+        let head: Vec<u32> = order.iter().take(8).copied().collect();
+        let t0 = head.iter().filter(|&&t| t == 0).count();
+        assert_eq!(order.len(), 12, "every request dequeues exactly once");
+        assert_eq!(t0, 6, "weight-3 tenant takes 3/4 of the first 8 slots, got {head:?}");
+        // FIFO within a tenant is preserved
+        let t1_ids: Vec<u32> = order.iter().copied().filter(|&t| t == 1).collect();
+        assert_eq!(t1_ids.len(), 4);
+    }
+
+    #[test]
+    fn wfq_expired_picks_are_censused_without_advancing_the_clock() {
+        let mut b = Batcher::new(1, 4, 5.0);
+        b.set_weighted_fair(vec![1.0, 1.0]);
+        b.enqueue(0, QueuedReq { id: 0, arrival_ms: 0.0, deadline_ms: 1.0, tenant: 0, attempt: 0 });
+        b.enqueue(0, treq(1, 0.5, 1));
+        b.enqueue(0, treq(2, 0.6, 0));
+        let t = b.take_batch(0, 10.0);
+        assert_eq!(t.expired.len(), 1);
+        assert_eq!(t.expired[0].id, 0);
+        assert_eq!(t.reqs.len(), 2);
+        assert_eq!(b.total(), 0);
+    }
+
+    #[test]
+    fn wfq_unset_is_fifo() {
+        // identical enqueue sequence, no set_weighted_fair: strict FIFO
+        let mut b = Batcher::new(1, 1, 5.0);
+        for i in 0..4 {
+            b.enqueue(0, treq(i, i as f64, (i % 2) as u32));
+        }
+        let mut ids = Vec::new();
+        while b.total() > 0 {
+            ids.extend(b.take_batch(0, 0.0).reqs.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -45,6 +45,19 @@
 //! which the buffer tracks; a materialized slice is just the
 //! `iter().copied()` special case and produces byte-identical output.
 //!
+//! ## Closed-loop clients (`--retries`)
+//!
+//! With retries on, a rejected or expired request re-enters the arrival
+//! stream after a seeded exponential backoff. Rejections are observed by
+//! the coordinator directly; expiries surface inside shard-local windows
+//! and flow back through a per-shard *retry outbox*, harvested at the
+//! end of every barrier iteration in shard-index order. The backoff draw
+//! is a pure function of `(retry_seed, id, attempt)` and every re-entry
+//! is floored at its harvest barrier, so the retry timeline — a third
+//! barrier source `tr` alongside arrivals `ta` and control ticks `tc` —
+//! is identical at any `--jobs`. Memory stays O(fleet): the retry heap
+//! holds only in-flight backoffs, never the trace.
+//!
 //! Relative to the old single-heap engine, only two tie-break orders
 //! changed, both without observable effect on fixed-fleet runs: (a)
 //! same-time local events on *different* servers now process in shard
@@ -62,12 +75,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
 
 use crate::error::{Error, Result};
+use crate::testkit::prng::Prng;
 
 use super::autoscale::{AutoscalePolicy, Lifecycle, ScaleDecision, SignalTracker};
 use super::batcher::{Batcher, EnqueueAction, QueuedReq};
 use super::fleet::{Fleet, Server};
 use super::router::{FleetView, Router, SwapPlan};
 use super::stats::LatencyStats;
+use super::tenant::{tenant_of, AdmitPolicy, TenantClass};
 use super::ServeConfig;
 
 /// Per-(server, variant) usage accumulator (merged into
@@ -79,6 +94,20 @@ pub(crate) struct UsageAcc {
     pub(crate) occupancy: u64,
     pub(crate) busy_ms: f64,
     pub(crate) energy_mj: f64,
+}
+
+/// Per-tenant census: coordinator-side counts (generated, retries,
+/// final drops) and shard-side counts (completions, attainment,
+/// final expiries, latency) merged in shard-index order.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct TenantTotals {
+    pub(crate) generated: u64,
+    pub(crate) completed: u64,
+    pub(crate) dropped_final: u64,
+    pub(crate) expired_final: u64,
+    pub(crate) retries: u64,
+    pub(crate) slo_attained: u64,
+    pub(crate) latency: LatencyStats,
 }
 
 /// The merged run result `build_summary` consumes: per-shard accumulators
@@ -111,6 +140,14 @@ pub(crate) struct Totals {
     pub(crate) events: u64,
     /// Max over servers of each batcher's queued-request high-water mark.
     pub(crate) peak_queue_depth: u64,
+    /// Closed-loop retry re-entries (0 open-loop).
+    pub(crate) retries: u64,
+    /// Rejections with no retry budget left (== rejected sum open-loop).
+    pub(crate) dropped_final: u64,
+    /// Expiries with no retry budget left (== expired open-loop).
+    pub(crate) expired_final: u64,
+    /// Per-tenant census, indexed like `ServeConfig::effective_tenants`.
+    pub(crate) tenants: Vec<TenantTotals>,
 }
 
 // ---------------------------------------------------------------------------
@@ -171,12 +208,19 @@ struct ShardAcc {
     completed: u64,
     expired: u64,
     expired_during_swap: u64,
+    /// Expiries whose request had no retry budget left (== `expired`
+    /// open-loop; terminal leftovers of the final drain are counted by
+    /// the coordinator instead).
+    expired_final: u64,
     swaps: u64,
     swap_ms: f64,
     swap_energy_mj: f64,
     slo_attained: u64,
     latency_stats: LatencyStats,
     usage: Vec<UsageAcc>,
+    /// Per-tenant shard-side census (completions, attainment, final
+    /// expiries, latency), always sized to the effective tenant count.
+    tenants: Vec<TenantTotals>,
 }
 
 /// One server's complete simulation state: batcher, swap/lifecycle flags,
@@ -205,12 +249,23 @@ struct Shard {
     max_time: f64,
     events: u64,
     acc: ShardAcc,
+    /// Closed-loop feedback channel: expiries with retry budget left,
+    /// as `(expiry time, request)`. Appended in this shard's (total)
+    /// event order; the coordinator harvests it at every barrier in
+    /// shard-index order, so the retry schedule is independent of how
+    /// many worker threads advanced the window. Always empty open-loop.
+    retry_outbox: Vec<(f64, QueuedReq)>,
 }
 
 impl Shard {
     fn new(srv: &Server, cfg: &ServeConfig, asleep: bool) -> Shard {
+        let tenants = cfg.effective_tenants();
+        let mut batcher = Batcher::new(srv.variants.len(), cfg.max_batch, cfg.batch_timeout_ms);
+        if cfg.admit == AdmitPolicy::WeightedFair {
+            batcher.set_weighted_fair(tenants.iter().map(|t| t.weight).collect());
+        }
         Shard {
-            batcher: Batcher::new(srv.variants.len(), cfg.max_batch, cfg.batch_timeout_ms),
+            batcher,
             busy: false,
             busy_until: 0.0,
             swapping: false,
@@ -226,8 +281,24 @@ impl Shard {
             events: 0,
             acc: ShardAcc {
                 usage: vec![UsageAcc::default(); srv.variants.len()],
+                tenants: vec![TenantTotals::default(); tenants.len()],
                 ..ShardAcc::default()
             },
+            retry_outbox: Vec::new(),
+        }
+    }
+
+    /// Census one queued-past-deadline request: the attempt always counts
+    /// as `expired`; with retry budget left it enters the retry outbox
+    /// (the coordinator schedules the backoff re-entry), otherwise it is
+    /// final for this tenant.
+    fn expire(&mut self, req: QueuedReq, now: f64, cfg: &ServeConfig) {
+        self.acc.expired += 1;
+        if (req.attempt as usize) < cfg.retries {
+            self.retry_outbox.push((now, req));
+        } else {
+            self.acc.expired_final += 1;
+            self.acc.tenants[req.tenant as usize].expired_final += 1;
         }
     }
 
@@ -263,7 +334,7 @@ impl Shard {
     /// variants can form batches — the structural half of the "never
     /// serve a non-resident engine" invariant (the router enforces the
     /// other half at admission).
-    fn try_dispatch(&mut self, mut v: usize, now: f64, server: &Server) {
+    fn try_dispatch(&mut self, mut v: usize, now: f64, server: &Server, cfg: &ServeConfig) {
         loop {
             if !self.resident[v] {
                 match self.batcher.oldest_allowed(&self.resident) {
@@ -278,7 +349,9 @@ impl Shard {
                 }
             }
             let taken = self.batcher.take_batch(v, now);
-            self.acc.expired += taken.expired.len() as u64;
+            for r in taken.expired {
+                self.expire(r, now, cfg);
+            }
             if taken.reqs.is_empty() {
                 match self.batcher.oldest_allowed(&self.resident) {
                     Some(next) => {
@@ -355,15 +428,19 @@ impl Shard {
         match kind {
             LocalKind::Flush { variant, token } => {
                 if self.can_dispatch() && self.batcher.flush_live(variant, token) {
-                    self.try_dispatch(variant, now, server);
+                    self.try_dispatch(variant, now, server, cfg);
                 }
             }
             LocalKind::BatchDone { variant, reqs } => {
                 for r in &reqs {
                     self.acc.completed += 1;
                     self.acc.latency_stats.record(now - r.arrival_ms);
+                    let ten = &mut self.acc.tenants[r.tenant as usize];
+                    ten.completed += 1;
+                    ten.latency.record(now - r.arrival_ms);
                     if now <= r.deadline_ms {
                         self.acc.slo_attained += 1;
+                        ten.slo_attained += 1;
                     }
                     self.acc.usage[variant].completed += 1;
                 }
@@ -372,7 +449,7 @@ impl Shard {
                 // at this very timestamp
                 if self.pending_swap.is_none() {
                     if let Some(next) = self.batcher.oldest_allowed(&self.resident) {
-                        self.try_dispatch(next, now, server);
+                        self.try_dispatch(next, now, server, cfg);
                     }
                 }
                 // a draining server whose queue just emptied goes to sleep
@@ -433,7 +510,7 @@ impl Shard {
                             if r.deadline_ms < now {
                                 // lapsed before the swap even began: plain
                                 // expiry, the eviction only surfaced it
-                                self.acc.expired += 1;
+                                self.expire(r, now, cfg);
                             } else {
                                 alive.push(r);
                             }
@@ -462,16 +539,16 @@ impl Shard {
                 // swap window are attributed to the swap (earlier ones
                 // would have expired at the next batch formation anyway)
                 for r in self.batcher.purge_expired(now) {
-                    self.acc.expired += 1;
                     if r.deadline_ms >= started_ms {
                         self.acc.expired_during_swap += 1;
                     }
+                    self.expire(r, now, cfg);
                 }
                 // the survivors have outwaited any batching timeout:
                 // dispatch immediately
                 if self.can_dispatch() {
                     if let Some(next) = self.batcher.oldest_allowed(&self.resident) {
-                        self.try_dispatch(next, now, server);
+                        self.try_dispatch(next, now, server, cfg);
                     }
                 }
                 // a drain that was waiting on this swap can now complete
@@ -756,6 +833,58 @@ impl<I: Iterator<Item = f64>> Lookahead<I> {
 }
 
 // ---------------------------------------------------------------------------
+// Closed-loop retries
+// ---------------------------------------------------------------------------
+
+/// One pending backoff re-entry. `origin_ms` is when the client re-sends
+/// (the attempt's SLO clock starts here; it reaches the fleet
+/// `transfer_ms` later, exactly like a fresh arrival).
+#[derive(Clone, Copy, Debug)]
+struct RetryEntry {
+    origin_ms: f64,
+    id: usize,
+    tenant: u32,
+    attempt: u32,
+}
+
+impl PartialEq for RetryEntry {
+    fn eq(&self, other: &RetryEntry) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for RetryEntry {}
+impl PartialOrd for RetryEntry {
+    fn partial_cmp(&self, other: &RetryEntry) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RetryEntry {
+    /// Total order `(time, id, attempt)` — the heap pop order is
+    /// deterministic whatever order entries were scheduled in.
+    fn cmp(&self, other: &RetryEntry) -> std::cmp::Ordering {
+        self.origin_ms
+            .total_cmp(&other.origin_ms)
+            .then(self.id.cmp(&other.id))
+            .then(self.attempt.cmp(&other.attempt))
+    }
+}
+
+/// The backoff before retry `attempt` (1-based) of request `id`: an
+/// exponential draw with mean `retry_base_ms · 2^(attempt-1)`, from a
+/// PRNG derived from `(retry_seed, id, attempt)` alone — a pure function
+/// of the triple, so the draw is identical whatever barrier the failure
+/// was harvested at and whatever `--jobs` advanced the window.
+fn backoff_ms(cfg: &ServeConfig, id: usize, attempt: u32) -> f64 {
+    let mix = cfg
+        .retry_seed
+        .wrapping_add((id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((attempt as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    let mut rng = Prng::new(mix);
+    let mean = cfg.retry_base_ms * f64::powi(2.0, attempt as i32 - 1);
+    -mean * (1.0 - rng.next_f64()).ln()
+}
+
+// ---------------------------------------------------------------------------
 // The coordinator: global timeline + barriers
 // ---------------------------------------------------------------------------
 
@@ -773,6 +902,16 @@ struct GlobalAcc {
     events: u64,
     /// Max barrier time processed (makespan contribution).
     max_time: f64,
+    /// Retry re-entries scheduled (rejections and harvested expiries).
+    retries: u64,
+    /// Rejections with no retry budget left.
+    dropped_final: u64,
+    /// Final-drain leftovers: retry-eligible expiries with no barrier
+    /// left to re-enter at (shard-side final expiries are counted in
+    /// `ShardAcc` instead).
+    expired_final: u64,
+    /// Coordinator-side per-tenant census (generated, retries, finals).
+    tenants: Vec<TenantTotals>,
 }
 
 struct Coordinator<'a> {
@@ -783,6 +922,11 @@ struct Coordinator<'a> {
     gang: Option<&'a Gang>,
     spawned: usize,
     gacc: GlobalAcc,
+    /// The effective tenant table (the configured classes, or one
+    /// implicit default tenant carrying the global Δ_max/SLO).
+    tenants: Vec<TenantClass>,
+    /// Pending backoff re-entries, ordered by (time, id, attempt).
+    retry_q: BinaryHeap<Reverse<RetryEntry>>,
     // reusable router/controller snapshot buffers
     backlog: Vec<f64>,
     queued: Vec<usize>,
@@ -800,6 +944,7 @@ impl<'a> Coordinator<'a> {
         spawned: usize,
     ) -> Coordinator<'a> {
         let n = fleet.servers.len();
+        let tenants = cfg.effective_tenants();
         Coordinator {
             fleet,
             cfg,
@@ -807,7 +952,12 @@ impl<'a> Coordinator<'a> {
             errors,
             gang,
             spawned,
-            gacc: GlobalAcc::default(),
+            gacc: GlobalAcc {
+                tenants: vec![TenantTotals::default(); tenants.len()],
+                ..GlobalAcc::default()
+            },
+            tenants,
+            retry_q: BinaryHeap::new(),
             backlog: vec![0.0; n],
             queued: vec![0; n],
             unavail: vec![false; n],
@@ -892,15 +1042,75 @@ impl<'a> Coordinator<'a> {
         }
     }
 
+    /// Schedule retry `attempt` of request `id`: the client re-sends at
+    /// `fail_ms + backoff`, floored at the barrier the failure was
+    /// observed at (virtual time never regresses past a barrier).
+    fn schedule_retry(&mut self, id: usize, tenant: usize, attempt: u32, fail_ms: f64, floor_ms: f64) {
+        let at = (fail_ms + backoff_ms(self.cfg, id, attempt)).max(floor_ms);
+        self.gacc.retries += 1;
+        self.gacc.tenants[tenant].retries += 1;
+        self.retry_q.push(Reverse(RetryEntry {
+            origin_ms: at,
+            id,
+            tenant: tenant as u32,
+            attempt,
+        }));
+    }
+
+    /// A rejected admission attempt: re-enter after backoff if retry
+    /// budget remains, else the request is finally dropped.
+    fn fail_admission(&mut self, id: usize, tenant: usize, attempt: u32, now: f64) {
+        if (attempt as usize) < self.cfg.retries {
+            self.schedule_retry(id, tenant, attempt + 1, now, now);
+        } else {
+            self.gacc.dropped_final += 1;
+            self.gacc.tenants[tenant].dropped_final += 1;
+        }
+    }
+
+    /// Drain every shard's retry outbox (shard-index order, entries in
+    /// shard event order) into the retry heap, flooring re-entries at the
+    /// current barrier. Called at the end of every barrier iteration, so
+    /// an expiry re-enters deterministically at the same virtual time for
+    /// every `--jobs` value.
+    fn harvest_retries(&mut self, floor_ms: f64) {
+        for m in self.shards.iter() {
+            let outbox = std::mem::take(&mut lock_shard(m).retry_outbox);
+            for (fail_ms, req) in outbox {
+                self.schedule_retry(req.id, req.tenant as usize, req.attempt + 1, fail_ms, floor_ms);
+            }
+        }
+    }
+
+    /// Terminal pass after the final drain: expiries that still had retry
+    /// budget but no barrier left to re-enter at become final (the
+    /// attempt census already counted them `expired`).
+    fn expire_leftover_retries(&mut self) {
+        for m in self.shards.iter() {
+            let outbox = std::mem::take(&mut lock_shard(m).retry_outbox);
+            for (_, req) in outbox {
+                self.gacc.expired_final += 1;
+                self.gacc.tenants[req.tenant as usize].expired_final += 1;
+            }
+        }
+    }
+
     fn handle_arrival(
         &mut self,
-        router: &mut Router,
+        routers: &mut [Router],
         id: usize,
         origin: f64,
         now: f64,
+        attempt: u32,
         residency_limited: bool,
     ) -> Result<()> {
         self.gacc.events += 1;
+        // tenant assignment is a pure function of the request id, so the
+        // whole retry chain stays in the class the fresh arrival drew
+        let tenant = tenant_of(id, &self.tenants);
+        if attempt == 0 {
+            self.gacc.tenants[tenant].generated += 1;
+        }
         // router input: remaining busy/swap time + queued work estimate,
         // plus the residency/availability snapshot
         self.fill_snapshot(now);
@@ -912,15 +1122,16 @@ impl<'a> Coordinator<'a> {
                 resident: &self.res_snap,
                 unavailable: &self.unavail,
             };
-            router.route(&view)
+            routers[tenant].route(&view)
         };
         match decision {
             None => {
-                if router.num_candidates() == 0 {
+                if routers[tenant].num_candidates() == 0 {
                     self.gacc.rejected_noncompliant += 1;
                 } else {
                     self.gacc.rejected_unavailable += 1;
                 }
+                self.fail_admission(id, tenant, attempt, now);
             }
             Some(c) => {
                 // routing to an asleep or draining server is structurally
@@ -935,18 +1146,27 @@ impl<'a> Coordinator<'a> {
                 }
                 if sh.batcher.total() >= self.cfg.queue_cap {
                     self.gacc.rejected_full += 1;
+                    drop(sh);
+                    self.fail_admission(id, tenant, attempt, now);
                 } else {
-                    // SLO clock starts at generation: transfer delay eats
-                    // into the budget
+                    // SLO clock starts at generation (or retry re-entry):
+                    // transfer delay eats into the budget
                     let qreq = QueuedReq {
                         id,
                         arrival_ms: origin,
-                        deadline_ms: origin + self.cfg.slo_ms,
+                        deadline_ms: origin + self.tenants[tenant].slo_ms,
+                        tenant: tenant as u32,
+                        attempt,
                     };
                     match sh.batcher.enqueue(c.variant, qreq) {
                         EnqueueAction::BatchReady => {
                             if sh.can_dispatch() {
-                                sh.try_dispatch(c.variant, now, &self.fleet.servers[c.server]);
+                                sh.try_dispatch(
+                                    c.variant,
+                                    now,
+                                    &self.fleet.servers[c.server],
+                                    self.cfg,
+                                );
                             }
                         }
                         EnqueueAction::ArmFlush(token) => {
@@ -964,7 +1184,9 @@ impl<'a> Coordinator<'a> {
         }
         // hot-swap planning over the same snapshot: only meaningful under
         // capped memory (static policies never plan; the guard also keeps
-        // the unlimited path's event stream bit-exact)
+        // the unlimited path's event stream bit-exact). Planning always
+        // goes through tenant 0's router — one designated planner keeps
+        // the one-swap-per-server contract single-owner.
         if residency_limited {
             let plan = {
                 let view = FleetView {
@@ -974,7 +1196,7 @@ impl<'a> Coordinator<'a> {
                     resident: &self.res_snap,
                     unavailable: &self.unavail,
                 };
-                router.plan_swap(&view)
+                routers[0].plan_swap(&view)
             };
             if let Some(plan) = plan {
                 let sv = plan.server;
@@ -1040,17 +1262,15 @@ impl<'a> Coordinator<'a> {
         // are bypassed from here on
         if sh.can_dispatch() {
             if let Some(next) = sh.batcher.oldest_allowed(&sh.resident) {
-                sh.try_dispatch(next, now, &self.fleet.servers[sv]);
+                sh.try_dispatch(next, now, &self.fleet.servers[sv], self.cfg);
             }
         }
         sh.sleep_if_drained(now);
         Ok(())
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn handle_control(
         &mut self,
-        router: &mut Router,
         scaler: Option<&mut Box<dyn AutoscalePolicy>>,
         tracker: &mut SignalTracker,
         now: f64,
@@ -1060,7 +1280,6 @@ impl<'a> Coordinator<'a> {
         let Some(ctrl) = scaler else {
             return Err(Error::hqp("serve: control tick without a scale policy"));
         };
-        let _ = router; // the controller sees the same view type the router does
         self.fill_snapshot(now);
         // whole-fleet signals: lifecycle census, queued work on active
         // servers, and the cumulative outcome counters (u64 sums over
@@ -1176,7 +1395,16 @@ impl<'a> Coordinator<'a> {
         transfer_ms: f64,
     ) -> Result<GlobalAcc> {
         let cfg = self.cfg;
-        let mut router = Router::new(self.fleet, cfg.delta_max, cfg.policy, cfg.swap_init_ms);
+        // one router per effective tenant class, each enforcing that
+        // tenant's Δ_max at admission; with no `--tenants` table this is
+        // exactly one router under the global Δ_max (the pre-tenant path,
+        // byte for byte)
+        let mut routers: Vec<Router> = self
+            .tenants
+            .iter()
+            .map(|t| Router::new(self.fleet, t.dmax, cfg.policy, cfg.swap_init_ms))
+            .collect();
+        let closed_loop = cfg.closed_loop();
         let mut scaler = cfg.autoscale.policy.build(&cfg.autoscale);
         let mut tracker = SignalTracker::new();
         // the control plane runs for the duration of the offered trace
@@ -1192,6 +1420,13 @@ impl<'a> Coordinator<'a> {
 
         loop {
             let ta = arrivals.peek()?.map(|origin| origin + transfer_ms);
+            // the earliest pending retry re-entry (same transfer delay as
+            // a fresh arrival); retries never extend the control-tick
+            // schedule, which stays anchored to the offered trace end
+            let tr = self
+                .retry_q
+                .peek()
+                .map(|Reverse(r)| r.origin_ms + transfer_ms);
             let tc = match (next_tick, ta) {
                 // a buffered arrival bounds the trace end from below, so
                 // the candidate is valid whenever it can fire first
@@ -1203,37 +1438,67 @@ impl<'a> Coordinator<'a> {
                 }
                 (None, _) => None,
             };
-            let t = match (ta, tc) {
-                (None, None) => break,
-                (Some(a), None) => a,
-                (None, Some(c)) => c,
-                (Some(a), Some(c)) => a.min(c),
-            };
+            let t = [ta, tr, tc]
+                .into_iter()
+                .flatten()
+                .fold(None::<f64>, |m, x| Some(m.map_or(x, |m| m.min(x))));
+            let Some(t) = t else { break };
             // 1. the inter-barrier window: everything strictly before t
             self.advance_window(t, false)?;
             // at least one global event processes at t
             self.gacc.max_time = self.gacc.max_time.max(t);
-            // 2. arrivals at t, in trace order
+            // 2. arrivals at t — fresh ones first, in trace order...
             if ta == Some(t) {
                 while let Some(origin) = arrivals.peek()? {
                     if origin + transfer_ms != t {
                         break;
                     }
                     let (id, origin) = arrivals.pop().expect("serve: peeked arrival vanished");
-                    self.handle_arrival(&mut router, id, origin, t, residency_limited)?;
+                    self.handle_arrival(&mut routers, id, origin, t, 0, residency_limited)?;
                 }
+            }
+            // ...then retry re-entries at t, in (time, id, attempt) order
+            // (a same-time re-retry scheduled inside this loop pops here
+            // too; attempts strictly increase, so it terminates)
+            loop {
+                let due = matches!(
+                    self.retry_q.peek(),
+                    Some(Reverse(r)) if r.origin_ms + transfer_ms == t
+                );
+                if !due {
+                    break;
+                }
+                let Reverse(r) = self.retry_q.pop().expect("serve: peeked retry vanished");
+                self.handle_arrival(
+                    &mut routers,
+                    r.id,
+                    r.origin_ms,
+                    t,
+                    r.attempt,
+                    residency_limited,
+                )?;
             }
             // 3. local events at exactly t, (shard, local seq) order
             self.drain_at(t)?;
             // 4. + 5. the control tick, then its same-time consequences
             if tc == Some(t) {
-                self.handle_control(&mut router, scaler.as_mut(), &mut tracker, t, max_active)?;
+                self.handle_control(scaler.as_mut(), &mut tracker, t, max_active)?;
                 next_tick = Some(t + cfg.autoscale.interval_ms);
                 self.drain_at(t)?;
+            }
+            // 6. harvest this barrier's expiry feedback into the retry
+            // heap (closed loop only — open loop never fills an outbox)
+            if closed_loop {
+                self.harvest_retries(t);
             }
         }
         // drain everything scheduled after the last global event
         self.advance_window(f64::INFINITY, true)?;
+        // expiries surfaced by the final drain are terminal: there is no
+        // barrier left for a re-entry to merge at
+        if closed_loop {
+            self.expire_leftover_retries();
+        }
         Ok(self.gacc)
     }
 }
@@ -1338,19 +1603,35 @@ pub(crate) fn run_stream<I: Iterator<Item = f64>>(
         reaction_sum_ms: gacc.reaction_sum_ms,
         makespan_ms: gacc.max_time,
         events: gacc.events,
+        retries: gacc.retries,
+        dropped_final: gacc.dropped_final,
+        expired_final: gacc.expired_final,
+        tenants: gacc.tenants,
         usage: Vec::with_capacity(shards.len()),
         ..Totals::default()
     };
     for sh in shards {
+        if !sh.retry_outbox.is_empty() {
+            return Err(Error::hqp(
+                "serve: unharvested retry feedback at end of run (barrier bug)",
+            ));
+        }
         totals.completed += sh.acc.completed;
         totals.expired += sh.acc.expired;
         totals.expired_during_swap += sh.acc.expired_during_swap;
+        totals.expired_final += sh.acc.expired_final;
         totals.swaps += sh.acc.swaps;
         totals.swap_ms += sh.acc.swap_ms;
         totals.swap_energy_mj += sh.acc.swap_energy_mj;
         totals.slo_attained += sh.acc.slo_attained;
         totals.latency_stats.merge(&sh.acc.latency_stats);
         totals.peak_queue_depth = totals.peak_queue_depth.max(sh.batcher.peak() as u64);
+        for (t, st) in totals.tenants.iter_mut().zip(&sh.acc.tenants) {
+            t.completed += st.completed;
+            t.slo_attained += st.slo_attained;
+            t.expired_final += st.expired_final;
+            t.latency.merge(&st.latency);
+        }
         totals.usage.push(sh.acc.usage);
         totals.events += sh.events;
         totals.makespan_ms = totals.makespan_ms.max(sh.max_time);

@@ -108,6 +108,7 @@ mod engine;
 pub mod fleet;
 pub mod router;
 pub mod stats;
+pub mod tenant;
 pub mod trace;
 
 pub use autoscale::{
@@ -116,6 +117,7 @@ pub use autoscale::{
 };
 pub use fleet::{fleet_for, reference_fleet, workspace_fleet, Fleet, Server, VariantProfile};
 pub use router::{Candidate, FleetView, Policy, RouteCtx, RoutePolicy, Router, SwapPlan};
+pub use tenant::{parse_tenants, AdmitPolicy, TenantClass, TENANT_SPEC_FORMAT};
 pub use trace::ArrivalProcess;
 
 use crate::error::{Error, Result};
@@ -148,6 +150,28 @@ pub struct ServeConfig {
     /// default — the fixed-fleet behavior, byte-identical to the
     /// pre-autoscaling simulator).
     pub autoscale: AutoscaleConfig,
+    /// Closed-loop clients: how many times a rejected or expired request
+    /// re-enters the arrival stream after seeded exponential backoff.
+    /// 0 (the default) is the open-loop behavior — no retry machinery
+    /// runs and summaries are byte-identical to the pre-closed-loop
+    /// simulator.
+    pub retries: usize,
+    /// Mean of the first backoff draw, ms; the mean doubles with every
+    /// further attempt (classic exponential backoff, with the draw
+    /// itself exponentially distributed so retries never synchronize).
+    pub retry_base_ms: f64,
+    /// Seed of the backoff draws. Each (request id, attempt) pair gets
+    /// its own derived stream, so the draw is a pure function of
+    /// (seed, id, attempt) — independent of `--jobs` and of the order
+    /// failures are discovered in.
+    pub retry_seed: u64,
+    /// Tenant classes sharing the fleet (empty — the default — means the
+    /// single implicit tenant carrying the global `delta_max`/`slo_ms`,
+    /// byte-identical to the pre-tenant simulator).
+    pub tenants: Vec<TenantClass>,
+    /// Batch admission order across tenants ([`AdmitPolicy::Fifo`] is
+    /// the pre-tenant behavior and the default).
+    pub admit: AdmitPolicy,
 }
 
 impl Default for ServeConfig {
@@ -162,6 +186,38 @@ impl Default for ServeConfig {
             swap_init_ms: 5.0,
             link_mbps: f64::INFINITY,
             autoscale: AutoscaleConfig::off(),
+            retries: 0,
+            retry_base_ms: 5.0,
+            retry_seed: 42,
+            tenants: Vec::new(),
+            admit: AdmitPolicy::Fifo,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Whether closed-loop clients (retry/backoff) are enabled.
+    pub fn closed_loop(&self) -> bool {
+        self.retries > 0
+    }
+
+    /// Whether an explicit tenant table is configured.
+    pub fn multi_tenant(&self) -> bool {
+        !self.tenants.is_empty()
+    }
+
+    /// The effective tenant table: the configured classes, or the single
+    /// implicit tenant carrying the global Δ_max / SLO at weight 1.
+    pub fn effective_tenants(&self) -> Vec<TenantClass> {
+        if self.tenants.is_empty() {
+            vec![TenantClass {
+                name: "default".into(),
+                dmax: self.delta_max,
+                slo_ms: self.slo_ms,
+                weight: 1.0,
+            }]
+        } else {
+            self.tenants.clone()
         }
     }
 }
@@ -189,6 +245,47 @@ pub struct VariantUsage {
     pub utilization: f64,
     /// Whole-batch energy it consumed, mJ.
     pub energy_mj: f64,
+}
+
+/// Per-tenant serving census (one row of the gated tenant table in
+/// [`Summary::render`]). Only populated when [`ServeConfig::tenants`] is
+/// non-empty.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSummary {
+    /// Tenant class name.
+    pub name: String,
+    /// The tenant's accuracy-drop budget.
+    pub dmax: f64,
+    /// The tenant's latency SLO, ms.
+    pub slo_ms: f64,
+    /// The tenant's weighted-fair admission share.
+    pub weight: f64,
+    /// Fresh requests this tenant offered (retries excluded).
+    pub generated: u64,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Admission rejections with no retry budget left.
+    pub dropped_final: u64,
+    /// Deadline expiries with no retry budget left.
+    pub expired_final: u64,
+    /// Retry re-entries this tenant's clients made.
+    pub retries: u64,
+    /// Completions within the tenant's own SLO deadline.
+    pub slo_attained: u64,
+    /// The tenant's streamed completion-latency histogram (exact
+    /// count/mean/max, percentile error as the global histogram).
+    pub latency: stats::LatencyStats,
+}
+
+impl TenantSummary {
+    /// Per-tenant SLO attainment over the tenant's offered load.
+    pub fn attainment(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.slo_attained as f64 / self.generated as f64
+        }
+    }
 }
 
 /// One simulation's results.
@@ -291,6 +388,26 @@ pub struct Summary {
     /// woken server coming online — detection hysteresis plus the wake
     /// itself. 0 when no scale-up happened.
     pub mean_reaction_ms: f64,
+    /// Whether closed-loop clients were enabled (gates the retry line in
+    /// [`Summary::render`], keeping open-loop output byte-identical to
+    /// the pre-closed-loop simulator).
+    pub closed_loop: bool,
+    /// Client retry re-entries into the arrival stream. Always 0
+    /// open-loop.
+    pub retries: u64,
+    /// Requests refused at admission with no retry budget left. Equals
+    /// [`Summary::rejected`] when retries are off, so conservation reads
+    /// `generated = completed + dropped_final + expired_final` in both
+    /// regimes.
+    pub dropped_final: u64,
+    /// Requests whose deadline lapsed with no retry budget left. Equals
+    /// [`Summary::expired`] when retries are off.
+    pub expired_final: u64,
+    /// The batch admission order the run used ([`AdmitPolicy::name`]).
+    pub admit: &'static str,
+    /// Per-tenant census — empty (and unrendered) unless
+    /// [`ServeConfig::tenants`] was set.
+    pub tenants: Vec<TenantSummary>,
     pub per_variant: Vec<VariantUsage>,
 }
 
@@ -315,10 +432,24 @@ impl Summary {
             self.slo_ms,
             self.delta_max * 100.0
         );
-        s.push_str(&format!(
-            "  requests : {} generated = {} completed + {} rejected + {} expired\n",
-            self.generated, self.completed, self.rejected, self.expired
-        ));
+        if self.closed_loop {
+            // closed loop: rejected/expired count *attempts* (retried
+            // ones included), so the conservation identity is stated
+            // over final outcomes, with the retry census on its own line
+            s.push_str(&format!(
+                "  requests : {} generated = {} completed + {} dropped + {} expired (final)\n",
+                self.generated, self.completed, self.dropped_final, self.expired_final
+            ));
+            s.push_str(&format!(
+                "  retries  : {} re-entries   ({} rejections, {} expiries before backoff)\n",
+                self.retries, self.rejected, self.expired
+            ));
+        } else {
+            s.push_str(&format!(
+                "  requests : {} generated = {} completed + {} rejected + {} expired\n",
+                self.generated, self.completed, self.rejected, self.expired
+            ));
+        }
         s.push_str(&format!(
             "  slo      : {:.2}% attainment   throughput {:.1} rps   mean batch {:.2}\n",
             self.slo_attainment() * 100.0,
@@ -359,6 +490,36 @@ impl Summary {
                 self.wake_energy_mj,
                 self.mean_reaction_ms
             ));
+        }
+        if !self.tenants.is_empty() {
+            s.push_str(&format!(
+                "  tenants  : {} classes (admission {})\n",
+                self.tenants.len(),
+                self.admit
+            ));
+            let mut tt = Table::new(vec![
+                "Tenant",
+                "Δmax",
+                "SLO (ms)",
+                "Weight",
+                "Generated",
+                "Completed",
+                "Attain",
+                "p99 (ms)",
+            ]);
+            for t in &self.tenants {
+                tt.row(vec![
+                    t.name.clone(),
+                    format!("{:.2}%", t.dmax * 100.0),
+                    format!("{:.1}", t.slo_ms),
+                    format!("{:.1}", t.weight),
+                    format!("{}", t.generated),
+                    format!("{}", t.completed),
+                    format!("{:.2}%", t.attainment() * 100.0),
+                    format!("{:.3}", t.latency.quantile(0.99)),
+                ]);
+            }
+            s.push_str(&tt.render());
         }
         let mut t = Table::new(vec![
             "Device",
@@ -462,6 +623,30 @@ fn validate(fleet: &Fleet, cfg: &ServeConfig) -> Result<bool> {
             cfg.max_batch
         )));
     }
+    // closed-loop knobs: validated only when retries are on (an
+    // open-loop config's backoff knobs are documented as inert)
+    if cfg.closed_loop() && (!(cfg.retry_base_ms > 0.0) || !cfg.retry_base_ms.is_finite()) {
+        return Err(Error::hqp("serve: retry_base_ms must be positive and finite"));
+    }
+    // tenant classes: parse_tenants enforces these for the CLI, but a
+    // programmatically built table goes through the same gate
+    for (i, t) in cfg.tenants.iter().enumerate() {
+        if t.name.is_empty() {
+            return Err(Error::hqp(format!("serve: tenant {i} has an empty name")));
+        }
+        if cfg.tenants[..i].iter().any(|o| o.name == t.name) {
+            return Err(Error::hqp(format!("serve: duplicate tenant name {}", t.name)));
+        }
+        if !(t.dmax >= 0.0) || !t.dmax.is_finite() {
+            return Err(Error::hqp(format!("serve: tenant {} needs dmax >= 0", t.name)));
+        }
+        if !(t.slo_ms > 0.0) || !t.slo_ms.is_finite() {
+            return Err(Error::hqp(format!("serve: tenant {} needs slo_ms > 0", t.name)));
+        }
+        if !(t.weight > 0.0) || !t.weight.is_finite() {
+            return Err(Error::hqp(format!("serve: tenant {} needs weight > 0", t.name)));
+        }
+    }
     // autoscaling bounds: validated only when the control plane is on
     // (an off config's knobs are documented as inert)
     let auto = cfg.autoscale.enabled();
@@ -541,7 +726,31 @@ fn build_summary(
     }
 
     let rejected = acc.rejected_full + acc.rejected_noncompliant + acc.rejected_unavailable;
-    let generated = acc.completed + rejected + acc.expired;
+    // open loop: every attempt is final, so the old identity
+    // `generated = completed + rejected + expired` still derives the
+    // census; closed loop counts attempts separately from fresh arrivals
+    let generated = acc.completed + acc.dropped_final + acc.expired_final;
+    let tenants: Vec<TenantSummary> = if cfg.multi_tenant() {
+        cfg.tenants
+            .iter()
+            .zip(&acc.tenants)
+            .map(|(t, a)| TenantSummary {
+                name: t.name.clone(),
+                dmax: t.dmax,
+                slo_ms: t.slo_ms,
+                weight: t.weight,
+                generated: a.generated,
+                completed: a.completed,
+                dropped_final: a.dropped_final,
+                expired_final: a.expired_final,
+                retries: a.retries,
+                slo_attained: a.slo_attained,
+                latency: a.latency.clone(),
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
     Summary {
         model: fleet.model.clone(),
         policy: cfg.policy.name(),
@@ -568,6 +777,12 @@ fn build_summary(
         } else {
             acc.reaction_sum_ms / acc.scale_ups as f64
         },
+        closed_loop: cfg.closed_loop(),
+        retries: acc.retries,
+        dropped_final: acc.dropped_final,
+        expired_final: acc.expired_final,
+        admit: cfg.admit.name(),
+        tenants,
         slo_attained: acc.slo_attained,
         mean_ms,
         p50_ms,
@@ -631,6 +846,7 @@ mod tests {
             swap_init_ms: 5.0,
             link_mbps: f64::INFINITY,
             autoscale: AutoscaleConfig::off(),
+            ..ServeConfig::default()
         }
     }
 
@@ -1116,6 +1332,161 @@ mod tests {
         })
         .is_err());
         assert!(bad(&|_| {}).is_ok(), "the base autoscale config is valid");
+    }
+
+    #[test]
+    fn retry_cap_exhaustion_is_a_final_drop() {
+        // a fleet with no Δ_max-compliant variant can never admit: every
+        // request burns its full retry budget at admission and is finally
+        // dropped. No backoff draw can change these counts, so they pin
+        // the cap semantics exactly: 3 attempts per request (1 fresh + 2
+        // retries), every one rejected, the last one final.
+        let fleet = one_server(vec![var("p50", 0.021, 1.0, 1.6)]);
+        let mut c = cfg();
+        c.retries = 2;
+        c.retry_base_ms = 1.0;
+        let s = simulate_fleet(&fleet, &[0.0, 1.0, 2.0], &c).unwrap();
+        assert!(s.closed_loop);
+        assert_eq!(s.generated, 3);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.rejected, 9, "3 requests x 3 attempts, all refused");
+        assert_eq!(s.rejected_noncompliant, 9);
+        assert_eq!(s.retries, 6, "every non-final refusal re-enters");
+        assert_eq!(s.dropped_final, 3, "out of budget => finally dropped");
+        assert_eq!(s.expired_final, 0);
+        let r = s.render();
+        assert!(r.contains("requests : 3 generated = 0 completed + 3 dropped + 0 expired"));
+        assert!(r.contains("retries  : 6 re-entries   (9 rejections, 0 expiries before backoff)"));
+    }
+
+    #[test]
+    fn rejected_request_reenters_after_backoff_and_completes() {
+        // queue_cap 1 + three simultaneous arrivals: the third is refused
+        // at t=0 while the queue is full, re-enters after backoff and
+        // completes once capacity frees up. The latency clock restarts at
+        // the re-entry (mean strictly below the measured-from-t0 value),
+        // and the whole retry timeline is byte-identical at any --jobs.
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        let mut c = cfg();
+        c.max_batch = 1;
+        c.queue_cap = 1;
+        c.slo_ms = 10_000.0;
+        c.retries = 6;
+        c.retry_base_ms = 30.0;
+        let arrivals = [0.0, 0.0, 0.0];
+        // open loop drops the third request outright
+        let mut open = c.clone();
+        open.retries = 0;
+        let o = simulate_fleet(&fleet, &arrivals, &open).unwrap();
+        assert_eq!((o.completed, o.rejected, o.dropped_final), (2, 1, 1));
+        // closed loop recovers it
+        let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(s.closed_loop);
+        assert_eq!(s.completed, 3, "the refused request must eventually serve");
+        assert_eq!(s.dropped_final, 0);
+        assert_eq!(s.expired, 0);
+        assert_eq!(
+            s.retries, s.rejected,
+            "every refusal schedules exactly one re-entry here"
+        );
+        // latencies: 10 (head), 20 (queued) and <20 for the retried one —
+        // measured from its *re-entry*. Measured from the original t=0 it
+        // would be >= 30 and the mean >= 20, so this bound is the proof
+        // the attempt's clock starts after the backoff expires.
+        assert!(
+            s.mean_ms < 20.0,
+            "mean {} implies the retry latency clock did not restart",
+            s.mean_ms
+        );
+        // backoff draws are a pure function of (seed, id, attempt): the
+        // rerun and every worker count reproduce the same bytes
+        let again = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert_eq!(s, again);
+        for jobs in [2usize, 4] {
+            let par =
+                simulate_fleet_jobs(&fleet, &arrivals, &c, Jobs::new(jobs).unwrap()).unwrap();
+            assert_eq!(s, par, "jobs={jobs} diverged on the closed-loop path");
+            assert_eq!(s.render(), par.render());
+        }
+    }
+
+    #[test]
+    fn final_drain_expiries_are_terminal() {
+        // the last barrier is the last chance to re-enter: an expiry
+        // surfaced by the end-of-trace drain has no barrier left, so it
+        // is final even with retry budget remaining
+        let fleet = one_server(vec![var("hqp", 0.012, 15.0, 24.0)]);
+        let mut c = cfg();
+        c.max_batch = 1;
+        c.slo_ms = 12.0;
+        c.retries = 3;
+        let s = simulate_fleet(&fleet, &[0.0, 1.0], &c).unwrap();
+        // req0 serves 0..15 (SLO missed); req1's deadline 13 lapses while
+        // queued and is only discovered at the t=15 dispatch — after the
+        // final barrier
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.expired_final, 1, "no barrier left => terminal");
+        assert_eq!(s.retries, 0, "a terminal expiry must not census a retry");
+        assert_eq!(s.slo_attained, 0);
+        assert_eq!(s.makespan_ms, 15.0);
+        assert!(s.render().contains("retries  : 0 re-entries"));
+    }
+
+    #[test]
+    fn expiry_feedback_reenters_at_a_later_barrier() {
+        // same expiry shape, but a later arrival provides a barrier to
+        // harvest the feedback at: the expired request re-enters exactly
+        // once (whatever the backoff draw, the counters below hold on
+        // both the served-late and expired-again branches)
+        let fleet = one_server(vec![var("hqp", 0.012, 15.0, 24.0)]);
+        let mut c = cfg();
+        c.max_batch = 1;
+        c.slo_ms = 12.0;
+        c.retries = 3;
+        let s = simulate_fleet(&fleet, &[0.0, 1.0, 30.0], &c).unwrap();
+        assert!(s.closed_loop);
+        assert_eq!(s.generated, 3);
+        assert_eq!(s.retries, 1, "the queued expiry must re-enter via its barrier");
+        assert!(s.expired >= 1);
+        assert_eq!(s.dropped_final, 0);
+        assert_eq!(
+            s.completed + s.expired_final,
+            3,
+            "every request ends exactly once ({} completed, {} expired final)",
+            s.completed,
+            s.expired_final
+        );
+    }
+
+    #[test]
+    fn tenant_budgets_gate_admission_per_class() {
+        // one variant at 1.2% drop; the strict tenant's Δ_max of 0 makes
+        // it inadmissible for that class only — the lax class is served in
+        // full. Per-tenant routing, per-tenant census, gated render.
+        let fleet = one_server(vec![var("hqp", 0.012, 1.0, 1.6)]);
+        let mut c = cfg();
+        c.tenants = parse_tenants("strict:0.0:100:1,lax:0.015:100:1").unwrap();
+        let arrivals: Vec<f64> = (0..40).map(|i| i as f64 * 5.0).collect();
+        let s = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(!s.closed_loop, "tenants do not imply retries");
+        assert_eq!(s.tenants.len(), 2);
+        let strict = &s.tenants[0];
+        let lax = &s.tenants[1];
+        assert_eq!(strict.name, "strict");
+        assert!(strict.generated > 0 && lax.generated > 0);
+        assert_eq!(strict.generated + lax.generated, 40);
+        assert_eq!(strict.completed, 0, "no variant fits a 0% budget");
+        assert_eq!(strict.dropped_final, strict.generated);
+        assert_eq!(lax.completed, lax.generated, "the lax class must be unaffected");
+        assert_eq!(lax.slo_attained, lax.completed);
+        assert!((lax.attainment() - 1.0).abs() < 1e-12);
+        assert_eq!(s.rejected_noncompliant, strict.generated);
+        assert_eq!(s.slo_attained, lax.slo_attained);
+        let r = s.render();
+        assert!(r.contains("tenants  : 2 classes (admission fifo)"));
+        assert!(r.contains("strict") && r.contains("lax"));
+        assert!(!r.contains("retries  :"), "open loop must not grow a retry line");
     }
 
     #[test]

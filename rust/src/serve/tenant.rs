@@ -1,0 +1,218 @@
+//! Multi-tenant workload classes: per-tenant Δ_max / SLO budgets and
+//! admission weights.
+//!
+//! The paper frames HQP as a serving-level guarantee — Δ_max-compliant
+//! variants under strict latency budgets — but a shared edge fleet rarely
+//! serves one accuracy/latency contract. A [`TenantClass`] gives each
+//! workload class its own accuracy-drop budget (`dmax`), latency SLO
+//! (`slo_ms`) and weighted-fair admission share (`weight`); HALP's
+//! latency-budget framing motivates the per-tenant budget rather than one
+//! global SLO.
+//!
+//! Determinism contract: tenant assignment is a pure function of the
+//! request id (a low-discrepancy golden-ratio sequence cut against the
+//! cumulative weights), so the same trace maps to the same tenant
+//! sequence at any `--jobs`, on the eager and the streamed path alike,
+//! with no extra PRNG stream to keep in sync.
+
+use crate::error::{Error, Result};
+
+/// One workload class sharing the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantClass {
+    /// Display name (unique within a table).
+    pub name: String,
+    /// Per-tenant accuracy-drop budget: this tenant's requests may only
+    /// be served by variants with `acc_drop <= dmax`.
+    pub dmax: f64,
+    /// Per-tenant latency SLO, ms: each attempt's deadline is its
+    /// arrival (or retry re-entry) time plus this budget.
+    pub slo_ms: f64,
+    /// Weighted-fair admission share (relative; any positive scale).
+    pub weight: f64,
+}
+
+/// The `--tenants` grammar, quoted by every parse error (and grepped for
+/// by the CI negative step).
+pub const TENANT_SPEC_FORMAT: &str = "\"name:dmax:slo_ms:weight,...\"";
+
+/// Parse a `--tenants` spec: comma-separated `name:dmax:slo_ms:weight`
+/// entries, e.g. `"gold:0.01:30:8,free:0.03:100:1"`. Errors name the
+/// offending entry and quote the expected format.
+pub fn parse_tenants(spec: &str) -> Result<Vec<TenantClass>> {
+    let bad = |entry: &str, why: &str| {
+        Error::Cli(format!(
+            "--tenants wants {TENANT_SPEC_FORMAT}: entry \"{entry}\" {why}"
+        ))
+    };
+    let mut out: Vec<TenantClass> = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            return Err(bad(entry, "is empty"));
+        }
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() != 4 {
+            return Err(bad(entry, "does not have 4 `:`-separated fields"));
+        }
+        let name = parts[0].trim();
+        if name.is_empty() {
+            return Err(bad(entry, "has an empty name"));
+        }
+        if out.iter().any(|t| t.name == name) {
+            return Err(bad(entry, "repeats a tenant name"));
+        }
+        let num = |field: &str, label: &str| -> Result<f64> {
+            field
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| bad(entry, &format!("has a non-numeric {label}")))
+        };
+        let dmax = num(parts[1], "dmax")?;
+        let slo_ms = num(parts[2], "slo_ms")?;
+        let weight = num(parts[3], "weight")?;
+        if !(dmax >= 0.0) || !dmax.is_finite() {
+            return Err(bad(entry, "needs dmax >= 0"));
+        }
+        if !(slo_ms > 0.0) || !slo_ms.is_finite() {
+            return Err(bad(entry, "needs slo_ms > 0"));
+        }
+        if !(weight > 0.0) || !weight.is_finite() {
+            return Err(bad(entry, "needs weight > 0"));
+        }
+        out.push(TenantClass { name: name.to_string(), dmax, slo_ms, weight });
+    }
+    Ok(out)
+}
+
+/// Deterministic request → tenant assignment: the golden-ratio
+/// low-discrepancy sequence `frac((id+1)·φ⁻¹)` cut against the
+/// cumulative normalized weights. Seed-free and jobs-free by
+/// construction; over any long id range each tenant receives its weight
+/// share of requests (±1/n discrepancy, far tighter than i.i.d. draws).
+pub fn tenant_of(id: usize, tenants: &[TenantClass]) -> usize {
+    if tenants.len() <= 1 {
+        return 0;
+    }
+    const INV_PHI: f64 = 0.618_033_988_749_894_9;
+    let u = ((id as f64 + 1.0) * INV_PHI).fract();
+    let total: f64 = tenants.iter().map(|t| t.weight).sum();
+    let mut acc = 0.0;
+    for (i, t) in tenants.iter().enumerate() {
+        acc += t.weight / total;
+        if u < acc {
+            return i;
+        }
+    }
+    tenants.len() - 1
+}
+
+/// How the batcher orders queued requests into batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// Strict arrival order across tenants (the pre-tenant behavior).
+    Fifo,
+    /// Weighted-fair queueing over tenant classes: each dequeue picks the
+    /// queued request whose tenant has the smallest virtual finish time
+    /// (advanced by 1/weight per admitted request), so a high-weight
+    /// tenant keeps its admission share through an overload instead of
+    /// being crowded out by whoever arrived first.
+    WeightedFair,
+}
+
+impl AdmitPolicy {
+    /// Canonical CLI names (shared by parse/name and the `main.rs`
+    /// "valid: …" error string).
+    pub const NAMES: [&'static str; 2] = ["fifo", "weighted-fair"];
+
+    pub fn parse(name: &str) -> Option<AdmitPolicy> {
+        match name {
+            "fifo" => Some(AdmitPolicy::Fifo),
+            "weighted-fair" | "wfq" => Some(AdmitPolicy::WeightedFair),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmitPolicy::Fifo => AdmitPolicy::NAMES[0],
+            AdmitPolicy::WeightedFair => AdmitPolicy::NAMES[1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two() -> Vec<TenantClass> {
+        parse_tenants("gold:0.01:30:8,free:0.03:100:1").unwrap()
+    }
+
+    #[test]
+    fn parse_round_trips_fields() {
+        let t = two();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].name, "gold");
+        assert_eq!(t[0].dmax, 0.01);
+        assert_eq!(t[0].slo_ms, 30.0);
+        assert_eq!(t[0].weight, 8.0);
+        assert_eq!(t[1].name, "free");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_naming_the_format() {
+        for bad in [
+            "",
+            "gold",
+            "gold:0.01:30",
+            "gold:0.01:30:8:extra",
+            ":0.01:30:8",
+            "gold:x:30:8",
+            "gold:0.01:0:8",
+            "gold:0.01:30:0",
+            "gold:0.01:30:-1",
+            "gold:0.01:30:8,gold:0.02:40:1",
+            "gold:0.01:30:8,,free:0.03:100:1",
+        ] {
+            let err = parse_tenants(bad).unwrap_err().to_string();
+            assert!(
+                err.contains(TENANT_SPEC_FORMAT),
+                "error for {bad:?} must quote the format, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_weight_proportional() {
+        let t = two();
+        let n = 100_000;
+        let gold = (0..n).filter(|&id| tenant_of(id, &t) == 0).count() as f64;
+        // deterministic: same id, same tenant
+        for id in [0usize, 1, 17, 99_999] {
+            assert_eq!(tenant_of(id, &t), tenant_of(id, &t));
+        }
+        let share = gold / n as f64;
+        assert!(
+            (share - 8.0 / 9.0).abs() < 0.01,
+            "gold share {share:.4} should be ~8/9"
+        );
+    }
+
+    #[test]
+    fn single_tenant_always_zero() {
+        let t = parse_tenants("only:0.015:50:1").unwrap();
+        for id in 0..100 {
+            assert_eq!(tenant_of(id, &t), 0);
+        }
+    }
+
+    #[test]
+    fn admit_policy_names_round_trip() {
+        for name in AdmitPolicy::NAMES {
+            assert_eq!(AdmitPolicy::parse(name).unwrap().name(), name);
+        }
+        assert_eq!(AdmitPolicy::parse("wfq"), Some(AdmitPolicy::WeightedFair));
+        assert!(AdmitPolicy::parse("priority").is_none());
+    }
+}

@@ -1,6 +1,6 @@
 //! Synthetic request traces: open-loop arrival-time generators.
 //!
-//! Two processes, both seeded through [`crate::testkit::prng::Prng`] so a
+//! Four processes, all seeded through [`crate::testkit::prng::Prng`] so a
 //! `(process, duration, seed)` triple always reproduces the identical
 //! trace (the serving simulator's determinism contract hangs off this):
 //!
@@ -12,6 +12,15 @@
 //!   Environment-Aware Dynamic Pruning (O'Quinn et al., 2025) argues edge
 //!   pipelines must survive: the mean offered load can be modest while
 //!   bursts transiently exceed a variant's capacity.
+//! * **Diurnal** — an inhomogeneous Poisson process whose rate follows a
+//!   sinusoid around the mean (Lewis–Shedler thinning against the peak
+//!   rate): the day/night load curve compressed onto the simulator's
+//!   millisecond clock.
+//! * **Flash crowd** — baseline Poisson arrivals punctuated by seeded
+//!   spike episodes: exponentially distributed gaps between spikes, each
+//!   spike a fixed-length window at a much higher rate. Unlike MMPP the
+//!   episode length is deterministic, so a spike always overruns a
+//!   batcher timeout rather than sometimes ending inside one.
 
 use crate::testkit::prng::Prng;
 
@@ -33,13 +42,38 @@ pub enum ArrivalProcess {
         /// Mean exponential dwell time in each state, ms.
         mean_dwell_ms: f64,
     },
+    /// Sinusoid-modulated Poisson process:
+    /// `rate(t) = rps_mean · (1 + depth · sin(2π·t/period_ms))`,
+    /// realized by Lewis–Shedler thinning against the peak rate.
+    Diurnal {
+        /// Long-run mean arrival rate, requests per second.
+        rps_mean: f64,
+        /// Modulation depth in `[0, 1]`: peak = mean·(1+depth), trough =
+        /// mean·(1−depth).
+        depth: f64,
+        /// Period of one full day/night cycle, ms (virtual time).
+        period_ms: f64,
+    },
+    /// Baseline Poisson arrivals plus seeded spike episodes: the gap
+    /// between spikes is exponential with mean `mean_gap_ms`; each spike
+    /// lasts exactly `spike_ms` at `rps_peak`.
+    FlashCrowd {
+        /// Baseline arrival rate between spikes, requests per second.
+        rps_base: f64,
+        /// Arrival rate inside a spike episode, requests per second.
+        rps_peak: f64,
+        /// Mean exponential gap between spike episodes, ms.
+        mean_gap_ms: f64,
+        /// Fixed spike episode length, ms.
+        spike_ms: f64,
+    },
 }
 
 impl ArrivalProcess {
     /// Canonical CLI names, the single source of truth shared by
     /// [`ArrivalProcess::parse`], [`ArrivalProcess::name`] and the
     /// `main.rs` "valid: …" error strings.
-    pub const NAMES: [&'static str; 2] = ["poisson", "mmpp"];
+    pub const NAMES: [&'static str; 4] = ["poisson", "mmpp", "diurnal", "flash-crowd"];
 
     /// Parse a CLI name into a process around a base rate.
     pub fn parse(name: &str, rps: f64) -> Option<ArrivalProcess> {
@@ -53,6 +87,23 @@ impl ArrivalProcess {
                 rps_high: rps * 1.6,
                 mean_dwell_ms: 250.0,
             }),
+            // one day/night cycle every 2 virtual seconds: a --smoke
+            // trace (1 s) sees half a cycle, the default 10 s trace five
+            // full cycles, and the long-run mean is exactly rps
+            "diurnal" => Some(ArrivalProcess::Diurnal {
+                rps_mean: rps,
+                depth: 0.5,
+                period_ms: 2_000.0,
+            }),
+            // quiet baseline at 0.8·rps, ~1.4 spikes per virtual second,
+            // each a 120 ms episode at 5·rps — load the autoscaler's
+            // control interval can barely react inside
+            "flash-crowd" => Some(ArrivalProcess::FlashCrowd {
+                rps_base: rps * 0.8,
+                rps_peak: rps * 5.0,
+                mean_gap_ms: 700.0,
+                spike_ms: 120.0,
+            }),
             _ => None,
         }
     }
@@ -61,6 +112,8 @@ impl ArrivalProcess {
         match self {
             ArrivalProcess::Poisson { .. } => ArrivalProcess::NAMES[0],
             ArrivalProcess::Mmpp { .. } => ArrivalProcess::NAMES[1],
+            ArrivalProcess::Diurnal { .. } => ArrivalProcess::NAMES[2],
+            ArrivalProcess::FlashCrowd { .. } => ArrivalProcess::NAMES[3],
         }
     }
 }
@@ -118,6 +171,51 @@ pub fn generate(process: &ArrivalProcess, duration_ms: f64, seed: u64) -> Vec<f6
                 }
             }
         }
+        ArrivalProcess::Diurnal { rps_mean, depth, period_ms } => {
+            if rps_mean <= 0.0 || period_ms <= 0.0 || !(0.0..=1.0).contains(&depth) {
+                return out;
+            }
+            // Lewis–Shedler thinning: draw candidates at the constant
+            // peak rate, accept each with probability rate(t)/peak
+            let peak = rps_mean * (1.0 + depth) / 1e3;
+            let base = rps_mean / 1e3;
+            let mut t = 0.0f64;
+            loop {
+                t += exp_ms(&mut rng, peak);
+                if !(t < duration_ms) {
+                    break;
+                }
+                let rate = base * (1.0 + depth * (std::f64::consts::TAU * t / period_ms).sin());
+                if rng.next_f64() * peak < rate {
+                    out.push(t);
+                }
+            }
+        }
+        ArrivalProcess::FlashCrowd { rps_base, rps_peak, mean_gap_ms, spike_ms } => {
+            if rps_base <= 0.0 || rps_peak <= 0.0 || mean_gap_ms <= 0.0 || spike_ms <= 0.0 {
+                return out;
+            }
+            // the MMPP loop shape, except entering a spike costs no draw:
+            // the episode ends at exactly t + spike_ms
+            let mut spiking = false;
+            let mut t = 0.0f64;
+            let mut switch_at = exp_ms(&mut rng, 1.0 / mean_gap_ms);
+            while t < duration_ms {
+                let rate = if spiking { rps_peak } else { rps_base } / 1e3;
+                let next = t + exp_ms(&mut rng, rate);
+                if next < switch_at {
+                    t = next;
+                    if t < duration_ms {
+                        out.push(t);
+                    }
+                } else {
+                    t = switch_at;
+                    spiking = !spiking;
+                    switch_at =
+                        t + if spiking { spike_ms } else { exp_ms(&mut rng, 1.0 / mean_gap_ms) };
+                }
+            }
+        }
     }
     out
 }
@@ -145,6 +243,10 @@ enum GenState {
     Poisson { rate: f64, next_t: f64 },
     /// MMPP(2): clock `t`, current state, and the pending switch time.
     Mmpp { rate_low: f64, rate_high: f64, dwell_rate: f64, high: bool, t: f64, switch_at: f64 },
+    /// Diurnal thinning: candidate clock `t` against the peak rate.
+    Diurnal { peak: f64, base: f64, depth: f64, period_ms: f64, t: f64 },
+    /// Flash crowd: clock `t`, in-spike flag, and the pending switch time.
+    FlashCrowd { rate_base: f64, rate_peak: f64, gap_rate: f64, spike_ms: f64, spiking: bool, t: f64, switch_at: f64 },
 }
 
 impl ArrivalGen {
@@ -171,6 +273,36 @@ impl ArrivalGen {
                         rate_high: rps_high / 1e3,
                         dwell_rate,
                         high: false,
+                        t: 0.0,
+                        switch_at,
+                    }
+                }
+            }
+            ArrivalProcess::Diurnal { rps_mean, depth, period_ms } => {
+                if rps_mean <= 0.0 || period_ms <= 0.0 || !(0.0..=1.0).contains(&depth) {
+                    GenState::Done
+                } else {
+                    GenState::Diurnal {
+                        peak: rps_mean * (1.0 + depth) / 1e3,
+                        base: rps_mean / 1e3,
+                        depth,
+                        period_ms,
+                        t: 0.0,
+                    }
+                }
+            }
+            ArrivalProcess::FlashCrowd { rps_base, rps_peak, mean_gap_ms, spike_ms } => {
+                if rps_base <= 0.0 || rps_peak <= 0.0 || mean_gap_ms <= 0.0 || spike_ms <= 0.0 {
+                    GenState::Done
+                } else {
+                    let gap_rate = 1.0 / mean_gap_ms;
+                    let switch_at = exp_ms(&mut rng, gap_rate);
+                    GenState::FlashCrowd {
+                        rate_base: rps_base / 1e3,
+                        rate_peak: rps_peak / 1e3,
+                        gap_rate,
+                        spike_ms,
+                        spiking: false,
                         t: 0.0,
                         switch_at,
                     }
@@ -223,6 +355,50 @@ impl Iterator for ArrivalGen {
                     }
                 }
             }
+            GenState::Diurnal { peak, base, depth, period_ms, t } => {
+                // mirror of the eager thinning loop: candidates that the
+                // sinusoid rejects emit nothing, drawing the PRNG in the
+                // exact same order as `generate`
+                loop {
+                    *t += exp_ms(&mut self.rng, *peak);
+                    if !(*t < self.duration_ms) {
+                        self.state = GenState::Done;
+                        return None;
+                    }
+                    let rate = *base
+                        * (1.0 + *depth * (std::f64::consts::TAU * *t / *period_ms).sin());
+                    if self.rng.next_f64() * *peak < rate {
+                        return Some(*t);
+                    }
+                }
+            }
+            GenState::FlashCrowd { rate_base, rate_peak, gap_rate, spike_ms, spiking, t, switch_at } => {
+                // mirror of the eager loop body, like Mmpp above —
+                // entering a spike costs no draw (fixed episode length)
+                loop {
+                    if !(*t < self.duration_ms) {
+                        self.state = GenState::Done;
+                        return None;
+                    }
+                    let rate = if *spiking { *rate_peak } else { *rate_base };
+                    let next = *t + exp_ms(&mut self.rng, rate);
+                    if next < *switch_at {
+                        *t = next;
+                        if *t < self.duration_ms {
+                            return Some(*t);
+                        }
+                    } else {
+                        *t = *switch_at;
+                        *spiking = !*spiking;
+                        *switch_at = *t
+                            + if *spiking {
+                                *spike_ms
+                            } else {
+                                exp_ms(&mut self.rng, *gap_rate)
+                            };
+                    }
+                }
+            }
         }
     }
 }
@@ -236,6 +412,8 @@ mod tests {
         for p in [
             ArrivalProcess::Poisson { rps: 120.0 },
             ArrivalProcess::parse("mmpp", 120.0).unwrap(),
+            ArrivalProcess::parse("diurnal", 120.0).unwrap(),
+            ArrivalProcess::parse("flash-crowd", 120.0).unwrap(),
         ] {
             for seed in [1u64, 42, 0xDEAD] {
                 let eager = generate(&p, 4_000.0, seed);
@@ -257,6 +435,8 @@ mod tests {
         for p in [
             ArrivalProcess::Poisson { rps: 80.0 },
             ArrivalProcess::parse("mmpp", 80.0).unwrap(),
+            ArrivalProcess::parse("diurnal", 80.0).unwrap(),
+            ArrivalProcess::parse("flash-crowd", 80.0).unwrap(),
         ] {
             let eager = generate(&p, 10_000.0, 9);
             let n = eager.len() / 2;
@@ -292,6 +472,8 @@ mod tests {
         for p in [
             ArrivalProcess::Poisson { rps: 50.0 },
             ArrivalProcess::parse("mmpp", 50.0).unwrap(),
+            ArrivalProcess::parse("diurnal", 50.0).unwrap(),
+            ArrivalProcess::parse("flash-crowd", 50.0).unwrap(),
         ] {
             let a = generate(&p, 5_000.0, 42);
             let b = generate(&p, 5_000.0, 42);
@@ -334,13 +516,71 @@ mod tests {
 
     #[test]
     fn zero_rate_yields_empty_trace() {
-        assert!(generate(&ArrivalProcess::Poisson { rps: 0.0 }, 1000.0, 1).is_empty());
+        for name in ArrivalProcess::NAMES {
+            let p = ArrivalProcess::parse(name, 0.0).unwrap();
+            assert!(generate(&p, 1000.0, 1).is_empty(), "{name} at 0 rps");
+        }
+    }
+
+    #[test]
+    fn diurnal_mean_rate_matches_over_full_cycles() {
+        // 30 full 2 s cycles: the sinusoid integrates out, leaving rps
+        let p = ArrivalProcess::parse("diurnal", 200.0).unwrap();
+        let t = generate(&p, 60_000.0, 7);
+        let got = t.len() as f64 / 60.0;
+        assert!(
+            (got - 200.0).abs() < 12.0,
+            "diurnal@200rps over 60s gave {got:.1} rps"
+        );
+    }
+
+    #[test]
+    fn diurnal_peak_half_cycle_is_denser_than_trough_half_cycle() {
+        // rate(t) = mean·(1 + 0.5·sin(2πt/2000)): the first half-cycle
+        // (0..1000 ms of each period) carries more arrivals than the
+        // second — the day/night asymmetry the process exists to model
+        let p = ArrivalProcess::parse("diurnal", 300.0).unwrap();
+        let t = generate(&p, 60_000.0, 3);
+        let day = t.iter().filter(|&&x| (x % 2_000.0) < 1_000.0).count() as f64;
+        let night = t.len() as f64 - day;
+        assert!(
+            day > night * 1.4,
+            "day half-cycles ({day}) must out-draw night ({night})"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_is_burstier_than_poisson() {
+        let dur = 60_000.0;
+        let po = generate(&ArrivalProcess::Poisson { rps: 100.0 }, dur, 11);
+        let fc = generate(&ArrivalProcess::parse("flash-crowd", 100.0).unwrap(), dur, 11);
+        let var = |ts: &[f64]| {
+            let bins = (dur / 100.0) as usize;
+            let mut counts = vec![0f64; bins];
+            for &t in ts {
+                counts[((t / 100.0) as usize).min(bins - 1)] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / bins as f64;
+            let v = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / bins as f64;
+            v / mean.max(1e-9)
+        };
+        assert!(
+            var(&fc) > var(&po) * 2.0,
+            "flash-crowd dispersion {} must exceed poisson {}",
+            var(&fc),
+            var(&po)
+        );
     }
 
     #[test]
     fn parse_names() {
         assert_eq!(ArrivalProcess::parse("poisson", 10.0).unwrap().name(), "poisson");
         assert_eq!(ArrivalProcess::parse("mmpp", 10.0).unwrap().name(), "mmpp");
+        assert_eq!(ArrivalProcess::parse("diurnal", 10.0).unwrap().name(), "diurnal");
+        assert_eq!(
+            ArrivalProcess::parse("flash-crowd", 10.0).unwrap().name(),
+            "flash-crowd"
+        );
         assert!(ArrivalProcess::parse("uniform", 10.0).is_none());
         // NAMES is the single source of truth: every listed name parses
         // and round-trips through name()

@@ -36,8 +36,8 @@ use hqp::exec::Jobs;
 use hqp::gopt::{FusedKind, FusedOp, OptimizedGraph};
 use hqp::hwsim::{simulate, simulate_batch, Device, Precision};
 use hqp::serve::{
-    reference_fleet, simulate_fleet, simulate_fleet_jobs, simulate_fleet_stream, trace,
-    ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy, ServeConfig,
+    parse_tenants, reference_fleet, simulate_fleet, simulate_fleet_jobs, simulate_fleet_stream,
+    trace, AdmitPolicy, ArrivalProcess, AutoscaleConfig, Policy, ScalePolicy, ServeConfig,
 };
 use hqp::testkit::prng::Prng;
 
@@ -67,10 +67,11 @@ fn gen_case(rng: &mut Prng) -> Case {
         methods.push(if rng.next_f64() < 0.5 { "baseline" } else { "p50" });
     }
     let rps = 20.0 + rng.next_f64() * 1200.0;
-    let process = if rng.next_f64() < 0.5 {
-        ArrivalProcess::Poisson { rps }
-    } else {
-        ArrivalProcess::parse("mmpp", rps).unwrap()
+    let process = match rng.below(4) {
+        0 => ArrivalProcess::Poisson { rps },
+        1 => ArrivalProcess::parse("mmpp", rps).unwrap(),
+        2 => ArrivalProcess::parse("diurnal", rps).unwrap(),
+        _ => ArrivalProcess::parse("flash-crowd", rps).unwrap(),
     };
     let two_servers = rng.next_f64() < 0.4;
     let base_servers = if two_servers { 2 } else { 1 };
@@ -113,6 +114,7 @@ fn gen_case(rng: &mut Prng) -> Case {
                 f64::INFINITY
             },
             autoscale,
+            ..Default::default()
         },
         process,
         duration_ms: 300.0 + rng.next_f64() * 1200.0,
@@ -169,6 +171,14 @@ fn prop_conservation_every_request_accounted_once() {
         );
         let per_variant_completed: u64 = s.per_variant.iter().map(|u| u.completed).sum();
         assert_eq!(per_variant_completed, s.completed, "case {case_no}: usage split");
+        // open loop: every attempt is final, so the closed-loop counters
+        // collapse onto the attempt census and the retry machinery is
+        // provably idle
+        assert!(!s.closed_loop, "case {case_no}: gen_case is open-loop");
+        assert_eq!(s.retries, 0, "case {case_no}: open loop never retries");
+        assert_eq!(s.dropped_final, s.rejected, "case {case_no}");
+        assert_eq!(s.expired_final, s.expired, "case {case_no}");
+        assert!(s.tenants.is_empty(), "case {case_no}: no tenant table, no tenant rows");
         // swap counters are internally consistent
         assert!(s.expired_during_swap <= s.expired, "case {case_no}");
         assert!(
@@ -718,4 +728,169 @@ fn autoscaled_fleet_beats_fixed_fleet_of_equal_mean_capacity() {
         .map(|u| u.completed)
         .sum();
     assert!(woken > 0, "scale-ups must translate into served traffic");
+}
+
+/// Randomize the closed-loop / multi-tenant knobs onto a generated case.
+fn enable_closed_loop(case: &mut Case, rng: &mut Prng) {
+    case.cfg.retries = rng.below(3) + 1;
+    case.cfg.retry_base_ms = 1.0 + rng.next_f64() * 20.0;
+    case.cfg.retry_seed = rng.next_u64();
+    if rng.next_f64() < 0.7 {
+        case.cfg.tenants = parse_tenants("gold:0.015:40:8,free:0.03:120:1").unwrap();
+        case.cfg.admit = if rng.next_f64() < 0.5 {
+            AdmitPolicy::WeightedFair
+        } else {
+            AdmitPolicy::Fifo
+        };
+    }
+}
+
+#[test]
+fn prop_closed_loop_off_knobs_are_inert() {
+    // off-knobs-inert: with retries off and no tenant table, the backoff
+    // knobs must not perturb the simulation in any way — the Summary and
+    // its rendered bytes are identical to the default-knob run at every
+    // worker count (the PR 8 behavior, byte for byte)
+    let mut rng = Prng::new(0x1E27);
+    for case_no in 0..CASES / 2 {
+        let case = gen_case(&mut rng);
+        assert_eq!(case.cfg.retries, 0, "gen_case must stay open-loop");
+        let fleet = build_fleet(&case);
+        let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
+        let base = simulate_fleet(&fleet, &arrivals, &case.cfg).unwrap();
+        let mut weird = case.cfg.clone();
+        weird.retry_base_ms = rng.next_f64() * 500.0;
+        weird.retry_seed = rng.next_u64();
+        for jobs in [1usize, 4] {
+            let knobs =
+                simulate_fleet_jobs(&fleet, &arrivals, &weird, Jobs::new(jobs).unwrap()).unwrap();
+            assert_eq!(base, knobs, "case {case_no}: open-loop backoff knobs must be inert");
+            assert_eq!(base.render(), knobs.render(), "case {case_no}: jobs={jobs}");
+        }
+        assert!(
+            !base.render().contains("retries  :") && !base.render().contains("tenants  :"),
+            "case {case_no}: open-loop render must not grow new lines"
+        );
+    }
+}
+
+#[test]
+fn prop_closed_loop_conservation_and_determinism() {
+    // with retries, tenants and the new arrival processes enabled:
+    // conservation holds over *final* outcomes (attempt censuses float
+    // above it), and the jobs/streaming byte-identity contract carries
+    // over unchanged
+    let mut rng = Prng::new(0xC105ED);
+    for case_no in 0..CASES / 2 {
+        let mut case = gen_case(&mut rng);
+        enable_closed_loop(&mut case, &mut rng);
+        let fleet = build_fleet(&case);
+        let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
+        let s = simulate_fleet(&fleet, &arrivals, &case.cfg).unwrap();
+        assert!(s.closed_loop, "case {case_no}");
+        assert_eq!(s.generated, arrivals.len() as u64, "case {case_no}: fresh census");
+        assert_eq!(
+            s.completed + s.dropped_final + s.expired_final,
+            s.generated,
+            "case {case_no}: {} completed + {} dropped + {} expired != {} generated",
+            s.completed,
+            s.dropped_final,
+            s.expired_final,
+            s.generated
+        );
+        // finals never exceed the attempt census, and every retry
+        // re-entry stems from exactly one failed attempt
+        assert!(s.dropped_final <= s.rejected, "case {case_no}");
+        assert!(s.expired_final <= s.expired, "case {case_no}");
+        assert!(s.retries <= s.rejected + s.expired, "case {case_no}");
+        // byte-identity: jobs and the streamed path are invisible
+        for jobs in [1usize, 4] {
+            let par =
+                simulate_fleet_jobs(&fleet, &arrivals, &case.cfg, Jobs::new(jobs).unwrap())
+                    .unwrap();
+            assert_eq!(s, par, "case {case_no}: jobs={jobs} diverged closed-loop");
+            assert_eq!(s.render(), par.render(), "case {case_no}: jobs={jobs} render");
+            let streamed = simulate_fleet_stream(
+                &fleet,
+                trace::ArrivalGen::new(&case.process, case.duration_ms, case.trace_seed),
+                &case.cfg,
+                Jobs::new(jobs).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(s, streamed, "case {case_no}: streamed diverged at jobs={jobs}");
+        }
+    }
+}
+
+#[test]
+fn prop_tenant_census_sums_to_the_global_census() {
+    // the per-tenant table is a partition of the global counters: every
+    // census column sums back exactly, including the latency histograms
+    let mut rng = Prng::new(0x7E7A27);
+    for case_no in 0..CASES / 2 {
+        let mut case = gen_case(&mut rng);
+        enable_closed_loop(&mut case, &mut rng);
+        case.cfg.tenants = parse_tenants("gold:0.015:40:8,free:0.03:120:1").unwrap();
+        let (s, _) = run_case(&case);
+        assert_eq!(s.tenants.len(), 2, "case {case_no}");
+        let sum = |f: fn(&hqp::serve::TenantSummary) -> u64| -> u64 {
+            s.tenants.iter().map(f).sum()
+        };
+        assert_eq!(sum(|t| t.generated), s.generated, "case {case_no}: generated");
+        assert_eq!(sum(|t| t.completed), s.completed, "case {case_no}: completed");
+        assert_eq!(sum(|t| t.dropped_final), s.dropped_final, "case {case_no}: dropped");
+        assert_eq!(sum(|t| t.expired_final), s.expired_final, "case {case_no}: expired");
+        assert_eq!(sum(|t| t.retries), s.retries, "case {case_no}: retries");
+        assert_eq!(sum(|t| t.slo_attained), s.slo_attained, "case {case_no}: attained");
+        assert_eq!(
+            sum(|t| t.latency.count()),
+            s.completed,
+            "case {case_no}: tenant histograms partition the completions"
+        );
+        for t in &s.tenants {
+            assert!(
+                t.completed + t.dropped_final + t.expired_final == t.generated,
+                "case {case_no}: per-tenant conservation for {}",
+                t.name
+            );
+            assert!(t.slo_attained <= t.completed, "case {case_no}: {}", t.name);
+        }
+        // the tenant table is rendered (gated on the table being set)
+        assert!(s.render().contains("tenants  : 2 classes"), "case {case_no}");
+    }
+}
+
+#[test]
+fn prop_new_generators_stream_bit_identically() {
+    // PR 8's streaming property, extended to the diurnal and flash-crowd
+    // generators: the lazy ArrivalGen is the eager trace bit-for-bit,
+    // bounded horizon and unbounded .take(n) prefix alike
+    let mut rng = Prng::new(0xD1A2A1);
+    for case_no in 0..CASES {
+        let rps = 20.0 + rng.next_f64() * 1500.0;
+        let name = ["diurnal", "flash-crowd"][rng.below(2)];
+        let process = ArrivalProcess::parse(name, rps).unwrap();
+        let duration = 200.0 + rng.next_f64() * 2000.0;
+        let seed = rng.next_u64();
+        let eager = trace::generate(&process, duration, seed);
+        let lazy: Vec<f64> = trace::ArrivalGen::new(&process, duration, seed).collect();
+        assert_eq!(eager.len(), lazy.len(), "case {case_no} ({name}): length");
+        for (i, (l, e)) in lazy.iter().zip(eager.iter()).enumerate() {
+            assert_eq!(
+                l.to_bits(),
+                e.to_bits(),
+                "case {case_no} ({name}): arrival {i} diverged ({l} vs {e})"
+            );
+        }
+        let prefix: Vec<f64> = trace::ArrivalGen::new(&process, f64::INFINITY, seed)
+            .take(eager.len())
+            .collect();
+        for (i, (l, e)) in prefix.iter().zip(eager.iter()).enumerate() {
+            assert_eq!(
+                l.to_bits(),
+                e.to_bits(),
+                "case {case_no} ({name}): unbounded take(n) arrival {i} diverged"
+            );
+        }
+    }
 }
