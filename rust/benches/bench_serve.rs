@@ -362,6 +362,143 @@ fn main() {
          least fifo's {gold_fifo:.3} under the flash crowd"
     );
 
+    // ---- predictive control plane: prewake vs reactive detection ----------
+    section("serve — predictive prewake vs queue-depth reaction (hqp on nx+nano)");
+    // heterogeneous 3-server fleet (NX, Nano, NX), one awake; the
+    // forecaster watches the arrival stream and starts wakes when the
+    // look-ahead rate crosses committed capacity, so its reaction time is
+    // the wake latency alone — queue-depth pays two consecutive high
+    // ticks of detection hysteresis on top of the same wake. Idle power
+    // is priced (1 W) and control ticks run through the drain on both
+    // sides, so the energy books are comparable end to end.
+    let het = reference_fleet(
+        "resnet18",
+        &[Device::xavier_nx(), Device::jetson_nano()],
+        &["hqp"],
+        8,
+    )
+    .expect("fleet")
+    .replicate_to(3)
+    .expect("het fleet");
+    let pred_cfg = |p: ScalePolicy| ServeConfig {
+        slo_ms: slo_auto,
+        idle_watts: 1.0,
+        scale_to_drain: true,
+        autoscale: AutoscaleConfig {
+            policy: p,
+            interval_ms: 25.0,
+            min_active: 1,
+            max_active: 3,
+            ..AutoscaleConfig::off()
+        },
+        ..Default::default()
+    };
+    // fixed 8 s window even under --smoke: the forecaster needs gaps to
+    // earn confidence and the MMPP bursts must actually arrive
+    let pburst =
+        trace::generate(&ArrivalProcess::parse("mmpp", cap_hqp * 1.2).unwrap(), 8_000.0, 31);
+    let (s_react, ms_react) =
+        time_once(|| simulate_fleet(&het, &pburst, &pred_cfg(ScalePolicy::QueueDepth)));
+    let s_react = s_react.expect("reactive sim");
+    let (s_pred, ms_pred) =
+        time_once(|| simulate_fleet(&het, &pburst, &pred_cfg(ScalePolicy::Predictive)));
+    let s_pred = s_pred.expect("predictive sim");
+    scenario_cost(
+        &mut report,
+        "predictive",
+        s_react.events + s_pred.events,
+        ms_react + ms_pred,
+    );
+    report.metric("predictive_offered_rps", cap_hqp * 1.2);
+    report.metric("scale_reaction_ms_queue_depth", s_react.mean_reaction_ms);
+    report.metric("scale_reaction_ms_predictive", s_pred.mean_reaction_ms);
+    report.metric("prewakes", s_pred.prewakes as f64);
+    report.metric("forecast_abs_err_pct", s_pred.forecast_abs_err_pct);
+    assert!(
+        s_react.scale_ups >= 1 && s_pred.scale_ups >= 1,
+        "both controllers must wake capacity into the bursts"
+    );
+    assert!(s_pred.prewakes >= 1, "the forecaster must drive at least one prewake");
+    assert!(
+        s_pred.mean_reaction_ms < s_react.mean_reaction_ms,
+        "acceptance: predictive reaction {:.1} ms must be strictly below \
+         queue-depth's {:.1} ms",
+        s_pred.mean_reaction_ms,
+        s_react.mean_reaction_ms
+    );
+
+    // ---- predictive energy: diurnal tide, idle power priced ---------------
+    section("serve — predictive vs reactive energy under a diurnal tide");
+    // the diurnal period locks the forecaster's seasonal blend: prewakes
+    // land before each crest and the early-sleep rule drains into each
+    // trough, so the fleet meets at least the reactive attainment while
+    // spending no more energy per SLO-met request
+    let tide =
+        trace::generate(&ArrivalProcess::parse("diurnal", cap_hqp * 1.1).unwrap(), 8_000.0, 37);
+    let (s_rt, ms_rt) =
+        time_once(|| simulate_fleet(&het, &tide, &pred_cfg(ScalePolicy::QueueDepth)));
+    let s_rt = s_rt.expect("reactive tide sim");
+    let (s_pt, ms_pt) =
+        time_once(|| simulate_fleet(&het, &tide, &pred_cfg(ScalePolicy::Predictive)));
+    let s_pt = s_pt.expect("predictive tide sim");
+    scenario_cost(&mut report, "diurnal_tide", s_rt.events + s_pt.events, ms_rt + ms_pt);
+    assert!(
+        s_rt.slo_attained > 0 && s_pt.slo_attained > 0,
+        "both runs must meet SLOs to compare energy per SLO-met request"
+    );
+    assert!(
+        s_rt.idle_energy_mj > 0.0 && s_pt.idle_energy_mj > 0.0,
+        "1 W of idle power over an 8 s tide must charge something"
+    );
+    let e_per_slo_react = s_rt.energy_mj / s_rt.slo_attained as f64;
+    let e_per_slo_pred = s_pt.energy_mj / s_pt.slo_attained as f64;
+    report.metric("slo_attain_tide_queue_depth", s_rt.slo_attainment());
+    report.metric("slo_attain_tide_predictive", s_pt.slo_attainment());
+    report.metric("idle_energy_mj_queue_depth", s_rt.idle_energy_mj);
+    report.metric("idle_energy_mj_predictive", s_pt.idle_energy_mj);
+    report.metric("energy_per_slo_met_queue_depth", e_per_slo_react);
+    report.metric("energy_per_slo_met_predictive", e_per_slo_pred);
+    assert!(
+        s_pt.slo_attainment() >= s_rt.slo_attainment(),
+        "acceptance: predictive attainment {:.3} must reach at least \
+         reactive's {:.3} on the tide",
+        s_pt.slo_attainment(),
+        s_rt.slo_attainment()
+    );
+    assert!(
+        e_per_slo_pred <= e_per_slo_react,
+        "acceptance: predictive {:.2} mJ per SLO-met request must not exceed \
+         reactive's {:.2} (wake + idle + swap included)",
+        e_per_slo_pred,
+        e_per_slo_react
+    );
+
+    // ---- joules-per-slo routing vs acc-fastest ----------------------------
+    section("serve — joules-per-slo router vs acc-fastest (full fleet, matched load)");
+    // same 5-variant fleet and saturating trace as the acc-fastest
+    // scenario above: the energy-aware router spends its Δ_max budget on
+    // the cheapest compliant engine instead of the most accurate one
+    let jps_cfg = ServeConfig { slo_ms, policy: Policy::JoulesPerSlo, ..Default::default() };
+    let (s_jps, ms_jps) = time_once(|| simulate_fleet(&fleet, &arrivals, &jps_cfg));
+    let s_jps = s_jps.expect("joules-per-slo sim");
+    scenario_cost(&mut report, "joules_per_slo", s_jps.events, ms_jps);
+    assert!(
+        s_fleet.slo_attained > 0 && s_jps.slo_attained > 0,
+        "both routers must meet SLOs to compare energy per SLO-met request"
+    );
+    let e_per_slo_af = s_fleet.energy_mj / s_fleet.slo_attained as f64;
+    let e_per_slo_jps = s_jps.energy_mj / s_jps.slo_attained as f64;
+    report.metric("slo_attain_jps", s_jps.slo_attainment());
+    report.metric("energy_per_slo_met_acc_fastest", e_per_slo_af);
+    report.metric("energy_per_slo_met_jps", e_per_slo_jps);
+    assert!(
+        e_per_slo_jps <= e_per_slo_af,
+        "acceptance: joules-per-slo {:.2} mJ per SLO-met request must not \
+         exceed acc-fastest's {:.2}",
+        e_per_slo_jps,
+        e_per_slo_af
+    );
+
     report.write_json("BENCH_serve.json").expect("write BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");
 }

@@ -54,6 +54,7 @@ const SERVE_FLAGS: &[&str] = &[
     "swap-init-ms", "link-mbps", "autoscale", "scale-interval-ms",
     "min-servers", "max-servers", "scale-high-water", "scale-low-water",
     "retries", "retry-base-ms", "tenants", "admit", "jobs",
+    "forecast-horizon-ms", "idle-watts", "scale-to-drain",
 ];
 
 /// Valid `--device` names (aliases included), shown when the flag is bad.
@@ -130,7 +131,11 @@ search options:
 serve options:
   --rps X               offered load, requests/s (default 100; 50 w/ --smoke)
   --slo-ms X            per-request latency SLO (default 50)
-  --policy P            round-robin | least-loaded | acc-fastest (default) | swap-aware
+  --policy P            round-robin | least-loaded | acc-fastest (default) |
+                        swap-aware | joules-per-slo (routes each request to
+                        the variant minimizing expected energy per SLO-met
+                        request: batch-1 mJ over the SLO headroom left at
+                        its predicted finish)
   --duration-s X        trace length (default 10; 1 w/ --smoke)
   --requests N          stream exactly N requests instead of a timed trace
                         (lazy arrival generation + constant-memory telemetry:
@@ -146,11 +151,15 @@ serve options:
                         dropped + expired *final*, with retries censused apart)
   --retry-base-ms X     mean backoff before the first re-entry, ms; doubles per
                         attempt (default 5; requires --retries)
-  --tenants SPEC        multi-tenant classes \"name:dmax:slo_ms:weight,...\" —
-                        each request is assigned a class (weight-proportional,
+  --tenants SPEC        multi-tenant classes \"name:dmax:slo_ms:weight[:rate_share],...\"
+                        — each request is assigned a class (weight-proportional,
                         deterministic in the request id) and admitted against
                         that class's \u{394}_max budget and SLO deadline; the
-                        summary gains a per-tenant census + attainment table
+                        summary gains a per-tenant census + attainment table.
+                        The optional 5th field pins each class's share of the
+                        *offered* trace instead of the admission weight
+                        (all-or-none across the table; the arrival timeline
+                        itself is untouched)
   --admit P             fifo (default) | weighted-fair — batch admission order
                         across tenant classes (requires --tenants)
   --max-batch N         dynamic batcher max batch size (default 8)
@@ -162,9 +171,22 @@ serve options:
   --swap-init-ms X      fixed engine-init overhead charged per hot-swap (default 5)
   --link-mbps X         uplink bandwidth for request payloads, Mbit/s
                         (default: unlimited = no network cost)
-  --autoscale P         off (default) | queue-depth | attainment — elastic fleet
-                        controller (wake cost = initial-residency weights over
-                        DRAM bandwidth + init; wake energy E = P·L is charged)
+  --autoscale P         off (default) | queue-depth | attainment | predictive —
+                        elastic fleet controller (wake cost = initial-residency
+                        weights over DRAM bandwidth + init; wake energy E = P·L
+                        is charged). predictive filters the arrival stream
+                        online (MMPP(2) + trace periodicity) and pre-wakes
+                        before forecast load crosses committed capacity,
+                        falling back to queue-depth below confidence
+  --forecast-horizon-ms X  predictive look-ahead, ms (default: the next wake
+                        latency + one control interval; requires --autoscale
+                        predictive)
+  --scale-to-drain      keep control ticks running through the post-trace
+                        drain so the fleet can scale down after the last
+                        arrival (requires --autoscale; predictive implies it)
+  --idle-watts X        idle power drawn by powered-but-idle servers, W;
+                        charged as idle energy into the summary total
+                        (default 0 = the pre-idle-accounting model)
   --scale-interval-ms X control interval for autoscale decisions (default 100)
   --min-servers N       lower bound on active servers; also how many start
                         awake (default 1; requires --autoscale)
@@ -793,19 +815,41 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         for f in ["scale-interval-ms", "min-servers", "scale-high-water", "scale-low-water"] {
             if args.flag(f).is_some() {
                 return Err(hqp::Error::Cli(format!(
-                    "--{f} requires --autoscale queue-depth|attainment"
+                    "--{f} requires --autoscale queue-depth|attainment|predictive"
                 )));
             }
         }
-    } else if scale_policy != ScalePolicy::QueueDepth {
+    } else if scale_policy != ScalePolicy::QueueDepth && scale_policy != ScalePolicy::Predictive {
+        // the predictive controller keeps queue-depth as its low-confidence
+        // fallback, so the watermarks stay meaningful there too
         for f in ["scale-high-water", "scale-low-water"] {
             if args.flag(f).is_some() {
                 return Err(hqp::Error::Cli(format!(
-                    "--{f} only applies to --autoscale queue-depth"
+                    "--{f} only applies to --autoscale queue-depth|predictive"
                 )));
             }
         }
     }
+    // predictive/energy knobs: bare switches where a value is required are
+    // rejected loudly; the policy gating itself (a horizon without
+    // --autoscale predictive, --scale-to-drain without a controller) is
+    // enforced by ServeConfig::validate so the library path errors too
+    if args.switch("forecast-horizon-ms") {
+        return Err(hqp::Error::Cli(
+            "--forecast-horizon-ms needs a value (look-ahead in ms)".into(),
+        ));
+    }
+    let forecast_horizon_ms = match args.flag("forecast-horizon-ms") {
+        Some(_) => Some(args.flag_f64("forecast-horizon-ms", 0.0)?),
+        None => None,
+    };
+    if args.switch("idle-watts") {
+        return Err(hqp::Error::Cli(
+            "--idle-watts needs a value (idle power in W; 0 disables)".into(),
+        ));
+    }
+    let idle_watts = args.flag_f64("idle-watts", 0.0)?;
+    let scale_to_drain = args.switch("scale-to-drain");
     let mut autoscale = AutoscaleConfig::off();
     autoscale.policy = scale_policy;
     autoscale.interval_ms = args.flag_f64("scale-interval-ms", autoscale.interval_ms)?;
@@ -835,6 +879,9 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         retry_seed: seed,
         tenants,
         admit,
+        forecast_horizon_ms,
+        idle_watts,
+        scale_to_drain,
     };
 
     let methods = ["baseline", "q8", "p50", "hqp", "mixed"];

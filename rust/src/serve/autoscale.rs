@@ -52,6 +52,7 @@
 //! stream (and therefore the summary) bit-exact with the fixed-fleet
 //! simulator.
 
+use super::predict::{ForecastObs, PredictivePolicy};
 use super::router::FleetView;
 
 /// Where a server is in its serving lifecycle. With autoscaling off every
@@ -164,17 +165,26 @@ pub enum ScalePolicy {
     /// Scale to hold EWMA SLO attainment inside a target band
     /// ([`AttainmentPolicy`]).
     Attainment,
+    /// Forecast-driven pre-wake/early-sleep controller
+    /// ([`PredictivePolicy`]): compares the forecast arrival rate at the
+    /// wake-latency horizon against active capacity, degrading to the
+    /// reactive queue-depth controller when forecast confidence is low.
+    Predictive,
 }
 
 impl ScalePolicy {
     /// Canonical CLI names, in enum order — the single source of truth
     /// shared by [`ScalePolicy::parse`], [`ScalePolicy::name`] and the
     /// `main.rs` "valid: …" error strings.
-    pub const NAMES: [&'static str; 3] = ["off", "queue-depth", "attainment"];
+    pub const NAMES: [&'static str; 4] = ["off", "queue-depth", "attainment", "predictive"];
 
     /// Every policy (sweeps and property tests).
-    pub const ALL: [ScalePolicy; 3] =
-        [ScalePolicy::Off, ScalePolicy::QueueDepth, ScalePolicy::Attainment];
+    pub const ALL: [ScalePolicy; 4] = [
+        ScalePolicy::Off,
+        ScalePolicy::QueueDepth,
+        ScalePolicy::Attainment,
+        ScalePolicy::Predictive,
+    ];
 
     /// Parse a CLI name.
     pub fn parse(name: &str) -> Option<ScalePolicy> {
@@ -182,6 +192,7 @@ impl ScalePolicy {
             "off" => Some(ScalePolicy::Off),
             "queue-depth" | "qd" => Some(ScalePolicy::QueueDepth),
             "attainment" | "at" => Some(ScalePolicy::Attainment),
+            "predictive" | "pred" => Some(ScalePolicy::Predictive),
             _ => None,
         }
     }
@@ -192,6 +203,7 @@ impl ScalePolicy {
             ScalePolicy::Off => ScalePolicy::NAMES[0],
             ScalePolicy::QueueDepth => ScalePolicy::NAMES[1],
             ScalePolicy::Attainment => ScalePolicy::NAMES[2],
+            ScalePolicy::Predictive => ScalePolicy::NAMES[3],
         }
     }
 
@@ -209,6 +221,9 @@ impl ScalePolicy {
                 ATTAIN_HIGH,
                 ATTAIN_UP_TICKS,
                 ATTAIN_DOWN_TICKS,
+            ))),
+            ScalePolicy::Predictive => Some(Box::new(PredictivePolicy::new(
+                QueueDepthPolicy::new(cfg.queue_high, cfg.queue_low, SCALE_CONSECUTIVE),
             ))),
         }
     }
@@ -270,6 +285,20 @@ pub trait AutoscalePolicy {
     /// selection; returning `Up`/`Down` when no capacity change is
     /// possible is allowed (the decision is dropped).
     fn decide(&mut self, view: &FleetView, sig: &ScaleSignals) -> ScaleDecision;
+
+    /// Forecast delivery, called by the event loop immediately before
+    /// [`AutoscalePolicy::decide`] on ticks where a forecaster is active
+    /// (`--autoscale predictive`). Reactive policies ignore it — the
+    /// default is a no-op — which is also how [`PredictivePolicy`]
+    /// degrades when no forecast arrives at all.
+    fn observe_forecast(&mut self, _obs: &ForecastObs) {}
+
+    /// Cumulative forecast-initiated wake decisions (pre-wakes) this
+    /// policy has issued — the summary's `prewakes` counter. The event
+    /// loop may still drop an issued decision at the `max_active` bound.
+    fn prewakes(&self) -> u64 {
+        0
+    }
 }
 
 /// Folds per-window outcome counts into the EWMA control signals. Owned
@@ -641,6 +670,8 @@ mod tests {
         assert_eq!(ScalePolicy::parse("qd"), Some(ScalePolicy::QueueDepth));
         assert_eq!(ScalePolicy::parse("attainment"), Some(ScalePolicy::Attainment));
         assert_eq!(ScalePolicy::parse("at"), Some(ScalePolicy::Attainment));
+        assert_eq!(ScalePolicy::parse("predictive"), Some(ScalePolicy::Predictive));
+        assert_eq!(ScalePolicy::parse("pred"), Some(ScalePolicy::Predictive));
         assert!(ScalePolicy::parse("elastic").is_none());
         // NAMES is the single source of truth: round-trips, and build()
         // yields a controller for everything but Off

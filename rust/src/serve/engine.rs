@@ -77,10 +77,11 @@ use std::sync::{Condvar, Mutex, MutexGuard};
 use crate::error::{Error, Result};
 use crate::testkit::prng::Prng;
 
-use super::autoscale::{AutoscalePolicy, Lifecycle, ScaleDecision, SignalTracker};
+use super::autoscale::{AutoscalePolicy, Lifecycle, ScaleDecision, ScalePolicy, SignalTracker};
 use super::batcher::{Batcher, EnqueueAction, QueuedReq};
 use super::fleet::{Fleet, Server};
-use super::router::{FleetView, Router, SwapPlan};
+use super::predict::{ForecastObs, Forecaster, PREDICT_CONFIDENCE_GATE, PREDICT_DOWN_FACTOR};
+use super::router::{FleetView, Policy, Router, SwapPlan};
 use super::stats::LatencyStats;
 use super::tenant::{tenant_of, AdmitPolicy, TenantClass};
 use super::ServeConfig;
@@ -148,6 +149,20 @@ pub(crate) struct Totals {
     pub(crate) expired_final: u64,
     /// Per-tenant census, indexed like `ServeConfig::effective_tenants`.
     pub(crate) tenants: Vec<TenantTotals>,
+    /// Forecast-driven pre-wakes (a subset of `scale_ups`; 0 unless the
+    /// `predictive` autoscale policy ran).
+    pub(crate) prewakes: u64,
+    /// Forecast-driven prefetch hot-swaps (a subset of `swaps`).
+    pub(crate) prefetch_swaps: u64,
+    /// Forecast-driven downshift re-selections (a subset of `swaps`).
+    pub(crate) reselect_swaps: u64,
+    /// Sum of matured |forecast − realized| rate errors, percent, and the
+    /// sample count (`build_summary` takes the mean).
+    pub(crate) forecast_err_sum_pct: f64,
+    pub(crate) forecast_err_samples: u64,
+    /// Idle-power energy: `ServeConfig::idle_watts` × powered-but-idle
+    /// virtual ms, mJ. Exactly 0 at the knob's 0 default.
+    pub(crate) idle_energy_mj: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -255,6 +270,14 @@ struct Shard {
     /// shard-index order, so the retry schedule is independent of how
     /// many worker threads advanced the window. Always empty open-loop.
     retry_outbox: Vec<(f64, QueuedReq)>,
+    /// When the current powered (non-asleep) window opened, virtual ms —
+    /// `None` while asleep. Idle-power accounting reads `powered_ms`
+    /// minus busy/swap time; with `--idle-watts` at its 0 default the
+    /// bookkeeping is inert.
+    powered_since: Option<f64>,
+    /// Closed powered windows, ms (the still-open one is closed at the
+    /// global makespan by `run_stream`).
+    powered_ms: f64,
 }
 
 impl Shard {
@@ -285,6 +308,8 @@ impl Shard {
                 ..ShardAcc::default()
             },
             retry_outbox: Vec::new(),
+            powered_since: if asleep { None } else { Some(0.0) },
+            powered_ms: 0.0,
         }
     }
 
@@ -562,6 +587,9 @@ impl Shard {
                 }
                 self.waking = false;
                 self.lifecycle = Lifecycle::Active;
+                // powered from here on (the wake window itself is already
+                // charged at full power as wake energy, never as idle)
+                self.powered_since = Some(now);
                 // the wake streamed exactly the initial resident set — any
                 // residency the server had accumulated before sleeping is
                 // gone (its queue was empty, so nothing can strand)
@@ -577,6 +605,9 @@ impl Shard {
                     return Err(Error::hqp("serve: scale-down on a non-quiescent server"));
                 }
                 self.lifecycle = Lifecycle::Asleep;
+                if let Some(t0) = self.powered_since.take() {
+                    self.powered_ms += now - t0;
+                }
             }
         }
         Ok(())
@@ -912,6 +943,15 @@ struct GlobalAcc {
     expired_final: u64,
     /// Coordinator-side per-tenant census (generated, retries, finals).
     tenants: Vec<TenantTotals>,
+    /// Forecast-driven pre-wakes (read back from the policy at the end).
+    prewakes: u64,
+    /// Forecast-driven prefetch hot-swaps queued at control ticks.
+    prefetch_swaps: u64,
+    /// Forecast-driven downshift re-selections queued at control ticks.
+    reselect_swaps: u64,
+    /// Forecast-error accumulators (read back from the forecaster).
+    forecast_err_sum_pct: f64,
+    forecast_err_samples: u64,
 }
 
 struct Coordinator<'a> {
@@ -1269,12 +1309,110 @@ impl<'a> Coordinator<'a> {
         Ok(())
     }
 
+    /// Best Δ_max-compliant serving capacity a server offers over a
+    /// residency mask, requests/s (0 when nothing compliant is resident).
+    fn server_capacity_rps(&self, s: usize, resident: &[bool]) -> f64 {
+        self.fleet.servers[s]
+            .variants
+            .iter()
+            .enumerate()
+            .filter(|(v, p)| resident[*v] && p.compliant(self.cfg.delta_max))
+            .map(|(_, p)| p.capacity_rps())
+            .fold(0.0, f64::max)
+    }
+
+    /// Capacity already committed: active servers (current residency)
+    /// plus wakes in flight (their initial residency) — so a ramp of
+    /// pre-wakes converges instead of overshooting.
+    fn committed_capacity_rps(&self, lifecycles: &[Lifecycle], wakings: &[bool]) -> f64 {
+        let mut cap = 0.0;
+        for s in 0..self.fleet.servers.len() {
+            if lifecycles[s] == Lifecycle::Active {
+                cap += self.server_capacity_rps(s, &self.res_snap[s]);
+            } else if wakings[s] {
+                cap += self.server_capacity_rps(s, &self.fleet.servers[s].initial_residency());
+            }
+        }
+        cap
+    }
+
+    /// The next concrete wake a scale-up would execute (lowest-index
+    /// sleeping server, mirroring the `Up` executor): its wake latency
+    /// and the capacity it would add. `(0, 0)` when nothing can wake.
+    fn next_wake(&self, lifecycles: &[Lifecycle], wakings: &[bool]) -> (f64, f64) {
+        for s in 0..self.fleet.servers.len() {
+            if lifecycles[s] == Lifecycle::Asleep && !wakings[s] {
+                let srv = &self.fleet.servers[s];
+                let bytes: u64 = srv
+                    .variants
+                    .iter()
+                    .zip(srv.initial_residency())
+                    .filter(|(_, r)| *r)
+                    .map(|(v, _)| v.weight_bytes)
+                    .sum();
+                let wake_ms = srv.device.swap_in_ms(bytes, self.cfg.swap_init_ms);
+                return (wake_ms, self.server_capacity_rps(s, &srv.initial_residency()));
+            }
+        }
+        (0.0, 0.0)
+    }
+
+    /// Capacity a `Down` decision would drain right now: the idlest
+    /// active server's (same pick as the `Down` executor).
+    fn drain_candidate_capacity_rps(&self, lifecycles: &[Lifecycle]) -> f64 {
+        let mut pick = None::<(f64, usize)>;
+        for s in 0..self.fleet.servers.len() {
+            if lifecycles[s] != Lifecycle::Active {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some((b, ps)) => self.backlog[s] < b || (self.backlog[s] == b && s > ps),
+            };
+            if better {
+                pick = Some((self.backlog[s], s));
+            }
+        }
+        pick.map_or(0.0, |(_, s)| self.server_capacity_rps(s, &self.res_snap[s]))
+    }
+
+    /// Queue a forecast-planned swap on its server, under the same
+    /// one-swap-per-server discipline as the reactive plan path. The plan
+    /// was made on this tick's snapshot, which predates any scale
+    /// decision executed this tick — a target that has since left
+    /// `Active` (or picked up a swap) is skipped, not an error.
+    fn queue_forecast_plan(&mut self, plan: SwapPlan, now: f64, prefetch: bool) {
+        let shards = self.shards;
+        let mut sh = lock_shard(&shards[plan.server]);
+        if sh.lifecycle != Lifecycle::Active || sh.swapping || sh.pending_swap.is_some() {
+            return;
+        }
+        if prefetch {
+            self.gacc.prefetch_swaps += 1;
+        } else {
+            self.gacc.reselect_swaps += 1;
+        }
+        let at = if sh.busy { sh.busy_until } else { now };
+        sh.pending_swap = Some(plan);
+        sh.push(at, LocalKind::SwapStart);
+    }
+
+    /// Any shard-local event still queued — the drain-phase control-tick
+    /// gate: ticks stay live while the tail is still playing out.
+    fn pending_local_events(&self) -> bool {
+        self.shards.iter().any(|m| !lock_shard(m).heap.is_empty())
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn handle_control(
         &mut self,
         scaler: Option<&mut Box<dyn AutoscalePolicy>>,
         tracker: &mut SignalTracker,
+        forecaster: Option<&mut Forecaster>,
+        planner: &Router,
         now: f64,
         max_active: usize,
+        residency_limited: bool,
     ) -> Result<()> {
         self.gacc.events += 1;
         let Some(ctrl) = scaler else {
@@ -1328,6 +1466,45 @@ impl<'a> Coordinator<'a> {
             n_draining,
             n_asleep,
         );
+        // predictive only: hand the controller a rate outlook before it
+        // decides. The horizon is the lead time a prewake taken *now* can
+        // buy — the next wake's latency plus one control interval (or the
+        // explicit `--forecast-horizon-ms` override).
+        let fobs: Option<ForecastObs> = match forecaster {
+            None => None,
+            Some(fc) => {
+                let committed = self.committed_capacity_rps(&lifecycles, &wakings);
+                let (next_wake_ms, next_wake_cap) =
+                    if n_active + n_waking + n_draining < max_active {
+                        self.next_wake(&lifecycles, &wakings)
+                    } else {
+                        (0.0, 0.0)
+                    };
+                let drain_cap = if n_active > self.cfg.autoscale.min_active {
+                    self.drain_candidate_capacity_rps(&lifecycles)
+                } else {
+                    0.0
+                };
+                let horizon = self
+                    .cfg
+                    .forecast_horizon_ms
+                    .unwrap_or(next_wake_ms + self.cfg.autoscale.interval_ms);
+                fc.on_tick(now, horizon);
+                let f = fc.forecast(now);
+                Some(ForecastObs {
+                    rate_now_rps: f.rate_now_rps,
+                    rate_ahead_rps: f.rate_ahead(horizon),
+                    horizon_ms: horizon,
+                    confidence: f.confidence,
+                    committed_capacity_rps: committed,
+                    next_wake_capacity_rps: next_wake_cap,
+                    drain_capacity_rps: drain_cap,
+                })
+            }
+        };
+        if let Some(obs) = &fobs {
+            ctrl.observe_forecast(obs);
+        }
         let decision = {
             let view = FleetView {
                 now_ms: now,
@@ -1378,6 +1555,50 @@ impl<'a> Coordinator<'a> {
                 }
             }
         }
+        // forecast-driven swap planning, same snapshot, same designated
+        // planner router as the reactive path. Gated on a confident
+        // forecast; each plan goes through the normal SwapStart/SwapDone
+        // machinery and is priced by the existing swap cost model.
+        if let Some(obs) = fobs {
+            if obs.confidence >= PREDICT_CONFIDENCE_GATE && residency_limited {
+                // prefetch: start upgrade swaps before forecast pressure
+                // lands — the expected work over the horizon prices the
+                // benefit side of the plan
+                let expected = obs.rate_ahead_rps * obs.horizon_ms / 1e3;
+                let plan = {
+                    let view = FleetView {
+                        now_ms: now,
+                        backlog_ms: &self.backlog,
+                        queued: &self.queued,
+                        resident: &self.res_snap,
+                        unavailable: &self.unavail,
+                    };
+                    planner.plan_prefetch(&view, expected)
+                };
+                if let Some(plan) = plan {
+                    self.queue_forecast_plan(plan, now, true);
+                }
+                // sustained-low downshift (joules-per-slo routing only):
+                // re-select a cheaper compliant variant on an idle server
+                if self.cfg.policy == Policy::JoulesPerSlo
+                    && obs.rate_ahead_rps < PREDICT_DOWN_FACTOR * obs.committed_capacity_rps
+                {
+                    let plan = {
+                        let view = FleetView {
+                            now_ms: now,
+                            backlog_ms: &self.backlog,
+                            queued: &self.queued,
+                            resident: &self.res_snap,
+                            unavailable: &self.unavail,
+                        };
+                        planner.plan_reselect(&view)
+                    };
+                    if let Some(plan) = plan {
+                        self.queue_forecast_plan(plan, now, false);
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -1402,11 +1623,22 @@ impl<'a> Coordinator<'a> {
         let mut routers: Vec<Router> = self
             .tenants
             .iter()
-            .map(|t| Router::new(self.fleet, t.dmax, cfg.policy, cfg.swap_init_ms))
+            .map(|t| {
+                Router::new(self.fleet, t.dmax, cfg.policy, cfg.swap_init_ms).with_slo(t.slo_ms)
+            })
             .collect();
         let closed_loop = cfg.closed_loop();
         let mut scaler = cfg.autoscale.policy.build(&cfg.autoscale);
         let mut tracker = SignalTracker::new();
+        // the forecaster exists only under the predictive policy, lives on
+        // the coordinator thread and is fed fresh arrivals in trace order
+        // — deterministic and jobs-invariant by construction
+        let predictive = auto && cfg.autoscale.policy == ScalePolicy::Predictive;
+        let mut forecaster = if predictive { Some(Forecaster::new()) } else { None };
+        // satellite of PR 10: with the gate on, control ticks keep firing
+        // through the drain phase (while shard events remain) instead of
+        // freezing at the last arrival
+        let drain_ticks = auto && (cfg.scale_to_drain || predictive);
         // the control plane runs for the duration of the offered trace
         // (last arrival + transfer); tick times come from the same
         // accumulating addition (now + interval) the materialized engine
@@ -1432,10 +1664,14 @@ impl<'a> Coordinator<'a> {
                 // the candidate is valid whenever it can fire first
                 (Some(c), Some(_)) => Some(c),
                 // source drained: the exact end decides (an empty trace
-                // has no end and schedules no ticks, as before)
-                (Some(c), None) => {
-                    arrivals.end().filter(|&last| c <= last + transfer_ms).map(|_| c)
-                }
+                // has no end and schedules no ticks, as before); with the
+                // drain-phase gate on, ticks continue past the trace end
+                // while any shard still has events to play out
+                (Some(c), None) => match arrivals.end() {
+                    Some(last) if c <= last + transfer_ms => Some(c),
+                    Some(_) if drain_ticks && self.pending_local_events() => Some(c),
+                    _ => None,
+                },
                 (None, _) => None,
             };
             let t = [ta, tr, tc]
@@ -1454,6 +1690,11 @@ impl<'a> Coordinator<'a> {
                         break;
                     }
                     let (id, origin) = arrivals.pop().expect("serve: peeked arrival vanished");
+                    // fresh offered demand only, in trace order (retry
+                    // re-entries are already-counted load, not fed)
+                    if let Some(fc) = forecaster.as_mut() {
+                        fc.on_arrival(t);
+                    }
                     self.handle_arrival(&mut routers, id, origin, t, 0, residency_limited)?;
                 }
             }
@@ -1482,7 +1723,15 @@ impl<'a> Coordinator<'a> {
             self.drain_at(t)?;
             // 4. + 5. the control tick, then its same-time consequences
             if tc == Some(t) {
-                self.handle_control(scaler.as_mut(), &mut tracker, t, max_active)?;
+                self.handle_control(
+                    scaler.as_mut(),
+                    &mut tracker,
+                    forecaster.as_mut(),
+                    &routers[0],
+                    t,
+                    max_active,
+                    residency_limited,
+                )?;
                 next_tick = Some(t + cfg.autoscale.interval_ms);
                 self.drain_at(t)?;
             }
@@ -1498,6 +1747,15 @@ impl<'a> Coordinator<'a> {
         // barrier left for a re-entry to merge at
         if closed_loop {
             self.expire_leftover_retries();
+        }
+        // read back the predictive bookkeeping (0 / absent otherwise)
+        if let Some(ctrl) = scaler.as_ref() {
+            self.gacc.prewakes = ctrl.prewakes();
+        }
+        if let Some(fc) = &forecaster {
+            let (sum, n) = fc.err_stats();
+            self.gacc.forecast_err_sum_pct = sum;
+            self.gacc.forecast_err_samples = n;
         }
         Ok(self.gacc)
     }
@@ -1592,6 +1850,9 @@ pub(crate) fn run_stream<I: Iterator<Item = f64>>(
     // deterministic merge: per-shard accumulators fold in shard-index
     // order for every jobs value (histogram bins add as u64s, the latency
     // sum as f64 in this same fixed order)
+    // global makespan first: idle-power windows still open on powered
+    // servers close here (a shard cannot know the fleet-wide end time)
+    let makespan_ms = shards.iter().fold(gacc.max_time, |m, sh| m.max(sh.max_time));
     let mut totals = Totals {
         rejected_full: gacc.rejected_full,
         rejected_noncompliant: gacc.rejected_noncompliant,
@@ -1607,6 +1868,11 @@ pub(crate) fn run_stream<I: Iterator<Item = f64>>(
         dropped_final: gacc.dropped_final,
         expired_final: gacc.expired_final,
         tenants: gacc.tenants,
+        prewakes: gacc.prewakes,
+        prefetch_swaps: gacc.prefetch_swaps,
+        reselect_swaps: gacc.reselect_swaps,
+        forecast_err_sum_pct: gacc.forecast_err_sum_pct,
+        forecast_err_samples: gacc.forecast_err_samples,
         usage: Vec::with_capacity(shards.len()),
         ..Totals::default()
     };
@@ -1624,6 +1890,12 @@ pub(crate) fn run_stream<I: Iterator<Item = f64>>(
         totals.swap_ms += sh.acc.swap_ms;
         totals.swap_energy_mj += sh.acc.swap_energy_mj;
         totals.slo_attained += sh.acc.slo_attained;
+        // idle energy: powered time not spent executing batches or
+        // swapping, at the configured idle draw (exactly 0 by default)
+        let powered =
+            sh.powered_ms + sh.powered_since.map_or(0.0, |t0| (makespan_ms - t0).max(0.0));
+        let busy: f64 = sh.acc.usage.iter().map(|u| u.busy_ms).sum();
+        totals.idle_energy_mj += cfg.idle_watts * (powered - busy - sh.acc.swap_ms).max(0.0);
         totals.latency_stats.merge(&sh.acc.latency_stats);
         totals.peak_queue_depth = totals.peak_queue_depth.max(sh.batcher.peak() as u64);
         for (t, st) in totals.tenants.iter_mut().zip(&sh.acc.tenants) {

@@ -81,6 +81,18 @@
 //! policy `off` (the default) no control event is ever scheduled and the
 //! simulation is byte-identical to the fixed-fleet simulator.
 //!
+//! The `predictive` policy ([`predict`]) layers an online arrival
+//! forecaster (MMPP(2) filter + trace-periodicity estimator) over the
+//! queue-depth controller: it pre-wakes servers a wake-latency before a
+//! forecast ramp, sleeps early into troughs, prefetches hot-swaps ahead
+//! of crests and — under [`Policy::JoulesPerSlo`] — reselects idle
+//! capped servers onto cheaper compliant variants; it degrades to plain
+//! queue-depth whenever forecast confidence is low.
+//! [`ServeConfig::idle_watts`] prices the powered-but-not-busy window
+//! and [`ServeConfig::scale_to_drain`] keeps control ticks running past
+//! the last arrival; all default off and inert. See `rust/DESIGN.md`
+//! §Prediction.
+//!
 //! ## Streaming at constant memory
 //!
 //! The hot path never holds the trace or the latencies:
@@ -97,7 +109,8 @@
 //! produce byte-identical summaries. See `rust/DESIGN.md` §Serving,
 //! "Memory & streaming".
 //!
-//! See `rust/DESIGN.md` §Serving and §Autoscaling for the model's limits
+//! See `rust/DESIGN.md` §Serving, §Autoscaling and §Prediction for the
+//! model's limits
 //! (open-loop arrivals, serial devices, linear activation scaling; the
 //! optional [`ServeConfig::link_mbps`] uplink model charges a per-request
 //! transfer delay).
@@ -106,6 +119,7 @@ pub mod autoscale;
 pub mod batcher;
 mod engine;
 pub mod fleet;
+pub mod predict;
 pub mod router;
 pub mod stats;
 pub mod tenant;
@@ -116,6 +130,7 @@ pub use autoscale::{
     SignalTracker,
 };
 pub use fleet::{fleet_for, reference_fleet, workspace_fleet, Fleet, Server, VariantProfile};
+pub use predict::{ForecastObs, Forecaster, PredictivePolicy, RateForecast};
 pub use router::{Candidate, FleetView, Policy, RouteCtx, RoutePolicy, Router, SwapPlan};
 pub use tenant::{parse_tenants, AdmitPolicy, TenantClass, TENANT_SPEC_FORMAT};
 pub use trace::ArrivalProcess;
@@ -172,6 +187,25 @@ pub struct ServeConfig {
     /// Batch admission order across tenants ([`AdmitPolicy::Fifo`] is
     /// the pre-tenant behavior and the default).
     pub admit: AdmitPolicy,
+    /// Forecast-horizon override for the predictive controller, ms.
+    /// `None` (the default) derives the horizon at each control tick as
+    /// the next wake's latency plus one control interval — the lead time
+    /// a prewake decision taken now can actually buy. Only valid with
+    /// the `predictive` autoscale policy.
+    pub forecast_horizon_ms: Option<f64>,
+    /// Idle power draw per powered server, W: a powered (not asleep)
+    /// server accrues `idle_watts × (powered − busy − swapping)` of
+    /// energy over the run, surfaced as [`Summary::idle_energy_mj`] and
+    /// folded into [`Summary::energy_mj`]. 0 (the default) is inert —
+    /// no idle term, summaries byte-identical to the pre-idle-power
+    /// simulator.
+    pub idle_watts: f64,
+    /// Keep issuing control ticks through the drain phase — after the
+    /// last arrival, while shard events remain — so draining/asleep
+    /// decisions stay live until the final event. Off by default (the
+    /// PR 4 behavior: the control plane froze at the last arrival);
+    /// implied by the `predictive` autoscale policy.
+    pub scale_to_drain: bool,
 }
 
 impl Default for ServeConfig {
@@ -191,6 +225,9 @@ impl Default for ServeConfig {
             retry_seed: 42,
             tenants: Vec::new(),
             admit: AdmitPolicy::Fifo,
+            forecast_horizon_ms: None,
+            idle_watts: 0.0,
+            scale_to_drain: false,
         }
     }
 }
@@ -215,6 +252,7 @@ impl ServeConfig {
                 dmax: self.delta_max,
                 slo_ms: self.slo_ms,
                 weight: 1.0,
+                rate_share: None,
             }]
         } else {
             self.tenants.clone()
@@ -388,6 +426,27 @@ pub struct Summary {
     /// woken server coming online — detection hysteresis plus the wake
     /// itself. 0 when no scale-up happened.
     pub mean_reaction_ms: f64,
+    /// Whether the `predictive` autoscale policy drove the run (gates the
+    /// predict line in [`Summary::render`], keeping reactive output
+    /// byte-identical to the pre-prediction simulator).
+    pub predictive: bool,
+    /// Forecast-driven pre-wakes — scale-ups fired on `rate_ahead` rather
+    /// than observed pressure (a subset of [`Summary::scale_ups`]).
+    pub prewakes: u64,
+    /// Forecast-driven prefetch hot-swaps started ahead of predicted
+    /// pressure (a subset of [`Summary::swaps`]).
+    pub prefetch_swaps: u64,
+    /// Forecast-driven downshift re-selections toward cheaper compliant
+    /// variants on predicted sustained low load (a subset of
+    /// [`Summary::swaps`]).
+    pub reselect_swaps: u64,
+    /// Mean absolute forecast error over matured predictions, as a
+    /// percent of the realized rate. 0 when no prediction matured.
+    pub forecast_abs_err_pct: f64,
+    /// Idle-power energy ([`ServeConfig::idle_watts`] × powered-but-idle
+    /// time), mJ; included in [`Summary::energy_mj`]. Exactly 0 at the
+    /// knob's 0 default, keeping summaries byte-identical.
+    pub idle_energy_mj: f64,
     /// Whether closed-loop clients were enabled (gates the retry line in
     /// [`Summary::render`], keeping open-loop output byte-identical to
     /// the pre-closed-loop simulator).
@@ -489,6 +548,22 @@ impl Summary {
                 self.wake_ms,
                 self.wake_energy_mj,
                 self.mean_reaction_ms
+            ));
+        }
+        if self.predictive {
+            s.push_str(&format!(
+                "  predict  : {} prewakes   {} prefetch / {} reselect swaps   \
+                 forecast err {:.1}%\n",
+                self.prewakes, self.prefetch_swaps, self.reselect_swaps, self.forecast_abs_err_pct
+            ));
+        }
+        if self.idle_energy_mj > 0.0 {
+            // the idle term appears only when --idle-watts was set, so
+            // default output stays byte-identical to the pre-idle-power
+            // renderer
+            s.push_str(&format!(
+                "  idle     : {:.1} mJ idle-power energy (in the energy total)\n",
+                self.idle_energy_mj
             ));
         }
         if !self.tenants.is_empty() {
@@ -646,6 +721,24 @@ fn validate(fleet: &Fleet, cfg: &ServeConfig) -> Result<bool> {
         if !(t.weight > 0.0) || !t.weight.is_finite() {
             return Err(Error::hqp(format!("serve: tenant {} needs weight > 0", t.name)));
         }
+        if let Some(r) = t.rate_share {
+            if !(r > 0.0) || !r.is_finite() {
+                return Err(Error::hqp(format!(
+                    "serve: tenant {} needs rate_share > 0",
+                    t.name
+                )));
+            }
+        }
+    }
+    // rate shares are all-or-none: a half-pinned table has no defined
+    // split for the unpinned classes (parse_tenants enforces this for
+    // the CLI; a programmatic table goes through the same gate)
+    if cfg.tenants.iter().any(|t| t.rate_share.is_some())
+        && cfg.tenants.iter().any(|t| t.rate_share.is_none())
+    {
+        return Err(Error::hqp(
+            "serve: tenant rate_share is all-or-none across the table",
+        ));
     }
     // autoscaling bounds: validated only when the control plane is on
     // (an off config's knobs are documented as inert)
@@ -672,6 +765,30 @@ fn validate(fleet: &Fleet, cfg: &ServeConfig) -> Result<bool> {
                 "serve: scale watermarks need high-water > low-water >= 0",
             ));
         }
+    }
+    // predictive-plane knobs: the horizon override is meaningless
+    // without the forecaster it parameterizes, so it is rejected loudly
+    // rather than silently ignored
+    if cfg.forecast_horizon_ms.is_some() && cfg.autoscale.policy != ScalePolicy::Predictive {
+        return Err(Error::hqp(
+            "serve: forecast-horizon-ms requires --autoscale predictive",
+        ));
+    }
+    if let Some(h) = cfg.forecast_horizon_ms {
+        if !(h > 0.0) || !h.is_finite() {
+            return Err(Error::hqp(
+                "serve: forecast-horizon-ms must be positive and finite",
+            ));
+        }
+    }
+    if cfg.idle_watts < 0.0 || cfg.idle_watts.is_nan() {
+        return Err(Error::hqp("serve: idle-watts must be >= 0 and finite"));
+    }
+    if cfg.idle_watts.is_infinite() {
+        return Err(Error::hqp("serve: idle-watts must be >= 0 and finite"));
+    }
+    if cfg.scale_to_drain && !auto {
+        return Err(Error::hqp("serve: scale-to-drain requires --autoscale"));
     }
     Ok(auto)
 }
@@ -777,6 +894,16 @@ fn build_summary(
         } else {
             acc.reaction_sum_ms / acc.scale_ups as f64
         },
+        predictive: autoscaled && cfg.autoscale.policy == ScalePolicy::Predictive,
+        prewakes: acc.prewakes,
+        prefetch_swaps: acc.prefetch_swaps,
+        reselect_swaps: acc.reselect_swaps,
+        forecast_abs_err_pct: if acc.forecast_err_samples == 0 {
+            0.0
+        } else {
+            acc.forecast_err_sum_pct / acc.forecast_err_samples as f64
+        },
+        idle_energy_mj: acc.idle_energy_mj,
         closed_loop: cfg.closed_loop(),
         retries: acc.retries,
         dropped_final: acc.dropped_final,
@@ -807,10 +934,10 @@ fn build_summary(
         } else {
             acc_weighted / acc.completed as f64
         },
-        // serving energy plus the wake and hot-swap windows' E = P·L
-        // (both zero when no wake/swap happened, keeping fixed-fleet and
-        // no-swap totals bit-exact)
-        energy_mj: energy + acc.wake_energy_mj + acc.swap_energy_mj,
+        // serving energy plus the wake and hot-swap windows' E = P·L and
+        // the idle-power term (each zero when its machinery is off,
+        // keeping fixed-fleet / no-swap / zero-idle totals bit-exact)
+        energy_mj: energy + acc.wake_energy_mj + acc.swap_energy_mj + acc.idle_energy_mj,
         per_variant,
     }
 }
@@ -1275,12 +1402,36 @@ mod tests {
             2_000.0,
             9,
         );
-        for policy in [ScalePolicy::QueueDepth, ScalePolicy::Attainment] {
+        for policy in
+            [ScalePolicy::QueueDepth, ScalePolicy::Attainment, ScalePolicy::Predictive]
+        {
             let c = auto_cfg(policy, 50.0, 1, 2);
             let a = simulate_fleet(&fleet, &arrivals, &c).unwrap();
             let b = simulate_fleet(&fleet, &arrivals, &c).unwrap();
             assert_eq!(a, b, "{policy:?}");
             assert_eq!(a.render(), b.render(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn predictive_scaling_is_jobs_invariant() {
+        // the forecaster lives on the coordinator and consumes the trace
+        // in arrival order, so its every prediction — and every prewake,
+        // prefetch and reselect it drives — must be jobs-free
+        let fleet = two_server_fleet(5.0);
+        let arrivals = trace::generate(
+            &ArrivalProcess::parse("mmpp", 300.0).unwrap(),
+            4_000.0,
+            11,
+        );
+        let c = auto_cfg(ScalePolicy::Predictive, 25.0, 1, 2);
+        let seq = simulate_fleet(&fleet, &arrivals, &c).unwrap();
+        assert!(seq.predictive);
+        for jobs in [2usize, 4] {
+            let par =
+                simulate_fleet_jobs(&fleet, &arrivals, &c, Jobs::new(jobs).unwrap()).unwrap();
+            assert_eq!(seq, par, "jobs={jobs} diverged under the predictive policy");
+            assert_eq!(seq.render(), par.render());
         }
     }
 
@@ -1332,6 +1483,126 @@ mod tests {
         })
         .is_err());
         assert!(bad(&|_| {}).is_ok(), "the base autoscale config is valid");
+    }
+
+    #[test]
+    fn predictive_knob_gating_is_validated() {
+        let fleet = two_server_fleet(5.0);
+        let mut c = cfg();
+        c.forecast_horizon_ms = Some(100.0);
+        assert!(
+            simulate_fleet(&fleet, &[0.0], &c).is_err(),
+            "a forecast horizon without --autoscale predictive must be loud"
+        );
+        let mut c = auto_cfg(ScalePolicy::QueueDepth, 50.0, 1, 2);
+        c.forecast_horizon_ms = Some(100.0);
+        assert!(
+            simulate_fleet(&fleet, &[0.0], &c).is_err(),
+            "reactive policies take no horizon either"
+        );
+        let mut c = cfg();
+        c.scale_to_drain = true;
+        assert!(
+            simulate_fleet(&fleet, &[0.0], &c).is_err(),
+            "drain-phase ticks without a controller to tick"
+        );
+        let mut c = cfg();
+        c.idle_watts = -1.0;
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
+        let mut c = cfg();
+        c.idle_watts = f64::INFINITY;
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err());
+        let mut c = auto_cfg(ScalePolicy::Predictive, 50.0, 1, 2);
+        c.forecast_horizon_ms = Some(0.0);
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_err(), "horizon must be positive");
+        let mut c = auto_cfg(ScalePolicy::Predictive, 50.0, 1, 2);
+        c.forecast_horizon_ms = Some(120.0);
+        assert!(simulate_fleet(&fleet, &[0.0], &c).is_ok());
+    }
+
+    #[test]
+    fn drain_phase_ticks_keep_scaling_after_the_last_arrival() {
+        // regression for the PR-4 limit "the control plane stops at the
+        // last arrival": a burst leaves a deep backlog behind, so the
+        // queue never looks idle while arrivals flow — without drain-phase
+        // ticks the controller can never scale down. With --scale-to-drain
+        // the ticks continue while local events remain pending and the
+        // post-trace idleness is finally observed.
+        let fleet = two_server_fleet(20.0);
+        let arrivals: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let mut base = auto_cfg(ScalePolicy::QueueDepth, 4.0, 1, 2);
+        base.slo_ms = 10_000.0; // keep the backlog alive instead of expiring it
+        let mut drain = base.clone();
+        drain.scale_to_drain = true;
+        let b = simulate_fleet(&fleet, &arrivals, &base).unwrap();
+        let d = simulate_fleet(&fleet, &arrivals, &drain).unwrap();
+        assert_eq!(b.scale_downs, 0, "pre-drain ticks never see a quiet queue");
+        assert!(
+            d.scale_downs >= 1,
+            "drain-phase ticks must observe the emptied queue and scale down"
+        );
+        assert!(d.scale_ups >= 1);
+        assert_eq!(d.completed + d.rejected + d.expired, d.generated, "conservation");
+        // the flag changes nothing upstream of the drain: the served
+        // traffic itself is identical
+        assert_eq!(b.completed, d.completed);
+        assert_eq!(b.slo_attained, d.slo_attained);
+        // and off stays byte-identical to the pre-flag behavior
+        let again = simulate_fleet(&fleet, &arrivals, &base).unwrap();
+        assert_eq!(b, again);
+    }
+
+    #[test]
+    fn prewakes_react_faster_than_queue_depth_detection() {
+        // the tentpole claim in miniature: on a bursty MMPP trace the
+        // predictive policy starts wakes when the forecast crosses
+        // committed capacity — its reaction time is the wake latency
+        // alone, while queue-depth pays detection hysteresis (two
+        // consecutive high ticks) on top of the same wake
+        let fleet = two_server_fleet(5.0);
+        let arrivals = trace::generate(
+            &ArrivalProcess::parse("mmpp", 300.0).unwrap(),
+            8_000.0,
+            7,
+        );
+        let reactive = auto_cfg(ScalePolicy::QueueDepth, 25.0, 1, 2);
+        let predictive = auto_cfg(ScalePolicy::Predictive, 25.0, 1, 2);
+        let r = simulate_fleet(&fleet, &arrivals, &reactive).unwrap();
+        let p = simulate_fleet(&fleet, &arrivals, &predictive).unwrap();
+        assert!(r.scale_ups >= 1 && p.scale_ups >= 1, "both must wake capacity");
+        assert!(!r.predictive && p.predictive);
+        assert!(p.prewakes >= 1, "the forecaster must drive at least one prewake");
+        assert!(p.render().contains("predict  :"));
+        assert!(!r.render().contains("predict  :"), "reactive renders stay unchanged");
+        assert!(
+            p.mean_reaction_ms < r.mean_reaction_ms,
+            "predictive reaction {:.1} ms must beat queue-depth {:.1} ms",
+            p.mean_reaction_ms,
+            r.mean_reaction_ms
+        );
+        assert_eq!(p.completed + p.rejected + p.expired, p.generated, "conservation");
+    }
+
+    #[test]
+    fn idle_power_charges_the_powered_but_not_busy_window() {
+        let fleet = one_server(vec![var("hqp", 0.012, 10.0, 16.0)]);
+        let base = simulate_fleet(&fleet, &[0.0], &cfg()).unwrap();
+        let mut c = cfg();
+        c.idle_watts = 2.0;
+        let s = simulate_fleet(&fleet, &[0.0], &c).unwrap();
+        // flush at 5, service 10..15: powered 15 ms, busy 10 ms → 5 ms
+        // idle at 2 W = 10 mJ, folded into the energy total
+        assert!((s.idle_energy_mj - 10.0).abs() < 1e-9, "idle {} mJ", s.idle_energy_mj);
+        assert!((s.energy_mj - (base.energy_mj + 10.0)).abs() < 1e-9);
+        assert!(s.render().contains("idle     :"));
+        // the zero default is inert to the byte — no phantom line, no
+        // epsilon drift in the total
+        let mut z = cfg();
+        z.idle_watts = 0.0;
+        let same = simulate_fleet(&fleet, &[0.0], &z).unwrap();
+        assert_eq!(base, same);
+        assert_eq!(base.render(), same.render());
+        assert!(!base.render().contains("idle     :"));
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Online arrival-rate forecasting: an MMPP(2) hidden-state filter plus a
+//! trace-periodicity estimator, fused into a single [`RateForecast`].
+//!
+//! The serving traces this repo cares about are bursty on two timescales:
+//! the MMPP(2) process flips between a low and a high Poisson rate with
+//! exponential dwell (mean 250 ms in the CLI preset), and the diurnal
+//! process modulates the rate sinusoidally with a fixed period. A purely
+//! reactive controller pays one detection lag *per burst*; this module
+//! estimates where the rate is **going** so the control plane can pay the
+//! wake/swap cost *before* the burst lands.
+//!
+//! ## Filter model
+//!
+//! The MMPP(2) state is tracked with a normalized two-state Bayes filter
+//! over inter-arrival gaps. Per observed gap `dt`:
+//!
+//! 1. **Mix** — the symmetric two-state chain relaxes the belief toward
+//!    ½ at rate `2q` (`q` = [`SWITCH_HAZARD_PER_MS`], the dwell prior):
+//!    `p ← ½ + (p − ½)·exp(−2q·dt)`.
+//! 2. **Weigh** — the gap likelihood under each state's exponential law
+//!    (`λ·e^{−λ·dt}`) reweighs the belief via the log-likelihood ratio,
+//!    then the belief is renormalized and clamped away from absorbing
+//!    0/1.
+//!
+//! The two state rates are not known a priori; they are learned online as
+//! belief-gated EWMAs of the observed gaps (the gap EWMA of whichever
+//! state currently owns the belief is updated), seeded from the first gap
+//! at the MMPP CLI preset's 0.4×/1.6× split. Everything is a pure
+//! function of the arrival-time prefix, so the filter is deterministic
+//! and `--jobs`-invariant by construction (it only ever runs on the
+//! coordinator thread, in trace order).
+//!
+//! **Fixed-point discipline:** every piece of persistent filter state is
+//! re-quantized onto a fixed grid ([`quantize`]) after each update. The
+//! update math runs in f64, but the *stored* state always sits on the
+//! grid, so state never accumulates platform- or history-shaped noise
+//! below the grid and byte-identical runs stay byte-identical.
+//!
+//! ## Periodicity estimator
+//!
+//! Arrivals are also binned into a fixed ring of [`BUCKET_MS`]-wide rate
+//! buckets. Every [`PERIOD_REFRESH_BUCKETS`] completed buckets the
+//! estimator scans lag-domain autocorrelation over
+//! `[MIN_PERIOD_LAG, MAX_PERIOD_LAG]` buckets and locks onto the best
+//! lag whose normalized autocorrelation clears
+//! [`PERIOD_MIN_CORR`] — for the diurnal preset (period 2 s) that is the
+//! true period to within one bucket. A locked period lets
+//! [`RateForecast::rate_ahead`] read next-period rates straight out of
+//! last period's history instead of extrapolating the filter.
+//!
+//! ## Horizon semantics
+//!
+//! [`RateForecast::rate_ahead`]`(h)` answers "what arrival rate do I
+//! expect `h` ms from now" — the controllers call it with `h` = the cost
+//! of the action they are pricing (a server's wake latency, a swap
+//! stream-in time), which is exactly the lead time prediction has to buy
+//! for the action to be ready when the load arrives. The filter component
+//! relaxes toward the long-run mean as `h` grows (a two-state chain
+//! forgets its state at rate `2q`), the seasonal component does not decay
+//! in `h` (the period is stable), and the two are blended by the period
+//! lock quality.
+
+/// Width of one rate-history bucket, virtual ms. 25 ms resolves the
+/// 250 ms MMPP dwell preset (10 buckets/dwell) and the 2 s diurnal
+/// period (80 buckets/period) comfortably.
+pub const BUCKET_MS: f64 = 25.0;
+
+/// Ring capacity in buckets: 512 × 25 ms = 12.8 s of rate history — over
+/// six diurnal preset periods.
+pub const RING_BUCKETS: usize = 512;
+
+/// Prior on the MMPP switching hazard, per ms (1/250 ms matches the CLI
+/// preset's mean dwell). Only shapes mixing speed; the learned state
+/// rates carry the data.
+pub const SWITCH_HAZARD_PER_MS: f64 = 1.0 / 250.0;
+
+/// Belief-gated EWMA factor for the per-state gap estimates.
+pub const GAP_ALPHA: f64 = 0.08;
+
+/// Re-estimate the period every this many completed buckets.
+pub const PERIOD_REFRESH_BUCKETS: u64 = 32;
+
+/// Smallest candidate period, in buckets (8 × 25 ms = 200 ms).
+pub const MIN_PERIOD_LAG: usize = 8;
+
+/// Largest candidate period, in buckets (256 × 25 ms = 6.4 s).
+pub const MAX_PERIOD_LAG: usize = 256;
+
+/// Normalized autocorrelation a lag must clear to count as a period lock.
+pub const PERIOD_MIN_CORR: f64 = 0.35;
+
+/// How much better a longer lag must correlate to displace a shorter one.
+/// A periodic trace correlates at every *multiple* of the true period;
+/// scanning lags ascending with this margin locks the fundamental, not a
+/// harmonic.
+pub const PERIOD_HARMONIC_MARGIN: f64 = 0.05;
+
+/// Gap observations before confidence saturates halfway
+/// (`n / (n + this)`).
+pub const CONFIDENCE_HALF_LIFE_OBS: f64 = 32.0;
+
+/// Floor (and `1 −` ceiling) for the state belief — keeps the filter out
+/// of the absorbing 0/1 corners so it can always change its mind.
+pub const BELIEF_CLAMP: f64 = 1e-3;
+
+/// Quantization grid for persistent filter state (the fixed-point
+/// discipline): state is stored in units of this step.
+pub const STATE_GRID: f64 = 1e-9;
+
+/// Snap a value onto the persistent-state grid ([`STATE_GRID`] units).
+/// All stored filter state passes through this after every update.
+pub fn quantize(x: f64) -> f64 {
+    (x / STATE_GRID).round() * STATE_GRID
+}
+
+/// A point-in-time forecast handed to the predictive controllers at each
+/// control tick. Borrow-cheap: `rate_ahead` reads the forecaster's
+/// seasonal history through the borrow.
+pub struct RateForecast<'a> {
+    fc: &'a Forecaster,
+    /// Tick time the forecast was taken at, virtual ms.
+    pub now_ms: f64,
+    /// Filtered arrival rate right now, requests/s.
+    pub rate_now_rps: f64,
+    /// How much to trust this forecast, in `[0, 1]` — the product of a
+    /// data-volume ramp and the decisiveness of the state belief (or the
+    /// period lock quality, whichever is stronger). Controllers degrade
+    /// to their reactive fallback below their gate.
+    pub confidence: f64,
+}
+
+impl RateForecast<'_> {
+    /// Expected arrival rate `horizon_ms` from now, requests/s. See the
+    /// module docs for the horizon semantics.
+    pub fn rate_ahead(&self, horizon_ms: f64) -> f64 {
+        self.fc.rate_ahead_at(self.now_ms, horizon_ms.max(0.0))
+    }
+}
+
+/// The online forecaster. One instance lives in the serving coordinator
+/// (single-threaded), fed every fresh arrival in trace order and every
+/// control tick; see the module docs for the model.
+pub struct Forecaster {
+    // --- MMPP(2) gap filter ---
+    last_arrival_ms: f64, // NaN until the first arrival
+    gaps_seen: u64,
+    /// P(state = high), clamped to `[BELIEF_CLAMP, 1 − BELIEF_CLAMP]`.
+    p_high: f64,
+    /// Learned mean gap in the low-rate state, ms (large gap = low rate).
+    gap_lo_ms: f64, // NaN until seeded
+    /// Learned mean gap in the high-rate state, ms.
+    gap_hi_ms: f64, // NaN until seeded
+    // --- bucketed rate history (periodicity + realized-rate lookups) ---
+    counts: Vec<u32>,
+    head: usize,
+    head_start_ms: f64,
+    completed_buckets: u64,
+    period_buckets: Option<usize>,
+    period_corr: f64,
+    // --- forecast-error bookkeeping (summary's forecast_abs_err_pct) ---
+    pending: std::collections::VecDeque<(f64, f64)>, // (target_ms, predicted_rps)
+    err_sum_pct: f64,
+    err_samples: u64,
+}
+
+impl Forecaster {
+    /// A fresh forecaster: belief at ½, no rates learned, no history.
+    pub fn new() -> Forecaster {
+        Forecaster {
+            last_arrival_ms: f64::NAN,
+            gaps_seen: 0,
+            p_high: 0.5,
+            gap_lo_ms: f64::NAN,
+            gap_hi_ms: f64::NAN,
+            counts: vec![0; RING_BUCKETS],
+            head: 0,
+            head_start_ms: 0.0,
+            completed_buckets: 0,
+            period_buckets: None,
+            period_corr: 0.0,
+            pending: std::collections::VecDeque::new(),
+            err_sum_pct: 0.0,
+            err_samples: 0,
+        }
+    }
+
+    /// Gap observations consumed so far.
+    pub fn gaps_seen(&self) -> u64 {
+        self.gaps_seen
+    }
+
+    /// Forecast-error accumulators: (sum of absolute percent errors,
+    /// sample count). Feeds the summary's `forecast_abs_err_pct`.
+    pub fn err_stats(&self) -> (f64, u64) {
+        (self.err_sum_pct, self.err_samples)
+    }
+
+    /// The locked trace period, ms, if the autocorrelation scan found
+    /// one.
+    pub fn period_ms(&self) -> Option<f64> {
+        self.period_buckets.map(|b| b as f64 * BUCKET_MS)
+    }
+
+    /// Feed one fresh arrival (coordinator thread, trace order only —
+    /// retries re-entering the system are *offered load already counted*,
+    /// not new demand, and are not fed).
+    pub fn on_arrival(&mut self, now_ms: f64) {
+        self.advance_buckets(now_ms);
+        self.counts[self.head] = self.counts[self.head].saturating_add(1);
+        let prev = self.last_arrival_ms;
+        self.last_arrival_ms = now_ms;
+        if prev.is_nan() {
+            return;
+        }
+        let dt = (now_ms - prev).max(STATE_GRID);
+        self.gaps_seen += 1;
+        if self.gap_lo_ms.is_nan() {
+            // seed the state rates around the first gap at the MMPP CLI
+            // preset's 0.4×/1.6× split (gap is 1/rate: low rate = long gap)
+            self.gap_lo_ms = quantize(dt / 0.4);
+            self.gap_hi_ms = quantize(dt / 1.6);
+            return;
+        }
+        // (1) mix: the symmetric chain forgets its state at rate 2q
+        let relax = (-2.0 * SWITCH_HAZARD_PER_MS * dt).exp();
+        let p = 0.5 + (self.p_high - 0.5) * relax;
+        // (2) weigh: exponential-gap log-likelihood ratio high vs low
+        let lam_hi = 1.0 / self.gap_hi_ms;
+        let lam_lo = 1.0 / self.gap_lo_ms;
+        let llr = (lam_hi / lam_lo).ln() - (lam_hi - lam_lo) * dt;
+        let odds = (p / (1.0 - p)) * llr.clamp(-30.0, 30.0).exp();
+        let posterior = odds / (1.0 + odds);
+        self.p_high = quantize(posterior.clamp(BELIEF_CLAMP, 1.0 - BELIEF_CLAMP));
+        // belief-gated rate learning: the owning state absorbs the gap
+        if self.p_high >= 0.5 {
+            self.gap_hi_ms = quantize(GAP_ALPHA * dt + (1.0 - GAP_ALPHA) * self.gap_hi_ms);
+        } else {
+            self.gap_lo_ms = quantize(GAP_ALPHA * dt + (1.0 - GAP_ALPHA) * self.gap_lo_ms);
+        }
+        // keep the states ordered (high rate = short gap); a crossover
+        // means the labels swapped, so swap them back
+        if self.gap_hi_ms > self.gap_lo_ms {
+            std::mem::swap(&mut self.gap_hi_ms, &mut self.gap_lo_ms);
+            self.p_high = quantize(1.0 - self.p_high);
+        }
+    }
+
+    /// Control-tick hook: advances the rate history to `now_ms`, scores
+    /// any forecast whose target time has passed against the realized
+    /// rate, and records a fresh prediction `horizon_ms` ahead for later
+    /// scoring.
+    pub fn on_tick(&mut self, now_ms: f64, horizon_ms: f64) {
+        self.advance_buckets(now_ms);
+        // score matured predictions (need the target's bucket + one
+        // completed neighbor for the smoothed realized-rate read)
+        while let Some(&(target, pred)) = self.pending.front() {
+            if self.head_start_ms < target + 2.0 * BUCKET_MS {
+                break;
+            }
+            self.pending.pop_front();
+            if let Some(real) = self.rate_at(target) {
+                let err = (pred - real).abs() / real.max(1.0) * 100.0;
+                self.err_sum_pct += err;
+                self.err_samples += 1;
+            }
+        }
+        let pred = self.forecast(now_ms).rate_ahead(horizon_ms);
+        self.pending.push_back((now_ms + horizon_ms, pred));
+        if self.pending.len() > 4096 {
+            self.pending.pop_front(); // bound state on pathological horizons
+        }
+    }
+
+    /// Take a forecast snapshot at `now_ms`.
+    pub fn forecast(&self, now_ms: f64) -> RateForecast<'_> {
+        let c_data = self.gaps_seen as f64 / (self.gaps_seen as f64 + CONFIDENCE_HALF_LIFE_OBS);
+        let c_state = 2.0 * (self.p_high - 0.5).abs();
+        let c_period = if self.period_buckets.is_some() { self.period_corr } else { 0.0 };
+        let confidence = (c_data * c_state.max(c_period)).clamp(0.0, 1.0);
+        RateForecast {
+            fc: self,
+            now_ms,
+            rate_now_rps: self.filter_rate_rps(self.p_high),
+            confidence,
+        }
+    }
+
+    /// Belief-weighted filter rate, requests/s.
+    fn filter_rate_rps(&self, p_high: f64) -> f64 {
+        if self.gap_lo_ms.is_nan() {
+            return 0.0;
+        }
+        let r_hi = 1e3 / self.gap_hi_ms;
+        let r_lo = 1e3 / self.gap_lo_ms;
+        p_high * r_hi + (1.0 - p_high) * r_lo
+    }
+
+    /// The fused look-ahead rate (see [`RateForecast::rate_ahead`]).
+    fn rate_ahead_at(&self, now_ms: f64, horizon_ms: f64) -> f64 {
+        // filter component: belief relaxes toward ½ over the horizon
+        let relax = (-2.0 * SWITCH_HAZARD_PER_MS * horizon_ms).exp();
+        let p_h = 0.5 + (self.p_high - 0.5) * relax;
+        let filter = self.filter_rate_rps(p_h);
+        // seasonal component: the rate one period before the target time
+        let seasonal = self.period_buckets.and_then(|lag| {
+            self.rate_at(now_ms + horizon_ms - lag as f64 * BUCKET_MS)
+        });
+        match seasonal {
+            Some(s) => {
+                let w = self.period_corr.clamp(0.0, 0.9);
+                (1.0 - w) * filter + w * s
+            }
+            None => filter,
+        }
+    }
+
+    /// Smoothed realized rate (requests/s) around historical time `t_ms`:
+    /// the mean over the 3 completed buckets centered on `t_ms`'s bucket.
+    /// `None` when `t_ms` has fallen off the ring (or is not yet
+    /// completed history).
+    fn rate_at(&self, t_ms: f64) -> Option<f64> {
+        if t_ms >= self.head_start_ms || t_ms < 0.0 {
+            return None;
+        }
+        let back = ((self.head_start_ms - t_ms) / BUCKET_MS).floor() as u64 + 1;
+        let depth = self.completed_buckets.min(RING_BUCKETS as u64 - 1);
+        if back > depth {
+            return None;
+        }
+        let mut sum = 0u64;
+        let mut n = 0u64;
+        for b in [back + 1, back, back.saturating_sub(1)] {
+            if b >= 1 && b <= depth {
+                let idx = (self.head + RING_BUCKETS - b as usize) % RING_BUCKETS;
+                sum += u64::from(self.counts[idx]);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            return None;
+        }
+        Some(sum as f64 / (n as f64 * BUCKET_MS) * 1e3)
+    }
+
+    /// Roll the bucket ring forward so `now_ms` lands in the head bucket,
+    /// refreshing the period estimate on schedule.
+    fn advance_buckets(&mut self, now_ms: f64) {
+        let mut refreshed = false;
+        while now_ms >= self.head_start_ms + BUCKET_MS {
+            self.head = (self.head + 1) % RING_BUCKETS;
+            self.counts[self.head] = 0;
+            self.head_start_ms += BUCKET_MS;
+            self.completed_buckets += 1;
+            if self.completed_buckets % PERIOD_REFRESH_BUCKETS == 0 {
+                refreshed = true;
+            }
+        }
+        if refreshed {
+            self.refresh_period();
+        }
+    }
+
+    /// Lag-domain autocorrelation scan over the completed history; locks
+    /// the best lag clearing [`PERIOD_MIN_CORR`] (requiring two full
+    /// periods of history so one period of evidence backs every lag).
+    fn refresh_period(&mut self) {
+        let depth = self.completed_buckets.min(RING_BUCKETS as u64 - 1) as usize;
+        if depth < 2 * MIN_PERIOD_LAG {
+            return;
+        }
+        // chronological completed-bucket window, oldest first
+        let mut xs = Vec::with_capacity(depth);
+        for b in (1..=depth).rev() {
+            let idx = (self.head + RING_BUCKETS - b) % RING_BUCKETS;
+            xs.push(f64::from(self.counts[idx]));
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+        if var <= 0.0 {
+            self.period_buckets = None;
+            self.period_corr = 0.0;
+            return;
+        }
+        let max_lag = MAX_PERIOD_LAG.min(depth / 2);
+        let mut best: Option<(usize, f64)> = None;
+        for lag in MIN_PERIOD_LAG..=max_lag {
+            let mut num = 0.0;
+            for i in lag..xs.len() {
+                num += (xs[i] - mean) * (xs[i - lag] - mean);
+            }
+            // normalize by the overlap so long lags are not penalized
+            // for having fewer product terms
+            let corr = num / var * (xs.len() as f64 / (xs.len() - lag) as f64);
+            if corr > best.map_or(PERIOD_MIN_CORR, |(_, c)| c + PERIOD_HARMONIC_MARGIN) {
+                best = Some((lag, corr));
+            }
+        }
+        match best {
+            Some((lag, corr)) => {
+                self.period_buckets = Some(lag);
+                self.period_corr = quantize(corr.clamp(0.0, 1.0));
+            }
+            None => {
+                self.period_buckets = None;
+                self.period_corr = 0.0;
+            }
+        }
+    }
+}
+
+impl Default for Forecaster {
+    fn default() -> Self {
+        Forecaster::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic synthetic arrival stream: constant-gap arrivals at
+    /// `rps` over `[start_ms, end_ms)`.
+    fn feed_constant(fc: &mut Forecaster, rps: f64, start_ms: f64, end_ms: f64) {
+        let gap = 1e3 / rps;
+        let mut t = start_ms;
+        while t < end_ms {
+            fc.on_arrival(t);
+            t += gap;
+        }
+    }
+
+    #[test]
+    fn filter_tracks_a_rate_switch() {
+        let mut fc = Forecaster::new();
+        feed_constant(&mut fc, 100.0, 0.0, 1_000.0);
+        let low = fc.forecast(1_000.0).rate_now_rps;
+        // rate jumps 4×: belief must swing high and the estimate follow
+        feed_constant(&mut fc, 400.0, 1_000.0, 2_000.0);
+        let high = fc.forecast(2_000.0).rate_now_rps;
+        assert!(
+            high > low * 1.5,
+            "filter must chase a 4× rate jump: low {low:.1} rps high {high:.1} rps"
+        );
+        assert!(fc.forecast(2_000.0).confidence > 0.2, "plenty of data: confidence must ramp");
+    }
+
+    #[test]
+    fn rate_ahead_relaxes_toward_the_mean() {
+        let mut fc = Forecaster::new();
+        feed_constant(&mut fc, 100.0, 0.0, 500.0);
+        feed_constant(&mut fc, 400.0, 500.0, 1_500.0);
+        let f = fc.forecast(1_500.0);
+        let near = f.rate_ahead(10.0);
+        let far = f.rate_ahead(10_000.0);
+        // in the high state: a long horizon forgets the state, so the
+        // far forecast sits closer to the two-state midpoint
+        assert!(far < near, "far horizon {far:.1} must relax below near {near:.1}");
+    }
+
+    #[test]
+    fn periodicity_locks_onto_a_square_wave() {
+        let mut fc = Forecaster::new();
+        // 1 s period: 500 ms at 300 rps, 500 ms near-silent — several
+        // full periods so the autocorrelation has evidence
+        for cycle in 0..10 {
+            let base = cycle as f64 * 1_000.0;
+            feed_constant(&mut fc, 300.0, base, base + 500.0);
+            feed_constant(&mut fc, 8.0, base + 500.0, base + 1_000.0);
+        }
+        fc.on_tick(10_000.0, 50.0);
+        let period = fc.period_ms().expect("a 1 s square wave must produce a period lock");
+        assert!(
+            (period - 1_000.0).abs() <= 2.0 * BUCKET_MS,
+            "locked period {period} ms must be within two buckets of the true 1000 ms"
+        );
+    }
+
+    #[test]
+    fn forecaster_is_a_pure_function_of_the_arrival_prefix() {
+        let arrivals: Vec<f64> = (0..400).map(|i| i as f64 * 3.7).collect();
+        let run = || {
+            let mut fc = Forecaster::new();
+            for (i, &t) in arrivals.iter().enumerate() {
+                fc.on_arrival(t);
+                if i % 10 == 0 {
+                    fc.on_tick(t, 40.0);
+                }
+            }
+            let f = fc.forecast(1_500.0);
+            (f.rate_now_rps, f.rate_ahead(40.0), f.confidence, fc.err_stats())
+        };
+        assert_eq!(run(), run(), "identical arrival prefixes must yield identical forecasts");
+    }
+
+    #[test]
+    fn error_tracking_scores_matured_predictions() {
+        let mut fc = Forecaster::new();
+        feed_constant(&mut fc, 200.0, 0.0, 500.0);
+        for k in 0..40 {
+            let t = 500.0 + k as f64 * 25.0;
+            feed_constant(&mut fc, 200.0, t, t + 25.0);
+            fc.on_tick(t, 50.0);
+        }
+        let (sum, n) = fc.err_stats();
+        assert!(n > 0, "matured predictions must have been scored");
+        // constant-rate stream: a working forecaster is not wildly off
+        assert!(sum / n as f64 < 60.0, "mean abs err {:.1}% too large", sum / n as f64);
+    }
+
+    #[test]
+    fn quantize_is_idempotent_and_on_grid() {
+        for x in [0.0, 0.5, 1.0 / 3.0, 123.456_789, -7.1e-7] {
+            let q = quantize(x);
+            assert_eq!(quantize(q), q);
+            assert!((q - x).abs() <= STATE_GRID);
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Predictive, energy-aware control plane: online arrival forecasting
+//! ([`forecast`]) and the forecast-driven autoscale controller
+//! ([`PredictivePolicy`]).
+//!
+//! The reactive controllers (queue-depth, attainment, the swap-aware
+//! planner) all share a structural latency: they cannot act until the
+//! damage — queued requests, missed SLOs, starved servers — is already
+//! observable. This subsystem moves the control plane ahead of the
+//! trace: a [`Forecaster`] watches the arrival stream on the coordinator
+//! thread and the controllers spend the forecast on actions whose cost
+//! is exactly a *lead time* — waking a server (its wake latency), hot-
+//! swapping an engine (its stream-in time). When the forecast is right,
+//! capacity is ready the moment the burst lands and `mean_reaction_ms`
+//! collapses to the wake latency alone; when confidence is low, every
+//! consumer degrades to its reactive baseline, so prediction is strictly
+//! additive.
+//!
+//! The division of labor mirrors the reactive stack:
+//!
+//! * [`Forecaster`] (in [`forecast`]) — pure estimation, fed fresh
+//!   arrivals and control ticks by the event loop.
+//! * [`PredictivePolicy`] — an [`AutoscalePolicy`] that pre-wakes on
+//!   forecast pressure and sleeps early on forecast troughs, wrapping a
+//!   reactive [`QueueDepthPolicy`] as both safety net and low-confidence
+//!   fallback.
+//! * [`super::Router::plan_prefetch`] / [`super::Router::plan_reselect`]
+//!   — policy-independent swap planners the event loop invokes at
+//!   control ticks from the same forecast (prefetch a faster engine
+//!   ahead of a burst; re-select a cheaper compliant engine when load
+//!   will stay low).
+//!
+//! Everything is deterministic and `--jobs`-invariant: the forecaster
+//! only consumes coordinator-side streams (arrival order, tick times),
+//! and the controllers are pure state machines over its output.
+
+pub mod forecast;
+
+pub use forecast::{Forecaster, RateForecast};
+
+use super::autoscale::{AutoscalePolicy, QueueDepthPolicy, ScaleDecision, ScaleSignals};
+use super::router::FleetView;
+
+/// Forecast confidence below which [`PredictivePolicy`] defers entirely
+/// to its reactive fallback.
+pub const PREDICT_CONFIDENCE_GATE: f64 = 0.35;
+
+/// Pre-wake when the forecast rate at the wake horizon exceeds this
+/// fraction of the committed (active + waking) capacity — the headroom
+/// margin that fires the wake *before* saturation.
+pub const PREDICT_UP_FACTOR: f64 = 0.9;
+
+/// Sleep early when the forecast rate falls below this fraction of what
+/// the fleet would still serve after draining one server. The wide gap
+/// to [`PREDICT_UP_FACTOR`] is the anti-flap dead band.
+pub const PREDICT_DOWN_FACTOR: f64 = 0.6;
+
+/// Consecutive forecast-trough ticks before an early sleep fires —
+/// matches the reactive controllers' consecutive-tick hysteresis.
+pub const PREDICT_DOWN_TICKS: u32 = 2;
+
+/// One control tick's forecast, already priced against the fleet by the
+/// event loop (the policy sees rates and capacities, not servers): the
+/// look-ahead rate is evaluated at the horizon of the *next concrete
+/// wake* — the wake latency of the lowest-index asleep server plus one
+/// control interval — so "will demand outrun capacity" and "can the wake
+/// finish in time" are the same comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct ForecastObs {
+    /// Filtered arrival rate right now, requests/s.
+    pub rate_now_rps: f64,
+    /// Forecast arrival rate at the pre-wake horizon, requests/s.
+    pub rate_ahead_rps: f64,
+    /// The horizon `rate_ahead_rps` was evaluated at, ms.
+    pub horizon_ms: f64,
+    /// Forecast confidence in `[0, 1]` ([`RateForecast::confidence`]).
+    pub confidence: f64,
+    /// Serving capacity already committed: best-compliant-variant
+    /// capacity summed over active servers *and wakes in flight* (so a
+    /// ramp of pre-wakes converges instead of overshooting).
+    pub committed_capacity_rps: f64,
+    /// Capacity the next concrete wake would add; 0 when nothing can be
+    /// woken (no asleep server, or the `max_active` bound is reached).
+    pub next_wake_capacity_rps: f64,
+    /// Capacity that would be lost by draining the idlest active server;
+    /// 0 when draining is impossible (already at `min_active`).
+    pub drain_capacity_rps: f64,
+}
+
+/// Forecast-driven autoscale controller: pre-wake ahead of forecast
+/// pressure, sleep early on forecast troughs, degrade to reactive
+/// queue-depth control when the forecast cannot be trusted.
+///
+/// Decision order per tick (see [`PredictivePolicy::decide`]):
+/// 1. The wrapped reactive fallback always runs, keeping its hysteresis
+///    state warm across confidence transitions.
+/// 2. No forecast delivered, or confidence below
+///    [`PREDICT_CONFIDENCE_GATE`] → the fallback's decision stands.
+/// 3. A reactive scale-up is honored even when confident — observed
+///    queue pressure means the forecast already missed; prediction must
+///    never be slower than reaction.
+/// 4. Otherwise capacity follows the forecast: wake when demand at the
+///    wake horizon clears [`PREDICT_UP_FACTOR`] of committed capacity
+///    (reaction clock anchored at *this* tick — the wake itself is the
+///    only remaining latency), drain after [`PREDICT_DOWN_TICKS`]
+///    consecutive trough ticks.
+pub struct PredictivePolicy {
+    fallback: QueueDepthPolicy,
+    obs: Option<ForecastObs>,
+    low_ticks: u32,
+    prewakes: u64,
+}
+
+impl PredictivePolicy {
+    /// Wrap the reactive fallback the policy degrades to.
+    pub fn new(fallback: QueueDepthPolicy) -> PredictivePolicy {
+        PredictivePolicy { fallback, obs: None, low_ticks: 0, prewakes: 0 }
+    }
+}
+
+impl AutoscalePolicy for PredictivePolicy {
+    fn name(&self) -> &'static str {
+        super::autoscale::ScalePolicy::NAMES[3]
+    }
+
+    fn observe_forecast(&mut self, obs: &ForecastObs) {
+        self.obs = Some(*obs);
+    }
+
+    fn decide(&mut self, view: &FleetView, sig: &ScaleSignals) -> ScaleDecision {
+        // the fallback's state machine advances every tick so its
+        // episode anchors and consecutive-tick counters stay correct
+        // whenever control falls back to it
+        let reactive = self.fallback.decide(view, sig);
+        let Some(obs) = self.obs.take() else {
+            return reactive;
+        };
+        if obs.confidence < PREDICT_CONFIDENCE_GATE {
+            self.low_ticks = 0;
+            return reactive;
+        }
+        if matches!(reactive, ScaleDecision::Up { .. }) {
+            // observed pressure the forecast missed: react immediately
+            self.low_ticks = 0;
+            return reactive;
+        }
+        if obs.next_wake_capacity_rps > 0.0
+            && obs.rate_ahead_rps > PREDICT_UP_FACTOR * obs.committed_capacity_rps
+        {
+            // pre-wake: the reaction clock starts now, so the eventual
+            // wake reports only its own latency — no detection lag
+            self.low_ticks = 0;
+            self.prewakes += 1;
+            return ScaleDecision::Up { since_ms: sig.now_ms };
+        }
+        if obs.drain_capacity_rps > 0.0
+            && obs.rate_ahead_rps
+                < PREDICT_DOWN_FACTOR * (obs.committed_capacity_rps - obs.drain_capacity_rps)
+        {
+            self.low_ticks += 1;
+            if self.low_ticks >= PREDICT_DOWN_TICKS {
+                self.low_ticks = 0;
+                return ScaleDecision::Down;
+            }
+            return ScaleDecision::Hold;
+        }
+        // confident and in the dead band: capacity follows the forecast,
+        // so reactive drains are suppressed (an empty queue now is not
+        // evidence the next burst is far away — the forecast decides)
+        self.low_ticks = 0;
+        ScaleDecision::Hold
+    }
+
+    fn prewakes(&self) -> u64 {
+        self.prewakes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::autoscale::SCALE_CONSECUTIVE;
+
+    struct ViewState {
+        backlog: Vec<f64>,
+        queued: Vec<usize>,
+        resident: Vec<Vec<bool>>,
+        unavail: Vec<bool>,
+    }
+
+    impl ViewState {
+        fn new(n: usize) -> ViewState {
+            ViewState {
+                backlog: vec![0.0; n],
+                queued: vec![0; n],
+                resident: vec![vec![true]; n],
+                unavail: vec![false; n],
+            }
+        }
+
+        fn view(&self, now: f64) -> FleetView<'_> {
+            FleetView {
+                now_ms: now,
+                backlog_ms: &self.backlog,
+                queued: &self.queued,
+                resident: &self.resident,
+                unavailable: &self.unavail,
+            }
+        }
+    }
+
+    fn sig(now: f64, queue_ewma: f64) -> ScaleSignals {
+        ScaleSignals {
+            now_ms: now,
+            active: 2,
+            waking: 0,
+            draining: 0,
+            asleep: 2,
+            queue_per_active: queue_ewma,
+            queue_ewma,
+            window_attainment: 1.0,
+            attainment_ewma: 1.0,
+        }
+    }
+
+    fn obs(rate_ahead: f64, confidence: f64) -> ForecastObs {
+        ForecastObs {
+            rate_now_rps: rate_ahead,
+            rate_ahead_rps: rate_ahead,
+            horizon_ms: 10.0,
+            confidence,
+            committed_capacity_rps: 1_000.0,
+            next_wake_capacity_rps: 500.0,
+            drain_capacity_rps: 500.0,
+        }
+    }
+
+    fn policy() -> PredictivePolicy {
+        PredictivePolicy::new(QueueDepthPolicy::new(8.0, 1.0, SCALE_CONSECUTIVE))
+    }
+
+    #[test]
+    fn prewakes_when_forecast_outruns_capacity() {
+        let st = ViewState::new(4);
+        let mut p = policy();
+        // 950 rps forecast > 0.9 × 1000 rps committed → wake now, with
+        // the reaction clock anchored at this very tick
+        p.observe_forecast(&obs(950.0, 0.9));
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 0.0)), ScaleDecision::Up {
+            since_ms: 100.0
+        });
+        assert_eq!(p.prewakes(), 1);
+        // comfortable headroom → hold, and reactive drains are suppressed
+        p.observe_forecast(&obs(800.0, 0.9));
+        assert_eq!(p.decide(&st.view(150.0), &sig(150.0, 0.0)), ScaleDecision::Hold);
+        assert_eq!(p.prewakes(), 1);
+    }
+
+    #[test]
+    fn low_confidence_degrades_to_reactive_queue_depth() {
+        let st = ViewState::new(4);
+        let mut p = policy();
+        // a confident forecast would prewake here — but confidence is low,
+        // so the queue-depth fallback governs: two pressured ticks → Up
+        // anchored at the episode start, exactly the reactive contract
+        p.observe_forecast(&obs(2_000.0, 0.1));
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 12.0)), ScaleDecision::Hold);
+        p.observe_forecast(&obs(2_000.0, 0.1));
+        assert_eq!(
+            p.decide(&st.view(150.0), &sig(150.0, 12.0)),
+            ScaleDecision::Up { since_ms: 100.0 }
+        );
+        assert_eq!(p.prewakes(), 0, "fallback wakes are not pre-wakes");
+    }
+
+    #[test]
+    fn observed_pressure_overrides_the_forecast() {
+        let st = ViewState::new(4);
+        let mut p = policy();
+        // forecast says all-clear, but the queue is already deep: the
+        // reactive safety net fires (the forecast was simply wrong)
+        p.observe_forecast(&obs(100.0, 0.95));
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 12.0)), ScaleDecision::Hold);
+        p.observe_forecast(&obs(100.0, 0.95));
+        assert_eq!(
+            p.decide(&st.view(150.0), &sig(150.0, 12.0)),
+            ScaleDecision::Up { since_ms: 100.0 }
+        );
+    }
+
+    #[test]
+    fn early_sleep_needs_consecutive_trough_ticks() {
+        let st = ViewState::new(4);
+        let mut p = policy();
+        // trough: 200 rps < 0.6 × (1000 − 500) = 300 rps
+        p.observe_forecast(&obs(200.0, 0.9));
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 0.0)), ScaleDecision::Hold);
+        p.observe_forecast(&obs(200.0, 0.9));
+        assert_eq!(p.decide(&st.view(150.0), &sig(150.0, 0.0)), ScaleDecision::Down);
+        // a burst forecast between trough ticks resets the run
+        p.observe_forecast(&obs(200.0, 0.9));
+        assert_eq!(p.decide(&st.view(200.0), &sig(200.0, 0.0)), ScaleDecision::Hold);
+        p.observe_forecast(&obs(800.0, 0.9));
+        assert_eq!(p.decide(&st.view(250.0), &sig(250.0, 0.0)), ScaleDecision::Hold);
+        p.observe_forecast(&obs(200.0, 0.9));
+        assert_eq!(p.decide(&st.view(300.0), &sig(300.0, 0.0)), ScaleDecision::Hold);
+        p.observe_forecast(&obs(200.0, 0.9));
+        assert_eq!(p.decide(&st.view(350.0), &sig(350.0, 0.0)), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn no_forecast_at_all_is_pure_fallback() {
+        let st = ViewState::new(4);
+        let mut p = policy();
+        assert_eq!(p.decide(&st.view(0.0), &sig(0.0, 4.0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(50.0), &sig(50.0, 0.5)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&st.view(100.0), &sig(100.0, 0.2)), ScaleDecision::Down);
+    }
+}

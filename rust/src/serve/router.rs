@@ -49,18 +49,28 @@ pub enum Policy {
     /// capacity-limited server when the projected queue-clearing saving
     /// exceeds the swap cost.
     SwapAware,
+    /// Energy-aware routing for heterogeneous fleets: minimize expected
+    /// energy per SLO-met request — each live pair is scored by its
+    /// batch-1 energy (the profiles' E = P·L) divided by an estimated
+    /// probability the request still meets its SLO on that server.
+    JoulesPerSlo,
 }
 
 impl Policy {
     /// Canonical CLI names, in enum order — the single source of truth
     /// shared by [`Policy::parse`], [`Policy::name`] and the `main.rs`
     /// "valid: …" error strings.
-    pub const NAMES: [&'static str; 4] =
-        ["round-robin", "least-loaded", "acc-fastest", "swap-aware"];
+    pub const NAMES: [&'static str; 5] =
+        ["round-robin", "least-loaded", "acc-fastest", "swap-aware", "joules-per-slo"];
 
     /// Every policy (sweeps and property tests).
-    pub const ALL: [Policy; 4] =
-        [Policy::RoundRobin, Policy::LeastLoaded, Policy::AccFastest, Policy::SwapAware];
+    pub const ALL: [Policy; 5] = [
+        Policy::RoundRobin,
+        Policy::LeastLoaded,
+        Policy::AccFastest,
+        Policy::SwapAware,
+        Policy::JoulesPerSlo,
+    ];
 
     pub fn parse(name: &str) -> Option<Policy> {
         match name {
@@ -68,6 +78,7 @@ impl Policy {
             "least-loaded" | "ll" => Some(Policy::LeastLoaded),
             "acc-fastest" | "af" => Some(Policy::AccFastest),
             "swap-aware" | "sa" => Some(Policy::SwapAware),
+            "joules-per-slo" | "jps" => Some(Policy::JoulesPerSlo),
             _ => None,
         }
     }
@@ -78,6 +89,7 @@ impl Policy {
             Policy::LeastLoaded => Policy::NAMES[1],
             Policy::AccFastest => Policy::NAMES[2],
             Policy::SwapAware => Policy::NAMES[3],
+            Policy::JoulesPerSlo => Policy::NAMES[4],
         }
     }
 
@@ -90,6 +102,7 @@ impl Policy {
             Policy::SwapAware => Box::new(SwapAwarePolicy {
                 pressure_since: vec![f64::NAN; num_servers],
             }),
+            Policy::JoulesPerSlo => Box::new(JoulesPerSloPolicy),
         }
     }
 }
@@ -150,6 +163,16 @@ pub struct RouteCtx {
     /// Δ_max compliance of every variant (eviction ordering needs it for
     /// non-candidate variants too).
     pub compliant: Vec<Vec<bool>>,
+    /// Batch-1 energy (mJ, the profiles' E = P·L) per candidate — what
+    /// [`Policy::JoulesPerSlo`] minimizes per SLO-met request.
+    pub batch1_mj: Vec<f64>,
+    /// Batch-1 energy of every variant, compliant or not (variant
+    /// re-selection ranks non-candidates too).
+    pub variant_batch1_mj: Vec<Vec<f64>>,
+    /// SLO deadline the fleet serves under, ms (`f64::INFINITY` when the
+    /// router was built without one — energy scoring then ignores the
+    /// deadline). Set via [`Router::with_slo`].
+    pub slo_ms: f64,
 }
 
 /// A hot-swap proposal: evict `evict` (in order) from `server`, then load
@@ -198,9 +221,11 @@ impl Router {
         let mut candidates = Vec::new();
         let mut batch1_ms = Vec::new();
         let mut acc_drop = Vec::new();
+        let mut batch1_mj = Vec::new();
         let mut capacity_bytes = Vec::with_capacity(fleet.servers.len());
         let mut variant_bytes = Vec::with_capacity(fleet.servers.len());
         let mut variant_batch1_ms = Vec::with_capacity(fleet.servers.len());
+        let mut variant_batch1_mj = Vec::with_capacity(fleet.servers.len());
         let mut swap_in_ms = Vec::with_capacity(fleet.servers.len());
         let mut compliant = Vec::with_capacity(fleet.servers.len());
         for (s, server) in fleet.servers.iter().enumerate() {
@@ -209,11 +234,19 @@ impl Router {
                     candidates.push(Candidate { server: s, variant: v });
                     batch1_ms.push(var.batch1_ms());
                     acc_drop.push(var.acc_drop);
+                    batch1_mj.push(var.energy_mj.first().copied().unwrap_or(0.0));
                 }
             }
             capacity_bytes.push(server.mem_capacity_bytes);
             variant_bytes.push(server.variants.iter().map(|v| v.weight_bytes).collect());
             variant_batch1_ms.push(server.variants.iter().map(|v| v.batch1_ms()).collect());
+            variant_batch1_mj.push(
+                server
+                    .variants
+                    .iter()
+                    .map(|v| v.energy_mj.first().copied().unwrap_or(0.0))
+                    .collect(),
+            );
             swap_in_ms.push(
                 (0..server.variants.len())
                     .map(|v| server.swap_in_ms(v, swap_init_ms))
@@ -231,9 +264,21 @@ impl Router {
             variant_batch1_ms,
             swap_in_ms,
             compliant,
+            batch1_mj,
+            variant_batch1_mj,
+            slo_ms: f64::INFINITY,
         };
         let policy = policy.build(ctx.num_servers);
         Router { ctx, policy, live: Vec::new() }
+    }
+
+    /// Attach the SLO deadline the fleet serves under, so energy-aware
+    /// scoring ([`Policy::JoulesPerSlo`]) can estimate whether a routed
+    /// request would still meet it. Without it the deadline is treated as
+    /// infinite and the policy scores on energy alone.
+    pub fn with_slo(mut self, slo_ms: f64) -> Router {
+        self.ctx.slo_ms = slo_ms;
+        self
     }
 
     /// Number of compliant (server, variant) pairs, resident or not.
@@ -270,6 +315,157 @@ impl Router {
     pub fn plan_swap(&mut self, view: &FleetView) -> Option<SwapPlan> {
         self.policy.plan_swap(&self.ctx, view)
     }
+
+    /// Forecast-driven swap prefetch (policy-independent): start a
+    /// hot-swap toward a faster compliant variant *before* the queue
+    /// pressure materializes. `expected_queued` is the controller's
+    /// estimate of the requests that will arrive while the swap streams
+    /// in — the reactive [`SwapAwarePolicy`] benefit test
+    /// `queued · (b1_res − b1_new) > swap cost` is applied to that
+    /// forecast backlog instead of the observed queue, and the sustain
+    /// guard is dropped (the caller's confidence gate is the damping).
+    /// Servers are scanned in index order; first viable plan wins.
+    pub fn plan_prefetch(&self, view: &FleetView, expected_queued: f64) -> Option<SwapPlan> {
+        for s in 0..self.ctx.num_servers {
+            if view.unavailable[s] {
+                continue;
+            }
+            let Some((b1_res, b1_new, v_new)) = upgrade_target(&self.ctx, view, s) else {
+                continue;
+            };
+            let benefit = if b1_res.is_finite() {
+                expected_queued * (b1_res - b1_new)
+            } else {
+                f64::INFINITY // starved: any compliant engine is a win
+            };
+            if benefit > self.ctx.swap_in_ms[s][v_new] {
+                let evict = eviction_plan(&self.ctx, view, s, v_new);
+                return Some(SwapPlan { server: s, evict, load: v_new });
+            }
+        }
+        None
+    }
+
+    /// Forecast-driven variant re-selection (policy-independent): under
+    /// sustained low load, swap an idle server toward the *cheapest*
+    /// compliant variant (batch-1 energy, the profiles' E = P·L) that
+    /// fits its memory — trading latency headroom the forecast says is
+    /// not needed for joules on every future request. Only idle servers
+    /// (empty queue, no backlog) are considered; servers are scanned in
+    /// index order; first improvement wins.
+    pub fn plan_reselect(&self, view: &FleetView) -> Option<SwapPlan> {
+        for s in 0..self.ctx.num_servers {
+            if view.unavailable[s] || view.queued[s] > 0 || view.backlog_ms[s] > 0.0 {
+                continue;
+            }
+            let Some(cap) = self.ctx.capacity_bytes[s] else {
+                continue; // unlimited memory: everything loadable is resident
+            };
+            let num_variants = view.resident[s].len();
+            // cheapest resident compliant variant (what routing can use now)
+            let mut e_res = f64::INFINITY;
+            for v in 0..num_variants {
+                if self.ctx.compliant[s][v] && view.resident[s][v] {
+                    e_res = e_res.min(self.ctx.variant_batch1_mj[s][v]);
+                }
+            }
+            // cheapest strictly-cheaper non-resident compliant that fits
+            let mut load = None::<(f64, usize)>;
+            for v in 0..num_variants {
+                if !self.ctx.compliant[s][v]
+                    || view.resident[s][v]
+                    || self.ctx.variant_bytes[s][v] > cap
+                {
+                    continue;
+                }
+                let e = self.ctx.variant_batch1_mj[s][v];
+                if e >= e_res {
+                    continue;
+                }
+                let better = match load {
+                    None => true,
+                    Some((le, _)) => e < le,
+                };
+                if better {
+                    load = Some((e, v));
+                }
+            }
+            if let Some((_, v_new)) = load {
+                let evict = eviction_plan(&self.ctx, view, s, v_new);
+                return Some(SwapPlan { server: s, evict, load: v_new });
+            }
+        }
+        None
+    }
+}
+
+/// The fastest strictly-faster non-resident compliant variant that could
+/// fit server `s` at all: returns `(best resident compliant batch-1 ms,
+/// candidate batch-1 ms, candidate variant)`. `None` when the server has
+/// unlimited memory (everything already resident) or no upgrade exists.
+fn upgrade_target(ctx: &RouteCtx, view: &FleetView, s: usize) -> Option<(f64, f64, usize)> {
+    let cap = ctx.capacity_bytes[s]?;
+    let num_variants = view.resident[s].len();
+    let mut b1_res = f64::INFINITY;
+    for v in 0..num_variants {
+        if ctx.compliant[s][v] && view.resident[s][v] {
+            b1_res = b1_res.min(ctx.variant_batch1_ms[s][v]);
+        }
+    }
+    let mut load = None::<(f64, usize)>;
+    for v in 0..num_variants {
+        if !ctx.compliant[s][v] || view.resident[s][v] || ctx.variant_bytes[s][v] > cap {
+            continue;
+        }
+        let b1 = ctx.variant_batch1_ms[s][v];
+        if b1 >= b1_res {
+            continue;
+        }
+        let better = match load {
+            None => true,
+            Some((lb, _)) => b1 < lb,
+        };
+        if better {
+            load = Some((b1, v));
+        }
+    }
+    load.map(|(b1_new, v_new)| (b1_res, b1_new, v_new))
+}
+
+/// Evict residents of server `s` until variant `v_new` fits: non-compliant
+/// residents first, then compliant residents — slowest-first within each
+/// rank, index as the final tie-break. Shared by the reactive swap-aware
+/// planner and the forecast-driven prefetch/re-selection planners so every
+/// swap path frees memory in the same deterministic order.
+fn eviction_plan(ctx: &RouteCtx, view: &FleetView, s: usize, v_new: usize) -> Vec<usize> {
+    let cap = match ctx.capacity_bytes[s] {
+        Some(c) => c,
+        None => return Vec::new(),
+    };
+    let num_variants = view.resident[s].len();
+    let resident_bytes: u64 = (0..num_variants)
+        .filter(|&v| view.resident[s][v])
+        .map(|v| ctx.variant_bytes[s][v])
+        .sum();
+    let mut order: Vec<usize> = (0..num_variants).filter(|&v| view.resident[s][v]).collect();
+    order.sort_by(|&a, &b| {
+        let rank = |v: usize| usize::from(ctx.compliant[s][v]);
+        rank(a)
+            .cmp(&rank(b))
+            .then_with(|| ctx.variant_batch1_ms[s][b].total_cmp(&ctx.variant_batch1_ms[s][a]))
+            .then(a.cmp(&b))
+    });
+    let mut evict = Vec::new();
+    let mut freed = 0u64;
+    let need = (resident_bytes + ctx.variant_bytes[s][v_new]).saturating_sub(cap);
+    for v in order {
+        if freed >= need {
+            break;
+        }
+        evict.push(v);
+        freed += ctx.variant_bytes[s][v];
+    }
+    evict
 }
 
 // ---------------------------------------------------------------------------
@@ -392,38 +588,9 @@ struct SwapAwarePolicy {
 
 impl SwapAwarePolicy {
     fn plan_for_server(&mut self, ctx: &RouteCtx, view: &FleetView, s: usize) -> Option<SwapPlan> {
-        let cap = ctx.capacity_bytes[s]?;
-        let num_variants = view.resident[s].len();
-        // best resident compliant service time on s
-        let mut b1_res = f64::INFINITY;
-        for v in 0..num_variants {
-            if ctx.compliant[s][v] && view.resident[s][v] {
-                b1_res = b1_res.min(ctx.variant_batch1_ms[s][v]);
-            }
-        }
         // fastest strictly-faster non-resident compliant variant that can
         // fit the capacity at all (ties go to the lower variant index)
-        let mut load = None::<(f64, usize)>; // (b1, variant)
-        for v in 0..num_variants {
-            if !ctx.compliant[s][v]
-                || view.resident[s][v]
-                || ctx.variant_bytes[s][v] > cap
-            {
-                continue;
-            }
-            let b1 = ctx.variant_batch1_ms[s][v];
-            if b1 >= b1_res {
-                continue;
-            }
-            let better = match load {
-                None => true,
-                Some((lb, _)) => b1 < lb,
-            };
-            if better {
-                load = Some((b1, v));
-            }
-        }
-        let Some((b1_new, v_new)) = load else {
+        let Some((b1_res, b1_new, v_new)) = upgrade_target(ctx, view, s) else {
             self.pressure_since[s] = f64::NAN;
             return None;
         };
@@ -456,33 +623,7 @@ impl SwapAwarePolicy {
             }
         }
 
-        // evict until the incoming engine fits: non-compliant residents
-        // first, then compliant residents — slowest-first within each
-        // rank, index as the final tie-break
-        let resident_bytes: u64 = (0..num_variants)
-            .filter(|&v| view.resident[s][v])
-            .map(|v| ctx.variant_bytes[s][v])
-            .sum();
-        let mut order: Vec<usize> = (0..num_variants).filter(|&v| view.resident[s][v]).collect();
-        order.sort_by(|&a, &b| {
-            let rank = |v: usize| usize::from(ctx.compliant[s][v]);
-            rank(a)
-                .cmp(&rank(b))
-                .then_with(|| {
-                    ctx.variant_batch1_ms[s][b].total_cmp(&ctx.variant_batch1_ms[s][a])
-                })
-                .then(a.cmp(&b))
-        });
-        let mut evict = Vec::new();
-        let mut freed = 0u64;
-        let need = (resident_bytes + ctx.variant_bytes[s][v_new]).saturating_sub(cap);
-        for v in order {
-            if freed >= need {
-                break;
-            }
-            evict.push(v);
-            freed += ctx.variant_bytes[s][v];
-        }
+        let evict = eviction_plan(ctx, view, s, v_new);
         self.pressure_since[s] = f64::NAN;
         Some(SwapPlan { server: s, evict, load: v_new })
     }
@@ -510,6 +651,53 @@ impl RoutePolicy for SwapAwarePolicy {
     }
 }
 
+/// Floor on the estimated SLO-met probability in the joules-per-SLO
+/// score: a pair whose projected finish already blows the deadline is
+/// still scored (at `energy / this`), so the policy degrades to
+/// least-bad rather than refusing to route under overload.
+pub const JPS_SLO_FLOOR: f64 = 0.05;
+
+/// Joules-per-SLO-met routing: pick the live pair minimizing
+/// `batch-1 energy / P(SLO met)`, where the probability is a linear
+/// headroom estimate `clamp((slo − finish) / slo, JPS_SLO_FLOOR, 1)` over
+/// the projected finish time `backlog + batch-1`. With no deadline
+/// attached ([`Router::with_slo`] not called) the probability is 1 and
+/// the policy routes to the cheapest live pair outright. Ties break
+/// toward the earlier finish, then the lower candidate index — so on a
+/// fleet where the fastest pair is also the cheapest (HQP variants
+/// usually are: E = P·L and L shrank 3×) this routes exactly like
+/// [`Policy::AccFastest`], and the two only diverge when energy and
+/// latency genuinely trade off.
+struct JoulesPerSloPolicy;
+
+impl RoutePolicy for JoulesPerSloPolicy {
+    fn name(&self) -> &'static str {
+        Policy::NAMES[4]
+    }
+
+    fn route(&mut self, ctx: &RouteCtx, view: &FleetView, live: &[usize]) -> Option<usize> {
+        let mut best = None::<(f64, f64, usize)>; // (score, finish, idx)
+        for &i in live {
+            let c = ctx.candidates[i];
+            let finish = view.backlog_ms[c.server] + ctx.batch1_ms[i];
+            let p_slo = if ctx.slo_ms.is_finite() && ctx.slo_ms > 0.0 {
+                ((ctx.slo_ms - finish) / ctx.slo_ms).clamp(JPS_SLO_FLOOR, 1.0)
+            } else {
+                1.0
+            };
+            let score = ctx.batch1_mj[i] / p_slo;
+            let better = match best {
+                None => true,
+                Some((bs, bf, _)) => score < bs || (score == bs && finish < bf),
+            };
+            if better {
+                best = Some((score, finish, i));
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -528,6 +716,19 @@ mod tests {
             weight_bytes: bytes,
             batch_ms: vec![ms, ms * 1.6],
             energy_mj: vec![ms * 10.0, ms * 16.0],
+        }
+    }
+
+    /// A profile whose energy is decoupled from its latency — the only
+    /// way to make energy-aware routing disagree with acc-fastest.
+    fn var_energy(name: &str, acc_drop: f64, ms: f64, mj: f64, bytes: u64) -> VariantProfile {
+        VariantProfile {
+            name: name.into(),
+            schedule: String::new(),
+            acc_drop,
+            weight_bytes: bytes,
+            batch_ms: vec![ms, ms * 1.6],
+            energy_mj: vec![mj, mj * 1.6],
         }
     }
 
@@ -751,12 +952,110 @@ mod tests {
     }
 
     #[test]
+    fn joules_per_slo_routes_for_energy_not_latency() {
+        // fast-but-hot vs slow-but-frugal — both compliant
+        let f = Fleet {
+            model: "m".into(),
+            servers: vec![
+                Server::new(Device::xavier_nx(), vec![var_energy("hot", 0.0, 2.0, 100.0, 1)]),
+                Server::new(Device::jetson_nano(), vec![var_energy("cool", 0.0, 5.0, 10.0, 1)]),
+            ],
+        };
+        let st = ViewState::of(&f);
+        // acc-fastest takes the 2 ms engine; joules-per-slo (no deadline
+        // attached) takes the 10 mJ engine
+        let mut af = Router::new(&f, 0.015, Policy::AccFastest, 5.0);
+        assert_eq!(af.route(&st.view(0.0)).unwrap().server, 0);
+        let mut jps = Router::new(&f, 0.015, Policy::JoulesPerSlo, 5.0);
+        assert_eq!(jps.route(&st.view(0.0)).unwrap().server, 1);
+    }
+
+    #[test]
+    fn joules_per_slo_yields_to_the_deadline() {
+        let f = Fleet {
+            model: "m".into(),
+            servers: vec![
+                Server::new(Device::xavier_nx(), vec![var_energy("hot", 0.0, 2.0, 100.0, 1)]),
+                Server::new(Device::jetson_nano(), vec![var_energy("cool", 0.0, 5.0, 10.0, 1)]),
+            ],
+        };
+        let mut st = ViewState::of(&f);
+        // cheap server's backlog pushes its finish past the 6 ms SLO:
+        // 10 / 0.05 (floored) = 200 > 100 / ((6-2)/6) = 150 → route hot
+        st.backlog = vec![0.0, 3.0];
+        let mut r = Router::new(&f, 0.015, Policy::JoulesPerSlo, 5.0).with_slo(6.0);
+        assert_eq!(r.route(&st.view(0.0)).unwrap().server, 0);
+        // with deadline headroom restored, energy wins again
+        st.backlog = vec![0.0, 0.0];
+        assert_eq!(r.route(&st.view(0.0)).unwrap().server, 1);
+    }
+
+    #[test]
+    fn prefetch_plans_immediately_from_forecast_backlog() {
+        // same memory-bound NX as the swap-aware sustain test
+        let f = Fleet {
+            model: "m".into(),
+            servers: vec![Server {
+                device: Device::xavier_nx(),
+                variants: vec![
+                    var_sized("fp32", 0.0, 10.0, 40_000_000),
+                    var_sized("hqp", 0.012, 1.0, 4_000_000),
+                ],
+                mem_capacity_bytes: Some(41_000_000),
+            }],
+        };
+        let st = ViewState::of(&f);
+        let r = Router::new(&f, 0.015, Policy::AccFastest, 5.0);
+        // a forecast backlog of 6 clears the benefit bar with no sustain
+        // guard and no observed queue — the swap is paid before pressure
+        let plan = r.plan_prefetch(&st.view(0.0), 6.0).unwrap();
+        assert_eq!(plan, SwapPlan { server: 0, evict: vec![0], load: 1 });
+        // no forecast backlog → the swap cannot pay for itself
+        assert_eq!(r.plan_prefetch(&st.view(0.0), 0.0), None);
+    }
+
+    #[test]
+    fn reselect_swaps_an_idle_server_toward_cheaper_joules() {
+        let f = Fleet {
+            model: "m".into(),
+            servers: vec![Server {
+                device: Device::xavier_nx(),
+                variants: vec![
+                    var_energy("hot", 0.0, 1.0, 50.0, 40_000_000),
+                    var_energy("cool", 0.012, 4.0, 5.0, 4_000_000),
+                ],
+                mem_capacity_bytes: Some(41_000_000),
+            }],
+        };
+        assert_eq!(f.servers[0].initial_residency(), vec![true, false]);
+        let mut st = ViewState::of(&f);
+        let r = Router::new(&f, 0.015, Policy::JoulesPerSlo, 5.0);
+        // idle: re-select toward the 10× cheaper compliant engine
+        let plan = r.plan_reselect(&st.view(0.0)).unwrap();
+        assert_eq!(plan, SwapPlan { server: 0, evict: vec![0], load: 1 });
+        // busy servers are never disturbed
+        st.queued = vec![3];
+        st.backlog = vec![3.0];
+        assert_eq!(r.plan_reselect(&st.view(0.0)), None);
+    }
+
+    #[test]
+    fn reselect_never_plans_on_unlimited_memory() {
+        let f = fleet(); // no capacities: every variant already resident
+        let st = ViewState::of(&f);
+        let r = Router::new(&f, 0.015, Policy::JoulesPerSlo, 5.0);
+        assert_eq!(r.plan_reselect(&st.view(0.0)), None);
+    }
+
+    #[test]
     fn parse_policy_names() {
         assert_eq!(Policy::parse("acc-fastest"), Some(Policy::AccFastest));
         assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
         assert_eq!(Policy::parse("least-loaded"), Some(Policy::LeastLoaded));
         assert_eq!(Policy::parse("swap-aware"), Some(Policy::SwapAware));
         assert_eq!(Policy::parse("sa"), Some(Policy::SwapAware));
+        assert_eq!(Policy::parse("joules-per-slo"), Some(Policy::JoulesPerSlo));
+        assert_eq!(Policy::parse("jps"), Some(Policy::JoulesPerSlo));
         assert!(Policy::parse("random").is_none());
         // NAMES is the single source of truth: every listed name parses
         // back to a policy whose name() round-trips

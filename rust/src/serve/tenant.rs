@@ -30,15 +30,26 @@ pub struct TenantClass {
     pub slo_ms: f64,
     /// Weighted-fair admission share (relative; any positive scale).
     pub weight: f64,
+    /// Optional arrival-rate share (the spec's 5th field): what fraction
+    /// of the *offered* trace this class receives, relative to the other
+    /// classes' shares. All-or-none per table: when every class carries
+    /// one, [`tenant_of`] cuts the assignment sequence against these
+    /// shares instead of the admission weights — so a low-weight class
+    /// can still ride a heavy arrival stream (and vice versa). `None`
+    /// everywhere reproduces the weight-cut assignment bit for bit.
+    pub rate_share: Option<f64>,
 }
 
 /// The `--tenants` grammar, quoted by every parse error (and grepped for
 /// by the CI negative step).
-pub const TENANT_SPEC_FORMAT: &str = "\"name:dmax:slo_ms:weight,...\"";
+pub const TENANT_SPEC_FORMAT: &str = "\"name:dmax:slo_ms:weight[:rate_share],...\"";
 
 /// Parse a `--tenants` spec: comma-separated `name:dmax:slo_ms:weight`
-/// entries, e.g. `"gold:0.01:30:8,free:0.03:100:1"`. Errors name the
-/// offending entry and quote the expected format.
+/// entries with an optional 5th `rate_share` field, e.g.
+/// `"gold:0.01:30:8,free:0.03:100:1"` or
+/// `"gold:0.01:30:8:0.2,free:0.03:100:1:0.8"`. The rate share is
+/// all-or-none: either every class carries one or none does. Errors name
+/// the offending entry and quote the expected format.
 pub fn parse_tenants(spec: &str) -> Result<Vec<TenantClass>> {
     let bad = |entry: &str, why: &str| {
         Error::Cli(format!(
@@ -52,8 +63,8 @@ pub fn parse_tenants(spec: &str) -> Result<Vec<TenantClass>> {
             return Err(bad(entry, "is empty"));
         }
         let parts: Vec<&str> = entry.split(':').collect();
-        if parts.len() != 4 {
-            return Err(bad(entry, "does not have 4 `:`-separated fields"));
+        if parts.len() != 4 && parts.len() != 5 {
+            return Err(bad(entry, "does not have 4 or 5 `:`-separated fields"));
         }
         let name = parts[0].trim();
         if name.is_empty() {
@@ -80,26 +91,48 @@ pub fn parse_tenants(spec: &str) -> Result<Vec<TenantClass>> {
         if !(weight > 0.0) || !weight.is_finite() {
             return Err(bad(entry, "needs weight > 0"));
         }
-        out.push(TenantClass { name: name.to_string(), dmax, slo_ms, weight });
+        let rate_share = if parts.len() == 5 {
+            let r = num(parts[4], "rate_share")?;
+            if !(r > 0.0) || !r.is_finite() {
+                return Err(bad(entry, "needs rate_share > 0"));
+            }
+            Some(r)
+        } else {
+            None
+        };
+        out.push(TenantClass { name: name.to_string(), dmax, slo_ms, weight, rate_share });
+    }
+    // all-or-none: a table where only some classes pin a rate share has
+    // no defined split for the rest
+    if out.iter().any(|t| t.rate_share.is_some()) && out.iter().any(|t| t.rate_share.is_none()) {
+        return Err(Error::Cli(format!(
+            "--tenants wants {TENANT_SPEC_FORMAT}: rate_share is all-or-none \
+             (either every class carries a 5th field or none does)"
+        )));
     }
     Ok(out)
 }
 
 /// Deterministic request → tenant assignment: the golden-ratio
 /// low-discrepancy sequence `frac((id+1)·φ⁻¹)` cut against the
-/// cumulative normalized weights. Seed-free and jobs-free by
-/// construction; over any long id range each tenant receives its weight
-/// share of requests (±1/n discrepancy, far tighter than i.i.d. draws).
+/// cumulative normalized shares — the classes' `rate_share`s when the
+/// table pins them (all-or-none, enforced by [`parse_tenants`]), the
+/// admission weights otherwise. Seed-free and jobs-free by construction;
+/// over any long id range each tenant receives its share of requests
+/// (±1/n discrepancy, far tighter than i.i.d. draws). The arrival
+/// *generators* are untouched either way: only the id→class cut moves,
+/// so the offered timeline stays bit-identical.
 pub fn tenant_of(id: usize, tenants: &[TenantClass]) -> usize {
     if tenants.len() <= 1 {
         return 0;
     }
     const INV_PHI: f64 = 0.618_033_988_749_894_9;
     let u = ((id as f64 + 1.0) * INV_PHI).fract();
-    let total: f64 = tenants.iter().map(|t| t.weight).sum();
+    let share = |t: &TenantClass| t.rate_share.unwrap_or(t.weight);
+    let total: f64 = tenants.iter().map(share).sum();
     let mut acc = 0.0;
     for (i, t) in tenants.iter().enumerate() {
-        acc += t.weight / total;
+        acc += share(t) / total;
         if u < acc {
             return i;
         }
@@ -167,11 +200,16 @@ mod tests {
             "gold",
             "gold:0.01:30",
             "gold:0.01:30:8:extra",
+            "gold:0.01:30:8:1:9",
             ":0.01:30:8",
             "gold:x:30:8",
             "gold:0.01:0:8",
             "gold:0.01:30:0",
             "gold:0.01:30:-1",
+            "gold:0.01:30:8:0",
+            "gold:0.01:30:8:-0.5",
+            // rate_share is all-or-none across the table
+            "gold:0.01:30:8:0.5,free:0.03:100:1",
             "gold:0.01:30:8,gold:0.02:40:1",
             "gold:0.01:30:8,,free:0.03:100:1",
         ] {
@@ -181,6 +219,29 @@ mod tests {
                 "error for {bad:?} must quote the format, got: {err}"
             );
         }
+    }
+
+    #[test]
+    fn parse_accepts_the_optional_rate_share_field() {
+        let t = parse_tenants("gold:0.01:30:8:0.2,free:0.03:100:1:0.8").unwrap();
+        assert_eq!(t[0].rate_share, Some(0.2));
+        assert_eq!(t[1].rate_share, Some(0.8));
+        // 4-field specs leave the share unset (weight-cut assignment)
+        assert_eq!(two()[0].rate_share, None);
+    }
+
+    #[test]
+    fn rate_share_overrides_the_weight_cut() {
+        // weight says 8:1 toward gold, rate share says 1:4 toward free —
+        // the arrival split must follow the rate share
+        let t = parse_tenants("gold:0.01:30:8:0.2,free:0.03:100:1:0.8").unwrap();
+        let n = 100_000;
+        let gold = (0..n).filter(|&id| tenant_of(id, &t) == 0).count() as f64;
+        let share = gold / n as f64;
+        assert!(
+            (share - 0.2).abs() < 0.01,
+            "gold arrival share {share:.4} should be ~0.2 (its rate share), not 8/9"
+        );
     }
 
     #[test]

@@ -860,6 +860,165 @@ fn prop_tenant_census_sums_to_the_global_census() {
     }
 }
 
+/// Randomize the predictive / energy-accounting knobs onto a generated
+/// case: the predictive controller (sometimes with an explicit horizon),
+/// sometimes idle-power pricing, sometimes the joules-per-slo router.
+fn enable_predictive(case: &mut Case, rng: &mut Prng) {
+    let min_active = rng.below(case.n_servers) + 1;
+    case.cfg.autoscale = AutoscaleConfig {
+        policy: ScalePolicy::Predictive,
+        interval_ms: 10.0 + rng.next_f64() * 80.0,
+        min_active,
+        max_active: min_active + rng.below(case.n_servers - min_active + 1),
+        ..AutoscaleConfig::off()
+    };
+    if rng.next_f64() < 0.5 {
+        case.cfg.forecast_horizon_ms = Some(20.0 + rng.next_f64() * 400.0);
+    }
+    if rng.next_f64() < 0.5 {
+        case.cfg.idle_watts = rng.next_f64() * 5.0;
+    }
+    if rng.next_f64() < 0.3 {
+        case.cfg.policy = Policy::JoulesPerSlo;
+    }
+}
+
+#[test]
+fn prop_rate_share_recuts_the_assignment_not_the_trace() {
+    // the optional 5th --tenants field re-cuts only the id → class
+    // assignment: the offered arrival timeline is bit-identical with and
+    // without it, the global census is untouched, and each class's share
+    // of *generated* requests follows the pinned rate share within the
+    // golden-ratio sequence's discrepancy bound
+    let mut rng = Prng::new(0x2A7E5);
+    for case_no in 0..CASES / 4 {
+        let mut case = gen_case(&mut rng);
+        case.cfg.tenants = parse_tenants("gold:0.015:40:8,free:0.03:120:1").unwrap();
+        let (weighted, tw) = run_case(&case);
+        case.cfg.tenants =
+            parse_tenants("gold:0.015:40:8:0.2,free:0.03:120:1:0.8").unwrap();
+        let (shared, ts) = run_case(&case);
+        assert_eq!(tw.len(), ts.len(), "case {case_no}: trace length moved");
+        for (i, (a, b)) in tw.iter().zip(ts.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case_no}: arrival {i} moved");
+        }
+        assert_eq!(weighted.generated, shared.generated, "case {case_no}");
+        let n = shared.generated as f64;
+        if shared.generated >= 200 {
+            // Kronecker-sequence discrepancy is O(log n / n); this bound
+            // is loose enough for every generated trace length
+            let tol = 0.05 + 5.0 / n;
+            let w_gold = weighted.tenants[0].generated as f64 / n;
+            let s_gold = shared.tenants[0].generated as f64 / n;
+            assert!(
+                (w_gold - 8.0 / 9.0).abs() <= tol,
+                "case {case_no}: weight-cut gold share {w_gold:.3} vs 8/9"
+            );
+            assert!(
+                (s_gold - 0.2).abs() <= tol,
+                "case {case_no}: rate-share gold share {s_gold:.3} vs 0.2"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_reactive_runs_report_no_predictive_machinery() {
+    // frozen-surface property: without --autoscale predictive none of the
+    // new machinery may leave a trace — no prewake/prefetch/reselect
+    // counters, no forecast error, no predict render line; and with
+    // idle_watts at its 0 default, no idle energy and no idle line
+    let mut rng = Prng::new(0x0FF9ED);
+    for case_no in 0..CASES / 2 {
+        let case = gen_case(&mut rng);
+        assert_eq!(case.cfg.idle_watts, 0.0, "gen_case must keep the legacy default");
+        let (s, _) = run_case(&case);
+        assert!(!s.predictive, "case {case_no}");
+        assert_eq!(s.prewakes, 0, "case {case_no}");
+        assert_eq!(s.prefetch_swaps, 0, "case {case_no}");
+        assert_eq!(s.reselect_swaps, 0, "case {case_no}");
+        assert_eq!(s.forecast_abs_err_pct, 0.0, "case {case_no}");
+        assert_eq!(s.idle_energy_mj, 0.0, "case {case_no}");
+        let r = s.render();
+        assert!(!r.contains("predict  :"), "case {case_no}: reactive render grew a line");
+        assert!(!r.contains("idle     :"), "case {case_no}: zero-idle render grew a line");
+    }
+}
+
+#[test]
+fn prop_predictive_conservation_and_jobs_invariance() {
+    // the tentpole's determinism contract: the forecaster consumes the
+    // trace in arrival order on the coordinator, so every prewake,
+    // prefetch and reselect it drives is a pure function of the inputs —
+    // conservation holds, the counters are internally consistent, the
+    // energy accounting (idle term included) closes, and the summary is
+    // byte-identical at any worker count and on the streamed path
+    let mut rng = Prng::new(0x93ED1C7);
+    for case_no in 0..CASES / 2 {
+        let mut case = gen_case(&mut rng);
+        enable_predictive(&mut case, &mut rng);
+        let fleet = build_fleet(&case);
+        let arrivals = trace::generate(&case.process, case.duration_ms, case.trace_seed);
+        let s = simulate_fleet(&fleet, &arrivals, &case.cfg).unwrap();
+        assert!(s.autoscaled && s.predictive, "case {case_no}");
+        assert_eq!(
+            s.completed + s.rejected + s.expired,
+            s.generated,
+            "case {case_no}: conservation must hold under prewake + prefetch"
+        );
+        assert!(
+            s.prewakes <= s.scale_ups,
+            "case {case_no}: every prewake is a scale-up ({} > {})",
+            s.prewakes,
+            s.scale_ups
+        );
+        assert!(
+            s.prefetch_swaps + s.reselect_swaps <= s.swaps,
+            "case {case_no}: forecast-driven swaps are a subset of all swaps"
+        );
+        if case.mem_frac.is_none() {
+            assert_eq!(s.swaps, 0, "case {case_no}: unlimited memory never swaps");
+        }
+        assert!(
+            s.forecast_abs_err_pct.is_finite() && s.forecast_abs_err_pct >= 0.0,
+            "case {case_no}: forecast error {}",
+            s.forecast_abs_err_pct
+        );
+        if case.cfg.idle_watts == 0.0 {
+            assert_eq!(s.idle_energy_mj, 0.0, "case {case_no}");
+        } else {
+            assert!(s.idle_energy_mj >= 0.0, "case {case_no}");
+        }
+        let usage_energy: f64 = s.per_variant.iter().map(|u| u.energy_mj).sum();
+        assert!(
+            (s.energy_mj
+                - (usage_energy + s.wake_energy_mj + s.swap_energy_mj + s.idle_energy_mj))
+                .abs()
+                < 1e-6,
+            "case {case_no}: energy accounting must close with the idle term"
+        );
+        assert!(s.render().contains("predict  :"), "case {case_no}");
+        // byte-identity: reruns, worker counts and the streamed path
+        let again = simulate_fleet(&fleet, &arrivals, &case.cfg).unwrap();
+        assert_eq!(s, again, "case {case_no}: predictive rerun diverged");
+        for jobs in [2usize, 4] {
+            let par =
+                simulate_fleet_jobs(&fleet, &arrivals, &case.cfg, Jobs::new(jobs).unwrap())
+                    .unwrap();
+            assert_eq!(s, par, "case {case_no}: jobs={jobs} diverged under predictive");
+            assert_eq!(s.render(), par.render(), "case {case_no}: jobs={jobs} render");
+        }
+        let streamed = simulate_fleet_stream(
+            &fleet,
+            trace::ArrivalGen::new(&case.process, case.duration_ms, case.trace_seed),
+            &case.cfg,
+            Jobs::new(4).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(s, streamed, "case {case_no}: streamed diverged under predictive");
+    }
+}
+
 #[test]
 fn prop_new_generators_stream_bit_identically() {
     // PR 8's streaming property, extended to the diurnal and flash-crowd
